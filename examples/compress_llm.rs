@@ -1,0 +1,65 @@
+//! End-to-end driver (the repository's E2E validation, see EXPERIMENTS.md):
+//! load the build-time-pretrained LM, calibrate on the shared synthetic
+//! corpus, run the full COMPOT pipeline (dynamic allocation) next to
+//! SVD-LLM and CoSpaDi at CR 0.2, and report perplexity + zero-shot
+//! accuracy for each — the paper's headline comparison on a real (small)
+//! workload, exercising the L3 pipeline over L2/L1-trained weights.
+//!
+//! Run after `make artifacts`:
+//!   cargo run --release --example compress_llm [preset] [cr]
+
+use compot::compress::compot::CompotConfig;
+use compot::compress::cospadi::CospadiConfig;
+use compot::coordinator::pipeline::Method;
+use compot::eval::harness::{baseline_row, run_method, EvalSetup};
+use compot::model::Model;
+use compot::runtime::artifacts::artifacts_dir;
+use compot::util::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let preset = args.first().map(String::as_str).unwrap_or("llama-micro");
+    let cr: f64 = args.get(1).and_then(|v| v.parse().ok()).unwrap_or(0.2);
+
+    let path = artifacts_dir().join(format!("{preset}.bin"));
+    anyhow::ensure!(path.exists(), "missing {path:?}: run `make artifacts` first");
+    let model = Model::load(&path)?;
+    println!(
+        "loaded {preset}: d={} L={} heads={}/{} ff={} ({} projection params)",
+        model.cfg.d_model,
+        model.cfg.n_layers,
+        model.cfg.n_heads,
+        model.cfg.n_kv_heads,
+        model.cfg.d_ff,
+        model.cfg.compressible_params()
+    );
+
+    let setup = EvalSetup::standard(model.cfg.vocab, 8, 96, 24, 42);
+    let base = baseline_row(&model, &setup, "original");
+    println!(
+        "\n{:<14} {:>6} {:>8} {:>9} {:>9} {:>9}",
+        "method", "CR", "avg acc", "wiki ppl", "c4 ppl", "time"
+    );
+    println!(
+        "{:<14} {:>6} {:>8.1} {:>9.2} {:>9.2} {:>9}",
+        "original", "-", base.avg_acc, base.ppl_wiki, base.ppl_c4, "-"
+    );
+
+    for (name, method, dynamic) in [
+        ("SVD-LLM", Method::SvdLlm, false),
+        ("CoSpaDi", Method::Cospadi(CospadiConfig::default()), false),
+        ("COMPOT-static", Method::Compot(CompotConfig::default()), false),
+        ("COMPOT", Method::Compot(CompotConfig::default()), true),
+    ] {
+        let t = Timer::start();
+        let row = run_method(&model, &setup, method, cr, dynamic)?;
+        println!(
+            "{:<14} {:>6.2} {:>8.1} {:>9.2} {:>9.2} {:>8.1}s",
+            name, row.model_cr, row.avg_acc, row.ppl_wiki, row.ppl_c4, t.secs()
+        );
+    }
+
+    println!("\nExpected shape (paper Tables 3/10): COMPOT >= CoSpaDi > SVD-LLM on");
+    println!("accuracy, the reverse ordering on perplexity; dynamic >= static.");
+    Ok(())
+}

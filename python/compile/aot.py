@@ -1,0 +1,139 @@
+"""AOT export: lower the L2/L1 graphs to HLO **text** and write the
+artifact manifest.
+
+HLO text (not `.serialize()`): jax ≥ 0.5 emits protos with 64-bit
+instruction ids which the pinned xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Exported artifacts:
+- `compot_iter_{m}x{n}_k{k}_s{s}.hlo.txt` — one COMPOT alternating
+  iteration (Pallas GEMM + Pallas hard-threshold + Newton–Schulz
+  Procrustes) for every projection shape of the shipped model presets at
+  the default CR grid. Inputs: W̃ (m×n), D (m×k); outputs: (S_dense k×n,
+  D_next m×k). Driven by rust `runtime::compot_exec`.
+- `matmul_demo.hlo.txt` — the Pallas tiled GEMM alone (smoke/bench).
+- `manifest.json` — name → file, input/output shapes.
+
+Usage: python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .compot_jax import compot_iter
+from .kernels.matmul import matmul
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def ks_for_cr(m: int, n: int, cr: float, ratio: float = 2.0):
+    """Mirror of rust compress::ks_for_cr (Eq. 11 solved for s, k = ratio·s)."""
+    budget = (1.0 - cr) * 16 * m * n
+    per_s = 16 * m * ratio + 16 * n + ratio * n
+    s = max(int(budget / per_s), 1)
+    k = max(int(round(s * ratio)), s)
+    if k > m:
+        k = m
+        fixed = 16 * m * k + k * n
+        s = max(min(int((budget - fixed) / (16 * n)), k), 1)
+    return k, min(s, k)
+
+
+def export_compot_iters(out_dir: str, preset: str, crs) -> list[dict]:
+    cfg = M.PRESETS[preset]
+    kv = cfg.n_kv_heads * cfg.head_dim
+    shapes = sorted(
+        {
+            (cfg.d_model, cfg.d_model),
+            (cfg.d_model, kv),
+            (cfg.d_model, cfg.d_ff),
+            (cfg.d_ff, cfg.d_model),
+        }
+    )
+    entries = []
+    for m, n in shapes:
+        for cr in crs:
+            k, s = ks_for_cr(m, n, cr)
+            name = f"compot_iter_{m}x{n}_k{k}_s{s}"
+            path = os.path.join(out_dir, f"{name}.hlo.txt")
+            if not os.path.exists(path):
+                wt_spec = jax.ShapeDtypeStruct((m, n), jnp.float32)
+                d_spec = jax.ShapeDtypeStruct((m, k), jnp.float32)
+                lowered = jax.jit(lambda wt, d: compot_iter(wt, d, s)).lower(wt_spec, d_spec)
+                with open(path, "w") as f:
+                    f.write(to_hlo_text(lowered))
+            entries.append(
+                {
+                    "name": name,
+                    "path": os.path.basename(path),
+                    "kind": "compot_iter",
+                    "m": m,
+                    "n": n,
+                    "k": k,
+                    "s": s,
+                    "inputs": [[m, n], [m, k]],
+                    "outputs": [[k, n], [m, k]],
+                }
+            )
+    return entries
+
+
+def export_matmul_demo(out_dir: str) -> dict:
+    path = os.path.join(out_dir, "matmul_demo.hlo.txt")
+    m, k, n = 96, 96, 256
+    if not os.path.exists(path):
+        a = jax.ShapeDtypeStruct((m, k), jnp.float32)
+        b = jax.ShapeDtypeStruct((k, n), jnp.float32)
+        lowered = jax.jit(matmul).lower(a, b)
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+    return {
+        "name": "matmul_demo",
+        "path": "matmul_demo.hlo.txt",
+        "kind": "matmul",
+        "inputs": [[m, k], [k, n]],
+        "outputs": [[m, n]],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--preset", default="llama-micro")
+    ap.add_argument("--crs", default="0.2,0.3,0.4")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    crs = [float(x) for x in args.crs.split(",")]
+    entries = export_compot_iters(args.out, args.preset, crs)
+    entries.append(export_matmul_demo(args.out))
+
+    manifest = {
+        "preset": args.preset,
+        "artifacts": entries,
+        "models": [
+            f for f in sorted(os.listdir(args.out)) if f.endswith(".bin") and "corpus" not in f
+        ],
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"exported {len(entries)} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

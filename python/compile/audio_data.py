@@ -1,0 +1,22 @@
+"""Synthetic audio/vision emission — mirror of rust/src/data/{audio,vlm}.rs
+(shared constants and emission rules; the codebook itself is stored in the
+model weight file so both sides use identical embeddings)."""
+
+import numpy as np
+
+FRAMES_PER_TOKEN = 2
+NOISE_STD = 0.3
+N_PATCHES = 4
+PATCH_NOISE = 0.25
+
+
+def emit_frames_np(codebook: np.ndarray, transcript: np.ndarray, rng) -> np.ndarray:
+    d = codebook.shape[1]
+    t_len = len(transcript)
+    frames = np.zeros((t_len * FRAMES_PER_TOKEN, d), dtype=np.float32)
+    for t, tok in enumerate(transcript):
+        cur = codebook[int(tok)]
+        nxt = codebook[int(transcript[min(t + 1, t_len - 1)])]
+        frames[2 * t] = cur + NOISE_STD * rng.standard_normal(d)
+        frames[2 * t + 1] = 0.5 * (cur + nxt) + NOISE_STD * rng.standard_normal(d)
+    return frames

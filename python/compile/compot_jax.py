@@ -1,0 +1,77 @@
+"""L2: the COMPOT alternating-minimization graph in JAX.
+
+One iteration = the L1 kernels composed:
+
+    Zᵀ = matmul(W̃ᵀ, D)            (Pallas tiled GEMM → MXU)
+    S  = hard_threshold(Zᵀᵀ, s)     (Pallas column top-s → VPU)
+    M  = matmul(W̃, Sᵀ)             (Pallas tiled GEMM)
+    D  = newton_schulz(M)           (pure matmuls — see below)
+
+**Hardware adaptation of the Procrustes step** (DESIGN.md §7): the paper
+computes `D = P·Qᵀ` by a thin SVD on the GPU host path. SVD lowers to a
+LAPACK custom-call that neither a TPU core nor the pinned xla_extension
+0.5.1 CPU runtime can execute inside the graph — so the AOT artifact uses
+the *Newton–Schulz polar iteration* instead: the orthogonal Procrustes
+solution is exactly the orthogonal polar factor of M, and Newton–Schulz
+converges to it using only matmuls (MXU-native, systolic-friendly):
+
+    X₀ = M / ‖M‖_F,   X_{t+1} = 1.5·X_t − 0.5·X_t·X_tᵀ·X_t
+
+The Rust engine keeps the exact Jacobi-SVD Procrustes; the two are
+cross-checked in python/tests and in the Rust integration test.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.hard_threshold import hard_threshold
+from .kernels.matmul import matmul
+
+NS_ITERS = 16
+
+
+def newton_schulz(m: jnp.ndarray, iters: int = NS_ITERS) -> jnp.ndarray:
+    """Orthogonal polar factor of m (tall m×k, full rank) by Newton–Schulz."""
+    norm = jnp.sqrt(jnp.sum(m * m)) + 1e-12
+    x = m / norm
+
+    def body(_, x):
+        xtx = x.T @ x
+        return 1.5 * x - 0.5 * x @ xtx
+
+    return jax.lax.fori_loop(0, iters, body, x)
+
+
+@functools.partial(jax.jit, static_argnames=("s",))
+def compot_iter(wt: jnp.ndarray, d: jnp.ndarray, s: int):
+    """One full COMPOT iteration: returns (S_dense, D_next).
+
+    This is the function AOT-exported per projection shape
+    (`compot_iter_{m}x{n}x{k}_s{s}.hlo.txt`) and driven from the Rust
+    runtime's `compot_exec`.
+    """
+    zt = matmul(wt.T, d)  # (n, k)
+    s_dense = hard_threshold(zt.T, s)  # (k, n)
+    m = matmul(wt, s_dense.T)  # (m, k)
+    d_next = newton_schulz(m)
+    return s_dense, d_next
+
+
+@functools.partial(jax.jit, static_argnames=("s", "iters"))
+def compot_factorize(wt: jnp.ndarray, d0: jnp.ndarray, s: int, iters: int = 20):
+    """Full alternating minimization with the iteration count baked in."""
+
+    def body(_, d):
+        _, d_next = compot_iter(wt, d, s)
+        return d_next
+
+    d = jax.lax.fori_loop(0, iters - 1, body, d0)
+    s_dense, _ = compot_iter(wt, d, s)
+    return d, s_dense
+
+
+def factorize_error(wt: jnp.ndarray, d: jnp.ndarray, s_dense: jnp.ndarray) -> jnp.ndarray:
+    """‖W̃ − D·S‖_F (diagnostics)."""
+    return jnp.linalg.norm(wt - d @ s_dense)

@@ -1,0 +1,94 @@
+"""Synthetic language — semantic mirror of rust/src/data/corpus.rs.
+
+The *distribution* is shared with the Rust side through deterministic
+arithmetic (successor tables, copy rule, Zipf inverse-transform), not through
+shared PRNG state: the build-time pretraining here and the Rust-side
+evaluation both sample from the same process. See DESIGN.md §3.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+COPY_LAG = 16
+COPY_PROB = 0.10
+SUCC_PROBS = np.array([0.40, 0.25, 0.15, 0.10])
+ZIPF_ALPHA = 1.3
+
+
+def zipf_harmonic(n: int, alpha: float = ZIPF_ALPHA) -> float:
+    if abs(alpha - 1.0) < 1e-9:
+        return float(np.log(n))
+    return float((n ** (1.0 - alpha) - 1.0) / (1.0 - alpha) + 1.0)
+
+
+class SynthLang:
+    """vocab-sized language with fixed successor structure."""
+
+    def __init__(self, vocab: int, noise: float):
+        self.vocab = vocab
+        self.noise = noise
+        self.h = zipf_harmonic(vocab)
+
+    @classmethod
+    def wiki(cls, vocab: int) -> "SynthLang":
+        return cls(vocab, 0.10)
+
+    @classmethod
+    def c4(cls, vocab: int) -> "SynthLang":
+        return cls(vocab, 0.18)
+
+    def successors(self, t: int) -> list[int]:
+        v = self.vocab
+        return [(7 * t + 1) % v, (13 * t + 5) % v, (29 * t + 11) % v, (5 * t + 3) % v]
+
+    def zipf(self, rng: np.random.Generator) -> int:
+        """Same inverse-transform as rust Rng::zipf."""
+        u = rng.random() * self.h
+        alpha = ZIPF_ALPHA
+        base = (1.0 - alpha) * u + 1.0
+        # base can underflow to <= 0 at the distribution tail; both sides
+        # map that to the most frequent token (see rust util::rng::zipf).
+        m = base ** (1.0 / (1.0 - alpha)) if base > 0.0 else 1.0
+        return min(max(int(m), 1) - 1, self.vocab - 1)
+
+    def next(self, history: list[int], rng: np.random.Generator) -> int:
+        if len(history) >= COPY_LAG and rng.random() < COPY_PROB:
+            return history[-COPY_LAG]
+        if rng.random() < self.noise:
+            return self.zipf(rng)
+        last = history[-1] if history else 0
+        succ = self.successors(last)
+        r = rng.random() * SUCC_PROBS.sum()
+        acc = 0.0
+        for tok, p in zip(succ, SUCC_PROBS):
+            acc += p
+            if r <= acc:
+                return tok
+        return succ[-1]
+
+    def gen(self, length: int, rng: np.random.Generator) -> np.ndarray:
+        seq = [self.zipf(rng)]
+        while len(seq) < length:
+            seq.append(self.next(seq, rng))
+        return np.array(seq, dtype=np.uint16)
+
+    def gen_batch(self, count: int, length: int, rng: np.random.Generator) -> np.ndarray:
+        return np.stack([self.gen(length, rng) for _ in range(count)])
+
+
+def write_corpus_bins(out_dir, vocab: int = 256, seqs: int = 64, seq_len: int = 128) -> None:
+    """Write the corpus artifacts the Rust evaluation loads."""
+    import os
+
+    os.makedirs(out_dir, exist_ok=True)
+    for split, lang_cls, seed in [
+        ("train", SynthLang.wiki, 1),
+        ("valid", SynthLang.wiki, 2),
+        ("wiki", SynthLang.wiki, 3),
+        ("c4", SynthLang.c4, 4),
+    ]:
+        lang = lang_cls(vocab)
+        rng = np.random.default_rng(seed)
+        toks = lang.gen_batch(seqs, seq_len, rng).reshape(-1)
+        toks.astype("<u2").tofile(os.path.join(out_dir, f"corpus_{split}.bin"))

@@ -1,0 +1,47 @@
+"""L1 Pallas kernel: column-wise hard thresholding H_s (Eq. 9).
+
+The sparse-coding step of COMPOT is a per-column top-s selection over
+Z = D_Oᵀ·W̃ (k×n). On TPU this is vector-unit work: we tile the *columns*
+across the grid so each program instance holds a (k × BLOCK_N) panel in
+VMEM, computes the per-column s-th magnitude with a sort along the
+(sublane) k axis, and masks. `interpret=True` everywhere — the CPU PJRT
+plugin cannot execute Mosaic lowerings (see DESIGN.md §7 for the estimated
+VMEM footprint: k·BLOCK_N·4 B ≤ 96·128·4 B ≈ 48 KiB per panel, far under
+the ~16 MiB VMEM budget).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 128
+
+
+def _kernel(z_ref, out_ref, *, s: int):
+    z = z_ref[...]  # (k, bn)
+    mags = jnp.abs(z)
+    # s-th largest magnitude per column: sort ascending, index k-s.
+    kth = jnp.sort(mags, axis=0)[z.shape[0] - s, :][None, :]
+    out_ref[...] = jnp.where(mags >= kth, z, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("s",))
+def hard_threshold(z: jnp.ndarray, s: int) -> jnp.ndarray:
+    """H_s(z) column-wise, Pallas (interpret) implementation."""
+    k, n = z.shape
+    bn = min(BLOCK_N, n)
+    # Pad columns to a multiple of the block.
+    n_pad = (-n) % bn
+    zp = jnp.pad(z, ((0, 0), (0, n_pad)))
+    grid = (zp.shape[1] // bn,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, s=s),
+        out_shape=jax.ShapeDtypeStruct(zp.shape, z.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((k, bn), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((k, bn), lambda j: (0, j)),
+        interpret=True,
+    )(zp)
+    return out[:, :n]

@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: MXU-tiled matmul — the GEMM hot spot of the COMPOT
+inner loop (Z = DᵀW̃ and M = W̃Sᵀ) and of the compressed-layer apply.
+
+The paper's reference implementation leans on cuBLAS; the TPU adaptation
+expresses the HBM↔VMEM schedule explicitly with BlockSpecs: (BM×BK) and
+(BK×BN) panels stream into VMEM, a (BM×BN) f32 accumulator persists across
+the k-grid dimension, and `jnp.dot(..., preferred_element_type=f32)`
+targets the MXU systolic array (bf16-friendly). Footprint per program:
+(BM·BK + BK·BN + BM·BN)·4 B = 3·128²·4 B ≈ 192 KiB ≪ 16 MiB VMEM; see
+DESIGN.md §7. interpret=True for CPU-PJRT execution.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM, BK, BN = 128, 128, 128
+
+
+def _kernel(a_ref, b_ref, out_ref):
+    # The out block's index map ignores the k grid axis, so the same (BM×BN)
+    # f32 tile persists in VMEM across the contraction steps — accumulate
+    # into it directly (init on the first step).
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """a (m,k) @ b (k,n) with explicit tiling; pads to tile multiples."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    bm, bk, bn = min(BM, m), min(BK, k), min(BN, n)
+    mp, kp, np_ = (-m) % bm, (-k) % bk, (-n) % bn
+    ap = jnp.pad(a, ((0, mp), (0, kp)))
+    bp = jnp.pad(b, ((0, kp), (0, np_)))
+    k_steps = ap.shape[1] // bk
+    grid = (ap.shape[0] // bm, bp.shape[1] // bn, k_steps)
+    out = pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((ap.shape[0], bp.shape[1]), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness contract.
+
+Every kernel in this package has a reference here; `python/tests` sweeps
+shapes/dtypes with hypothesis and asserts allclose agreement.
+"""
+
+import jax.numpy as jnp
+
+
+def hard_threshold_ref(z: jnp.ndarray, s: int) -> jnp.ndarray:
+    """Keep the s largest-|z| entries per column (threshold rule: ties at the
+    s-th magnitude are all kept — measure-zero for continuous data)."""
+    mags = jnp.abs(z)
+    kth = jnp.sort(mags, axis=0)[z.shape[0] - s, :][None, :]
+    return jnp.where(mags >= kth, z, 0.0)
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def sparse_apply_ref(t: jnp.ndarray, s_dense: jnp.ndarray) -> jnp.ndarray:
+    """Factorized-layer tail: (x·A)·S with S given densely."""
+    return jnp.dot(t, s_dense, preferred_element_type=jnp.float32)
+
+
+def compot_iter_ref(wt: jnp.ndarray, d: jnp.ndarray, s: int):
+    """One COMPOT alternating iteration (Eq. 9 + Eq. 10 inputs):
+    returns (S_dense, M = W̃·Sᵀ)."""
+    z = d.T @ wt
+    s_mat = hard_threshold_ref(z, s)
+    m = wt @ s_mat.T
+    return s_mat, m
+
+
+def procrustes_ref(m: jnp.ndarray) -> jnp.ndarray:
+    """Polar/Procrustes factor via full SVD (host reference)."""
+    u, _, vt = jnp.linalg.svd(m, full_matrices=False)
+    return u @ vt

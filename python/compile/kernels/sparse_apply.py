@@ -1,0 +1,52 @@
+"""L1 Pallas kernel: factorized-layer apply tail — out = T·S with S the
+column-s-sparse code matrix given as (indices, values).
+
+On TPU the s-sparse structure maps to a gather over the k axis of the
+(B × k) activation panel held in VMEM, followed by a weighted reduction —
+no HBM round-trip for the dense k×n S. Here the per-program footprint is
+(B·k + s·BLOCK_N·2 + B·BLOCK_N)·4 B, comfortably inside VMEM for the
+shipped model shapes (DESIGN.md §7). interpret=True for CPU-PJRT.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 128
+
+
+def _kernel(t_ref, idx_ref, val_ref, out_ref):
+    t = t_ref[...]  # (B, k)
+    idx = idx_ref[...]  # (s, bn)
+    val = val_ref[...]  # (s, bn)
+    # gathered: (B, s, bn) = t[:, idx]
+    gathered = jnp.take(t, idx, axis=1)
+    out_ref[...] = jnp.einsum("bsn,sn->bn", gathered, val)
+
+
+@jax.jit
+def sparse_apply(t: jnp.ndarray, idx: jnp.ndarray, val: jnp.ndarray) -> jnp.ndarray:
+    """t (B,k) · S where column j of S has nonzeros (idx[:, j], val[:, j])."""
+    b, k = t.shape
+    s, n = idx.shape
+    assert val.shape == (s, n)
+    bn = min(BLOCK_N, n)
+    n_pad = (-n) % bn
+    idx_p = jnp.pad(idx, ((0, 0), (0, n_pad)))
+    val_p = jnp.pad(val, ((0, 0), (0, n_pad)))
+    grid = (idx_p.shape[1] // bn,)
+    out = pl.pallas_call(
+        functools.partial(_kernel),
+        out_shape=jax.ShapeDtypeStruct((b, idx_p.shape[1]), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, k), lambda j: (0, 0)),
+            pl.BlockSpec((s, bn), lambda j: (0, j)),
+            pl.BlockSpec((s, bn), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((b, bn), lambda j: (0, j)),
+        interpret=True,
+    )(t, idx_p, val_p)
+    return out[:, :n]

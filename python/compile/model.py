@@ -1,0 +1,341 @@
+"""L2: the transformer forward/backward in JAX.
+
+Architecture mirrors `rust/src/model/transformer.rs` exactly (RMSNorm with
+eps 1e-6, RoPE with (i, i+half) pairing, GQA with contiguous head layout,
+SwiGLU MLP, uncompressed embeddings/lm_head) so the weights trained here at
+build time (`pretrain.py`) load into the Rust runtime bit-for-bit, and a
+parity artifact cross-checks the two forward passes numerically.
+
+Training uses the plain-jnp path (autodiff-friendly); the AOT-exported
+inference graphs route their GEMMs through the L1 Pallas kernels
+(`use_pallas=True`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    max_seq: int
+    rope_theta: float = 10000.0
+    # encoder (enc-dec / vlm models); None for decoder-only
+    enc_layers: int | None = None
+    d_input: int | None = None
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def to_json_dict(self) -> dict:
+        d = {
+            "name": self.name,
+            "vocab": self.vocab,
+            "d_model": self.d_model,
+            "n_layers": self.n_layers,
+            "n_heads": self.n_heads,
+            "n_kv_heads": self.n_kv_heads,
+            "d_ff": self.d_ff,
+            "max_seq": self.max_seq,
+            "rope_theta": self.rope_theta,
+        }
+        if self.enc_layers is not None:
+            d["encoder"] = {"n_layers": self.enc_layers, "d_input": self.d_input}
+        return d
+
+
+# Presets mirroring rust/src/model/config.rs (scaled-down paper models).
+PRESETS = {
+    "qwen-nano": Config("qwen-nano", 256, 64, 3, 4, 2, 192, 128),
+    "llama-micro": Config("llama-micro", 256, 96, 3, 6, 2, 256, 128),
+    "llama-mini": Config("llama-mini", 256, 128, 4, 8, 8, 344, 128),
+    "llama-small": Config("llama-small", 256, 160, 5, 10, 5, 432, 128),
+    "llama-wide": Config("llama-wide", 256, 192, 6, 12, 12, 512, 128),
+    "qwen-micro": Config("qwen-micro", 256, 144, 4, 8, 4, 400, 128),
+    "encdec-micro": Config("encdec-micro", 256, 96, 3, 6, 6, 256, 192, enc_layers=2, d_input=32),
+    "vlm-micro": Config("vlm-micro", 256, 96, 3, 6, 3, 256, 160, enc_layers=0, d_input=32),
+}
+
+
+def rmsnorm(x, g):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + 1e-6) * g
+
+
+def rope(x, head_dim, theta, pos0=0):
+    """x: (..., T, H*hd); rotate (i, i+half) pairs per head."""
+    *lead, t, width = x.shape
+    half = head_dim // 2
+    pos = jnp.arange(t) + pos0  # (T,)
+    i = jnp.arange(half)
+    freq = theta ** (-2.0 * i / head_dim)  # (half,)
+    ang = pos[:, None] * freq[None, :]  # (T, half)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    xh = x.reshape(*lead, t, width // head_dim, head_dim)
+    a = xh[..., :half]
+    b = xh[..., half:]
+    sin = sin[:, None, :]
+    cos = cos[:, None, :]
+    ra = a * cos - b * sin
+    rb = a * sin + b * cos
+    return jnp.concatenate([ra, rb], axis=-1).reshape(*lead, t, width)
+
+
+def init_params(cfg: Config, key) -> dict:
+    std = 0.6 / jnp.sqrt(cfg.d_model)
+    params = {}
+    keys = jax.random.split(key, 4 + cfg.n_layers * 8)
+    params["embed"] = jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) * 1.0
+    params["lm_head"] = jax.random.normal(keys[1], (cfg.d_model, cfg.vocab)) * std
+    params["final_norm"] = jnp.ones((1, cfg.d_model))
+    kv = cfg.n_kv_heads * cfg.head_dim
+    shapes = {
+        "q_proj": (cfg.d_model, cfg.d_model),
+        "k_proj": (cfg.d_model, kv),
+        "v_proj": (cfg.d_model, kv),
+        "o_proj": (cfg.d_model, cfg.d_model),
+        "gate_proj": (cfg.d_model, cfg.d_ff),
+        "up_proj": (cfg.d_model, cfg.d_ff),
+        "down_proj": (cfg.d_ff, cfg.d_model),
+    }
+    ki = 2
+    for layer in range(cfg.n_layers):
+        params[f"blocks.{layer}.attn_norm"] = jnp.ones((1, cfg.d_model))
+        params[f"blocks.{layer}.mlp_norm"] = jnp.ones((1, cfg.d_model))
+        for nm, shp in shapes.items():
+            params[f"blocks.{layer}.{nm}"] = (
+                jax.random.normal(keys[ki % len(keys)], shp) * std
+            )
+            ki += 1
+    return params
+
+
+def attention(q, k, v, n_heads, n_kv, head_dim, causal=True):
+    """q: (B,T,H*hd), k/v: (B,Tk,KV*hd) → (B,T,H*hd)."""
+    b, t, _ = q.shape
+    tk = k.shape[1]
+    qh = q.reshape(b, t, n_heads, head_dim)
+    kh = k.reshape(b, tk, n_kv, head_dim)
+    vh = v.reshape(b, tk, n_kv, head_dim)
+    rep = n_heads // n_kv
+    kh = jnp.repeat(kh, rep, axis=2)
+    vh = jnp.repeat(vh, rep, axis=2)
+    scores = jnp.einsum("bthd,bshd->bhts", qh, kh) / jnp.sqrt(head_dim)
+    if causal:
+        mask = jnp.tril(jnp.ones((t, tk), dtype=bool), k=tk - t)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", att, vh)
+    return out.reshape(b, t, n_heads * head_dim)
+
+
+def block_forward(p, prefix, x, cfg: Config, causal=True, use_rope=True):
+    xn = rmsnorm(x, p[f"{prefix}.attn_norm"])
+    q = xn @ p[f"{prefix}.q_proj"]
+    k = xn @ p[f"{prefix}.k_proj"]
+    v = xn @ p[f"{prefix}.v_proj"]
+    if use_rope:
+        q = rope(q, cfg.head_dim, cfg.rope_theta)
+        k = rope(k, cfg.head_dim, cfg.rope_theta)
+    att = attention(q, k, v, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, causal)
+    x = x + att @ p[f"{prefix}.o_proj"]
+    xn = rmsnorm(x, p[f"{prefix}.mlp_norm"])
+    g = xn @ p[f"{prefix}.gate_proj"]
+    u = xn @ p[f"{prefix}.up_proj"]
+    h = jax.nn.silu(g) * u
+    return x + h @ p[f"{prefix}.down_proj"]
+
+
+def forward(params, cfg: Config, tokens):
+    """tokens (B,T) int32 → logits (B,T,V)."""
+    x = params["embed"][tokens]
+    for layer in range(cfg.n_layers):
+        x = block_forward(params, f"blocks.{layer}", x, cfg)
+    x = rmsnorm(x, params["final_norm"])
+    return x @ params["lm_head"]
+
+
+def lm_loss(params, cfg: Config, tokens):
+    logits = forward(params, cfg, tokens)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+# ---------------- encoder–decoder (Whisper-like) ----------------
+
+def init_encdec_params(cfg: Config, key) -> dict:
+    p = init_params(cfg, key)
+    # rename decoder blocks + add encoder / cross tensors
+    out = {}
+    std = 0.6 / float(jnp.sqrt(cfg.d_model))
+    keys = jax.random.split(key, 64)
+    ki = 0
+
+    def nrm(shape):
+        return jnp.ones((1, shape))
+
+    def rnd(shape):
+        nonlocal ki
+        ki += 1
+        return jax.random.normal(keys[ki % 64], shape) * std
+
+    out["embed"] = p["embed"]
+    out["lm_head"] = p["lm_head"]
+    out["final_norm"] = p["final_norm"]
+    out["enc_norm"] = nrm(cfg.d_model)
+    out["input_proj"] = jax.random.normal(keys[0], (cfg.d_input, cfg.d_model)) * (
+        1.0 / jnp.sqrt(cfg.d_input)
+    )
+    out["codebook"] = jax.random.normal(keys[1], (cfg.vocab, cfg.d_input))
+    kv = cfg.n_kv_heads * cfg.head_dim
+    shapes = {
+        "q_proj": (cfg.d_model, cfg.d_model),
+        "k_proj": (cfg.d_model, kv),
+        "v_proj": (cfg.d_model, kv),
+        "o_proj": (cfg.d_model, cfg.d_model),
+        "gate_proj": (cfg.d_model, cfg.d_ff),
+        "up_proj": (cfg.d_model, cfg.d_ff),
+        "down_proj": (cfg.d_ff, cfg.d_model),
+    }
+    for e in range(cfg.enc_layers or 0):
+        out[f"enc.{e}.attn_norm"] = nrm(cfg.d_model)
+        out[f"enc.{e}.mlp_norm"] = nrm(cfg.d_model)
+        for nm, shp in shapes.items():
+            out[f"enc.{e}.{nm}"] = rnd(shp)
+    for d in range(cfg.n_layers):
+        out[f"dec.{d}.attn_norm"] = nrm(cfg.d_model)
+        out[f"dec.{d}.mlp_norm"] = nrm(cfg.d_model)
+        out[f"dec.{d}.cross_norm"] = nrm(cfg.d_model)
+        for nm, shp in shapes.items():
+            out[f"dec.{d}.{nm}"] = rnd(shp)
+        out[f"dec.{d}.cross_q_proj"] = rnd((cfg.d_model, cfg.d_model))
+        out[f"dec.{d}.cross_k_proj"] = rnd((cfg.d_model, kv))
+        out[f"dec.{d}.cross_v_proj"] = rnd((cfg.d_model, kv))
+        out[f"dec.{d}.cross_o_proj"] = rnd((cfg.d_model, cfg.d_model))
+    return out
+
+
+def encdec_forward(params, cfg: Config, frames, tokens):
+    """frames (B,Tf,d_input), tokens (B,T) → logits (B,T,V)."""
+    x = frames @ params["input_proj"]
+    for e in range(cfg.enc_layers or 0):
+        x = block_forward(params, f"enc.{e}", x, cfg, causal=False)
+    enc = rmsnorm(x, params["enc_norm"])
+
+    y = params["embed"][tokens]
+    for d in range(cfg.n_layers):
+        pref = f"dec.{d}"
+        # self-attention (causal)
+        yn = rmsnorm(y, params[f"{pref}.attn_norm"])
+        q = rope(yn @ params[f"{pref}.q_proj"], cfg.head_dim, cfg.rope_theta)
+        k = rope(yn @ params[f"{pref}.k_proj"], cfg.head_dim, cfg.rope_theta)
+        v = yn @ params[f"{pref}.v_proj"]
+        att = attention(q, k, v, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, True)
+        y = y + att @ params[f"{pref}.o_proj"]
+        # cross-attention (no rope)
+        yn = rmsnorm(y, params[f"{pref}.cross_norm"])
+        q = yn @ params[f"{pref}.cross_q_proj"]
+        k = enc @ params[f"{pref}.cross_k_proj"]
+        v = enc @ params[f"{pref}.cross_v_proj"]
+        att = attention(q, k, v, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, False)
+        y = y + att @ params[f"{pref}.cross_o_proj"]
+        # mlp
+        yn = rmsnorm(y, params[f"{pref}.mlp_norm"])
+        h = jax.nn.silu(yn @ params[f"{pref}.gate_proj"]) * (yn @ params[f"{pref}.up_proj"])
+        y = y + h @ params[f"{pref}.down_proj"]
+    y = rmsnorm(y, params["final_norm"])
+    return y @ params["lm_head"]
+
+
+def encdec_loss(params, cfg: Config, frames, tokens):
+    # teacher forcing: predict tokens[1:] from tokens[:-1]
+    logits = encdec_forward(params, cfg, frames, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+# ---------------- prefix VLM ----------------
+
+def init_vlm_params(cfg: Config, key) -> dict:
+    p = init_params(cfg, key)
+    k1, k2 = jax.random.split(key)
+    p["patch_proj"] = jax.random.normal(k1, (cfg.d_input, cfg.d_model)) * (
+        1.0 / jnp.sqrt(cfg.d_input)
+    )
+    p["codebook"] = jax.random.normal(k2, (cfg.vocab, cfg.d_input))
+    return p
+
+
+def vlm_forward(params, cfg: Config, patches, tokens):
+    """patches (B,P,d_input), tokens (B,T) → caption logits (B,T,V)."""
+    prefix = patches @ params["patch_proj"]
+    tok = params["embed"][tokens]
+    x = jnp.concatenate([prefix, tok], axis=1)
+    for layer in range(cfg.n_layers):
+        x = block_forward(params, f"blocks.{layer}", x, cfg)
+    x = rmsnorm(x, params["final_norm"])
+    p = patches.shape[1]
+    return x[:, p:] @ params["lm_head"]
+
+
+def vlm_loss(params, cfg: Config, patches, tokens):
+    # predict token t from prefix+tokens[..t-1]: logits row (t-1) ← token t;
+    # and token 0 from the final patch row: include it by shifting inputs.
+    logits = vlm_forward(params, cfg, patches, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+# ---------------- Pallas-backed inference projection ----------------
+
+def forward_pallas(params, cfg: Config, tokens):
+    """Single-sequence inference forward whose projection GEMMs go through
+    the L1 Pallas matmul kernel — this is the variant `aot.py` exports, so
+    the L1 kernels lower into the shipped HLO artifacts."""
+    from .kernels.matmul import matmul as pl_matmul
+
+    x = params["embed"][tokens]  # (T, d)
+
+    def proj(h, w):
+        return pl_matmul(h, w)
+
+    for layer in range(cfg.n_layers):
+        pref = f"blocks.{layer}"
+        xn = rmsnorm(x, params[f"{pref}.attn_norm"])
+        q = rope(proj(xn, params[f"{pref}.q_proj"])[None], cfg.head_dim, cfg.rope_theta)[0]
+        k = rope(proj(xn, params[f"{pref}.k_proj"])[None], cfg.head_dim, cfg.rope_theta)[0]
+        v = proj(xn, params[f"{pref}.v_proj"])
+        att = attention(
+            q[None], k[None], v[None], cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, True
+        )[0]
+        x = x + proj(att, params[f"{pref}.o_proj"])
+        xn = rmsnorm(x, params[f"{pref}.mlp_norm"])
+        h = jax.nn.silu(proj(xn, params[f"{pref}.gate_proj"])) * proj(
+            xn, params[f"{pref}.up_proj"]
+        )
+        x = x + proj(h, params[f"{pref}.down_proj"])
+    x = rmsnorm(x, params["final_norm"])
+    return x @ params["lm_head"]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def forward_jit(params, cfg: Config, tokens):
+    return forward(params, cfg, tokens)

@@ -1,0 +1,214 @@
+"""Build-time pretraining of the evaluation models (JAX, CPU, runs once
+under `make artifacts`; never on the request path).
+
+Trains each scaled-down preset on the synthetic language for a few hundred
+Adam steps — enough to sit far above chance on the benchmark suite, giving
+the compression comparisons headroom (DESIGN.md §3) — then writes CPT1
+weight files plus the corpus bins and a forward-parity artifact that the
+Rust integration tests check against.
+
+Usage: python -m compile.pretrain --out ../artifacts [--steps 200] [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .corpus import SynthLang, write_corpus_bins
+from .weights_io import save_cpt1
+
+
+# ----- minimal Adam (optax unavailable offline) -----
+
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros(())}
+
+
+def adam_update(grads, state, params, lr=3e-3, b1=0.9, b2=0.99, eps=1e-8):
+    t = state["t"] + 1.0
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree.map(lambda m: m / (1 - b1**t), m)
+    vh = jax.tree.map(lambda v: v / (1 - b2**t), v)
+    new = jax.tree.map(lambda p, m, v: p - lr * m / (jnp.sqrt(v) + eps), params, mh, vh)
+    return new, {"m": m, "v": v, "t": t}
+
+
+def train_lm(cfg: M.Config, steps: int, batch: int, seq: int, seed: int):
+    lang = SynthLang.wiki(cfg.vocab)
+    rng = np.random.default_rng(seed)
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    state = adam_init(params)
+
+    @jax.jit
+    def step(params, state, tokens):
+        loss, grads = jax.value_and_grad(M.lm_loss)(params, cfg, tokens)
+        params, state = adam_update(grads, state, params)
+        return params, state, loss
+
+    t0 = time.time()
+    for i in range(steps):
+        toks = jnp.asarray(lang.gen_batch(batch, seq, rng).astype(np.int32))
+        params, state, loss = step(params, state, toks)
+        if i % 50 == 0 or i == steps - 1:
+            print(f"  [{cfg.name}] step {i:4d} loss {float(loss):.3f} ({time.time()-t0:.0f}s)")
+    return params
+
+
+def train_encdec(cfg: M.Config, steps: int, batch: int, seq: int, seed: int):
+    from .audio_data import emit_frames_np
+
+    lang = SynthLang.wiki(cfg.vocab)
+    rng = np.random.default_rng(seed)
+    params = M.init_encdec_params(cfg, jax.random.PRNGKey(seed))
+    codebook = np.asarray(params["codebook"])
+    state = adam_init(params)
+
+    @jax.jit
+    def step(params, state, frames, tokens):
+        loss, grads = jax.value_and_grad(M.encdec_loss)(params, cfg, frames, tokens)
+        params, state = adam_update(grads, state, params)
+        return params, state, loss
+
+    t0 = time.time()
+    for i in range(steps):
+        toks = lang.gen_batch(batch, seq, rng)
+        frames = np.stack([emit_frames_np(codebook, t, rng) for t in toks])
+        # BOS-prefix the transcripts (token 0), matching Rust transcribe().
+        bos = np.zeros((batch, 1), dtype=toks.dtype)
+        toks_in = np.concatenate([bos, toks], axis=1)
+        params, state, loss = step(
+            params, state, jnp.asarray(frames), jnp.asarray(toks_in.astype(np.int32))
+        )
+        if i % 50 == 0 or i == steps - 1:
+            print(f"  [{cfg.name}] step {i:4d} loss {float(loss):.3f} ({time.time()-t0:.0f}s)")
+    return params
+
+
+def train_vlm(cfg: M.Config, steps: int, batch: int, seed: int):
+    from .audio_data import N_PATCHES, PATCH_NOISE
+
+    lang = SynthLang.wiki(cfg.vocab)
+    rng = np.random.default_rng(seed)
+    params = M.init_vlm_params(cfg, jax.random.PRNGKey(seed))
+    codebook = np.asarray(params["codebook"])
+    state = adam_init(params)
+
+    @jax.jit
+    def step(params, state, patches, tokens):
+        loss, grads = jax.value_and_grad(M.vlm_loss)(params, cfg, patches, tokens)
+        params, state = adam_update(grads, state, params)
+        return params, state, loss
+
+    t0 = time.time()
+    filler = 12
+    for i in range(steps):
+        concepts = np.stack(
+            [rng.permutation(cfg.vocab)[:N_PATCHES].astype(np.uint16) for _ in range(batch)]
+        )
+        patches = codebook[concepts.astype(int)] + PATCH_NOISE * rng.standard_normal(
+            (batch, N_PATCHES, codebook.shape[1])
+        ).astype(np.float32)
+        caps = []
+        for b in range(batch):
+            cont = lang.gen(filler, rng)
+            caps.append(np.concatenate([concepts[b], cont]))
+        caps = np.stack(caps)
+        params, state, loss = step(
+            params, state, jnp.asarray(patches, dtype=jnp.float32), jnp.asarray(caps.astype(np.int32))
+        )
+        if i % 50 == 0 or i == steps - 1:
+            print(f"  [{cfg.name}] step {i:4d} loss {float(loss):.3f} ({time.time()-t0:.0f}s)")
+    return params
+
+
+def save_params(path, cfg: M.Config, params) -> None:
+    tensors = {k: np.asarray(v) for k, v in params.items()}
+    save_cpt1(path, cfg.to_json_dict(), tensors)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=220)
+    ap.add_argument("--fast", action="store_true", help="tiny budget (CI smoke)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    steps = 30 if args.fast else args.steps
+    print("writing corpus bins ...")
+    write_corpus_bins(args.out)
+
+    lm_models = [
+        ("qwen-nano", steps, 12, 48),
+        ("llama-micro", steps, 12, 48),
+        ("llama-mini", steps, 8, 48),
+        ("llama-small", max(steps // 2, 30), 8, 48),
+        ("qwen-micro", max(steps // 2, 30), 8, 48),
+        ("llama-wide", max(steps // 3, 20), 6, 48),
+    ]
+    trained = {}
+    for name, st, batch, seq in lm_models:
+        path = os.path.join(args.out, f"{name}.bin")
+        if os.path.exists(path):
+            print(f"{name}: cached")
+            continue
+        print(f"training {name} ({st} steps)")
+        cfg = M.PRESETS[name]
+        params = train_lm(cfg, st, batch, seq, seed=hash(name) % 2**31)
+        save_params(path, cfg, params)
+        trained[name] = params
+
+    # enc-dec (audio) and VLM
+    for name, trainer in [("encdec-micro", "encdec"), ("vlm-micro", "vlm")]:
+        path = os.path.join(args.out, f"{name}.bin")
+        if os.path.exists(path):
+            print(f"{name}: cached")
+            continue
+        cfg = M.PRESETS[name]
+        st = max(steps // 2, 30)
+        print(f"training {name} ({st} steps)")
+        if trainer == "encdec":
+            params = train_encdec(cfg, st, 6, 24, seed=77)
+        else:
+            params = train_vlm(cfg, st, 12, seed=78)
+        save_params(path, cfg, params)
+
+    # Forward-parity artifact: tokens + JAX logits for llama-micro; the Rust
+    # integration test loads the weights and asserts allclose.
+    parity_path = os.path.join(args.out, "parity.json")
+    if not os.path.exists(parity_path):
+        from .weights_io import load_cpt1
+
+        cfg = M.PRESETS["llama-micro"]
+        _, tensors = load_cpt1(os.path.join(args.out, "llama-micro.bin"))
+        params = {k: jnp.asarray(v if v.shape[0] > 1 or k not in ("final_norm",) else v)
+                  for k, v in tensors.items()}
+        # norms are stored 1×n — model code broadcasts fine.
+        lang = SynthLang.wiki(cfg.vocab)
+        rng = np.random.default_rng(123)
+        toks = lang.gen(32, rng)
+        logits = M.forward(params, cfg, jnp.asarray(toks.astype(np.int32))[None])[0]
+        with open(parity_path, "w") as f:
+            json.dump(
+                {
+                    "model": "llama-micro",
+                    "tokens": [int(t) for t in toks],
+                    "logits_last": [float(x) for x in np.asarray(logits[-1])],
+                },
+                f,
+            )
+    print("pretraining complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""CPT1 weight-file writer/reader — mirror of rust/src/model/weights.rs.
+
+Layout: b"CPT1" | u32 header_len | header JSON | f32-LE data.
+Vector tensors are stored 1×n. Header tensor offsets are in f32 elements.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+
+import numpy as np
+
+MAGIC = b"CPT1"
+
+
+def save_cpt1(path, config_json: dict, tensors: dict[str, np.ndarray]) -> None:
+    names = sorted(tensors)  # BTreeMap order on the Rust side
+    entries = []
+    offset = 0
+    mats = []
+    for name in names:
+        a = np.asarray(tensors[name], dtype=np.float32)
+        if a.ndim == 1:
+            a = a[None, :]
+        assert a.ndim == 2, f"{name} must be 2-D"
+        entries.append(
+            {"name": name, "rows": int(a.shape[0]), "cols": int(a.shape[1]), "offset": offset}
+        )
+        offset += a.size
+        mats.append(a)
+    header = json.dumps({"config": config_json, "tensors": entries}).encode()
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(header)))
+        f.write(header)
+        for a in mats:
+            f.write(a.astype("<f4").tobytes())
+
+
+def load_cpt1(path):
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        (hlen,) = struct.unpack("<I", f.read(4))
+        header = json.loads(f.read(hlen))
+        data = np.frombuffer(f.read(), dtype="<f4")
+    tensors = {}
+    for t in header["tensors"]:
+        o, r, c = t["offset"], t["rows"], t["cols"]
+        tensors[t["name"]] = data[o : o + r * c].reshape(r, c).copy()
+    return header["config"], tensors

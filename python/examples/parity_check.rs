@@ -1,0 +1,14 @@
+fn main() -> anyhow::Result<()> {
+    let model = compot::model::Model::load(std::path::Path::new("/tmp/parity_tiny.bin"))?;
+    let j = compot::util::json::Json::parse(&std::fs::read_to_string("/tmp/parity_tiny.json")?).unwrap();
+    let tokens: Vec<u16> = j.get("tokens").unwrap().as_arr().unwrap().iter().map(|x| x.as_usize().unwrap() as u16).collect();
+    let expect: Vec<f32> = j.get("logits_last").unwrap().as_arr().unwrap().iter().map(|x| x.as_f64().unwrap() as f32).collect();
+    let logits = model.forward(&tokens);
+    let last = logits.row(logits.rows()-1);
+    let mut max_err = 0f32;
+    for (a, b) in last.iter().zip(expect.iter()) { max_err = max_err.max((a-b).abs()); }
+    println!("max_err = {max_err}");
+    assert!(max_err < 2e-3, "parity failed");
+    println!("PARITY OK");
+    Ok(())
+}

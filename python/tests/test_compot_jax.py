@@ -1,0 +1,81 @@
+"""L2 COMPOT graph correctness: the jitted alternating-minimization pieces
+vs numpy references, and the Newton–Schulz Procrustes vs exact SVD."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.compot_jax import compot_factorize, compot_iter, newton_schulz
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+@st.composite
+def iter_case(draw):
+    m = draw(st.integers(8, 48))
+    n = draw(st.integers(8, 48))
+    k = draw(st.integers(2, m))
+    s = draw(st.integers(1, k))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return m, n, k, s, seed
+
+
+@given(iter_case())
+def test_compot_iter_matches_ref(case):
+    m, n, k, s, seed = case
+    rng = np.random.default_rng(seed)
+    wt = jnp.asarray(rng.standard_normal((m, n)).astype(np.float32))
+    d = jnp.asarray(np.linalg.qr(rng.standard_normal((m, k)))[0].astype(np.float32))
+    s_got, d_next = compot_iter(wt, d, s)
+    s_want, m_want = ref.compot_iter_ref(wt, d, s)
+    np.testing.assert_allclose(s_got, s_want, rtol=1e-4, atol=1e-4)
+    # D_next maximizes Tr(DᵀM) — when M is rank-deficient (small s) the
+    # maximizer is not unique, so compare *objectives*, not factors.
+    d_want = ref.procrustes_ref(m_want)
+    tr_got = float(jnp.trace(d_next.T @ m_want))
+    tr_want = float(jnp.trace(d_want.T @ m_want))
+    assert tr_got > tr_want - 5e-2 * abs(tr_want) - 1e-4, (
+        f"procrustes objective mismatch {tr_got} vs {tr_want}"
+    )
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_newton_schulz_is_orthogonal_and_optimal(seed):
+    rng = np.random.default_rng(seed)
+    m = jnp.asarray(rng.standard_normal((24, 10)).astype(np.float32))
+    d = newton_schulz(m, 20)
+    gram = np.asarray(d.T @ d)
+    np.testing.assert_allclose(gram, np.eye(10), atol=5e-3)
+    # trace objective: must match the SVD solution
+    d_svd = ref.procrustes_ref(m)
+    tr_ns = float(jnp.trace(d.T @ m))
+    tr_svd = float(jnp.trace(d_svd.T @ m))
+    assert tr_ns > tr_svd - 1e-2 * abs(tr_svd)
+
+
+def test_factorize_reduces_error_and_stays_orthogonal():
+    rng = np.random.default_rng(3)
+    wt = jnp.asarray(rng.standard_normal((32, 48)).astype(np.float32))
+    d0 = jnp.asarray(np.linalg.qr(rng.standard_normal((32, 16)))[0].astype(np.float32))
+    errs = []
+    for iters in [1, 5, 15]:
+        d, s_dense = compot_factorize(wt, d0, 8, iters)
+        errs.append(float(jnp.linalg.norm(wt - d @ s_dense)))
+    assert errs[2] <= errs[0] + 1e-4, f"no improvement: {errs}"
+    d, _ = compot_factorize(wt, d0, 8, 10)
+    gram = np.asarray(d.T @ d)
+    np.testing.assert_allclose(gram, np.eye(16), atol=2e-2)
+
+
+def test_factorize_error_identity():
+    # ‖W̃ − D·S‖² == ‖W̃‖² − ‖S‖² under orthonormal D and S = H_s(DᵀW̃)
+    rng = np.random.default_rng(4)
+    wt = jnp.asarray(rng.standard_normal((20, 30)).astype(np.float32))
+    d = jnp.asarray(np.linalg.qr(rng.standard_normal((20, 10)))[0].astype(np.float32))
+    s_dense, _ = compot_iter(wt, d, 5)
+    lhs = float(jnp.linalg.norm(wt - d @ s_dense) ** 2)
+    rhs = float(jnp.linalg.norm(wt) ** 2 - jnp.linalg.norm(s_dense) ** 2)
+    assert abs(lhs - rhs) / max(abs(rhs), 1e-9) < 1e-3

@@ -1,0 +1,110 @@
+"""L2 model correctness: shapes, causality, loss behaviour, the CPT1 weight
+format roundtrip, and the corpus mirror's statistics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.corpus import COPY_LAG, SynthLang
+from compile.weights_io import load_cpt1, save_cpt1
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = M.Config("t", 64, 32, 2, 4, 2, 64, 64)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_forward_shapes_and_finite(tiny):
+    cfg, params = tiny
+    toks = jnp.zeros((3, 10), dtype=jnp.int32)
+    logits = M.forward(params, cfg, toks)
+    assert logits.shape == (3, 10, 64)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_causality(tiny):
+    cfg, params = tiny
+    a = jnp.asarray([[1, 2, 3, 4, 5, 6]], dtype=jnp.int32)
+    b = a.at[0, 5].set(60)
+    la = M.forward(params, cfg, a)
+    lb = M.forward(params, cfg, b)
+    np.testing.assert_allclose(la[0, :5], lb[0, :5], atol=1e-5)
+    assert not np.allclose(la[0, 5], lb[0, 5])
+
+
+def test_loss_decreases_under_one_grad_step(tiny):
+    cfg, params = tiny
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, 64, (4, 24)).astype(np.int32))
+    loss, grads = jax.value_and_grad(M.lm_loss)(params, cfg, toks)
+    params2 = jax.tree.map(lambda p, g: p - 0.05 * g, params, grads)
+    loss2 = M.lm_loss(params2, cfg, toks)
+    assert float(loss2) < float(loss)
+
+
+def test_rope_relative_property():
+    q = jnp.ones((1, 1, 8))
+    k = jnp.ones((1, 1, 8))
+    def dot_at(pi, pj):
+        qq = M.rope(q, 8, 100.0, pos0=pi)
+        kk = M.rope(k, 8, 100.0, pos0=pj)
+        return float(jnp.sum(qq * kk))
+    assert abs(dot_at(3, 1) - dot_at(7, 5)) < 1e-4
+    assert abs(dot_at(3, 1) - dot_at(4, 1)) > 1e-6
+
+
+def test_cpt1_roundtrip(tmp_path, tiny):
+    cfg, params = tiny
+    path = tmp_path / "m.bin"
+    save_cpt1(path, cfg.to_json_dict(), {k: np.asarray(v) for k, v in params.items()})
+    config, tensors = load_cpt1(path)
+    assert config["d_model"] == 32
+    for k, v in params.items():
+        want = np.asarray(v)
+        if want.ndim == 1:
+            want = want[None, :]
+        np.testing.assert_allclose(tensors[k], want, rtol=1e-7)
+
+
+def test_encdec_and_vlm_shapes():
+    cfg = M.PRESETS["encdec-micro"]
+    p = M.init_encdec_params(cfg, jax.random.PRNGKey(1))
+    frames = jnp.zeros((2, 8, cfg.d_input))
+    toks = jnp.zeros((2, 5), dtype=jnp.int32)
+    logits = M.encdec_forward(p, cfg, frames, toks)
+    assert logits.shape == (2, 5, cfg.vocab)
+
+    vcfg = M.PRESETS["vlm-micro"]
+    vp = M.init_vlm_params(vcfg, jax.random.PRNGKey(2))
+    patches = jnp.zeros((2, 4, vcfg.d_input))
+    vl = M.vlm_forward(vp, vcfg, patches, toks)
+    assert vl.shape == (2, 5, vcfg.vocab)
+
+
+def test_corpus_statistics_match_design():
+    lang = SynthLang.wiki(256)
+    rng = np.random.default_rng(0)
+    seq = lang.gen(8000, rng)
+    # top-successor rate far above chance
+    hits = sum(1 for a, b in zip(seq, seq[1:]) if lang.successors(int(a))[0] == int(b))
+    assert hits / len(seq) > 0.25
+    # copy-lag structure present
+    lag = sum(1 for t in range(COPY_LAG, len(seq)) if seq[t] == seq[t - COPY_LAG])
+    assert lag / (len(seq) - COPY_LAG) > 0.08
+    # tokens in range
+    assert seq.max() < 256
+
+
+def test_pallas_forward_matches_jnp_forward():
+    # The AOT-exported Pallas-backed forward must agree with the training
+    # forward (single sequence).
+    cfg = M.Config("t", 64, 32, 2, 4, 2, 64, 64)
+    params = M.init_params(cfg, jax.random.PRNGKey(3))
+    toks = jnp.asarray([1, 5, 9, 2, 7], dtype=jnp.int32)
+    a = M.forward(params, cfg, toks[None])[0]
+    b = M.forward_pallas(params, cfg, toks)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)

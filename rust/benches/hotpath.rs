@@ -1,0 +1,153 @@
+//! Hot-path micro-benchmarks (perf-pass instrumentation; the in-tree bench
+//! harness replaces criterion in this offline environment).
+//!
+//! Run: `cargo bench --bench hotpath` — prints median/mean/min per op and
+//! GFLOP/s where meaningful. Results are logged in EXPERIMENTS.md §Perf.
+
+use compot::compress::compot::{factorize, CompotConfig, DictInit};
+use compot::compress::cospadi::{ksvd_factorize, omp_column, CospadiConfig};
+use compot::compress::sparse::ColumnSparse;
+use compot::linalg::{cholesky, gemm, qr, svd, Mat};
+use compot::util::timer::bench;
+use compot::util::Rng;
+
+fn header() {
+    println!("{:<44} {:>12} {:>12} {:>12}", "benchmark", "median", "mean", "min");
+    println!("{}", "-".repeat(96));
+}
+
+fn report_with_flops(name: &str, st: compot::util::timer::BenchStats, flops: f64) {
+    let gfs = flops / st.median_s / 1e9;
+    println!("{}  [{gfs:6.2} GFLOP/s]", st.format(name));
+}
+
+fn main() {
+    let budget = std::env::var("BENCH_SECS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.4);
+    let mut rng = Rng::new(99);
+    header();
+
+    // --- GEMM (the dominant op in the COMPOT inner loop) ---
+    for &(m, k, n) in &[(96usize, 96usize, 256usize), (256, 96, 256), (512, 512, 512)] {
+        let a = Mat::randn(&mut rng, m, k, 1.0);
+        let b = Mat::randn(&mut rng, k, n, 1.0);
+        let st = bench(
+            || {
+                std::hint::black_box(gemm::matmul(&a, &b));
+            },
+            budget,
+            10_000,
+        );
+        report_with_flops(&format!("gemm {m}x{k}x{n}"), st, 2.0 * (m * k * n) as f64);
+    }
+
+    // --- Jacobi SVD (Procrustes inner solve) ---
+    for &(m, k) in &[(96usize, 40usize), (256, 62), (256, 128)] {
+        let a = Mat::randn(&mut rng, m, k, 1.0);
+        let st = bench(
+            || {
+                std::hint::black_box(svd::svd_thin(&a));
+            },
+            budget,
+            1000,
+        );
+        println!("{}", st.format(&format!("jacobi_svd {m}x{k}")));
+    }
+
+    // --- Procrustes (thin SVD + product) ---
+    let mmat = Mat::randn(&mut rng, 256, 62, 1.0);
+    let st = bench(
+        || {
+            std::hint::black_box(svd::procrustes(&mmat));
+        },
+        budget,
+        1000,
+    );
+    println!("{}", st.format("procrustes 256x62"));
+
+    // --- Hard threshold (sparse coding step) ---
+    for &(k, n, s) in &[(70usize, 256usize, 35usize), (128, 1024, 32)] {
+        let zt = Mat::randn(&mut rng, n, k, 1.0);
+        let st = bench(
+            || {
+                std::hint::black_box(ColumnSparse::hard_threshold_zt(&zt, s));
+            },
+            budget,
+            5000,
+        );
+        println!("{}", st.format(&format!("hard_threshold k={k} n={n} s={s}")));
+    }
+
+    // --- OMP column (CoSpaDi's sparse coding — the cost COMPOT removes) ---
+    let dict = qr::random_orthonormal(&mut rng, 96, 70);
+    let norms: Vec<f64> = vec![1.0; 70];
+    let y: Vec<f32> = (0..96).map(|_| rng.gauss32()).collect();
+    let st = bench(
+        || {
+            std::hint::black_box(omp_column(&dict, &norms, &y, 35));
+        },
+        budget,
+        5000,
+    );
+    println!("{}", st.format("omp_column m=96 k=70 s=35"));
+
+    // --- Full factorization: COMPOT vs K-SVD at equal iteration count ---
+    let wt = Mat::randn(&mut rng, 96, 256, 1.0);
+    let cfg = CompotConfig { iters: 5, init: DictInit::Svd, ..Default::default() };
+    let st = bench(
+        || {
+            let mut r = Rng::new(1);
+            std::hint::black_box(factorize(&wt, 70, 35, &cfg, &mut r));
+        },
+        budget.max(1.0),
+        100,
+    );
+    println!("{}", st.format("compot_factorize 96x256 k=70 s=35 T=5"));
+    let kcfg = CospadiConfig { iters: 5, ..Default::default() };
+    let st = bench(
+        || {
+            let mut r = Rng::new(1);
+            std::hint::black_box(ksvd_factorize(&wt, 70, 35, &kcfg, &mut r));
+        },
+        budget.max(1.0),
+        20,
+    );
+    println!("{}", st.format("ksvd_factorize   96x256 k=70 s=35 T=5"));
+
+    // --- Cholesky + whitening ---
+    let x = Mat::randn(&mut rng, 512, 96, 1.0);
+    let g = gemm::matmul_tn(&x, &x);
+    let st = bench(
+        || {
+            std::hint::black_box(cholesky::cholesky(&g).unwrap());
+        },
+        budget,
+        2000,
+    );
+    println!("{}", st.format("cholesky 96x96"));
+
+    // --- Sparse apply (compressed-layer forward tail) vs dense ---
+    let t = Mat::randn(&mut rng, 64, 70, 1.0);
+    let z = Mat::randn(&mut rng, 70, 256, 1.0);
+    let cs = ColumnSparse::hard_threshold(&z, 35);
+    let dense_s = cs.to_dense();
+    let st1 = bench(
+        || {
+            std::hint::black_box(cs.apply_after(&t));
+        },
+        budget,
+        5000,
+    );
+    println!("{}", st1.format("sparse_apply 64x70 x (70x256, s=35)"));
+    let st2 = bench(
+        || {
+            std::hint::black_box(gemm::matmul(&t, &dense_s));
+        },
+        budget,
+        5000,
+    );
+    println!("{}", st2.format("dense_apply  64x70 x 70x256"));
+    println!("sparse/dense apply ratio: {:.2}x", st1.median_s / st2.median_s);
+}

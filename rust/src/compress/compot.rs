@@ -1,0 +1,384 @@
+//! COMPOT — Algorithm 1 of the paper.
+//!
+//! Factorize the whitened weight `W̃ = Lᵀ·W` as `D_O·S_O` with a
+//! column-orthonormal dictionary `D_O ∈ R^{m×k}` (k ≤ m) and column-s-sparse
+//! codes `S_O`, by alternating two *closed-form* steps:
+//!
+//! 1. sparse coding  `S_O ← H_s(D_Oᵀ·W̃)`          (Eq. 9 — exact under
+//!    orthonormality; equivalent to OMP but one matmul + top-s),
+//! 2. dictionary     `M = W̃·S_Oᵀ = PΛQᵀ ⇒ D_O ← P·Qᵀ` (Eq. 10 — orthogonal
+//!    Procrustes via thin SVD).
+//!
+//! The achieved objective after step 1 has the free closed form
+//! `‖W̃ − D_O·S_O‖² = ‖W̃‖² − ‖S_O‖²` (orthonormal D_O and S = H_s(DᵀW̃)),
+//! which powers the early-stopping criterion of Appendix A.7 at zero cost.
+//!
+//! Storage (Eq. 11): `A = L^{-ᵀ}·D_O` dense at 16-bit plus S_O values at
+//! 16-bit and a 1-bit position mask.
+
+use super::sparse::ColumnSparse;
+use super::whitening::{CalibStats, Whitener};
+use super::{factorized_bits, ks_for_cr, CompressedLayer, Compressor, LinearWeight};
+use crate::linalg::{gemm, qr, svd, Mat};
+use crate::util::Rng;
+
+/// Dictionary initialization strategy (Table 1 / Fig. 3 ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DictInit {
+    /// Top-k left singular vectors of W̃ (the paper's default — saturates in
+    /// ~5× fewer iterations than random, Fig. 3).
+    Svd,
+    /// Random orthonormalized subset of W̃ columns.
+    RandomColumns,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct CompotConfig {
+    /// Dictionary-to-sparsity ratio k/s (paper default 2, Table 15).
+    pub ks_ratio: f64,
+    /// Alternating-minimization iterations T (paper default 20).
+    pub iters: usize,
+    pub init: DictInit,
+    /// Optional relative-MSE early-stop tolerance τ (Appendix A.7 /
+    /// Table 14): stop when |err²_{t−1} − err²_t| / err²_{t−1} < τ.
+    pub early_stop_tol: Option<f64>,
+    /// Use calibration whitening (Eq. 5–8). Disabled = factorize W directly
+    /// (ablation; also the behaviour with no calibration data).
+    pub whiten: bool,
+}
+
+impl Default for CompotConfig {
+    fn default() -> Self {
+        CompotConfig {
+            ks_ratio: 2.0,
+            iters: 20,
+            init: DictInit::Svd,
+            early_stop_tol: None,
+            whiten: true,
+        }
+    }
+}
+
+/// The COMPOT compressor (per-matrix; the model-level pipeline lives in
+/// `coordinator`).
+#[derive(Clone, Debug, Default)]
+pub struct Compot {
+    pub cfg: CompotConfig,
+}
+
+/// Output of the raw factorization loop, including the per-iteration
+/// whitened-error trace (drives Fig. 3 and Table 14).
+pub struct FactorizeResult {
+    pub d: Mat,
+    pub s: ColumnSparse,
+    /// ‖W̃ − D·S‖_F after each completed iteration.
+    pub err_trace: Vec<f64>,
+    pub iters_run: usize,
+}
+
+/// One alternating-minimization pass over `wt` (the whitened weight).
+/// This is the hot path mirrored by the L2/L1 AOT artifact
+/// (`compot_iter_*.hlo.txt`) — `runtime::compot_exec` runs the same math
+/// through PJRT and the two are cross-checked in integration tests.
+pub fn factorize(
+    wt: &Mat,
+    k: usize,
+    s: usize,
+    cfg: &CompotConfig,
+    rng: &mut Rng,
+) -> FactorizeResult {
+    let (m, n) = wt.shape();
+    assert!(k <= m, "dictionary must be complete/undercomplete (k ≤ m)");
+    assert!(s >= 1 && s <= k);
+
+    let mut d = match cfg.init {
+        DictInit::Svd => {
+            // Top-k left singular basis via the small-side eigendecomposition
+            // (see linalg::svd::left_singular_basis — perf pass).
+            let kk = k.min(m.min(n));
+            let mut u = svd::left_singular_basis(wt, kk);
+            if kk < k {
+                // Pathological thin case: complete with orthonormal columns.
+                let mut full = Mat::zeros(m, k);
+                for i in 0..m {
+                    full.row_mut(i)[..kk].copy_from_slice(u.row(i));
+                }
+                let valid: Vec<bool> = (0..k).map(|j| j < kk).collect();
+                qr::fill_null_columns(&mut full, &valid);
+                u = full;
+            }
+            u
+        }
+        DictInit::RandomColumns => {
+            // Random permuted subset of W̃ columns, orthonormalized (QR).
+            let mut cols: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut cols);
+            let mut picked = Mat::zeros(m, k);
+            for (jj, &j) in cols.iter().cycle().take(k).enumerate() {
+                for i in 0..m {
+                    // tiny jitter decorrelates repeated columns when n < k
+                    picked[(i, jj)] = wt[(i, j)] + 1e-4 * rng.gauss32();
+                }
+            }
+            qr::complete_basis(&picked)
+        }
+    };
+
+    let wt_fro_sq = {
+        let f = wt.fro_norm();
+        f * f
+    };
+    let wt_t = wt.transpose(); // n×m, reused by both inner products
+
+    let mut err_trace = Vec::with_capacity(cfg.iters);
+    let mut s_mat = ColumnSparse::hard_threshold_zt(&gemm::matmul(&wt_t, &d), s);
+    let mut prev_err_sq = f64::INFINITY;
+    let mut iters_run = 0;
+
+    for t in 0..cfg.iters.max(1) {
+        iters_run = t + 1;
+        if t > 0 {
+            // Sparse coding step: S ← H_s(Dᵀ·W̃) = H_s((W̃ᵀ·D)ᵀ).
+            // (W̃ᵀ·D gives z_j contiguous per row; transpose is cheap.)
+            let z_t = gemm::matmul(&wt_t, &d); // n×k
+            s_mat = ColumnSparse::hard_threshold_zt(&z_t, s);
+        }
+
+        // Closed-form objective: ‖W̃ − D·S‖² = ‖W̃‖² − ‖S‖².
+        let err_sq = (wt_fro_sq - s_mat.fro_sq()).max(0.0);
+        err_trace.push(err_sq.sqrt());
+
+        if let Some(tol) = cfg.early_stop_tol {
+            if prev_err_sq.is_finite() && prev_err_sq > 0.0 {
+                let rel = (prev_err_sq - err_sq).abs() / prev_err_sq;
+                if rel < tol {
+                    break;
+                }
+            }
+            prev_err_sq = err_sq;
+        }
+
+        if t + 1 == cfg.iters {
+            break;
+        }
+        // Dictionary step: M = W̃·Sᵀ (computed as Mᵀ = S·W̃ᵀ exploiting
+        // sparsity), then Procrustes.
+        let mt = s_mat.mt_product(&wt_t); // k×m
+        d = svd::procrustes(&mt.transpose());
+    }
+
+    FactorizeResult { d, s: s_mat, err_trace, iters_run }
+}
+
+impl Compressor for Compot {
+    fn name(&self) -> &'static str {
+        "COMPOT"
+    }
+
+    fn compress(
+        &self,
+        w: &Mat,
+        stats: &CalibStats,
+        target_cr: f64,
+        rng: &mut Rng,
+    ) -> anyhow::Result<CompressedLayer> {
+        let (m, n) = w.shape();
+        let (k, s) = ks_for_cr(m, n, target_cr, self.cfg.ks_ratio);
+        anyhow::ensure!(
+            factorized_bits(m, n, k, s) < (16 * m * n) as u64,
+            "factorization not beneficial for {m}x{n} at cr={target_cr}"
+        );
+        let whitener = if self.cfg.whiten {
+            Whitener::from_stats(stats)
+        } else {
+            Whitener::identity(m)
+        };
+        let wt = whitener.whiten(w);
+        let result = factorize(&wt, k, s, &self.cfg, rng);
+        let a = whitener.dewhiten(&result.d);
+        let weight = LinearWeight::Factorized { a, s: result.s };
+        let mut layer = CompressedLayer::new("COMPOT", w, weight, Some(stats));
+        layer.iters_run = result.iters_run;
+        Ok(layer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::VALUE_BITS;
+
+    fn make_problem(seed: u64, m: usize, n: usize) -> (Mat, CalibStats) {
+        let mut rng = Rng::new(seed);
+        // Structured weight: low-rank + sparse noise, realistic-ish spectrum.
+        let base = gemm::matmul(
+            &Mat::randn(&mut rng, m, m / 2, 1.0),
+            &Mat::randn(&mut rng, m / 2, n, 1.0),
+        )
+        .scale(1.0 / (m as f32).sqrt());
+        let w = base.add(&Mat::randn(&mut rng, m, n, 0.05));
+        let x = Mat::randn(&mut rng, 4 * m, m, 1.0);
+        let stats = CalibStats::from_activations(&x);
+        (w, stats)
+    }
+
+    #[test]
+    fn error_trace_is_monotone_nonincreasing() {
+        let (w, stats) = make_problem(90, 32, 48);
+        let wh = Whitener::from_stats(&stats);
+        let wt = wh.whiten(&w);
+        let cfg = CompotConfig { iters: 15, init: DictInit::RandomColumns, ..Default::default() };
+        let mut rng = Rng::new(1);
+        let res = factorize(&wt, 16, 8, &cfg, &mut rng);
+        for pair in res.err_trace.windows(2) {
+            assert!(
+                pair[1] <= pair[0] + 1e-4 * pair[0].abs().max(1e-9),
+                "alternating minimization must not increase the objective: {:?}",
+                res.err_trace
+            );
+        }
+    }
+
+    #[test]
+    fn closed_form_error_matches_direct() {
+        let (w, stats) = make_problem(91, 24, 30);
+        let wh = Whitener::from_stats(&stats);
+        let wt = wh.whiten(&w);
+        let mut rng = Rng::new(2);
+        let res = factorize(&wt, 12, 6, &CompotConfig::default(), &mut rng);
+        let approx = res.s.apply_after(&res.d); // D·S
+        let direct = wt.sub(&approx).fro_norm();
+        let traced = *res.err_trace.last().unwrap();
+        assert!(
+            (direct - traced).abs() / direct.max(1e-9) < 1e-2,
+            "direct={direct} traced={traced}"
+        );
+    }
+
+    #[test]
+    fn dictionary_stays_orthonormal() {
+        let (w, stats) = make_problem(92, 20, 40);
+        let wh = Whitener::from_stats(&stats);
+        let wt = wh.whiten(&w);
+        let mut rng = Rng::new(3);
+        for init in [DictInit::Svd, DictInit::RandomColumns] {
+            let cfg = CompotConfig { iters: 10, init, ..Default::default() };
+            let res = factorize(&wt, 10, 5, &cfg, &mut rng);
+            assert!(res.d.ortho_defect() < 1e-3, "{init:?}");
+        }
+    }
+
+    #[test]
+    fn svd_init_beats_random_at_few_iters() {
+        // Fig. 3's claim: at a small iteration budget SVD init achieves a
+        // lower objective than random init.
+        let (w, stats) = make_problem(93, 32, 64);
+        let wh = Whitener::from_stats(&stats);
+        let wt = wh.whiten(&w);
+        let run = |init: DictInit, seed: u64| {
+            let cfg = CompotConfig { iters: 3, init, ..Default::default() };
+            let mut rng = Rng::new(seed);
+            *factorize(&wt, 16, 8, &cfg, &mut rng).err_trace.last().unwrap()
+        };
+        let svd_err = run(DictInit::Svd, 4);
+        // average a few random seeds to dodge luck
+        let rand_err = (0..3).map(|i| run(DictInit::RandomColumns, 10 + i)).sum::<f64>() / 3.0;
+        assert!(svd_err < rand_err, "svd={svd_err} rand={rand_err}");
+    }
+
+    #[test]
+    fn compress_respects_storage_budget() {
+        let (w, stats) = make_problem(94, 48, 96);
+        for &cr in &[0.2, 0.3, 0.4] {
+            let mut rng = Rng::new(5);
+            let layer = Compot::default().compress(&w, &stats, cr, &mut rng).unwrap();
+            assert!(
+                layer.cr >= cr - 1e-9,
+                "achieved {} < target {cr}",
+                layer.cr
+            );
+            assert_eq!(layer.bits, layer.weight.storage_bits());
+            assert!(layer.func_err.unwrap() > 0.0);
+        }
+    }
+
+    #[test]
+    fn higher_cr_means_higher_error() {
+        let (w, stats) = make_problem(95, 40, 60);
+        let mut errs = Vec::new();
+        for &cr in &[0.2, 0.4, 0.6] {
+            let mut rng = Rng::new(6);
+            let layer = Compot::default().compress(&w, &stats, cr, &mut rng).unwrap();
+            errs.push(layer.func_err.unwrap());
+        }
+        assert!(errs[0] < errs[1] && errs[1] < errs[2], "{errs:?}");
+    }
+
+    #[test]
+    fn early_stop_reduces_iterations() {
+        let (w, stats) = make_problem(96, 32, 48);
+        let wh = Whitener::from_stats(&stats);
+        let wt = wh.whiten(&w);
+        let mut rng = Rng::new(7);
+        let loose = CompotConfig {
+            iters: 150,
+            early_stop_tol: Some(1e-1),
+            init: DictInit::RandomColumns,
+            ..Default::default()
+        };
+        let tight = CompotConfig {
+            iters: 150,
+            early_stop_tol: Some(1e-4),
+            init: DictInit::RandomColumns,
+            ..Default::default()
+        };
+        let r_loose = factorize(&wt, 16, 8, &loose, &mut rng.fork(1));
+        let r_tight = factorize(&wt, 16, 8, &tight, &mut rng.fork(1));
+        assert!(r_loose.iters_run <= r_tight.iters_run);
+        assert!(
+            *r_tight.err_trace.last().unwrap() <= *r_loose.err_trace.last().unwrap() + 1e-9
+        );
+    }
+
+    #[test]
+    fn whitening_improves_functional_error() {
+        // The whole point of Eq. 4: whitened factorization should achieve a
+        // lower functional (calibration) error than whiten=false, when the
+        // activation Gram is anisotropic.
+        let mut rng = Rng::new(97);
+        let m = 32;
+        let n = 48;
+        let w = Mat::randn(&mut rng, m, n, 1.0);
+        // strongly anisotropic activations
+        let mut x = Mat::randn(&mut rng, 300, m, 1.0);
+        for i in 0..300 {
+            for j in 0..m {
+                x[(i, j)] *= 1.0 + 4.0 * (j as f32 / m as f32);
+            }
+        }
+        let stats = CalibStats::from_activations(&x);
+        let run = |whiten: bool| {
+            let c = Compot { cfg: CompotConfig { whiten, iters: 20, ..Default::default() } };
+            let mut r = Rng::new(8);
+            c.compress(&w, &stats, 0.3, &mut r).unwrap().func_err.unwrap()
+        };
+        let with = run(true);
+        let without = run(false);
+        assert!(with < without, "whitened {with} vs raw {without}");
+    }
+
+    #[test]
+    fn eq11_cr_accounting() {
+        let (w, stats) = make_problem(98, 64, 128);
+        let mut rng = Rng::new(9);
+        let layer = Compot::default().compress(&w, &stats, 0.25, &mut rng).unwrap();
+        if let LinearWeight::Factorized { a, s } = &layer.weight {
+            let expect = factorized_bits(64, 128, a.cols(), s.s());
+            assert_eq!(layer.bits, expect);
+            let dense_bits = VALUE_BITS * (64 * 128) as u64;
+            assert!((layer.cr - (1.0 - expect as f64 / dense_bits as f64)).abs() < 1e-12);
+        } else {
+            panic!("COMPOT must produce a Factorized weight");
+        }
+    }
+}

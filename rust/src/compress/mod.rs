@@ -1,0 +1,270 @@
+//! Post-training compression methods.
+//!
+//! Every method consumes a dense projection weight `W ∈ R^{m×n}` (convention:
+//! `y = x·W`, rows of `x` are tokens, `m` = input features) plus calibration
+//! statistics, and produces a [`CompressedLayer`] — a replacement weight
+//! representation together with exact storage accounting (bits) so that all
+//! methods are compared under *matched memory*, the paper's protocol.
+//!
+//! Implemented methods (one module each):
+//! - [`compot`] — the paper's contribution (Algorithm 1).
+//! - [`svd_llm`] — SVD-LLM: whitened truncation with closed-form update.
+//! - [`svd_llm_v2`] — V2 per-group theoretical-loss allocation (App. A.10).
+//! - [`svd_baselines`] — plain truncated SVD, FWSVD, ASVD.
+//! - [`cospadi`] — CoSpaDi: K-SVD dictionary learning + OMP sparse coding.
+//! - [`dobi`] — Dobi-SVD*-style loss-guided rank allocation (+ Eq. 25
+//!   remapping accounting).
+//! - [`pruning`] — LLM-Pruner-like channel pruning, ReplaceMe-like depth
+//!   pruning (model-level, see that module).
+//! - [`quant`] — RTN and GPTQ weight quantization, composable with
+//!   factorization (Table 7).
+
+pub mod compot;
+pub mod cospadi;
+pub mod dobi;
+pub mod pruning;
+pub mod quant;
+pub mod sparse;
+pub mod svd_baselines;
+pub mod svd_llm;
+pub mod svd_llm_v2;
+pub mod whitening;
+
+use crate::linalg::{gemm, Mat};
+use crate::util::Rng;
+use sparse::ColumnSparse;
+use whitening::CalibStats;
+
+/// Bits per stored value for dense fp16 storage (the paper's Eq. 11 baseline).
+pub const VALUE_BITS: u64 = 16;
+
+/// A weight in one of the representations the runtime can apply.
+#[derive(Clone, Debug)]
+pub enum LinearWeight {
+    /// Dense m×n.
+    Dense(Mat),
+    /// Low-rank `W ≈ B·C` with B m×r, C r×n (all SVD-family methods).
+    LowRank { b: Mat, c: Mat },
+    /// COMPOT/CoSpaDi factorization `W ≈ A·S` with dense A m×k and
+    /// column-s-sparse S k×n.
+    Factorized { a: Mat, s: ColumnSparse },
+}
+
+impl LinearWeight {
+    /// Input feature count m.
+    pub fn in_dim(&self) -> usize {
+        match self {
+            LinearWeight::Dense(w) => w.rows(),
+            LinearWeight::LowRank { b, .. } => b.rows(),
+            LinearWeight::Factorized { a, .. } => a.rows(),
+        }
+    }
+
+    /// Output feature count n.
+    pub fn out_dim(&self) -> usize {
+        match self {
+            LinearWeight::Dense(w) => w.cols(),
+            LinearWeight::LowRank { c, .. } => c.cols(),
+            LinearWeight::Factorized { s, .. } => s.n(),
+        }
+    }
+
+    /// y = x·W for a batch x (rows = tokens).
+    pub fn apply(&self, x: &Mat) -> Mat {
+        match self {
+            LinearWeight::Dense(w) => gemm::matmul(x, w),
+            LinearWeight::LowRank { b, c } => gemm::matmul(&gemm::matmul(x, b), c),
+            LinearWeight::Factorized { a, s } => s.apply_after(&gemm::matmul(x, a)),
+        }
+    }
+
+    /// Materialize the represented Ŵ (tests, error measurement).
+    pub fn to_dense(&self) -> Mat {
+        match self {
+            LinearWeight::Dense(w) => w.clone(),
+            LinearWeight::LowRank { b, c } => gemm::matmul(b, c),
+            LinearWeight::Factorized { a, s } => s.apply_after(a),
+        }
+    }
+
+    /// Exact storage bits under the paper's accounting (Eq. 11 for the
+    /// factorized form; 16-bit dense values otherwise).
+    pub fn storage_bits(&self) -> u64 {
+        match self {
+            LinearWeight::Dense(w) => VALUE_BITS * (w.rows() * w.cols()) as u64,
+            LinearWeight::LowRank { b, c } => {
+                VALUE_BITS * (b.rows() * b.cols() + c.rows() * c.cols()) as u64
+            }
+            LinearWeight::Factorized { a, s } => {
+                VALUE_BITS * (a.rows() * a.cols()) as u64 + s.storage_bits()
+            }
+        }
+    }
+}
+
+/// Result of compressing one projection matrix.
+#[derive(Clone, Debug)]
+pub struct CompressedLayer {
+    pub weight: LinearWeight,
+    /// Storage bits of `weight` (possibly adjusted by quantization).
+    pub bits: u64,
+    /// Achieved compression ratio: 1 − bits / (16·m·n).
+    pub cr: f64,
+    /// Whitened functional error ‖Lᵀ(W−Ŵ)‖_F (≡ ‖X(W−Ŵ)‖_F, Eq. 5),
+    /// when calibration was available.
+    pub func_err: Option<f64>,
+    /// Plain weight-space error ‖W−Ŵ‖_F.
+    pub weight_err: f64,
+    pub method: &'static str,
+    /// Alternating-minimization iterations actually run (COMPOT/CoSpaDi).
+    pub iters_run: usize,
+}
+
+impl CompressedLayer {
+    pub fn new(
+        method: &'static str,
+        original: &Mat,
+        weight: LinearWeight,
+        stats: Option<&CalibStats>,
+    ) -> CompressedLayer {
+        let bits = weight.storage_bits();
+        let dense_bits = VALUE_BITS * (original.rows() * original.cols()) as u64;
+        let approx = weight.to_dense();
+        let weight_err = approx.sub(original).fro_norm();
+        let func_err = stats.map(|st| st.functional_err(original, &approx));
+        CompressedLayer {
+            weight,
+            bits,
+            cr: 1.0 - bits as f64 / dense_bits as f64,
+            func_err,
+            weight_err,
+            method,
+            iters_run: 0,
+        }
+    }
+}
+
+/// A per-matrix compression method. `target_cr` is the *per-matrix* ratio
+/// (the model-level allocator decides these); methods must not exceed the
+/// implied storage budget (achieved `cr >= target_cr`, up to integer
+/// rounding of ranks/sparsity — asserted in tests).
+pub trait Compressor: Sync {
+    fn name(&self) -> &'static str;
+    fn compress(
+        &self,
+        w: &Mat,
+        stats: &CalibStats,
+        target_cr: f64,
+        rng: &mut Rng,
+    ) -> anyhow::Result<CompressedLayer>;
+}
+
+/// Retained rank for low-rank storage at a target CR (SVD storage model used
+/// by Algorithm 2 and all SVD baselines): r·(m+n) ≤ (1−cr)·m·n.
+pub fn rank_for_cr(m: usize, n: usize, cr: f64) -> usize {
+    let budget = (1.0 - cr) * (m * n) as f64;
+    ((budget / (m + n) as f64).floor() as usize).clamp(1, m.min(n))
+}
+
+/// Inverse of [`rank_for_cr`]: CR achieved when storing rank r.
+pub fn cr_for_rank(m: usize, n: usize, r: usize) -> f64 {
+    1.0 - (r * (m + n)) as f64 / (m * n) as f64
+}
+
+/// Solve Eq. 11 for (k, s) given a target CR and the dictionary-to-sparsity
+/// ratio k/s: minimize quality loss subject to
+/// `16·m·k + 16·s·n + k·n ≤ (1−cr)·16·m·n`, with k = ratio·s and k ≤ m
+/// (complete/undercomplete constraint; the paper adjusts the ratio only when
+/// it would force an overcomplete dictionary).
+pub fn ks_for_cr(m: usize, n: usize, cr: f64, ks_ratio: f64) -> (usize, usize) {
+    let budget = (1.0 - cr) * (16 * m * n) as f64;
+    // bits(s) = 16·m·(ratio·s) + 16·s·n + (ratio·s)·n
+    let per_s = 16.0 * m as f64 * ks_ratio + 16.0 * n as f64 + ks_ratio * n as f64;
+    let mut s = (budget / per_s).floor() as usize;
+    s = s.max(1);
+    let mut k = ((s as f64 * ks_ratio).round() as usize).max(s.max(1));
+    if k > m {
+        // Undercomplete constraint binds: clamp k=m and re-solve for s with
+        // the k·n mask and 16·m·k dictionary terms fixed.
+        k = m;
+        let fixed = 16.0 * (m * k) as f64 + (k * n) as f64;
+        let rem = (budget - fixed).max(0.0);
+        s = ((rem / (16.0 * n as f64)).floor() as usize).clamp(1, k);
+    }
+    s = s.min(k);
+    (k, s)
+}
+
+/// Eq. 11 storage bits for a COMPOT/CoSpaDi factorization.
+pub fn factorized_bits(m: usize, n: usize, k: usize, s: usize) -> u64 {
+    (16 * m * k + 16 * s * n + k * n) as u64
+}
+
+/// Eq. 25: effective model CR when factorization (CR_fact, 16-bit) is
+/// followed by b-bit quantization of the stored values.
+pub fn composed_cr(cr_fact: f64, bits: u32) -> f64 {
+    1.0 - (1.0 - cr_fact) * bits as f64 / 16.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_for_cr_respects_budget() {
+        for &(m, n) in &[(64, 64), (128, 512), (512, 128), (7, 1000)] {
+            for &cr in &[0.1, 0.2, 0.4, 0.6, 0.8] {
+                let r = rank_for_cr(m, n, cr);
+                assert!(r >= 1);
+                if r > 1 {
+                    assert!((r * (m + n)) as f64 <= (1.0 - cr) * (m * n) as f64 + 1e-6);
+                }
+                assert!(((r + 1) * (m + n)) as f64 > (1.0 - cr) * (m * n) as f64 || r == m.min(n));
+            }
+        }
+    }
+
+    #[test]
+    fn ks_for_cr_respects_budget_and_ratio() {
+        for &(m, n) in &[(64, 256), (256, 64), (128, 128), (512, 2048)] {
+            for &cr in &[0.2, 0.3, 0.4, 0.6] {
+                for &ratio in &[1.5, 2.0, 3.0] {
+                    let (k, s) = ks_for_cr(m, n, cr, ratio);
+                    assert!(k <= m, "overcomplete dictionary");
+                    assert!(s >= 1 && s <= k);
+                    let bits = factorized_bits(m, n, k, s);
+                    assert!(
+                        bits as f64 <= (1.0 - cr) * (16 * m * n) as f64 * 1.001,
+                        "budget exceeded m={m} n={n} cr={cr} ratio={ratio}: k={k} s={s}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ks_ratio_is_approximately_honored() {
+        let (k, s) = ks_for_cr(512, 2048, 0.2, 2.0);
+        let ratio = k as f64 / s as f64;
+        assert!((ratio - 2.0).abs() < 0.25, "k={k} s={s}");
+    }
+
+    #[test]
+    fn composed_cr_matches_paper_example() {
+        // 8-bit quant of an uncompressed model: CR = 0.5.
+        assert!((composed_cr(0.0, 8) - 0.5).abs() < 1e-12);
+        // Paper's Dobi example: CR_fact = −0.6, 8-bit ⇒ CR_target = 0.2.
+        assert!((composed_cr(-0.6, 8) - 0.2).abs() < 1e-12);
+        // 4-bit on CR_fact 0.25 ⇒ 1 − 0.75·0.25 = 0.8125.
+        assert!((composed_cr(0.25, 4) - 0.8125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dense_weight_accounting() {
+        let w = Mat::zeros(10, 20);
+        let lw = LinearWeight::Dense(w);
+        assert_eq!(lw.storage_bits(), 16 * 200);
+        assert_eq!(lw.in_dim(), 10);
+        assert_eq!(lw.out_dim(), 20);
+    }
+}

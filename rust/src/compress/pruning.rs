@@ -1,0 +1,289 @@
+//! Structured pruning baselines (Table 6):
+//!
+//! - **LLM-Pruner-like** channel pruning: remove MLP intermediate channels
+//!   (and attention heads) by an activation-weighted magnitude importance,
+//!   deleting the coupled rows/columns across the projection group.
+//! - **ReplaceMe-like** depth pruning: delete a span of transformer blocks
+//!   and fit a single linear map on calibration activations (least squares)
+//!   to replace them.
+//!
+//! These operate on *groups* of matrices — the model-level pipeline in
+//! `coordinator` wires them to actual transformer blocks.
+
+use crate::linalg::{cholesky, gemm, solve, Mat};
+
+/// Importance of each MLP intermediate channel c:
+/// (‖gate[:,c]‖ + ‖up[:,c]‖) · ‖down[c,:]‖ · act_rms[c].
+/// `act_rms` is the calibration RMS of the intermediate activation (pass
+/// ones if unavailable).
+pub fn mlp_channel_importance(gate: &Mat, up: &Mat, down: &Mat, act_rms: &[f32]) -> Vec<f64> {
+    let h = up.cols();
+    assert_eq!(gate.cols(), h);
+    assert_eq!(down.rows(), h);
+    assert_eq!(act_rms.len(), h);
+    (0..h)
+        .map(|c| {
+            let g: f64 = (0..gate.rows()).map(|i| (gate[(i, c)] as f64).powi(2)).sum::<f64>().sqrt();
+            let u: f64 = (0..up.rows()).map(|i| (up[(i, c)] as f64).powi(2)).sum::<f64>().sqrt();
+            let d: f64 = down.row(c).iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+            (g + u) * d * act_rms[c].max(1e-9) as f64
+        })
+        .collect()
+}
+
+/// Keep the `keep` most important channels; returns pruned (gate, up, down)
+/// and the kept channel indices (ascending).
+pub fn prune_mlp(
+    gate: &Mat,
+    up: &Mat,
+    down: &Mat,
+    importance: &[f64],
+    keep: usize,
+) -> (Mat, Mat, Mat, Vec<usize>) {
+    let h = up.cols();
+    let keep = keep.clamp(1, h);
+    let mut order: Vec<usize> = (0..h).collect();
+    order.sort_by(|&a, &b| importance[b].partial_cmp(&importance[a]).unwrap());
+    let mut kept: Vec<usize> = order[..keep].to_vec();
+    kept.sort_unstable();
+
+    let mut g2 = Mat::zeros(gate.rows(), keep);
+    let mut u2 = Mat::zeros(up.rows(), keep);
+    let mut d2 = Mat::zeros(keep, down.cols());
+    for (jj, &c) in kept.iter().enumerate() {
+        for i in 0..gate.rows() {
+            g2[(i, jj)] = gate[(i, c)];
+        }
+        for i in 0..up.rows() {
+            u2[(i, jj)] = up[(i, c)];
+        }
+        d2.row_mut(jj).copy_from_slice(down.row(c));
+    }
+    (g2, u2, d2, kept)
+}
+
+/// Importance of attention KV-group g (GQA: one K/V head shared by
+/// `q_per_kv` query heads): Σ over the group's query heads of
+/// ‖q_head‖·‖o_head‖, times ‖k_head‖·‖v_head‖.
+pub fn head_group_importance(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    o: &Mat,
+    head_dim: usize,
+    n_kv: usize,
+) -> Vec<f64> {
+    let n_q = q.cols() / head_dim;
+    let q_per_kv = n_q / n_kv;
+    let col_norm = |m: &Mat, c0: usize, c1: usize| -> f64 {
+        let mut s = 0.0f64;
+        for i in 0..m.rows() {
+            for j in c0..c1 {
+                s += (m[(i, j)] as f64).powi(2);
+            }
+        }
+        s.sqrt()
+    };
+    let row_norm = |m: &Mat, r0: usize, r1: usize| -> f64 {
+        let mut s = 0.0f64;
+        for i in r0..r1 {
+            for &x in m.row(i) {
+                s += (x as f64).powi(2);
+            }
+        }
+        s.sqrt()
+    };
+    (0..n_kv)
+        .map(|g| {
+            let kn = col_norm(k, g * head_dim, (g + 1) * head_dim);
+            let vn = col_norm(v, g * head_dim, (g + 1) * head_dim);
+            let mut qo = 0.0;
+            for hq in g * q_per_kv..(g + 1) * q_per_kv {
+                let qn = col_norm(q, hq * head_dim, (hq + 1) * head_dim);
+                let on = row_norm(o, hq * head_dim, (hq + 1) * head_dim);
+                qo += qn * on;
+            }
+            qo * (kn + vn)
+        })
+        .collect()
+}
+
+/// Prune attention to `keep_kv` KV groups. Returns (q, k, v, o, kept groups).
+pub fn prune_heads(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    o: &Mat,
+    head_dim: usize,
+    n_kv: usize,
+    importance: &[f64],
+    keep_kv: usize,
+) -> (Mat, Mat, Mat, Mat, Vec<usize>) {
+    let n_q = q.cols() / head_dim;
+    let q_per_kv = n_q / n_kv;
+    let keep_kv = keep_kv.clamp(1, n_kv);
+    let mut order: Vec<usize> = (0..n_kv).collect();
+    order.sort_by(|&a, &b| importance[b].partial_cmp(&importance[a]).unwrap());
+    let mut kept: Vec<usize> = order[..keep_kv].to_vec();
+    kept.sort_unstable();
+
+    let take_cols = |m: &Mat, groups: &[usize], per: usize| -> Mat {
+        let mut out = Mat::zeros(m.rows(), groups.len() * per * head_dim);
+        for (gg, &g) in groups.iter().enumerate() {
+            for j in 0..per * head_dim {
+                let src = g * per * head_dim + j;
+                let dst = gg * per * head_dim + j;
+                for i in 0..m.rows() {
+                    out[(i, dst)] = m[(i, src)];
+                }
+            }
+        }
+        out
+    };
+    let take_rows = |m: &Mat, groups: &[usize], per: usize| -> Mat {
+        let mut out = Mat::zeros(groups.len() * per * head_dim, m.cols());
+        for (gg, &g) in groups.iter().enumerate() {
+            for j in 0..per * head_dim {
+                out.row_mut(gg * per * head_dim + j)
+                    .copy_from_slice(m.row(g * per * head_dim + j));
+            }
+        }
+        out
+    };
+
+    let q2 = take_cols(q, &kept, q_per_kv);
+    let k2 = take_cols(k, &kept, 1);
+    let v2 = take_cols(v, &kept, 1);
+    let o2 = take_rows(o, &kept, q_per_kv);
+    (q2, k2, v2, o2, kept)
+}
+
+/// ReplaceMe's core: fit `T = argmin ‖X_in·T − X_out‖_F` by regularized
+/// normal equations — the linear replacement for a deleted block span.
+pub fn fit_linear_replacement(x_in: &Mat, x_out: &Mat) -> Mat {
+    assert_eq!(x_in.rows(), x_out.rows());
+    let d = x_in.cols();
+    let mut gram = gemm::matmul_tn(x_in, x_in);
+    let mean_diag: f64 = (0..d).map(|i| gram[(i, i)] as f64).sum::<f64>() / d as f64;
+    let damp = (1e-4 * mean_diag).max(1e-8) as f32;
+    for i in 0..d {
+        gram[(i, i)] += damp;
+    }
+    let rhs = gemm::matmul_tn(x_in, x_out);
+    let l = cholesky::cholesky(&gram).expect("damped Gram must be PD");
+    // Solve L·Lᵀ·T = rhs.
+    let y = solve::solve_lower_left(&l, &rhs);
+    solve::solve_lower_transpose_left(&l, &y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn mlp_prune_removes_least_important() {
+        let mut rng = Rng::new(160);
+        let d = 8;
+        let h = 12;
+        let gate = Mat::randn(&mut rng, d, h, 1.0);
+        let up = Mat::randn(&mut rng, d, h, 1.0);
+        let mut down = Mat::randn(&mut rng, h, d, 1.0);
+        // Make channel 5 clearly dead.
+        for x in down.row_mut(5) {
+            *x = 1e-6;
+        }
+        let imp = mlp_channel_importance(&gate, &up, &down, &vec![1.0; h]);
+        let (g2, u2, d2, kept) = prune_mlp(&gate, &up, &down, &imp, h - 1);
+        assert!(!kept.contains(&5));
+        assert_eq!(g2.cols(), h - 1);
+        assert_eq!(u2.cols(), h - 1);
+        assert_eq!(d2.rows(), h - 1);
+    }
+
+    #[test]
+    fn pruned_mlp_matches_masked_forward() {
+        // Pruning then forward == forward with pruned channels zeroed.
+        let mut rng = Rng::new(161);
+        let d = 6;
+        let h = 10;
+        let up = Mat::randn(&mut rng, d, h, 1.0);
+        let gate = Mat::randn(&mut rng, d, h, 1.0);
+        let down = Mat::randn(&mut rng, h, d, 1.0);
+        let imp = mlp_channel_importance(&gate, &up, &down, &vec![1.0; h]);
+        let keep = 7;
+        let (_, u2, d2, kept) = prune_mlp(&gate, &up, &down, &imp, keep);
+        let x = Mat::randn(&mut rng, 4, d, 1.0);
+        // linear-only check (ignore gating nonlinearity): x·up·down
+        let pruned_out = gemm::matmul(&gemm::matmul(&x, &u2), &d2);
+        let mut up_masked = up.clone();
+        for c in 0..h {
+            if !kept.contains(&c) {
+                for i in 0..d {
+                    up_masked[(i, c)] = 0.0;
+                }
+            }
+        }
+        let masked_out = gemm::matmul(&gemm::matmul(&x, &up_masked), &down);
+        assert!(pruned_out.rel_err(&masked_out) < 1e-4);
+    }
+
+    #[test]
+    fn head_prune_shapes_and_selection() {
+        let mut rng = Rng::new(162);
+        let d = 16;
+        let head_dim = 4;
+        let n_q = 8;
+        let n_kv = 4;
+        let q = Mat::randn(&mut rng, d, n_q * head_dim, 1.0);
+        let mut k = Mat::randn(&mut rng, d, n_kv * head_dim, 1.0);
+        let v = Mat::randn(&mut rng, d, n_kv * head_dim, 1.0);
+        let o = Mat::randn(&mut rng, n_q * head_dim, d, 1.0);
+        // Deaden KV group 2.
+        for i in 0..d {
+            for j in 2 * head_dim..3 * head_dim {
+                k[(i, j)] = 1e-6;
+            }
+        }
+        let imp = head_group_importance(&q, &k, &v, &o, head_dim, n_kv);
+        let (q2, k2, v2, o2, kept) = prune_heads(&q, &k, &v, &o, head_dim, n_kv, &imp, 3);
+        assert!(!kept.contains(&2));
+        assert_eq!(q2.cols(), 6 * head_dim);
+        assert_eq!(k2.cols(), 3 * head_dim);
+        assert_eq!(v2.cols(), 3 * head_dim);
+        assert_eq!(o2.rows(), 6 * head_dim);
+    }
+
+    #[test]
+    fn linear_replacement_fits_linear_map() {
+        let mut rng = Rng::new(163);
+        let d = 10;
+        let t_true = Mat::randn(&mut rng, d, d, 1.0);
+        let x = Mat::randn(&mut rng, 200, d, 1.0);
+        let y = gemm::matmul(&x, &t_true);
+        let t_fit = fit_linear_replacement(&x, &y);
+        assert!(t_fit.rel_err(&t_true) < 1e-2);
+    }
+
+    #[test]
+    fn linear_replacement_is_least_squares_optimal() {
+        let mut rng = Rng::new(164);
+        let d = 8;
+        let x = Mat::randn(&mut rng, 100, d, 1.0);
+        // Nonlinear target — fit can't be exact, but must beat perturbations.
+        let mut y = gemm::matmul(&x, &Mat::randn(&mut rng, d, d, 1.0));
+        for i in 0..y.rows() {
+            for j in 0..d {
+                let v = y[(i, j)];
+                y[(i, j)] = v.tanh();
+            }
+        }
+        let t = fit_linear_replacement(&x, &y);
+        let base = gemm::matmul(&x, &t).sub(&y).fro_norm();
+        for s in 0..5 {
+            let tp = t.add(&Mat::randn(&mut Rng::new(200 + s), d, d, 0.01));
+            let perturbed = gemm::matmul(&x, &tp).sub(&y).fro_norm();
+            assert!(base <= perturbed + 1e-6);
+        }
+    }
+}

@@ -1,0 +1,332 @@
+//! Column-s-sparse coefficient storage — the `S_O` half of the COMPOT
+//! factorization. Matches the paper's storage model (Eq. 11): non-zero
+//! values at 16 bits each plus a 1-bit position mask over the full k×n grid.
+//!
+//! Layout: exactly `s` (index, value) pairs per column, column-major
+//! concatenation, indices sorted ascending within a column. The regular
+//! structure keeps [`apply_after`] branch-free in the hot loop.
+
+use crate::linalg::Mat;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ColumnSparse {
+    k: usize,
+    n: usize,
+    s: usize,
+    /// len = n·s; idx[j·s + t] = row index of the t-th nonzero of column j.
+    idx: Vec<u32>,
+    /// len = n·s; matching values.
+    val: Vec<f32>,
+}
+
+impl ColumnSparse {
+    /// Build from a dense k×n matrix by keeping, per column, the `s` entries
+    /// of largest magnitude (the hard-thresholding operator H_s, Eq. 9).
+    /// Ties are broken by lower row index (deterministic; the paper notes
+    /// ties can be broken arbitrarily without losing optimality).
+    pub fn hard_threshold(z: &Mat, s: usize) -> ColumnSparse {
+        // Work on Zᵀ so each column of Z is a contiguous row.
+        Self::hard_threshold_zt(&z.transpose(), s)
+    }
+
+    /// Same as [`hard_threshold`] but takes Zᵀ (n×k) directly — the COMPOT
+    /// inner loop computes W̃ᵀ·D = Zᵀ natively, so this avoids two transpose
+    /// copies per iteration on the hot path.
+    pub fn hard_threshold_zt(zt: &Mat, s: usize) -> ColumnSparse {
+        let (n, k) = zt.shape();
+        let s = s.min(k);
+        let mut idx = vec![0u32; n * s];
+        let mut val = vec![0f32; n * s];
+        let mut order: Vec<u32> = Vec::with_capacity(k);
+        for j in 0..n {
+            let row = zt.row(j);
+            order.clear();
+            order.extend(0..k as u32);
+            // Partial selection of the s largest |z|.
+            let (top, _, _) = order.select_nth_unstable_by(s.saturating_sub(1), |&a, &b| {
+                let ma = row[a as usize].abs();
+                let mb = row[b as usize].abs();
+                mb.partial_cmp(&ma).unwrap().then(a.cmp(&b))
+            });
+            let mut chosen: Vec<u32> = top.to_vec();
+            chosen.push(order[s - 1]);
+            chosen.truncate(s);
+            chosen.sort_unstable();
+            for (t, &i) in chosen.iter().enumerate() {
+                idx[j * s + t] = i;
+                val[j * s + t] = row[i as usize];
+            }
+        }
+        ColumnSparse { k, n, s, idx, val }
+    }
+
+    /// Build from explicit per-column (index, value) lists (CoSpaDi/OMP).
+    pub fn from_columns(k: usize, n: usize, s: usize, cols: Vec<Vec<(u32, f32)>>) -> ColumnSparse {
+        assert_eq!(cols.len(), n);
+        let mut idx = vec![0u32; n * s];
+        let mut val = vec![0f32; n * s];
+        for (j, col) in cols.into_iter().enumerate() {
+            assert!(col.len() <= s, "column {j} has more than s nonzeros");
+            let mut col = col;
+            col.sort_unstable_by_key(|&(i, _)| i);
+            for (t, (i, v)) in col.into_iter().enumerate() {
+                assert!((i as usize) < k);
+                idx[j * s + t] = i;
+                val[j * s + t] = v;
+            }
+            // remaining slots stay (0, 0.0) — harmless padding
+        }
+        ColumnSparse { k, n, s, idx, val }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+    pub fn n(&self) -> usize {
+        self.n
+    }
+    pub fn s(&self) -> usize {
+        self.s
+    }
+
+    /// Storage bits per Eq. 11: 16 bits per value + 1-bit mask over k×n.
+    pub fn storage_bits(&self) -> u64 {
+        (16 * self.s * self.n + self.k * self.n) as u64
+    }
+
+    /// Densify to k×n.
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.k, self.n);
+        for j in 0..self.n {
+            for t in 0..self.s {
+                let i = self.idx[j * self.s + t] as usize;
+                let v = self.val[j * self.s + t];
+                if v != 0.0 {
+                    m[(i, j)] = v;
+                }
+            }
+        }
+        m
+    }
+
+    /// Given T = x·A (rows×k), compute T·S (rows×n) without densifying:
+    /// out[r, j] = Σ_t T[r, idx[j,t]] · val[j,t].
+    ///
+    /// **Perf (EXPERIMENTS.md §Perf):** for multi-row batches the gather
+    /// per output element defeats vectorization; instead work in the
+    /// transposed layout — `outᵀ[j,:] += val · Tᵀ[idx,:]` is a contiguous
+    /// axpy over the batch dimension. The two transpose copies are O(rows·k
+    /// + rows·n), negligible next to the O(rows·s·n) product.
+    pub fn apply_after(&self, t: &Mat) -> Mat {
+        assert_eq!(t.cols(), self.k, "apply_after: inner dim");
+        let rows = t.rows();
+        let s = self.s;
+        if rows >= 4 {
+            let tt = t.transpose(); // k×rows, row i = feature i over batch
+            let mut out_t = Mat::zeros(self.n, rows);
+            for j in 0..self.n {
+                let base = j * s;
+                let orow = out_t.row_mut(j);
+                for tti in 0..s {
+                    let v = self.val[base + tti];
+                    if v == 0.0 {
+                        continue;
+                    }
+                    let trow = tt.row(self.idx[base + tti] as usize);
+                    for (o, x) in orow.iter_mut().zip(trow.iter()) {
+                        *o += v * *x;
+                    }
+                }
+            }
+            return out_t.transpose();
+        }
+        let mut out = Mat::zeros(rows, self.n);
+        for r in 0..rows {
+            let trow = t.row(r);
+            let orow = out.row_mut(r);
+            for j in 0..self.n {
+                let base = j * s;
+                let mut acc = 0f32;
+                for tti in 0..s {
+                    acc += trow[self.idx[base + tti] as usize] * self.val[base + tti];
+                }
+                orow[j] = acc;
+            }
+        }
+        out
+    }
+
+    /// Squared Frobenius norm (used by the free error identity
+    /// ‖W̃−DS‖² = ‖W̃‖² − ‖S‖² under orthonormal D).
+    pub fn fro_sq(&self) -> f64 {
+        self.val.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    /// Mᵀ = S·W̃ᵀ accumulation helper for the Procrustes step: given W̃ᵀ
+    /// (n×m), returns Mᵀ = S·W̃ᵀ (k×m) exploiting column sparsity:
+    /// Mᵀ[i, :] += val · W̃ᵀ[j, :] for each nonzero (i, val) of column j.
+    pub fn mt_product(&self, wt_t: &Mat) -> Mat {
+        assert_eq!(wt_t.rows(), self.n, "mt_product: W̃ᵀ rows");
+        let m = wt_t.cols();
+        let mut mt = Mat::zeros(self.k, m);
+        for j in 0..self.n {
+            let wrow = wt_t.row(j);
+            for t in 0..self.s {
+                let i = self.idx[j * self.s + t] as usize;
+                let v = self.val[j * self.s + t];
+                if v == 0.0 {
+                    continue;
+                }
+                let mrow = mt.row_mut(i);
+                for (mx, wx) in mrow.iter_mut().zip(wrow.iter()) {
+                    *mx += v * *wx;
+                }
+            }
+        }
+        mt
+    }
+
+    /// Iterate (row, col, value) of stored nonzeros (including padded zeros).
+    pub fn iter(&self) -> impl Iterator<Item = (usize, usize, f32)> + '_ {
+        (0..self.n).flat_map(move |j| {
+            (0..self.s).map(move |t| {
+                (self.idx[j * self.s + t] as usize, j, self.val[j * self.s + t])
+            })
+        })
+    }
+
+    /// Map stored values in place (used by quantization composition).
+    pub fn map_values(&mut self, mut f: impl FnMut(f32) -> f32) {
+        for v in self.val.iter_mut() {
+            *v = f(*v);
+        }
+    }
+
+    /// Overwrite stored values wholesale (quantization composition).
+    pub fn set_values(&mut self, vals: &[f32]) {
+        assert_eq!(vals.len(), self.val.len());
+        self.val.copy_from_slice(vals);
+    }
+
+    pub fn values(&self) -> &[f32] {
+        &self.val
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul;
+    use crate::util::{prop, Rng};
+
+    #[test]
+    fn hard_threshold_keeps_top_s() {
+        let z = Mat::from_vec(4, 2, vec![
+            1.0, -4.0, //
+            -3.0, 0.5, //
+            2.0, 0.1, //
+            -0.5, 2.5,
+        ]);
+        let cs = ColumnSparse::hard_threshold(&z, 2);
+        let d = cs.to_dense();
+        // col 0: top-2 by |.| are rows 1 (−3) and 2 (2)
+        assert_eq!(d[(0, 0)], 0.0);
+        assert_eq!(d[(1, 0)], -3.0);
+        assert_eq!(d[(2, 0)], 2.0);
+        assert_eq!(d[(3, 0)], 0.0);
+        // col 1: rows 0 (−4) and 3 (2.5)
+        assert_eq!(d[(0, 1)], -4.0);
+        assert_eq!(d[(3, 1)], 2.5);
+        assert_eq!(d[(1, 1)], 0.0);
+    }
+
+    #[test]
+    fn hard_threshold_is_projection_optimum() {
+        // H_s(z) must be the best s-sparse L2 approximation of each column.
+        prop::check(70, 30, |rng, _| {
+            let k = rng.range(2, 12);
+            let n = rng.range(1, 6);
+            let s = rng.range(1, k + 1);
+            let z = Mat::randn(rng, k, n, 1.0);
+            let cs = ColumnSparse::hard_threshold(&z, s);
+            let dense = cs.to_dense();
+            for j in 0..n {
+                let kept: f64 = (0..k)
+                    .map(|i| {
+                        if dense[(i, j)] != 0.0 {
+                            (z[(i, j)] as f64).powi(2)
+                        } else {
+                            0.0
+                        }
+                    })
+                    .sum();
+                // any other s-subset keeps at most this much energy: check
+                // against the best-s directly
+                let mut mags: Vec<f64> = (0..k).map(|i| (z[(i, j)] as f64).powi(2)).collect();
+                mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+                let best: f64 = mags[..s].iter().sum();
+                assert!((kept - best).abs() < 1e-9 * best.max(1.0));
+            }
+        });
+    }
+
+    #[test]
+    fn apply_after_matches_dense() {
+        prop::check(71, 20, |rng, _| {
+            let k = rng.range(2, 16);
+            let n = rng.range(1, 16);
+            let s = rng.range(1, k + 1);
+            let rows = rng.range(1, 8);
+            let z = Mat::randn(rng, k, n, 1.0);
+            let cs = ColumnSparse::hard_threshold(&z, s);
+            let t = Mat::randn(rng, rows, k, 1.0);
+            let fast = cs.apply_after(&t);
+            let dense = matmul(&t, &cs.to_dense());
+            assert!(fast.rel_err(&dense) < 1e-4);
+        });
+    }
+
+    #[test]
+    fn mt_product_matches_dense() {
+        prop::check(72, 20, |rng, _| {
+            let k = rng.range(2, 10);
+            let n = rng.range(2, 14);
+            let s = rng.range(1, k + 1);
+            let m = rng.range(1, 9);
+            let z = Mat::randn(rng, k, n, 1.0);
+            let cs = ColumnSparse::hard_threshold(&z, s);
+            let w = Mat::randn(rng, m, n, 1.0);
+            let mt = cs.mt_product(&w.transpose());
+            // Mᵀ = S·W̃ᵀ ⇔ M = W̃·Sᵀ
+            let dense = matmul(&w, &cs.to_dense().transpose());
+            assert!(mt.transpose().rel_err(&dense) < 1e-4);
+        });
+    }
+
+    #[test]
+    fn storage_bits_formula() {
+        let z = Mat::zeros(128, 256);
+        let cs = ColumnSparse::hard_threshold(&z, 16);
+        assert_eq!(cs.storage_bits(), (16 * 16 * 256 + 128 * 256) as u64);
+    }
+
+    #[test]
+    fn roundtrip_from_columns() {
+        let cols = vec![vec![(3u32, 1.5f32), (0, -2.0)], vec![(1, 0.25)]];
+        let cs = ColumnSparse::from_columns(5, 2, 2, cols);
+        let d = cs.to_dense();
+        assert_eq!(d[(0, 0)], -2.0);
+        assert_eq!(d[(3, 0)], 1.5);
+        assert_eq!(d[(1, 1)], 0.25);
+        assert_eq!(cs.s(), 2);
+    }
+
+    #[test]
+    fn fro_sq_matches_dense() {
+        let mut rng = Rng::new(73);
+        let z = Mat::randn(&mut rng, 9, 7, 1.0);
+        let cs = ColumnSparse::hard_threshold(&z, 4);
+        let d = cs.to_dense().fro_norm();
+        assert!((cs.fro_sq().sqrt() - d).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,170 @@
+//! Non-whitened SVD-family baselines: plain truncated SVD, FWSVD
+//! (Fisher-weighted, Hsu et al. 2022) and ASVD (activation-aware scaling,
+//! Yuan et al. 2023). Used by Table 18 and as sanity lower bounds.
+
+use super::whitening::CalibStats;
+use super::{rank_for_cr, CompressedLayer, Compressor, LinearWeight};
+use crate::linalg::{svd, Mat};
+use crate::util::Rng;
+
+/// Plain truncated SVD of W — Frobenius-optimal, calibration-blind.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TruncatedSvd;
+
+impl Compressor for TruncatedSvd {
+    fn name(&self) -> &'static str {
+        "SVD"
+    }
+
+    fn compress(
+        &self,
+        w: &Mat,
+        stats: &CalibStats,
+        target_cr: f64,
+        _rng: &mut Rng,
+    ) -> anyhow::Result<CompressedLayer> {
+        let r = rank_for_cr(w.rows(), w.cols(), target_cr);
+        let decomp = svd::svd_thin(w);
+        let (b, c) = decomp.truncate(r);
+        Ok(CompressedLayer::new("SVD", w, LinearWeight::LowRank { b, c }, Some(stats)))
+    }
+}
+
+/// Row-scaled truncation shared by FWSVD and ASVD: truncate `diag(t)·W`,
+/// return `B = diag(t)⁻¹·U_rΣ_r`, `C = V_rᵀ`.
+fn scaled_truncate(w: &Mat, scale: &[f32], r: usize) -> (Mat, Mat) {
+    let m = w.rows();
+    assert_eq!(scale.len(), m);
+    let mut sw = w.clone();
+    for i in 0..m {
+        let t = scale[i].max(1e-6);
+        for x in sw.row_mut(i) {
+            *x *= t;
+        }
+    }
+    let decomp = svd::svd_thin(&sw);
+    let (mut b, c) = decomp.truncate(r);
+    for i in 0..m {
+        let t = scale[i].max(1e-6);
+        for x in b.row_mut(i) {
+            *x /= t;
+        }
+    }
+    (b, c)
+}
+
+/// FWSVD — weights the reconstruction by (a diagonal proxy of) the Fisher
+/// information. Without gradients, the standard proxy is the activation
+/// second moment per input feature (same signal SVD-LLM whitens by, but
+/// diagonal-only), which is what we use.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Fwsvd;
+
+impl Compressor for Fwsvd {
+    fn name(&self) -> &'static str {
+        "FWSVD"
+    }
+
+    fn compress(
+        &self,
+        w: &Mat,
+        stats: &CalibStats,
+        target_cr: f64,
+        _rng: &mut Rng,
+    ) -> anyhow::Result<CompressedLayer> {
+        let r = rank_for_cr(w.rows(), w.cols(), target_cr);
+        let fisher = stats.feature_rms(); // ∝ sqrt(E[x_i²])
+        let (b, c) = scaled_truncate(w, &fisher, r);
+        Ok(CompressedLayer::new("FWSVD", w, LinearWeight::LowRank { b, c }, Some(stats)))
+    }
+}
+
+/// ASVD — scales rows by activation magnitude raised to α (paper uses
+/// α = 0.5) before truncation.
+#[derive(Clone, Copy, Debug)]
+pub struct Asvd {
+    pub alpha: f32,
+}
+
+impl Default for Asvd {
+    fn default() -> Self {
+        Asvd { alpha: 0.5 }
+    }
+}
+
+impl Compressor for Asvd {
+    fn name(&self) -> &'static str {
+        "ASVD"
+    }
+
+    fn compress(
+        &self,
+        w: &Mat,
+        stats: &CalibStats,
+        target_cr: f64,
+        _rng: &mut Rng,
+    ) -> anyhow::Result<CompressedLayer> {
+        let r = rank_for_cr(w.rows(), w.cols(), target_cr);
+        let scale: Vec<f32> = stats
+            .feature_rms()
+            .iter()
+            .map(|&x| x.max(1e-6).powf(self.alpha))
+            .collect();
+        let (b, c) = scaled_truncate(w, &scale, r);
+        Ok(CompressedLayer::new("ASVD", w, LinearWeight::LowRank { b, c }, Some(stats)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::svd_llm::SvdLlm;
+
+    fn problem(seed: u64) -> (Mat, CalibStats) {
+        let mut rng = Rng::new(seed);
+        let w = Mat::randn(&mut rng, 24, 40, 1.0);
+        let mut x = Mat::randn(&mut rng, 200, 24, 1.0);
+        for i in 0..200 {
+            for j in 0..24 {
+                x[(i, j)] *= 1.0 + 5.0 * (j as f32 / 24.0);
+            }
+        }
+        (w, CalibStats::from_activations(&x))
+    }
+
+    #[test]
+    fn all_achieve_target_cr() {
+        let (w, stats) = problem(110);
+        let mut rng = Rng::new(1);
+        let methods: Vec<Box<dyn Compressor>> =
+            vec![Box::new(TruncatedSvd), Box::new(Fwsvd), Box::new(Asvd::default())];
+        for m in &methods {
+            let layer = m.compress(&w, &stats, 0.3, &mut rng).unwrap();
+            assert!(layer.cr >= 0.3 - 1e-9, "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn plain_svd_is_weight_optimal() {
+        // Plain SVD minimizes weight error; data-aware variants trade it away.
+        let (w, stats) = problem(111);
+        let mut rng = Rng::new(2);
+        let plain = TruncatedSvd.compress(&w, &stats, 0.4, &mut rng).unwrap();
+        let fw = Fwsvd.compress(&w, &stats, 0.4, &mut rng).unwrap();
+        let asvd = Asvd::default().compress(&w, &stats, 0.4, &mut rng).unwrap();
+        assert!(plain.weight_err <= fw.weight_err * 1.001);
+        assert!(plain.weight_err <= asvd.weight_err * 1.001);
+    }
+
+    #[test]
+    fn data_aware_beats_plain_on_functional_error() {
+        let (w, stats) = problem(112);
+        let mut rng = Rng::new(3);
+        let plain = TruncatedSvd.compress(&w, &stats, 0.4, &mut rng).unwrap();
+        let asvd = Asvd::default().compress(&w, &stats, 0.4, &mut rng).unwrap();
+        let svdllm = SvdLlm.compress(&w, &stats, 0.4, &mut rng).unwrap();
+        assert!(asvd.func_err.unwrap() <= plain.func_err.unwrap() * 1.01);
+        // Full whitening dominates diagonal scaling.
+        assert!(svdllm.func_err.unwrap() <= asvd.func_err.unwrap() * 1.001);
+    }
+}

@@ -1,0 +1,131 @@
+//! SVD-LLM baseline (Wang et al., 2025b): truncation-aware data whitening.
+//!
+//! The key insight of SVD-LLM is that truncating the SVD of the *whitened*
+//! weight `W̃ = Lᵀ·W` (L the Cholesky factor of the calibration Gram) makes
+//! the discarded singular values exactly equal to the incurred functional
+//! loss, and the optimal compressed weight has the closed form
+//! `Ŵ = L^{-ᵀ}·U_r·Σ_r·V_rᵀ`. Stored as `B = L^{-ᵀ}·U_r·Σ_r` (m×r) and
+//! `C = V_rᵀ` (r×n).
+
+use super::whitening::{CalibStats, Whitener};
+use super::{rank_for_cr, CompressedLayer, Compressor, LinearWeight};
+use crate::linalg::{svd, Mat};
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SvdLlm;
+
+/// Whitened truncation at an explicit rank (shared with `svd_llm_v2` and
+/// `dobi`). Returns (B, C) such that Ŵ = B·C.
+pub fn whitened_truncate(w: &Mat, whitener: &Whitener, r: usize) -> (Mat, Mat) {
+    let wt = whitener.whiten(w);
+    let decomp = svd::svd_thin(&wt);
+    let (u_sig, vt) = decomp.truncate(r);
+    let b = whitener.dewhiten(&u_sig);
+    (b, vt)
+}
+
+/// The whitened truncation loss ‖W̃ − (W̃)_r‖_F — the theoretical loss of
+/// SVD-LLM V2 (Appendix A.10 `theoretical_loss`), reused by the dynamic
+/// allocators.
+pub fn truncation_loss(w: &Mat, whitener: &Whitener, r: usize) -> f64 {
+    let wt = whitener.whiten(w);
+    let decomp = svd::svd_thin(&wt);
+    let tail: f64 = decomp.s[r.min(decomp.s.len())..]
+        .iter()
+        .map(|&s| (s as f64) * (s as f64))
+        .sum();
+    tail.sqrt()
+}
+
+impl Compressor for SvdLlm {
+    fn name(&self) -> &'static str {
+        "SVD-LLM"
+    }
+
+    fn compress(
+        &self,
+        w: &Mat,
+        stats: &CalibStats,
+        target_cr: f64,
+        _rng: &mut Rng,
+    ) -> anyhow::Result<CompressedLayer> {
+        let (m, n) = w.shape();
+        let r = rank_for_cr(m, n, target_cr);
+        let whitener = Whitener::from_stats(stats);
+        let (b, c) = whitened_truncate(w, &whitener, r);
+        Ok(CompressedLayer::new(
+            "SVD-LLM",
+            w,
+            LinearWeight::LowRank { b, c },
+            Some(stats),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm;
+
+    fn problem(seed: u64, m: usize, n: usize) -> (Mat, CalibStats) {
+        let mut rng = Rng::new(seed);
+        let w = Mat::randn(&mut rng, m, n, 1.0);
+        let mut x = Mat::randn(&mut rng, 6 * m, m, 1.0);
+        for i in 0..x.rows() {
+            for j in 0..m {
+                x[(i, j)] *= 1.0 + 3.0 * (j as f32 / m as f32); // anisotropy
+            }
+        }
+        (w, CalibStats::from_activations(&x))
+    }
+
+    #[test]
+    fn achieves_target_cr() {
+        let (w, stats) = problem(100, 32, 64);
+        let mut rng = Rng::new(1);
+        for &cr in &[0.2, 0.4, 0.6] {
+            let layer = SvdLlm.compress(&w, &stats, cr, &mut rng).unwrap();
+            assert!(layer.cr >= cr - 1e-9, "cr {} < {cr}", layer.cr);
+        }
+    }
+
+    #[test]
+    fn beats_plain_svd_on_functional_error() {
+        // Whitening must reduce ‖X(W−Ŵ)‖ vs truncating W directly when the
+        // Gram is anisotropic.
+        let (w, stats) = problem(101, 24, 36);
+        let mut rng = Rng::new(2);
+        let data_aware = SvdLlm.compress(&w, &stats, 0.4, &mut rng).unwrap();
+        let r = rank_for_cr(24, 36, 0.4);
+        let plain = {
+            let decomp = svd::svd_thin(&w);
+            let (b, c) = decomp.truncate(r);
+            CompressedLayer::new("svd", &w, LinearWeight::LowRank { b, c }, Some(&stats))
+        };
+        assert!(data_aware.func_err.unwrap() <= plain.func_err.unwrap() * 1.001);
+    }
+
+    #[test]
+    fn truncation_loss_matches_functional_error() {
+        // ‖X(W−Ŵ)‖_F == tail singular energy of W̃ (SVD-LLM's core identity).
+        let (w, stats) = problem(102, 20, 28);
+        let whitener = Whitener::from_stats(&stats);
+        let r = 7;
+        let (b, c) = whitened_truncate(&w, &whitener, r);
+        let w_hat = gemm::matmul(&b, &c);
+        let func = stats.functional_err(&w, &w_hat);
+        let theo = truncation_loss(&w, &whitener, r);
+        assert!((func - theo).abs() / theo.max(1e-9) < 2e-2, "func={func} theo={theo}");
+    }
+
+    #[test]
+    fn loss_decreases_with_rank() {
+        let (w, stats) = problem(103, 16, 16);
+        let whitener = Whitener::from_stats(&stats);
+        let losses: Vec<f64> = (1..16).map(|r| truncation_loss(&w, &whitener, r)).collect();
+        for pair in losses.windows(2) {
+            assert!(pair[1] <= pair[0] + 1e-9);
+        }
+    }
+}

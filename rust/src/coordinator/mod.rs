@@ -1,0 +1,13 @@
+//! L3 coordinator: the model-level compression pipeline
+//! (calibrate → allocate → compress layer-parallel → assemble), the
+//! model-level pruning/quantization flows, and the table/figure report
+//! renderers.
+
+pub mod pipeline;
+pub mod report;
+
+pub mod tables;
+
+pub use pipeline::{
+    calibrate, compress_model, CompressionReport, Method, PipelineConfig,
+};

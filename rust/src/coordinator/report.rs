@@ -1,0 +1,180 @@
+//! Table/figure rendering: markdown + CSV written under `results/`.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A simple table: header + rows of strings.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "### {}\n", self.title);
+        let _ = writeln!(s, "| {} |", self.header.join(" | "));
+        let _ = writeln!(s, "|{}|", self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        for r in &self.rows {
+            let _ = writeln!(s, "| {} |", r.join(" | "));
+        }
+        s
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let _ = writeln!(s, "{}", self.header.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        for r in &self.rows {
+            let _ = writeln!(s, "{}", r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        s
+    }
+
+    /// Write `results/<stem>.md` and `.csv`, and return the markdown.
+    pub fn write(&self, results_dir: &Path, stem: &str) -> std::io::Result<String> {
+        std::fs::create_dir_all(results_dir)?;
+        let md = self.to_markdown();
+        std::fs::write(results_dir.join(format!("{stem}.md")), &md)?;
+        std::fs::write(results_dir.join(format!("{stem}.csv")), self.to_csv())?;
+        Ok(md)
+    }
+}
+
+/// Format helpers matching the paper's precision conventions.
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+/// Perplexity in the paper's scientific format for big values.
+pub fn ppl(x: f64) -> String {
+    if !x.is_finite() {
+        "inf".into()
+    } else if x >= 100.0 {
+        format!("{x:.1e}").to_uppercase()
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+/// ASCII line chart for the "figures" (allocation plots, convergence
+/// curves) — one series per call, 60×12 grid.
+pub fn ascii_plot(title: &str, series: &[(&str, Vec<f64>)]) -> String {
+    let width = 64usize;
+    let height = 12usize;
+    let mut out = format!("{title}\n");
+    let all: Vec<f64> = series.iter().flat_map(|(_, v)| v.iter().copied()).collect();
+    if all.is_empty() {
+        return out;
+    }
+    let lo = all.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = all.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    let marks = ['*', 'o', '+', 'x', '#'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, vals)) in series.iter().enumerate() {
+        let n = vals.len().max(2);
+        for (i, &v) in vals.iter().enumerate() {
+            let x = i * (width - 1) / (n - 1);
+            let y = ((v - lo) / span * (height - 1) as f64).round() as usize;
+            let y = height - 1 - y.min(height - 1);
+            grid[y][x] = marks[si % marks.len()];
+        }
+    }
+    for (y, row) in grid.iter().enumerate() {
+        let label = if y == 0 {
+            format!("{hi:9.3} |")
+        } else if y == height - 1 {
+            format!("{lo:9.3} |")
+        } else {
+            "          |".to_string()
+        };
+        out.push_str(&label);
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str("           ");
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (name, _))| format!("{} {name}", marks[i % marks.len()]))
+        .collect();
+    out.push_str(&format!("           {}\n", legend.join("   ")));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_and_csv_render() {
+        let mut t = Table::new("Demo", &["Method", "CR", "PPL"]);
+        t.row(vec!["COMPOT".into(), "0.2".into(), "13.0".into()]);
+        t.row(vec!["SVD-LLM".into(), "0.2".into(), "41.0".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| Method | CR | PPL |"));
+        assert!(md.contains("| COMPOT | 0.2 | 13.0 |"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("Method,CR,PPL\n"));
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["hello, world".into()]);
+        assert!(t.to_csv().contains("\"hello, world\""));
+    }
+
+    #[test]
+    fn ppl_formatting() {
+        assert_eq!(ppl(13.02), "13.02");
+        assert!(ppl(550.0).contains("E"));
+        assert_eq!(ppl(f64::INFINITY), "inf");
+    }
+
+    #[test]
+    fn ascii_plot_renders() {
+        let p = ascii_plot("conv", &[("rand", vec![5.0, 4.0, 3.0]), ("svd", vec![3.0, 2.5, 2.4])]);
+        assert!(p.contains('*') && p.contains('o'));
+        assert!(p.lines().count() > 10);
+    }
+
+    #[test]
+    fn write_creates_files() {
+        let dir = std::env::temp_dir().join("compot_report_test");
+        let mut t = Table::new("t", &["a"]);
+        t.row(vec!["1".into()]);
+        t.write(&dir, "demo").unwrap();
+        assert!(dir.join("demo.md").exists());
+        assert!(dir.join("demo.csv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,95 @@
+//! Synthetic "audio": continuous frames emitted from a codebook over the
+//! transcript tokens (2× frame rate, Gaussian channel noise) — the
+//! Whisper-substitute generator (DESIGN.md §3). The codebook matrix lives in
+//! the model's weight file so the build-time (JAX) training and the Rust
+//! evaluation share the exact emission distribution.
+
+use super::corpus::SynthLang;
+use crate::linalg::Mat;
+use crate::util::Rng;
+
+pub const FRAMES_PER_TOKEN: usize = 2;
+pub const NOISE_STD: f32 = 0.3;
+
+/// One utterance: transcript plus emitted frames.
+#[derive(Clone, Debug)]
+pub struct Utterance {
+    pub transcript: Vec<u16>,
+    pub frames: Mat,
+}
+
+/// Emit frames for a transcript: frame 2t = codebook[y_t] + ε,
+/// frame 2t+1 = midpoint(y_t, y_{t+1}) + ε.
+pub fn emit_frames(codebook: &Mat, transcript: &[u16], rng: &mut Rng) -> Mat {
+    let d = codebook.cols();
+    let t_len = transcript.len();
+    let mut frames = Mat::zeros(t_len * FRAMES_PER_TOKEN, d);
+    for (t, &tok) in transcript.iter().enumerate() {
+        let cur = codebook.row(tok as usize);
+        let nxt = codebook.row(transcript[(t + 1).min(t_len - 1)] as usize);
+        for j in 0..d {
+            frames[(2 * t, j)] = cur[j] + NOISE_STD * rng.gauss32();
+            frames[(2 * t + 1, j)] = 0.5 * (cur[j] + nxt[j]) + NOISE_STD * rng.gauss32();
+        }
+    }
+    frames
+}
+
+/// Sample a test utterance (transcript from the synthetic language).
+pub fn sample_utterance(
+    lang: &SynthLang,
+    codebook: &Mat,
+    len: usize,
+    rng: &mut Rng,
+) -> Utterance {
+    let transcript = lang.gen(len, rng);
+    let frames = emit_frames(codebook, &transcript, rng);
+    Utterance { transcript, frames }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_shape_and_snr() {
+        let mut rng = Rng::new(1);
+        let codebook = Mat::randn(&mut rng, 64, 16, 1.0);
+        let lang = SynthLang::wiki(64);
+        let utt = sample_utterance(&lang, &codebook, 10, &mut rng);
+        assert_eq!(utt.frames.shape(), (20, 16));
+        // Even frames should be closer to their token's codeword than to a
+        // random other codeword (decodable signal).
+        let mut correct = 0;
+        for (t, &tok) in utt.transcript.iter().enumerate() {
+            let frame = utt.frames.row(2 * t);
+            let d_true: f32 = frame
+                .iter()
+                .zip(codebook.row(tok as usize))
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            let other = (tok as usize + 7) % 64;
+            let d_other: f32 = frame
+                .iter()
+                .zip(codebook.row(other))
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            if d_true < d_other {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 9, "signal too noisy: {correct}/10");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r1 = Rng::new(2);
+        let mut r2 = Rng::new(2);
+        let cb = Mat::randn(&mut Rng::new(3), 32, 8, 1.0);
+        let lang = SynthLang::wiki(32);
+        let u1 = sample_utterance(&lang, &cb, 5, &mut r1);
+        let u2 = sample_utterance(&lang, &cb, 5, &mut r2);
+        assert_eq!(u1.transcript, u2.transcript);
+        assert!(u1.frames.rel_err(&u2.frames) < 1e-9);
+    }
+}

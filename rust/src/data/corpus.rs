@@ -1,0 +1,206 @@
+//! The synthetic language and corpus splits.
+//!
+//! Structure (mirrored bit-for-bit in semantics, not in RNG, by
+//! `python/compile/corpus.py`):
+//!
+//! - **Successor table** — token `t` has 4 preferred successors derived by
+//!   fixed arithmetic (`(a·t + b) mod V`), sampled with probabilities
+//!   (0.40, 0.25, 0.15, 0.10); with probability 0.10 the next token is a
+//!   Zipf(1.3) draw ("noise"/topic shift).
+//! - **Copy rule** — with probability [`COPY_PROB`] at positions ≥
+//!   [`COPY_LAG`], the next token instead repeats the token COPY_LAG steps
+//!   back (long-range structure; basis of the lambada-like task).
+//! - Two corpus flavours ("wiki", "c4") differ by their Zipf-noise rate,
+//!   giving two held-out perplexity sets that move together but not
+//!   identically — like the paper's WikiText vs C4 columns.
+
+use crate::util::rng::{zipf_harmonic, Rng};
+
+pub const COPY_LAG: usize = 16;
+pub const COPY_PROB: f64 = 0.10;
+pub const SUCC_PROBS: [f64; 4] = [0.40, 0.25, 0.15, 0.10];
+
+/// The synthetic language: deterministic structure given `vocab`.
+#[derive(Clone, Debug)]
+pub struct SynthLang {
+    pub vocab: usize,
+    /// Zipf-noise probability (0.10 for "wiki", 0.18 for "c4").
+    pub noise: f64,
+    zipf_h: f64,
+}
+
+impl SynthLang {
+    pub fn wiki(vocab: usize) -> SynthLang {
+        SynthLang { vocab, noise: 0.10, zipf_h: zipf_harmonic(vocab, 1.3) }
+    }
+
+    pub fn c4(vocab: usize) -> SynthLang {
+        SynthLang { vocab, noise: 0.18, zipf_h: zipf_harmonic(vocab, 1.3) }
+    }
+
+    /// The 4 preferred successors of token `t` (fixed arithmetic — identical
+    /// in the Python mirror).
+    pub fn successors(&self, t: u16) -> [u16; 4] {
+        let v = self.vocab as u64;
+        let t = t as u64;
+        [
+            ((7 * t + 1) % v) as u16,
+            ((13 * t + 5) % v) as u16,
+            ((29 * t + 11) % v) as u16,
+            ((5 * t + 3) % v) as u16,
+        ]
+    }
+
+    /// A token that is *not* among t's successors (distractor source).
+    pub fn non_successor(&self, t: u16, rng: &mut Rng) -> u16 {
+        let succ = self.successors(t);
+        loop {
+            let cand = rng.zipf(self.vocab, 1.3, self.zipf_h) as u16;
+            if !succ.contains(&cand) {
+                return cand;
+            }
+        }
+    }
+
+    /// Sample the next token given history (the generative rule).
+    pub fn next(&self, history: &[u16], rng: &mut Rng) -> u16 {
+        if history.len() >= COPY_LAG && rng.chance(COPY_PROB) {
+            return history[history.len() - COPY_LAG];
+        }
+        let last = *history.last().unwrap_or(&0);
+        if rng.chance(self.noise) {
+            return rng.zipf(self.vocab, 1.3, self.zipf_h) as u16;
+        }
+        let succ = self.successors(last);
+        succ[rng.weighted(&SUCC_PROBS)]
+    }
+
+    /// Generate a sequence of `len` tokens (first token Zipf-sampled).
+    pub fn gen(&self, len: usize, rng: &mut Rng) -> Vec<u16> {
+        let mut seq = Vec::with_capacity(len);
+        seq.push(rng.zipf(self.vocab, 1.3, self.zipf_h) as u16);
+        while seq.len() < len {
+            let nxt = self.next(&seq, rng);
+            seq.push(nxt);
+        }
+        seq
+    }
+
+    /// Generate `count` sequences.
+    pub fn gen_batch(&self, count: usize, len: usize, rng: &mut Rng) -> Vec<Vec<u16>> {
+        (0..count).map(|_| self.gen(len, rng)).collect()
+    }
+}
+
+/// Load a token corpus written by `python/compile/corpus.py`
+/// (little-endian u16 stream, chunked into sequences of `seq_len`).
+pub fn load_tokens(path: &std::path::Path, seq_len: usize) -> anyhow::Result<Vec<Vec<u16>>> {
+    let bytes = std::fs::read(path)?;
+    anyhow::ensure!(bytes.len() % 2 == 0, "odd token file length");
+    let tokens: Vec<u16> = bytes
+        .chunks_exact(2)
+        .map(|c| u16::from_le_bytes([c[0], c[1]]))
+        .collect();
+    Ok(tokens.chunks_exact(seq_len).map(|c| c.to_vec()).collect())
+}
+
+/// Corpus sequences for a preset: prefer the build-time artifact (identical
+/// distribution to what the model was trained on), fall back to the Rust
+/// generator (unit tests, no-artifact environments).
+pub fn corpus_split(
+    artifacts_dir: &std::path::Path,
+    split: &str,
+    vocab: usize,
+    count: usize,
+    seq_len: usize,
+    seed: u64,
+) -> Vec<Vec<u16>> {
+    let path = artifacts_dir.join(format!("corpus_{split}.bin"));
+    if let Ok(seqs) = load_tokens(&path, seq_len) {
+        if seqs.len() >= count {
+            return seqs[..count].to_vec();
+        }
+    }
+    let lang = if split == "c4" { SynthLang::c4(vocab) } else { SynthLang::wiki(vocab) };
+    let mut rng = Rng::new(seed ^ split.len() as u64);
+    lang.gen_batch(count, seq_len, &mut rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequences_have_requested_shape() {
+        let lang = SynthLang::wiki(256);
+        let mut rng = Rng::new(1);
+        let seqs = lang.gen_batch(5, 64, &mut rng);
+        assert_eq!(seqs.len(), 5);
+        assert!(seqs.iter().all(|s| s.len() == 64));
+        assert!(seqs.iter().flatten().all(|&t| (t as usize) < 256));
+    }
+
+    #[test]
+    fn language_is_predictable() {
+        // The top successor must appear far above chance.
+        let lang = SynthLang::wiki(256);
+        let mut rng = Rng::new(2);
+        let seq = lang.gen(20_000, &mut rng);
+        let mut hits = 0usize;
+        for w in seq.windows(2) {
+            if lang.successors(w[0])[0] == w[1] {
+                hits += 1;
+            }
+        }
+        let rate = hits as f64 / (seq.len() - 1) as f64;
+        assert!(rate > 0.25, "top-successor rate {rate} too low"); // chance ≈ 1/256
+    }
+
+    #[test]
+    fn copy_rule_leaves_trace() {
+        let lang = SynthLang::wiki(256);
+        let mut rng = Rng::new(3);
+        let seq = lang.gen(20_000, &mut rng);
+        let mut lag_hits = 0usize;
+        for t in COPY_LAG..seq.len() {
+            if seq[t] == seq[t - COPY_LAG] {
+                lag_hits += 1;
+            }
+        }
+        let rate = lag_hits as f64 / (seq.len() - COPY_LAG) as f64;
+        assert!(rate > COPY_PROB * 0.8, "lag-copy rate {rate}");
+    }
+
+    #[test]
+    fn wiki_and_c4_differ() {
+        let w = SynthLang::wiki(256);
+        let c = SynthLang::c4(256);
+        assert!(c.noise > w.noise);
+        // same deterministic successor structure
+        assert_eq!(w.successors(17), c.successors(17));
+    }
+
+    #[test]
+    fn non_successor_is_never_a_successor() {
+        let lang = SynthLang::wiki(64);
+        let mut rng = Rng::new(4);
+        for t in 0..64u16 {
+            let d = lang.non_successor(t, &mut rng);
+            assert!(!lang.successors(t).contains(&d));
+        }
+    }
+
+    #[test]
+    fn token_file_roundtrip() {
+        let dir = std::env::temp_dir().join("compot_corpus_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("toks.bin");
+        let tokens: Vec<u16> = (0..128u16).collect();
+        let bytes: Vec<u8> = tokens.iter().flat_map(|t| t.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        let seqs = load_tokens(&path, 32).unwrap();
+        assert_eq!(seqs.len(), 4);
+        assert_eq!(seqs[1][0], 32);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,16 @@
+//! Synthetic data substrate.
+//!
+//! The paper calibrates on RefinedWeb/WikiText and evaluates on public
+//! benchmarks; neither is available here (repro band 0), so we build a
+//! synthetic language with the properties those datasets exercise:
+//! Zipf-skewed unigrams, deterministic-arithmetic Markov structure (so the
+//! *identical* distribution is reproduced by `python/compile/corpus.py` for
+//! build-time pretraining without sharing PRNG state), and fixed-lag copy
+//! patterns that give long-range "LAMBADA-like" structure. See DESIGN.md §3.
+
+pub mod audio;
+pub mod corpus;
+pub mod tasks;
+pub mod vlm;
+
+pub use corpus::SynthLang;

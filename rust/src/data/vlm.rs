@@ -1,0 +1,181 @@
+//! Synthetic vision-language data: an "image" is a row of patches, each a
+//! noisy codebook embedding of a concept token; the caption names the
+//! concepts in order, continued by the synthetic language. Four evaluation
+//! "benchmarks" mirror the paper's VLM table (MMMU / OCRBench / RealWorldQA
+//! / MMStar analogues) at different difficulty knobs.
+
+use super::corpus::SynthLang;
+use super::tasks::McqItem;
+use crate::linalg::Mat;
+use crate::util::Rng;
+
+pub const N_PATCHES: usize = 4;
+pub const PATCH_NOISE: f32 = 0.25;
+
+/// One VQA-style item: image patches + caption-completion MCQ.
+#[derive(Clone, Debug)]
+pub struct VlmItem {
+    pub patches: Mat,
+    pub mcq: McqItem,
+}
+
+/// Emit an image for a concept sequence.
+pub fn emit_patches(codebook: &Mat, concepts: &[u16], rng: &mut Rng) -> Mat {
+    let d = codebook.cols();
+    let mut patches = Mat::zeros(concepts.len(), d);
+    for (i, &c) in concepts.iter().enumerate() {
+        for j in 0..d {
+            patches[(i, j)] = codebook.row(c as usize)[j] + PATCH_NOISE * rng.gauss32();
+        }
+    }
+    patches
+}
+
+/// The caption for an image: its concepts in order (the training target of
+/// the build-time VLM pretraining).
+pub fn caption_for(concepts: &[u16], lang: &SynthLang, filler: usize, rng: &mut Rng) -> Vec<u16> {
+    let mut cap = concepts.to_vec();
+    if filler > 0 {
+        let mut cont = lang.gen(filler, rng);
+        cap.append(&mut cont);
+    }
+    cap
+}
+
+/// VLM benchmark item generator. Benchmarks vary which concept must be
+/// recalled and how confusable the distractors are:
+/// - "mmmu":        recall concept 2 given concepts 0,1 as caption prefix
+/// - "ocrbench":    recall concept 0 (first "glyph") with random distractors
+/// - "realworldqa": recall the *last* concept, distractors = other concepts
+///                  from the same image (hard)
+/// - "mmstar":      full-caption ranking (4 orderings)
+pub fn generate_vlm(
+    bench: &str,
+    codebook: &Mat,
+    _lang: &SynthLang,
+    count: usize,
+    seed: u64,
+) -> Vec<VlmItem> {
+    let vocab = codebook.rows();
+    let mut rng = Rng::new(seed ^ bench.len() as u64);
+    (0..count)
+        .map(|_| {
+            let concepts: Vec<u16> = {
+                let mut c = Vec::new();
+                while c.len() < N_PATCHES {
+                    let cand = rng.below(vocab) as u16;
+                    if !c.contains(&cand) {
+                        c.push(cand);
+                    }
+                }
+                c
+            };
+            let patches = emit_patches(codebook, &concepts, &mut rng);
+            let mcq = match bench {
+                "mmmu" => {
+                    let ctx = concepts[..2].to_vec();
+                    let good = vec![concepts[2]];
+                    let distractors: Vec<Vec<u16>> = (0..3)
+                        .map(|_| loop {
+                            let d = rng.below(vocab) as u16;
+                            if !concepts.contains(&d) {
+                                break vec![d];
+                            }
+                        })
+                        .collect();
+                    shuffle_into_ctx(ctx, good, distractors, &mut rng)
+                }
+                "ocrbench" => {
+                    let ctx: Vec<u16> = Vec::new();
+                    let good = vec![concepts[0]];
+                    let distractors: Vec<Vec<u16>> = (0..3)
+                        .map(|_| loop {
+                            let d = rng.below(vocab) as u16;
+                            if d != concepts[0] {
+                                break vec![d];
+                            }
+                        })
+                        .collect();
+                    let (choices, answer) = shuffled(good, distractors, &mut rng);
+                    McqItem { context: ctx, choices, answer }
+                }
+                "realworldqa" => {
+                    let ctx = concepts[..3].to_vec();
+                    let good = vec![concepts[3]];
+                    // distractors = concepts of the SAME image (confusable)
+                    let distractors: Vec<Vec<u16>> =
+                        concepts[..3].iter().map(|&c| vec![c]).collect();
+                    shuffle_into_ctx(ctx, good, distractors, &mut rng)
+                }
+                "mmstar" => {
+                    let ctx: Vec<u16> = Vec::new();
+                    let good = concepts.clone();
+                    let mut d1 = concepts.clone();
+                    d1.reverse();
+                    let mut d2 = concepts.clone();
+                    d2.swap(0, 1);
+                    let mut d3 = concepts.clone();
+                    d3.swap(2, 3);
+                    let (choices, answer) = shuffled(good, vec![d1, d2, d3], &mut rng);
+                    McqItem { context: ctx, choices, answer }
+                }
+                other => panic!("unknown vlm benchmark '{other}'"),
+            };
+            VlmItem { patches, mcq }
+        })
+        .collect()
+}
+
+fn shuffled(correct: Vec<u16>, mut distractors: Vec<Vec<u16>>, rng: &mut Rng) -> (Vec<Vec<u16>>, usize) {
+    let pos = rng.below(distractors.len() + 1);
+    distractors.insert(pos, correct);
+    (distractors, pos)
+}
+
+fn shuffle_into_ctx(
+    ctx: Vec<u16>,
+    good: Vec<u16>,
+    distractors: Vec<Vec<u16>>,
+    rng: &mut Rng,
+) -> McqItem {
+    let (choices, answer) = shuffled(good, distractors, rng);
+    McqItem { context: ctx, choices, answer }
+}
+
+pub const VLM_BENCHMARKS: [&str; 4] = ["mmmu", "ocrbench", "realworldqa", "mmstar"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_benchmarks_generate() {
+        let mut rng = Rng::new(1);
+        let cb = Mat::randn(&mut rng, 64, 8, 1.0);
+        let lang = SynthLang::wiki(64);
+        for b in VLM_BENCHMARKS {
+            let items = generate_vlm(b, &cb, &lang, 8, 3);
+            assert_eq!(items.len(), 8);
+            for it in &items {
+                assert_eq!(it.patches.shape(), (N_PATCHES, 8));
+                assert!(it.mcq.answer < it.mcq.choices.len());
+                let l0 = it.mcq.choices[0].len();
+                assert!(it.mcq.choices.iter().all(|c| c.len() == l0), "{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn concepts_are_distinct() {
+        let mut rng = Rng::new(2);
+        let cb = Mat::randn(&mut rng, 32, 8, 1.0);
+        let lang = SynthLang::wiki(32);
+        for it in generate_vlm("mmstar", &cb, &lang, 10, 5) {
+            let correct = &it.mcq.choices[it.mcq.answer];
+            let mut sorted = correct.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), N_PATCHES);
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Evaluation harness: perplexity, zero-shot MCQ accuracy
+//! (lm-evaluation-harness protocol), WER, and the method × CR grid runner
+//! that regenerates the paper's tables.
+
+pub mod harness;
+pub mod perplexity;
+pub mod wer;
+pub mod zeroshot;
+
+pub use perplexity::perplexity;
+pub use wer::wer;
+pub use zeroshot::{task_accuracy, vlm_accuracy};

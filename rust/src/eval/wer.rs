@@ -1,0 +1,75 @@
+//! Word error rate: Levenshtein distance between hypothesis and reference
+//! token sequences, normalized by reference length — the ASR metric of the
+//! audio transfer table.
+
+/// Edit distance (insertions + deletions + substitutions).
+pub fn levenshtein(a: &[u16], b: &[u16]) -> usize {
+    let n = b.len();
+    let mut prev: Vec<usize> = (0..=n).collect();
+    let mut cur = vec![0usize; n + 1];
+    for (i, &ta) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for j in 0..n {
+            let sub = prev[j] + (ta != b[j]) as usize;
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[n]
+}
+
+/// WER (%) over a corpus of (hypothesis, reference) pairs — total edits over
+/// total reference length, the standard pooled formulation.
+pub fn wer(pairs: &[(Vec<u16>, Vec<u16>)]) -> f64 {
+    let mut edits = 0usize;
+    let mut total = 0usize;
+    for (hyp, reference) in pairs {
+        edits += levenshtein(hyp, reference);
+        total += reference.len();
+    }
+    100.0 * edits as f64 / total.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_sequences_zero() {
+        assert_eq!(levenshtein(&[1, 2, 3], &[1, 2, 3]), 0);
+        assert_eq!(wer(&[(vec![1, 2], vec![1, 2])]), 0.0);
+    }
+
+    #[test]
+    fn known_distances() {
+        assert_eq!(levenshtein(&[1, 2, 3], &[1, 3]), 1); // deletion
+        assert_eq!(levenshtein(&[1, 2], &[1, 2, 3]), 1); // insertion
+        assert_eq!(levenshtein(&[1, 2, 3], &[1, 9, 3]), 1); // substitution
+        assert_eq!(levenshtein(&[], &[1, 2, 3]), 3);
+        assert_eq!(levenshtein(&[1, 2, 3], &[]), 3);
+    }
+
+    #[test]
+    fn wer_pools_over_pairs() {
+        let pairs = vec![
+            (vec![1u16, 2, 3], vec![1u16, 2, 3]), // 0 edits / 3
+            (vec![9u16, 9, 9], vec![1u16, 2, 3]), // 3 edits / 3
+        ];
+        assert!((wer(&pairs) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn symmetric() {
+        let a = [3u16, 1, 4, 1, 5, 9, 2, 6];
+        let b = [2u16, 7, 1, 8, 2, 8];
+        assert_eq!(levenshtein(&a, &b), levenshtein(&b, &a));
+    }
+
+    #[test]
+    fn triangle_inequality() {
+        let a = [1u16, 2, 3, 4];
+        let b = [1u16, 3, 4, 5];
+        let c = [2u16, 3, 5];
+        assert!(levenshtein(&a, &c) <= levenshtein(&a, &b) + levenshtein(&b, &c));
+    }
+}

@@ -1,0 +1,26 @@
+//! # COMPOT — Calibration-Optimized Matrix Procrustes Orthogonalization
+//!
+//! Production-oriented reproduction of *"COMPOT: Calibration-Optimized Matrix
+//! Procrustes Orthogonalization for Transformers Compression"* as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the coordinator: compression pipeline, the paper's
+//!   one-shot global CR allocator, every baseline method, the evaluation
+//!   harness, and a batched inference server over compressed models.
+//! - **L2/L1 (python/compile)** — JAX model + Pallas kernels, AOT-lowered to
+//!   HLO text at build time (`make artifacts`), loaded at runtime through the
+//!   PJRT C API (`runtime` module). Python is never on the request path.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod allocator;
+pub mod compress;
+pub mod coordinator;
+pub mod eval;
+pub mod data;
+pub mod model;
+pub mod runtime;
+pub mod serve;
+pub mod linalg;
+pub mod util;

@@ -1,0 +1,139 @@
+//! Cholesky factorization G = L·Lᵀ (lower L), f64 internal precision.
+//!
+//! The whitening step of COMPOT (Eq. 5–6) assumes the calibration Gram is
+//! positive definite; the paper's §5 notes that with small calibration sets
+//! it may not be. [`cholesky`] therefore retries with a growing diagonal
+//! jitter before giving up, and `whitening.rs` falls back to an
+//! eigendecomposition-based transform if even that fails.
+
+use super::matrix::Mat;
+
+/// Error from a failed factorization (after all jitter retries).
+#[derive(Debug)]
+pub struct NotPositiveDefinite {
+    pub pivot: usize,
+    pub value: f64,
+}
+
+impl std::fmt::Display for NotPositiveDefinite {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "matrix not positive definite at pivot {} (value {:.3e})", self.pivot, self.value)
+    }
+}
+
+impl std::error::Error for NotPositiveDefinite {}
+
+fn factor_f64(g: &[f64], n: usize) -> Result<Vec<f64>, NotPositiveDefinite> {
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = g[i * n + j];
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 || !sum.is_finite() {
+                    return Err(NotPositiveDefinite { pivot: i, value: sum });
+                }
+                l[i * n + i] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Factor a symmetric positive definite matrix, retrying with diagonal
+/// jitter `εI` (ε = 1e-6·mean(diag), growing ×10 up to 4 times) if the bare
+/// factorization fails. Returns lower-triangular L with G ≈ L·Lᵀ.
+pub fn cholesky(g: &Mat) -> Result<Mat, NotPositiveDefinite> {
+    assert_eq!(g.rows(), g.cols(), "cholesky: square input required");
+    let n = g.rows();
+    let g64: Vec<f64> = g.data().iter().map(|&x| x as f64).collect();
+    let mean_diag = (0..n).map(|i| g64[i * n + i].abs()).sum::<f64>() / n.max(1) as f64;
+
+    let mut last_err = None;
+    for attempt in 0..5 {
+        let jitter = if attempt == 0 {
+            0.0
+        } else {
+            mean_diag.max(1e-12) * 1e-6 * 10f64.powi(attempt - 1)
+        };
+        let mut gj = g64.clone();
+        for i in 0..n {
+            gj[i * n + i] += jitter;
+        }
+        match factor_f64(&gj, n) {
+            Ok(l) => {
+                let data: Vec<f32> = l.iter().map(|&x| x as f32).collect();
+                return Ok(Mat::from_vec(n, n, data));
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    Err(last_err.unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_nt};
+    use crate::util::Rng;
+
+    #[test]
+    fn reconstructs_spd_matrix() {
+        let mut rng = Rng::new(20);
+        let x = Mat::randn(&mut rng, 50, 16, 1.0);
+        let g = matmul_tn_sym(&x);
+        let l = cholesky(&g).unwrap();
+        let llt = matmul_nt(&l, &l);
+        assert!(llt.rel_err(&g) < 1e-4);
+        // L is lower triangular
+        for i in 0..16 {
+            for j in i + 1..16 {
+                assert_eq!(l[(i, j)], 0.0);
+            }
+        }
+    }
+
+    fn matmul_tn_sym(x: &Mat) -> Mat {
+        crate::linalg::gemm::matmul_tn(x, x)
+    }
+
+    #[test]
+    fn identity_factors_to_identity() {
+        let l = cholesky(&Mat::eye(7)).unwrap();
+        assert!(l.rel_err(&Mat::eye(7)) < 1e-6);
+    }
+
+    #[test]
+    fn jitter_rescues_semidefinite() {
+        // Rank-deficient Gram: X has fewer rows than columns.
+        let mut rng = Rng::new(21);
+        let x = Mat::randn(&mut rng, 4, 12, 1.0);
+        let g = matmul_tn_sym(&x); // 12x12, rank 4
+        let l = cholesky(&g).expect("jitter should rescue PSD matrix");
+        let llt = matmul_nt(&l, &l);
+        // Loose tolerance: jitter perturbs the reconstruction.
+        assert!(llt.rel_err(&g) < 1e-2);
+    }
+
+    #[test]
+    fn rejects_negative_definite() {
+        let mut g = Mat::eye(3);
+        g[(1, 1)] = -5.0;
+        assert!(cholesky(&g).is_err());
+    }
+
+    #[test]
+    fn agrees_with_known_factor() {
+        // G = [[4, 2], [2, 2]] => L = [[2, 0], [1, 1]]
+        let g = Mat::from_vec(2, 2, vec![4.0, 2.0, 2.0, 2.0]);
+        let l = cholesky(&g).unwrap();
+        assert!((l[(0, 0)] - 2.0).abs() < 1e-6);
+        assert!((l[(1, 0)] - 1.0).abs() < 1e-6);
+        assert!((l[(1, 1)] - 1.0).abs() < 1e-6);
+        let _ = matmul(&l, &Mat::eye(2)); // silence unused import in cfg(test)
+    }
+}

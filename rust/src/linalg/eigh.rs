@@ -1,0 +1,148 @@
+//! Symmetric eigendecomposition via cyclic Jacobi rotations (f64 internal).
+//!
+//! Used by the whitening fallback: when the calibration Gram is too
+//! ill-conditioned for Cholesky even with jitter, COMPOT's paper (§5)
+//! suggests an SVD/eigendecomposition-based whitening transform — we build
+//! L = U·diag(√max(λ,ε)) so that L·Lᵀ ≈ G with a controlled floor.
+
+use super::matrix::Mat;
+
+/// Eigendecomposition of a symmetric matrix: returns (eigenvalues descending,
+/// eigenvectors as columns of the returned matrix, in matching order).
+pub fn eigh(g: &Mat) -> (Vec<f64>, Mat) {
+    let n = g.rows();
+    assert_eq!(g.cols(), n, "eigh: square input");
+    let mut a: Vec<f64> = g.data().iter().map(|&x| x as f64).collect();
+    // Symmetrize defensively.
+    for i in 0..n {
+        for j in 0..i {
+            let avg = 0.5 * (a[i * n + j] + a[j * n + i]);
+            a[i * n + j] = avg;
+            a[j * n + i] = avg;
+        }
+    }
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+
+    let off = |a: &[f64]| -> f64 {
+        let mut s = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    s += a[i * n + j] * a[i * n + j];
+                }
+            }
+        }
+        s.sqrt()
+    };
+    let scale: f64 = (0..n).map(|i| a[i * n + i].abs()).fold(1e-300, f64::max);
+
+    for _sweep in 0..50 {
+        if off(&a) <= 1e-12 * scale * n as f64 {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = a[p * n + q];
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                let app = a[p * n + p];
+                let aqq = a[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (1.0 + theta * theta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                // A ← JᵀAJ (rows and columns p, q).
+                for i in 0..n {
+                    let aip = a[i * n + p];
+                    let aiq = a[i * n + q];
+                    a[i * n + p] = c * aip - s * aiq;
+                    a[i * n + q] = s * aip + c * aiq;
+                }
+                for j in 0..n {
+                    let apj = a[p * n + j];
+                    let aqj = a[q * n + j];
+                    a[p * n + j] = c * apj - s * aqj;
+                    a[q * n + j] = s * apj + c * aqj;
+                }
+                // V ← VJ.
+                for i in 0..n {
+                    let vip = v[i * n + p];
+                    let viq = v[i * n + q];
+                    v[i * n + p] = c * vip - s * viq;
+                    v[i * n + q] = s * vip + c * viq;
+                }
+            }
+        }
+    }
+
+    let mut order: Vec<usize> = (0..n).collect();
+    let eigs: Vec<f64> = (0..n).map(|i| a[i * n + i]).collect();
+    order.sort_by(|&i, &j| eigs[j].partial_cmp(&eigs[i]).unwrap());
+    let vals: Vec<f64> = order.iter().map(|&i| eigs[i]).collect();
+    let mut vecs = Mat::zeros(n, n);
+    for (jj, &j) in order.iter().enumerate() {
+        for i in 0..n {
+            vecs[(i, jj)] = v[i * n + j] as f32;
+        }
+    }
+    (vals, vecs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_nt, matmul_tn};
+    use crate::util::Rng;
+
+    #[test]
+    fn reconstructs_symmetric() {
+        let mut rng = Rng::new(60);
+        let x = Mat::randn(&mut rng, 40, 12, 1.0);
+        let g = matmul_tn(&x, &x);
+        let (vals, vecs) = eigh(&g);
+        // G = V diag(vals) Vᵀ
+        let mut vd = vecs.clone();
+        for i in 0..12 {
+            for j in 0..12 {
+                vd[(i, j)] *= vals[j] as f32;
+            }
+        }
+        let rec = matmul_nt(&vd, &vecs);
+        assert!(rec.rel_err(&g) < 1e-4);
+        assert!(vecs.ortho_defect() < 1e-4);
+        // descending
+        for w in vals.windows(2) {
+            assert!(w[0] >= w[1] - 1e-9);
+        }
+        // PSD Gram ⇒ eigenvalues >= ~0
+        assert!(vals.iter().all(|&l| l > -1e-6 * vals[0].abs().max(1.0)));
+    }
+
+    #[test]
+    fn diagonal_matrix_eigenvalues() {
+        let g = Mat::from_fn(3, 3, |i, j| if i == j { (i + 1) as f32 } else { 0.0 });
+        let (vals, _) = eigh(&g);
+        assert!((vals[0] - 3.0).abs() < 1e-9);
+        assert!((vals[1] - 2.0).abs() < 1e-9);
+        assert!((vals[2] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn matches_svd_on_gram() {
+        // eigenvalues of XᵀX = squared singular values of X
+        let mut rng = Rng::new(61);
+        let x = Mat::randn(&mut rng, 30, 8, 1.0);
+        let g = matmul_tn(&x, &x);
+        let (vals, _) = eigh(&g);
+        let svd = crate::linalg::svd::svd_thin(&x);
+        for i in 0..8 {
+            let s2 = (svd.s[i] as f64) * (svd.s[i] as f64);
+            assert!((vals[i] - s2).abs() / s2.max(1e-9) < 1e-3, "i={i}");
+        }
+        let _ = matmul(&g, &Mat::eye(8));
+    }
+}

@@ -1,0 +1,190 @@
+//! Blocked, multithreaded GEMM — the L3 hot path.
+//!
+//! Row-major `C = A·B` in ikj order: for each row i of C, accumulate
+//! `C[i,:] += A[i,k] * B[k,:]`. The inner loop is a contiguous axpy over a
+//! row of B, which LLVM auto-vectorizes. K-blocking keeps the touched rows
+//! of B in L2; threading is over row chunks of C (disjoint output).
+
+use super::matrix::Mat;
+use crate::util::parallel::parallel_chunks_mut;
+
+/// K-block: rows of B touched per pass. 64 rows × up to 8192 f32 cols ≈ 2 MiB
+/// worst case, usually much less; tuned in the perf pass (see EXPERIMENTS.md).
+const KB: usize = 64;
+/// Row chunk per task — keeps scheduling overhead low while load-balancing.
+const ROWS_PER_TASK: usize = 16;
+
+/// C = A · B.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.rows(), "matmul: inner dims {}x{} · {}x{}", a.rows(), a.cols(), b.rows(), b.cols());
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Mat::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    let a_data = a.data();
+    let b_data = b.data();
+    parallel_chunks_mut(c.data_mut(), ROWS_PER_TASK * n, |_idx, off, chunk| {
+        let i0 = off / n;
+        let rows_here = chunk.len() / n;
+        for kb in (0..k).step_by(KB) {
+            let k1 = (kb + KB).min(k);
+            for r in 0..rows_here {
+                let i = i0 + r;
+                let c_row = &mut chunk[r * n..(r + 1) * n];
+                for kk in kb..k1 {
+                    let aik = a_data[i * k + kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let b_row = &b_data[kk * n..kk * n + n];
+                    axpy(aik, b_row, c_row);
+                }
+            }
+        }
+    });
+    c
+}
+
+/// c += a * x (contiguous), written so LLVM vectorizes it.
+#[inline]
+fn axpy(a: f32, x: &[f32], c: &mut [f32]) {
+    debug_assert_eq!(x.len(), c.len());
+    for (ci, xi) in c.iter_mut().zip(x.iter()) {
+        *ci += a * *xi;
+    }
+}
+
+/// C = Aᵀ · B  (A: k×m, B: k×n ⇒ C: m×n).
+///
+/// Uses an explicit transpose of A then the row-major kernel — the transpose
+/// is O(km), negligible next to the O(kmn) product.
+pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows(), b.rows(), "matmul_tn: inner dims");
+    let at = a.transpose();
+    matmul(&at, b)
+}
+
+/// C = A · Bᵀ  (A: m×k, B: n×k ⇒ C: m×n).
+///
+/// Direct dot-product formulation: rows of A against rows of B are both
+/// contiguous, so no transpose copy is needed.
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.cols(), "matmul_nt: inner dims");
+    let (m, n, k) = (a.rows(), b.rows(), a.cols());
+    let mut c = Mat::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    let a_ref = &*a;
+    let b_ref = &*b;
+    parallel_chunks_mut(c.data_mut(), ROWS_PER_TASK * n, |_idx, off, chunk| {
+        let i0 = off / n;
+        let rows_here = chunk.len() / n;
+        for r in 0..rows_here {
+            let i = i0 + r;
+            let a_row = a_ref.row(i);
+            let c_row = &mut chunk[r * n..(r + 1) * n];
+            for (j, cij) in c_row.iter_mut().enumerate() {
+                *cij = dot_f32(a_row, b_ref.row(j));
+            }
+        }
+    });
+    c
+}
+
+/// f32 dot with 4-way unrolled accumulators (vectorizes well, keeps error
+/// ~sqrt(k) smaller than naive single-accumulator summation).
+#[inline]
+fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// y = A·x for a single vector (used by the transformer forward pass when
+/// batch = 1 decoding).
+pub fn matvec(a: &Mat, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.cols(), x.len());
+    (0..a.rows()).map(|i| dot_f32(a.row(i), x)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0f64;
+                for k in 0..a.cols() {
+                    s += a[(i, k)] as f64 * b[(k, j)] as f64;
+                }
+                c[(i, j)] = s as f32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matches_naive_various_shapes() {
+        let mut rng = Rng::new(10);
+        for &(m, k, n) in &[(1, 1, 1), (2, 3, 4), (17, 31, 13), (64, 64, 64), (65, 129, 67)] {
+            let a = Mat::randn(&mut rng, m, k, 1.0);
+            let b = Mat::randn(&mut rng, k, n, 1.0);
+            let c = matmul(&a, &b);
+            assert!(c.rel_err(&naive(&a, &b)) < 1e-4, "shape {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn tn_and_nt_match_transpose_forms() {
+        let mut rng = Rng::new(11);
+        let a = Mat::randn(&mut rng, 40, 23, 1.0);
+        let b = Mat::randn(&mut rng, 40, 31, 1.0);
+        assert!(matmul_tn(&a, &b).rel_err(&matmul(&a.transpose(), &b)) < 1e-5);
+        let b2 = Mat::randn(&mut rng, 31, 23, 1.0);
+        assert!(matmul_nt(&a, &b2).rel_err(&matmul(&a, &b2.transpose())) < 1e-5);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(12);
+        let a = Mat::randn(&mut rng, 20, 20, 1.0);
+        assert!(matmul(&a, &Mat::eye(20)).rel_err(&a) < 1e-6);
+        assert!(matmul(&Mat::eye(20), &a).rel_err(&a) < 1e-6);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::new(13);
+        let a = Mat::randn(&mut rng, 33, 47, 1.0);
+        let x: Vec<f32> = (0..47).map(|_| rng.gauss32()).collect();
+        let xm = Mat::from_vec(47, 1, x.clone());
+        let y = matvec(&a, &x);
+        let ym = matmul(&a, &xm);
+        for i in 0..33 {
+            assert!((y[i] - ym[(i, 0)]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn empty_dims() {
+        let a = Mat::zeros(0, 5);
+        let b = Mat::zeros(5, 3);
+        assert_eq!(matmul(&a, &b).shape(), (0, 3));
+    }
+}

@@ -1,0 +1,282 @@
+//! Row-major `f32` matrix with the small API surface the rest of the crate
+//! uses. Deliberately not generic: one concrete type keeps the hot loops
+//! monomorphic and easy to profile.
+
+use crate::util::Rng;
+
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl std::fmt::Debug for Mat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Mat({}x{})", self.rows, self.cols)?;
+        if self.rows * self.cols <= 36 {
+            for i in 0..self.rows {
+                write!(f, "\n  {:?}", self.row(i))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "from_vec: shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f32) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// i.i.d. N(0, std²) entries.
+    pub fn randn(rng: &mut Rng, rows: usize, cols: usize, std: f32) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(rng.gauss32() * std);
+        }
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on big matrices.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t[(j, i)] = self[(i, j)];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    pub fn scale(&self, a: f32) -> Mat {
+        let mut out = self.clone();
+        for x in out.data.iter_mut() {
+            *x *= a;
+        }
+        out
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        let mut out = self.clone();
+        for (x, y) in out.data.iter_mut().zip(other.data.iter()) {
+            *x += y;
+        }
+        out
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape());
+        let mut out = self.clone();
+        for (x, y) in out.data.iter_mut().zip(other.data.iter()) {
+            *x -= y;
+        }
+        out
+    }
+
+    /// Frobenius norm (f64 accumulation).
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// ‖self − other‖_F / max(‖other‖_F, tiny) — relative error helper used
+    /// all over the tests.
+    pub fn rel_err(&self, other: &Mat) -> f64 {
+        self.sub(other).fro_norm() / other.fro_norm().max(1e-30)
+    }
+
+    /// Columns `j0..j1` as a new matrix.
+    pub fn cols_range(&self, j0: usize, j1: usize) -> Mat {
+        assert!(j0 <= j1 && j1 <= self.cols);
+        let mut out = Mat::zeros(self.rows, j1 - j0);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[j0..j1]);
+        }
+        out
+    }
+
+    /// Rows `i0..i1` as a new matrix.
+    pub fn rows_range(&self, i0: usize, i1: usize) -> Mat {
+        assert!(i0 <= i1 && i1 <= self.rows);
+        Mat::from_vec(
+            i1 - i0,
+            self.cols,
+            self.data[i0 * self.cols..i1 * self.cols].to_vec(),
+        )
+    }
+
+    /// Orthogonality defect ‖AᵀA − I‖_F — used by tests on dictionaries.
+    pub fn ortho_defect(&self) -> f64 {
+        let gram = crate::linalg::gemm::matmul_tn(self, self);
+        let mut defect = 0.0f64;
+        for i in 0..gram.rows() {
+            for j in 0..gram.cols() {
+                let target = if i == j { 1.0 } else { 0.0 };
+                let d = gram[(i, j)] as f64 - target;
+                defect += d * d;
+            }
+        }
+        defect.sqrt()
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// f64-accumulated dot product of two f32 slices.
+#[inline]
+pub fn dot64(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b.iter()) {
+        acc += (*x as f64) * (*y as f64);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_and_rows() {
+        let m = Mat::from_fn(3, 4, |i, j| (i * 10 + j) as f32);
+        assert_eq!(m[(2, 3)], 23.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
+        assert_eq!(m.col(2), vec![2.0, 12.0, 22.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(1);
+        let m = Mat::randn(&mut rng, 37, 53, 1.0);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose()[(5, 7)], m[(7, 5)]);
+    }
+
+    #[test]
+    fn fro_norm_matches_manual() {
+        let m = Mat::from_vec(2, 2, vec![3.0, 0.0, 0.0, 4.0]);
+        assert!((m.fro_norm() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slicing() {
+        let m = Mat::from_fn(4, 4, |i, j| (i * 4 + j) as f32);
+        let c = m.cols_range(1, 3);
+        assert_eq!(c.shape(), (4, 2));
+        assert_eq!(c[(2, 0)], 9.0);
+        let r = m.rows_range(2, 4);
+        assert_eq!(r.shape(), (2, 4));
+        assert_eq!(r[(0, 1)], 9.0);
+    }
+
+    #[test]
+    fn eye_is_orthonormal() {
+        assert!(Mat::eye(8).ortho_defect() < 1e-12);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Mat::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let b = Mat::from_vec(1, 3, vec![4.0, 5.0, 6.0]);
+        assert_eq!(a.add(&b).data(), &[5.0, 7.0, 9.0]);
+        assert_eq!(b.sub(&a).data(), &[3.0, 3.0, 3.0]);
+        assert_eq!(a.scale(2.0).data(), &[2.0, 4.0, 6.0]);
+    }
+}

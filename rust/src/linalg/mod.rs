@@ -1,0 +1,26 @@
+//! Dense linear-algebra substrate.
+//!
+//! Everything the COMPOT pipeline needs — blocked GEMM, Cholesky,
+//! Householder QR, one-sided Jacobi SVD, symmetric Jacobi eigendecomposition,
+//! triangular solves — implemented from scratch (no BLAS/LAPACK available in
+//! this offline environment, and the PJRT CPU plugin must stay off the
+//! arbitrary-shape path; see DESIGN.md §2).
+//!
+//! Storage is row-major `f32` ([`Mat`]); numerically sensitive reductions
+//! (dots inside Cholesky/SVD/eigh) accumulate in `f64`.
+
+pub mod cholesky;
+pub mod eigh;
+pub mod gemm;
+pub mod matrix;
+pub mod qr;
+pub mod solve;
+pub mod svd;
+
+pub use cholesky::cholesky;
+pub use eigh::eigh;
+pub use gemm::{matmul, matmul_nt, matmul_tn};
+pub use matrix::Mat;
+pub use qr::{complete_basis, qr_thin, random_orthonormal};
+pub use solve::{solve_lower_transpose_left, solve_lower_left};
+pub use svd::{procrustes, svd_thin, Svd};

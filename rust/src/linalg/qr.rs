@@ -1,0 +1,174 @@
+//! Householder QR (thin), random orthonormal matrices, and orthonormal basis
+//! completion — used for dictionary initialization (random-column init in
+//! Table 1) and for rank-deficient Procrustes steps.
+
+use super::matrix::{dot64, Mat};
+use crate::util::Rng;
+
+/// Thin QR: A (m×k, m ≥ k) = Q·R with Q m×k column-orthonormal, R k×k upper
+/// triangular. Householder reflections, f64 accumulation for the dots.
+pub fn qr_thin(a: &Mat) -> (Mat, Mat) {
+    let (m, k) = a.shape();
+    assert!(m >= k, "qr_thin: need tall matrix");
+    // Work in f64 for stability.
+    let mut r: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(k); // householder vectors
+
+    for j in 0..k {
+        // Column j below the diagonal.
+        let mut norm2 = 0.0f64;
+        for i in j..m {
+            let x = r[i * k + j];
+            norm2 += x * x;
+        }
+        let norm = norm2.sqrt();
+        let x0 = r[j * k + j];
+        let alpha = if x0 >= 0.0 { -norm } else { norm };
+        let mut v = vec![0.0f64; m - j];
+        v[0] = x0 - alpha;
+        for i in j + 1..m {
+            v[i - j] = r[i * k + j];
+        }
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 > 1e-300 {
+            // Apply H = I - 2 v vᵀ / (vᵀv) to R[j.., j..]
+            for col in j..k {
+                let mut dot = 0.0f64;
+                for i in j..m {
+                    dot += v[i - j] * r[i * k + col];
+                }
+                let f = 2.0 * dot / vnorm2;
+                for i in j..m {
+                    r[i * k + col] -= f * v[i - j];
+                }
+            }
+        }
+        vs.push(v);
+    }
+
+    // Build Q by applying the reflections to the first k columns of I.
+    let mut q = vec![0.0f64; m * k];
+    for j in 0..k {
+        q[j * k + j] = 1.0;
+    }
+    for jj in (0..k).rev() {
+        let v = &vs[jj];
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 <= 1e-300 {
+            continue;
+        }
+        for col in 0..k {
+            let mut dot = 0.0f64;
+            for i in jj..m {
+                dot += v[i - jj] * q[i * k + col];
+            }
+            let f = 2.0 * dot / vnorm2;
+            for i in jj..m {
+                q[i * k + col] -= f * v[i - jj];
+            }
+        }
+    }
+
+    let qm = Mat::from_vec(m, k, q.iter().map(|&x| x as f32).collect());
+    let mut rm = Mat::zeros(k, k);
+    for i in 0..k {
+        for j in i..k {
+            rm[(i, j)] = r[i * k + j] as f32;
+        }
+    }
+    (qm, rm)
+}
+
+/// Random column-orthonormal m×k matrix (QR of a Gaussian).
+pub fn random_orthonormal(rng: &mut Rng, m: usize, k: usize) -> Mat {
+    assert!(k <= m);
+    let a = Mat::randn(rng, m, k, 1.0);
+    qr_thin(&a).0
+}
+
+/// Replace the columns of `u` where `valid[j] == false` with vectors
+/// orthonormal to all other columns (modified Gram-Schmidt with
+/// reorthogonalization, deterministic seed).
+pub fn fill_null_columns(u: &mut Mat, valid: &[bool]) {
+    let (m, k) = u.shape();
+    assert_eq!(valid.len(), k);
+    let mut rng = Rng::new(0xC0FFEE);
+    for j in 0..k {
+        if valid[j] {
+            continue;
+        }
+        'retry: loop {
+            let mut cand: Vec<f32> = (0..m).map(|_| rng.gauss32()).collect();
+            // two Gram-Schmidt passes
+            for _ in 0..2 {
+                for other in 0..k {
+                    if other == j || (!valid[other] && other > j) {
+                        continue;
+                    }
+                    let col: Vec<f32> = (0..m).map(|i| u[(i, other)]).collect();
+                    let d = dot64(&cand, &col);
+                    for i in 0..m {
+                        cand[i] -= (d * col[i] as f64) as f32;
+                    }
+                }
+            }
+            let norm = dot64(&cand, &cand).sqrt();
+            if norm > 1e-6 {
+                for i in 0..m {
+                    u[(i, j)] = (cand[i] as f64 / norm) as f32;
+                }
+                break 'retry;
+            }
+        }
+    }
+}
+
+/// Orthonormal completion used by random dictionary init: take the given
+/// (possibly non-orthogonal) columns and return the Q factor.
+pub fn complete_basis(cols: &Mat) -> Mat {
+    qr_thin(cols).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::matmul;
+
+    #[test]
+    fn qr_reconstructs() {
+        let mut rng = Rng::new(50);
+        for &(m, k) in &[(10, 10), (20, 6), (7, 1), (64, 32)] {
+            let a = Mat::randn(&mut rng, m, k, 1.0);
+            let (q, r) = qr_thin(&a);
+            assert!(matmul(&q, &r).rel_err(&a) < 1e-4, "{m}x{k}");
+            assert!(q.ortho_defect() < 1e-4, "{m}x{k} defect");
+            // R upper triangular
+            for i in 0..k {
+                for j in 0..i {
+                    assert_eq!(r[(i, j)], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn random_orthonormal_is_orthonormal() {
+        let mut rng = Rng::new(51);
+        let q = random_orthonormal(&mut rng, 30, 12);
+        assert!(q.ortho_defect() < 1e-4);
+    }
+
+    #[test]
+    fn fill_null_columns_restores_orthonormality() {
+        let mut rng = Rng::new(52);
+        let mut q = random_orthonormal(&mut rng, 15, 6);
+        // Zero out two columns.
+        for i in 0..15 {
+            q[(i, 2)] = 0.0;
+            q[(i, 5)] = 0.0;
+        }
+        let valid = vec![true, true, false, true, true, false];
+        fill_null_columns(&mut q, &valid);
+        assert!(q.ortho_defect() < 1e-4, "defect {}", q.ortho_defect());
+    }
+}

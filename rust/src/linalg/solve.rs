@@ -1,0 +1,115 @@
+//! Triangular solves — the dewhitening step `A = L^{-ᵀ} D_O` (Eq. 8) and the
+//! whitened-truncation closed-form updates of the SVD-LLM baseline both
+//! reduce to solves against the Cholesky factor.
+
+use super::matrix::Mat;
+
+/// Solve L·Y = B for Y, with L lower-triangular (forward substitution),
+/// i.e. Y = L⁻¹·B. B is n×c.
+pub fn solve_lower_left(l: &Mat, b: &Mat) -> Mat {
+    let n = l.rows();
+    assert_eq!(l.cols(), n);
+    assert_eq!(b.rows(), n);
+    let c = b.cols();
+    let mut y = b.clone();
+    for i in 0..n {
+        let lii = l[(i, i)] as f64;
+        // y[i,:] = (b[i,:] - sum_{k<i} L[i,k] y[k,:]) / L[i,i]
+        for k in 0..i {
+            let lik = l[(i, k)];
+            if lik == 0.0 {
+                continue;
+            }
+            let (head, tail) = y.data_mut().split_at_mut(i * c);
+            let yk = &head[k * c..k * c + c];
+            let yi = &mut tail[..c];
+            for j in 0..c {
+                yi[j] -= lik * yk[j];
+            }
+        }
+        for j in 0..c {
+            y[(i, j)] = ((y[(i, j)] as f64) / lii) as f32;
+        }
+    }
+    y
+}
+
+/// Solve Lᵀ·Y = B for Y, with L lower-triangular (so Lᵀ is upper; back
+/// substitution), i.e. Y = L^{-ᵀ}·B. This is the COMPOT dewhitening map.
+pub fn solve_lower_transpose_left(l: &Mat, b: &Mat) -> Mat {
+    let n = l.rows();
+    assert_eq!(l.cols(), n);
+    assert_eq!(b.rows(), n);
+    let c = b.cols();
+    let mut y = b.clone();
+    for i in (0..n).rev() {
+        let lii = l[(i, i)] as f64;
+        for k in i + 1..n {
+            let lki = l[(k, i)]; // (Lᵀ)[i,k] = L[k,i]
+            if lki == 0.0 {
+                continue;
+            }
+            let (head, tail) = y.data_mut().split_at_mut(k * c);
+            let yi = &mut head[i * c..i * c + c];
+            let yk = &tail[..c];
+            for j in 0..c {
+                yi[j] -= lki * yk[j];
+            }
+        }
+        for j in 0..c {
+            y[(i, j)] = ((y[(i, j)] as f64) / lii) as f32;
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::cholesky::cholesky;
+    use crate::linalg::gemm::{matmul, matmul_tn};
+    use crate::util::Rng;
+
+    #[test]
+    fn forward_solve_inverts_lower() {
+        let mut rng = Rng::new(30);
+        let x = Mat::randn(&mut rng, 64, 12, 1.0);
+        let g = matmul_tn(&x, &x);
+        let l = cholesky(&g).unwrap();
+        let b = Mat::randn(&mut rng, 12, 5, 1.0);
+        let y = solve_lower_left(&l, &b);
+        assert!(matmul(&l, &y).rel_err(&b) < 1e-4);
+    }
+
+    #[test]
+    fn transpose_solve_inverts_lower_transpose() {
+        let mut rng = Rng::new(31);
+        let x = Mat::randn(&mut rng, 64, 12, 1.0);
+        let g = matmul_tn(&x, &x);
+        let l = cholesky(&g).unwrap();
+        let b = Mat::randn(&mut rng, 12, 7, 1.0);
+        let y = solve_lower_transpose_left(&l, &b);
+        assert!(matmul(&l.transpose(), &y).rel_err(&b) < 1e-4);
+    }
+
+    #[test]
+    fn dewhiten_roundtrip() {
+        // W̃ = LᵀW  ⇒  solve Lᵀ X = W̃ recovers W.
+        let mut rng = Rng::new(32);
+        let x = Mat::randn(&mut rng, 100, 10, 1.0);
+        let g = matmul_tn(&x, &x);
+        let l = cholesky(&g).unwrap();
+        let w = Mat::randn(&mut rng, 10, 6, 1.0);
+        let wt = matmul(&l.transpose(), &w);
+        let back = solve_lower_transpose_left(&l, &wt);
+        assert!(back.rel_err(&w) < 1e-3);
+    }
+
+    #[test]
+    fn identity_solves_are_noops() {
+        let mut rng = Rng::new(33);
+        let b = Mat::randn(&mut rng, 9, 4, 1.0);
+        assert!(solve_lower_left(&Mat::eye(9), &b).rel_err(&b) < 1e-7);
+        assert!(solve_lower_transpose_left(&Mat::eye(9), &b).rel_err(&b) < 1e-7);
+    }
+}

@@ -1,0 +1,362 @@
+//! Thin SVD via one-sided Jacobi rotations, and the orthogonal Procrustes
+//! solution built on it (Eq. 10 / Schönemann 1966): for M = PΛQᵀ the closest
+//! column-orthonormal matrix to M in the trace sense is P·Qᵀ.
+//!
+//! One-sided Jacobi works directly on the columns of A (stored row-wise in a
+//! transposed buffer so each column is contiguous), orthogonalizing pairs
+//! until convergence; singular values are the final column norms. It is
+//! simple, numerically robust at f32 storage with f64 rotation math, and has
+//! no LAPACK dependency.
+
+use super::matrix::{dot64, Mat};
+
+/// Thin SVD: A = U·diag(s)·Vᵀ with U m×r, s length r, V n×r, r = min(m,n),
+/// singular values sorted descending. Zero singular values produce zero
+/// columns in U (callers that need a full orthonormal U — Procrustes — use
+/// [`procrustes`], which completes the basis).
+#[derive(Clone, Debug)]
+pub struct Svd {
+    pub u: Mat,
+    pub s: Vec<f32>,
+    pub v: Mat,
+    /// Number of Jacobi sweeps until convergence (diagnostics / tests).
+    pub sweeps: usize,
+}
+
+impl Svd {
+    /// Reconstruct U·diag(s)·Vᵀ (tests, truncation baselines).
+    pub fn reconstruct(&self) -> Mat {
+        let r = self.s.len();
+        let mut us = self.u.clone();
+        for i in 0..us.rows() {
+            let row = us.row_mut(i);
+            for (j, x) in row.iter_mut().enumerate().take(r) {
+                *x *= self.s[j];
+            }
+        }
+        crate::linalg::gemm::matmul_nt(&us, &self.v)
+    }
+
+    /// Rank-r truncation: returns (B = U_r·diag(s_r), C = V_rᵀ) with
+    /// A ≈ B·C — the low-rank storage form used by all SVD baselines.
+    pub fn truncate(&self, r: usize) -> (Mat, Mat) {
+        let r = r.min(self.s.len());
+        let mut b = self.u.cols_range(0, r);
+        for i in 0..b.rows() {
+            let row = b.row_mut(i);
+            for (j, x) in row.iter_mut().enumerate() {
+                *x *= self.s[j];
+            }
+        }
+        let c = self.v.cols_range(0, r).transpose();
+        (b, c)
+    }
+}
+
+/// Relative convergence threshold for off-diagonal cosines.
+const TOL: f64 = 1e-10;
+const MAX_SWEEPS: usize = 40;
+
+/// Compute the thin SVD of `a`. Cost O(min(m,n)²·max(m,n)) per sweep,
+/// typically 6–12 sweeps.
+pub fn svd_thin(a: &Mat) -> Svd {
+    let (m, n) = a.shape();
+    if m < n {
+        // SVD(Aᵀ) = V·S·Uᵀ — swap factors.
+        let t = svd_thin(&a.transpose());
+        return Svd { u: t.v, s: t.s, v: t.u, sweeps: t.sweeps };
+    }
+    // bt: n×m, row j = column j of A (contiguous for rotations).
+    let mut bt = a.transpose();
+    // vt: n×n, row j = column j of V.
+    let mut vt = Mat::eye(n);
+
+    let mut sweeps = 0;
+    for sweep in 0..MAX_SWEEPS {
+        sweeps = sweep + 1;
+        let mut rotated = false;
+        for p in 0..n.saturating_sub(1) {
+            for q in p + 1..n {
+                let (bp, bq) = row_pair(&mut bt, p, q);
+                let app = dot64(bp, bp);
+                let aqq = dot64(bq, bq);
+                let apq = dot64(bp, bq);
+                if apq.abs() <= TOL * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                rotated = true;
+                // Jacobi rotation that zeroes the (p,q) entry of BᵀB.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                rotate(bp, bq, c as f32, s as f32);
+                let (vp, vq) = row_pair(&mut vt, p, q);
+                rotate(vp, vq, c as f32, s as f32);
+            }
+        }
+        if !rotated {
+            break;
+        }
+    }
+
+    // Column norms = singular values; normalize to get U.
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = (0..n).map(|j| dot64(bt.row(j), bt.row(j)).sqrt()).collect();
+    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
+
+    let mut u = Mat::zeros(m, n);
+    let mut v = Mat::zeros(n, n);
+    let mut s = Vec::with_capacity(n);
+    let max_norm = norms.iter().cloned().fold(0.0f64, f64::max);
+    for (jj, &j) in order.iter().enumerate() {
+        let sigma = norms[j];
+        s.push(sigma as f32);
+        if sigma > max_norm * 1e-12 && sigma > 0.0 {
+            let inv = 1.0 / sigma;
+            for i in 0..m {
+                u[(i, jj)] = (bt[(j, i)] as f64 * inv) as f32;
+            }
+        } // else: leave zero column (rank deficiency)
+        for i in 0..n {
+            v[(i, jj)] = vt[(j, i)];
+        }
+    }
+    Svd { u, s, v, sweeps }
+}
+
+#[inline]
+fn rotate(x: &mut [f32], y: &mut [f32], c: f32, s: f32) {
+    for (xi, yi) in x.iter_mut().zip(y.iter_mut()) {
+        let xv = *xi;
+        let yv = *yi;
+        *xi = c * xv - s * yv;
+        *yi = s * xv + c * yv;
+    }
+}
+
+/// Two disjoint mutable rows of a matrix.
+fn row_pair<'a>(m: &'a mut Mat, p: usize, q: usize) -> (&'a mut [f32], &'a mut [f32]) {
+    debug_assert!(p < q);
+    let cols = m.cols();
+    let (head, tail) = m.data_mut().split_at_mut(q * cols);
+    (&mut head[p * cols..p * cols + cols], &mut tail[..cols])
+}
+
+/// Orthogonal Procrustes step (Eq. 10): the column-orthonormal D maximizing
+/// Tr(DᵀM) is P·Qᵀ from the thin SVD M = PΛQᵀ — equivalently the orthogonal
+/// polar factor `M·(MᵀM)^{-1/2}`.
+///
+/// **Perf (EXPERIMENTS.md §Perf):** the polar form only needs an
+/// eigendecomposition of the *small* k×k Gram (O(mk²) GEMM + O(k³) Jacobi)
+/// instead of a one-sided Jacobi SVD over m-length columns
+/// (O(mk²·sweeps)) — ~8× faster at the shipped shapes. Near-singular Grams
+/// (relative eigenvalue < 1e-6) fall back to the exact SVD path with
+/// orthonormal null-space completion (any completion is optimal — the
+/// objective is flat there).
+pub fn procrustes(m_mat: &Mat) -> Mat {
+    let (m, k) = m_mat.shape();
+    assert!(k <= m, "procrustes: need tall matrix (k <= m), got {m}x{k}");
+    // Fast path: polar factor via eigh of the k×k Gram.
+    let gram = crate::linalg::gemm::matmul_tn(m_mat, m_mat);
+    let (vals, vecs) = crate::linalg::eigh::eigh(&gram);
+    let vmax = vals.first().copied().unwrap_or(0.0).max(1e-300);
+    if vals.iter().all(|&v| v > vmax * 1e-12) && vals[k - 1] > vmax * 1e-6 {
+        // (MᵀM)^{-1/2} = V·diag(λ^{-1/2})·Vᵀ.
+        let mut v_scaled = vecs.clone();
+        for i in 0..k {
+            for j in 0..k {
+                v_scaled[(i, j)] *= (1.0 / vals[j].sqrt()) as f32;
+            }
+        }
+        let inv_sqrt = crate::linalg::gemm::matmul_nt(&v_scaled, &vecs);
+        return crate::linalg::gemm::matmul(m_mat, &inv_sqrt);
+    }
+    procrustes_svd(m_mat)
+}
+
+/// Top-k *left* singular vectors of `a` — the SVD dictionary initialization
+/// of Algorithm 1.
+///
+/// **Perf (EXPERIMENTS.md §Perf):** computed from the eigendecomposition of
+/// the smaller Gram side instead of a full one-sided Jacobi SVD: for m ≤ n,
+/// eigh(A·Aᵀ) (m×m) directly gives U; otherwise U = A·V·Λ^{-1/2} from
+/// eigh(AᵀA). O(min(m,n)³ + m·n·min(m,n)) vs O(min² ·max·sweeps).
+pub fn left_singular_basis(a: &Mat, k: usize) -> Mat {
+    let (m, n) = a.shape();
+    let k = k.min(m.min(n));
+    if m <= n {
+        let gram = crate::linalg::gemm::matmul_nt(a, a); // m×m = A·Aᵀ
+        let (_, vecs) = crate::linalg::eigh::eigh(&gram);
+        vecs.cols_range(0, k)
+    } else {
+        let gram = crate::linalg::gemm::matmul_tn(a, a); // n×n = AᵀA
+        let (vals, vecs) = crate::linalg::eigh::eigh(&gram);
+        let av = crate::linalg::gemm::matmul(a, &vecs.cols_range(0, k)); // m×k = A·V_k
+        // normalize columns by σ = sqrt(λ); guard tiny eigenvalues.
+        let vmax = vals.first().copied().unwrap_or(0.0).max(1e-300);
+        let mut u = av;
+        let mut degenerate = false;
+        for j in 0..k {
+            let lam = vals[j].max(0.0);
+            if lam <= vmax * 1e-12 {
+                degenerate = true;
+                break;
+            }
+            let inv = (1.0 / lam.sqrt()) as f32;
+            for i in 0..m {
+                u[(i, j)] *= inv;
+            }
+        }
+        if degenerate {
+            // rare: fall back to the exact SVD
+            let decomp = svd_thin(a);
+            return decomp.u.cols_range(0, k);
+        }
+        u
+    }
+}
+
+/// Exact SVD-based Procrustes (rank-deficient-safe reference path).
+pub fn procrustes_svd(m_mat: &Mat) -> Mat {
+    let svd = svd_thin(m_mat);
+    let mut u = svd.u;
+    // Identify zero columns (σ ≈ 0) and complete the basis there.
+    let smax = svd.s.first().copied().unwrap_or(0.0).max(1e-30);
+    let valid: Vec<bool> = svd.s.iter().map(|&s| s > smax * 1e-6).collect();
+    if valid.iter().any(|&v| !v) {
+        super::qr::fill_null_columns(&mut u, &valid);
+    }
+    crate::linalg::gemm::matmul_nt(&u, &svd.v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{matmul, matmul_tn};
+    use crate::util::Rng;
+
+    #[test]
+    fn reconstructs_random_matrices() {
+        let mut rng = Rng::new(40);
+        for &(m, n) in &[(8, 8), (20, 7), (7, 20), (33, 17), (64, 64)] {
+            let a = Mat::randn(&mut rng, m, n, 1.0);
+            let svd = svd_thin(&a);
+            assert!(svd.reconstruct().rel_err(&a) < 1e-4, "{m}x{n}");
+            // U, V orthonormal
+            assert!(svd.u.ortho_defect() < 1e-3, "U defect {m}x{n}");
+            assert!(svd.v.ortho_defect() < 1e-3, "V defect {m}x{n}");
+            // Sorted descending
+            for w in svd.s.windows(2) {
+                assert!(w[0] >= w[1] - 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn known_singular_values_of_diagonal() {
+        let a = Mat::from_fn(4, 3, |i, j| if i == j { (3 - j) as f32 } else { 0.0 });
+        let svd = svd_thin(&a);
+        assert!((svd.s[0] - 3.0).abs() < 1e-5);
+        assert!((svd.s[1] - 2.0).abs() < 1e-5);
+        assert!((svd.s[2] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rank_deficient_matrix() {
+        let mut rng = Rng::new(41);
+        // rank-3: product of 10x3 and 3x8
+        let a = matmul(&Mat::randn(&mut rng, 10, 3, 1.0), &Mat::randn(&mut rng, 3, 8, 1.0));
+        let svd = svd_thin(&a);
+        assert!(svd.reconstruct().rel_err(&a) < 1e-4);
+        // σ4.. ≈ 0
+        for &s in &svd.s[3..] {
+            assert!(s < 1e-3 * svd.s[0]);
+        }
+    }
+
+    #[test]
+    fn truncation_error_equals_tail_energy() {
+        let mut rng = Rng::new(42);
+        let a = Mat::randn(&mut rng, 24, 16, 1.0);
+        let svd = svd_thin(&a);
+        let (b, c) = svd.truncate(5);
+        let approx = matmul(&b, &c);
+        let err = approx.sub(&a).fro_norm();
+        let tail: f64 = svd.s[5..].iter().map(|&s| (s as f64) * (s as f64)).sum();
+        assert!((err - tail.sqrt()).abs() / tail.sqrt().max(1e-9) < 1e-3);
+    }
+
+    #[test]
+    fn eckart_young_optimality() {
+        // Truncated SVD must beat a random rank-r factorization.
+        let mut rng = Rng::new(43);
+        let a = Mat::randn(&mut rng, 20, 20, 1.0);
+        let svd = svd_thin(&a);
+        let (b, c) = svd.truncate(4);
+        let svd_err = matmul(&b, &c).sub(&a).fro_norm();
+        for _ in 0..5 {
+            let rb = Mat::randn(&mut rng, 20, 4, 1.0);
+            let rc = Mat::randn(&mut rng, 4, 20, 1.0);
+            let rand_err = matmul(&rb, &rc).sub(&a).fro_norm();
+            assert!(svd_err <= rand_err);
+        }
+    }
+
+    #[test]
+    fn left_singular_basis_spans_top_subspace() {
+        let mut rng = Rng::new(47);
+        for &(m, n) in &[(20usize, 32usize), (32, 20), (16, 16)] {
+            let a = Mat::randn(&mut rng, m, n, 1.0);
+            let k = 5;
+            let fast = left_singular_basis(&a, k);
+            let exact = svd_thin(&a);
+            assert!(fast.ortho_defect() < 1e-2, "{m}x{n}");
+            // same subspace: projector difference small
+            let p_fast = matmul(&fast, &fast.transpose());
+            let u_k = exact.u.cols_range(0, k);
+            let p_exact = matmul(&u_k, &u_k.transpose());
+            assert!(
+                p_fast.rel_err(&p_exact) < 5e-2,
+                "{m}x{n}: subspace mismatch {}",
+                p_fast.rel_err(&p_exact)
+            );
+        }
+    }
+
+    #[test]
+    fn procrustes_is_orthonormal_and_optimal() {
+        let mut rng = Rng::new(44);
+        let m_mat = Mat::randn(&mut rng, 12, 5, 1.0);
+        let d = procrustes(&m_mat);
+        assert!(d.ortho_defect() < 1e-3);
+        // Optimality: Tr(DᵀM) >= Tr(QᵀM) for random orthonormal Q.
+        let obj = |q: &Mat| {
+            let qtm = matmul_tn(q, &m_mat);
+            (0..5).map(|i| qtm[(i, i)] as f64).sum::<f64>()
+        };
+        let best = obj(&d);
+        for t in 0..10 {
+            let q = crate::linalg::qr::random_orthonormal(&mut Rng::new(100 + t), 12, 5);
+            assert!(best >= obj(&q) - 1e-4, "procrustes beaten by random Q");
+        }
+    }
+
+    #[test]
+    fn procrustes_handles_rank_deficient() {
+        let mut rng = Rng::new(45);
+        // rank-2 M (10x4)
+        let m_mat = matmul(&Mat::randn(&mut rng, 10, 2, 1.0), &Mat::randn(&mut rng, 2, 4, 1.0));
+        let d = procrustes(&m_mat);
+        assert!(d.ortho_defect() < 1e-3, "defect = {}", d.ortho_defect());
+    }
+
+    #[test]
+    fn procrustes_recovers_rotation() {
+        // M = Q exactly orthonormal ⇒ procrustes(M) = Q.
+        let mut rng = Rng::new(46);
+        let q = crate::linalg::qr::random_orthonormal(&mut rng, 9, 9);
+        let d = procrustes(&q);
+        assert!(d.rel_err(&q) < 1e-3);
+    }
+}

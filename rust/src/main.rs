@@ -1,0 +1,237 @@
+//! `compot` — the L3 coordinator CLI.
+//!
+//! ```text
+//! compot table <id> [--items N] [--calib N] [--seed S]   regenerate a paper table
+//! compot figure <id|alloc:<preset>>                      regenerate a figure
+//! compot compress --model <preset> --method <m> --cr <x> [--dynamic]
+//! compot eval --model <preset>                           baseline evaluation
+//! compot serve --model <preset> [--addr host:port] [--cr x --method m]
+//! compot allocate --model <preset>                       print Algorithm-2 allocation
+//! compot info                                            artifacts / presets
+//! ```
+
+use compot::compress::compot::CompotConfig;
+use compot::compress::cospadi::CospadiConfig;
+use compot::coordinator::pipeline::{calibrate, compress_model, Method, PipelineConfig};
+use compot::coordinator::tables::{self, Scale};
+use compot::eval::harness::{baseline_row, run_method, EvalSetup};
+use compot::model::config::ModelConfig;
+use compot::model::Model;
+use compot::runtime::artifacts::artifacts_dir;
+use std::collections::HashMap;
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut positional = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (positional, flags)
+}
+
+fn method_by_name(name: &str) -> anyhow::Result<Method> {
+    Ok(match name {
+        "compot" => Method::Compot(CompotConfig::default()),
+        "svd-llm" | "svdllm" => Method::SvdLlm,
+        "svd-llm-v2" | "v2" => Method::SvdLlmV2,
+        "cospadi" => Method::Cospadi(CospadiConfig::default()),
+        "dobi" => Method::DobiSvd,
+        "svd" => Method::TruncatedSvd,
+        "fwsvd" => Method::Fwsvd,
+        "asvd" => Method::Asvd,
+        "llm-pruner" => Method::LlmPruner,
+        "replaceme" => Method::ReplaceMe,
+        "rtn4" => Method::Quant { bits: 4, gptq: false },
+        "gptq4" => Method::Quant { bits: 4, gptq: true },
+        "gptq3" => Method::Quant { bits: 3, gptq: true },
+        other => anyhow::bail!("unknown method '{other}'"),
+    })
+}
+
+fn scale_from(flags: &HashMap<String, String>) -> Scale {
+    let mut sc = Scale::default();
+    if let Some(v) = flags.get("items").and_then(|v| v.parse().ok()) {
+        sc.items = v;
+    }
+    if let Some(v) = flags.get("calib").and_then(|v| v.parse().ok()) {
+        sc.calib = v;
+    }
+    if let Some(v) = flags.get("seed").and_then(|v| v.parse().ok()) {
+        sc.seed = v;
+    }
+    sc
+}
+
+fn load(preset: &str) -> anyhow::Result<Model> {
+    Model::load(&artifacts_dir().join(format!("{preset}.bin")))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (pos, flags) = parse_flags(&args);
+    let cmd = pos.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "table" => {
+            let id = pos.get(1).map(String::as_str).unwrap_or("");
+            let sc = scale_from(&flags);
+            let md = match id {
+                "1" => tables::table1(&sc)?,
+                "2" => tables::table2(&sc)?,
+                "3" => tables::table3(&sc)?,
+                "4" => tables::table4(&sc)?,
+                "5" => tables::table5(&sc)?,
+                "6" => tables::table6(&sc)?,
+                "7" => tables::table7(&sc)?,
+                "8" | "16" => tables::table8(&sc)?,
+                "9" | "17" => tables::table9(&sc)?,
+                "10" => tables::table10(&sc)?,
+                "11" => tables::table11(&sc)?,
+                "12" => tables::table12(&sc)?,
+                "13" => tables::table13(&sc)?,
+                "14" => tables::table14(&sc)?,
+                "15" => tables::table15(&sc)?,
+                "18" => tables::table18(&sc)?,
+                "19" => tables::table19(&sc)?,
+                other => anyhow::bail!("unknown table '{other}' (see DESIGN.md §5)"),
+            };
+            println!("{md}");
+        }
+        "figure" => {
+            let id = pos.get(1).map(String::as_str).unwrap_or("");
+            let sc = scale_from(&flags);
+            let out = if id == "3" {
+                tables::figure3(&sc)?
+            } else if let Some(preset) = id.strip_prefix("alloc:") {
+                tables::figure_alloc(preset, &sc)?
+            } else if let Ok(n) = id.parse::<usize>() {
+                // Figures 4–12 are the allocation plots over the preset list.
+                let presets = [
+                    "llama-micro",
+                    "qwen-nano",
+                    "llama-small",
+                    "qwen-micro",
+                    "llama-mini",
+                    "llama-mini",
+                    "llama-wide",
+                    "llama-wide",
+                    "llama-wide",
+                ];
+                anyhow::ensure!((4..=12).contains(&n), "figures are 3..=12");
+                tables::figure_alloc(presets[n - 4], &sc)?
+            } else {
+                anyhow::bail!("unknown figure '{id}'")
+            };
+            println!("{out}");
+        }
+        "compress" => {
+            let preset = flags.get("model").map(String::as_str).unwrap_or("llama-micro");
+            let method =
+                method_by_name(flags.get("method").map(String::as_str).unwrap_or("compot"))?;
+            let cr: f64 = flags.get("cr").and_then(|v| v.parse().ok()).unwrap_or(0.2);
+            let dynamic = flags.contains_key("dynamic");
+            let sc = scale_from(&flags);
+            let model = load(preset)?;
+            let setup =
+                EvalSetup::standard(model.cfg.vocab, sc.calib, sc.seq_len, sc.items, sc.seed);
+            let row = run_method(&model, &setup, method, cr, dynamic)?;
+            println!(
+                "{} @ CR {:.2} (achieved {:.3}) on {}: avg acc {:.1} | wiki ppl {:.2} | c4 ppl {:.2} | {:.1}s",
+                row.method,
+                cr,
+                row.model_cr,
+                preset,
+                row.avg_acc,
+                row.ppl_wiki,
+                row.ppl_c4,
+                row.compress_secs
+            );
+        }
+        "eval" => {
+            let preset = flags.get("model").map(String::as_str).unwrap_or("llama-micro");
+            let sc = scale_from(&flags);
+            let model = load(preset)?;
+            let setup =
+                EvalSetup::standard(model.cfg.vocab, sc.calib, sc.seq_len, sc.items, sc.seed);
+            let row = baseline_row(&model, &setup, preset);
+            println!(
+                "{preset}: avg acc {:.1} | wiki ppl {:.2} | c4 ppl {:.2}",
+                row.avg_acc, row.ppl_wiki, row.ppl_c4
+            );
+            for (name, acc) in compot::data::tasks::TASK_NAMES.iter().zip(row.accs.iter()) {
+                println!("  {name:<10} {acc:.1}");
+            }
+        }
+        "allocate" => {
+            let preset = flags.get("model").map(String::as_str).unwrap_or("llama-micro");
+            let sc = scale_from(&flags);
+            let out = tables::figure_alloc(preset, &sc)?;
+            println!("{out}");
+        }
+        "serve" => {
+            let preset = flags.get("model").map(String::as_str).unwrap_or("llama-micro");
+            let addr = flags.get("addr").map(String::as_str).unwrap_or("127.0.0.1:7199");
+            let model = load(preset)?;
+            let model = if let Some(crs) = flags.get("cr") {
+                let cr: f64 = crs.parse()?;
+                let method =
+                    method_by_name(flags.get("method").map(String::as_str).unwrap_or("compot"))?;
+                let lang = compot::data::SynthLang::wiki(model.cfg.vocab);
+                let calib = lang.gen_batch(8, 96, &mut compot::util::Rng::new(1));
+                let cap = calibrate(&model, &calib);
+                let (m, report) =
+                    compress_model(&model, &cap, &PipelineConfig::new(method, cr, true))?;
+                println!("serving compressed model (CR {:.3})", report.model_cr);
+                m
+            } else {
+                model
+            };
+            println!("listening on {addr} (json-lines; {{\"cmd\":\"shutdown\"}} to stop)");
+            compot::serve::serve_blocking(
+                std::sync::Arc::new(model),
+                addr,
+                compot::serve::BatchPolicy::default(),
+                |a| println!("ready on {a}"),
+            )?;
+        }
+        "info" => {
+            println!("artifacts dir: {:?}", artifacts_dir());
+            match compot::runtime::Manifest::load(&artifacts_dir()) {
+                Ok(man) => {
+                    println!("models: {:?}", man.models);
+                    println!("artifacts: {}", man.entries.len());
+                    for e in &man.entries {
+                        println!("  {} ({})", e.name, e.kind);
+                    }
+                }
+                Err(e) => println!("no manifest ({e}); run `make artifacts`"),
+            }
+            println!("presets: {:?}", ModelConfig::PRESETS);
+        }
+        _ => {
+            println!(
+                "compot — COMPOT reproduction coordinator\n\n\
+                 usage:\n  compot table <1|2|3|4|5|6|7|8|9|10|11|12|13|14|15|18|19> [--items N]\n  \
+                 compot figure <3|4..12|alloc:PRESET>\n  \
+                 compot compress --model PRESET --method M --cr X [--dynamic]\n  \
+                 compot eval --model PRESET\n  \
+                 compot allocate --model PRESET\n  \
+                 compot serve --model PRESET [--cr X]\n  \
+                 compot info\n\n\
+                 methods: compot svd-llm svd-llm-v2 cospadi dobi svd fwsvd asvd llm-pruner replaceme gptq4 gptq3 rtn4"
+            );
+        }
+    }
+    Ok(())
+}

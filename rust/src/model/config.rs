@@ -1,0 +1,392 @@
+//! Model configurations. Presets are scaled-down analogues of the paper's
+//! evaluation models (DESIGN.md §3 documents the substitution); shape
+//! *heterogeneity* — square attention projections, GQA-narrow K/V, wide MLP
+//! — is preserved because it is what drives the allocator.
+
+use crate::util::json::Json;
+
+/// Projection types of a decoder block (the compressible set — embeddings
+/// and lm_head stay uncompressed, matching the paper's protocol).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ProjKind {
+    Q,
+    K,
+    V,
+    O,
+    Gate,
+    Up,
+    Down,
+    /// Cross-attention projections (encoder–decoder models only).
+    CrossQ,
+    CrossK,
+    CrossV,
+    CrossO,
+}
+
+impl ProjKind {
+    pub const DECODER_SET: [ProjKind; 7] = [
+        ProjKind::Q,
+        ProjKind::K,
+        ProjKind::V,
+        ProjKind::O,
+        ProjKind::Gate,
+        ProjKind::Up,
+        ProjKind::Down,
+    ];
+
+    /// Group key used by the allocator / SVD-LLM V2 (matches HF naming).
+    pub fn group(&self) -> &'static str {
+        match self {
+            ProjKind::Q => "q_proj",
+            ProjKind::K => "k_proj",
+            ProjKind::V => "v_proj",
+            ProjKind::O => "o_proj",
+            ProjKind::Gate => "gate_proj",
+            ProjKind::Up => "up_proj",
+            ProjKind::Down => "down_proj",
+            ProjKind::CrossQ => "cross_q_proj",
+            ProjKind::CrossK => "cross_k_proj",
+            ProjKind::CrossV => "cross_v_proj",
+            ProjKind::CrossO => "cross_o_proj",
+        }
+    }
+
+    pub fn from_group(s: &str) -> Option<ProjKind> {
+        Self::DECODER_SET
+            .iter()
+            .chain([ProjKind::CrossQ, ProjKind::CrossK, ProjKind::CrossV, ProjKind::CrossO].iter())
+            .copied()
+            .find(|p| p.group() == s)
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub rope_theta: f32,
+    /// Encoder config for enc-dec models (None for decoder-only).
+    pub encoder: Option<EncoderConfig>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct EncoderConfig {
+    pub n_layers: usize,
+    /// Input feature dimension of the continuous frames.
+    pub d_input: usize,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Shapes of the compressible projections of one decoder block, in
+    /// [`ProjKind::DECODER_SET`] order. Convention: W is (in, out), y = x·W.
+    pub fn proj_shape(&self, p: ProjKind) -> (usize, usize) {
+        let d = self.d_model;
+        let kv = self.n_kv_heads * self.head_dim();
+        match p {
+            ProjKind::Q | ProjKind::CrossQ => (d, d),
+            ProjKind::K | ProjKind::V | ProjKind::CrossK | ProjKind::CrossV => (d, kv),
+            ProjKind::O | ProjKind::CrossO => (d, d),
+            ProjKind::Gate | ProjKind::Up => (d, self.d_ff),
+            ProjKind::Down => (self.d_ff, d),
+        }
+    }
+
+    /// Total parameters in compressible projections (decoder blocks).
+    pub fn compressible_params(&self) -> usize {
+        self.n_layers
+            * ProjKind::DECODER_SET
+                .iter()
+                .map(|&p| {
+                    let (m, n) = self.proj_shape(p);
+                    m * n
+                })
+                .sum::<usize>()
+    }
+
+    // ---- presets (paper model in parentheses; DESIGN.md §3) ----
+
+    /// Tiny unit-test config.
+    pub fn test_tiny() -> ModelConfig {
+        ModelConfig {
+            name: "test-tiny".into(),
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 64,
+            max_seq: 64,
+            rope_theta: 10000.0,
+            encoder: None,
+        }
+    }
+
+    /// (Llama 3.2-1B) — the ablation workhorse.
+    pub fn llama_micro() -> ModelConfig {
+        ModelConfig {
+            name: "llama-micro".into(),
+            vocab: 256,
+            d_model: 96,
+            n_layers: 3,
+            n_heads: 6,
+            n_kv_heads: 2,
+            d_ff: 256,
+            max_seq: 128,
+            rope_theta: 10000.0,
+            encoder: None,
+        }
+    }
+
+    /// (Llama 2-7B — MHA, no GQA.)
+    pub fn llama_mini() -> ModelConfig {
+        ModelConfig {
+            name: "llama-mini".into(),
+            vocab: 256,
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 8,
+            n_kv_heads: 8,
+            d_ff: 344,
+            max_seq: 128,
+            rope_theta: 10000.0,
+            encoder: None,
+        }
+    }
+
+    /// (Llama 3-8B.)
+    pub fn llama_small() -> ModelConfig {
+        ModelConfig {
+            name: "llama-small".into(),
+            vocab: 256,
+            d_model: 160,
+            n_layers: 5,
+            n_heads: 10,
+            n_kv_heads: 5,
+            d_ff: 432,
+            max_seq: 128,
+            rope_theta: 10000.0,
+            encoder: None,
+        }
+    }
+
+    /// (Qwen3-0.6B.)
+    pub fn qwen_nano() -> ModelConfig {
+        ModelConfig {
+            name: "qwen-nano".into(),
+            vocab: 256,
+            d_model: 64,
+            n_layers: 3,
+            n_heads: 4,
+            n_kv_heads: 2,
+            d_ff: 192,
+            max_seq: 128,
+            rope_theta: 10000.0,
+            encoder: None,
+        }
+    }
+
+    /// (Qwen3-8B.)
+    pub fn qwen_micro() -> ModelConfig {
+        ModelConfig {
+            name: "qwen-micro".into(),
+            vocab: 256,
+            d_model: 144,
+            n_layers: 4,
+            n_heads: 8,
+            n_kv_heads: 4,
+            d_ff: 400,
+            max_seq: 128,
+            rope_theta: 10000.0,
+            encoder: None,
+        }
+    }
+
+    /// (Llama-13B / 30B stand-in for the scale table.)
+    pub fn llama_wide() -> ModelConfig {
+        ModelConfig {
+            name: "llama-wide".into(),
+            vocab: 256,
+            d_model: 192,
+            n_layers: 6,
+            n_heads: 12,
+            n_kv_heads: 12,
+            d_ff: 512,
+            max_seq: 128,
+            rope_theta: 10000.0,
+            encoder: None,
+        }
+    }
+
+    /// (Whisper-like) encoder–decoder for the audio table.
+    pub fn encdec_micro() -> ModelConfig {
+        ModelConfig {
+            name: "encdec-micro".into(),
+            vocab: 256,
+            d_model: 96,
+            n_layers: 3,
+            n_heads: 6,
+            n_kv_heads: 6,
+            d_ff: 256,
+            max_seq: 192,
+            rope_theta: 10000.0,
+            encoder: Some(EncoderConfig { n_layers: 2, d_input: 32 }),
+        }
+    }
+
+    /// (Qwen3-VL-like) prefix-VLM: patches projected into the decoder.
+    pub fn vlm_micro() -> ModelConfig {
+        ModelConfig {
+            name: "vlm-micro".into(),
+            vocab: 256,
+            d_model: 96,
+            n_layers: 3,
+            n_heads: 6,
+            n_kv_heads: 3,
+            d_ff: 256,
+            max_seq: 160,
+            rope_theta: 10000.0,
+            encoder: Some(EncoderConfig { n_layers: 0, d_input: 32 }),
+        }
+    }
+
+    pub fn preset(name: &str) -> Option<ModelConfig> {
+        Some(match name {
+            "test-tiny" => Self::test_tiny(),
+            "llama-micro" => Self::llama_micro(),
+            "llama-mini" => Self::llama_mini(),
+            "llama-small" => Self::llama_small(),
+            "llama-wide" => Self::llama_wide(),
+            "qwen-nano" => Self::qwen_nano(),
+            "qwen-micro" => Self::qwen_micro(),
+            "encdec-micro" => Self::encdec_micro(),
+            "vlm-micro" => Self::vlm_micro(),
+            _ => return None,
+        })
+    }
+
+    pub const PRESETS: [&'static str; 9] = [
+        "test-tiny",
+        "llama-micro",
+        "llama-mini",
+        "llama-small",
+        "llama-wide",
+        "qwen-nano",
+        "qwen-micro",
+        "encdec-micro",
+        "vlm-micro",
+    ];
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", self.name.as_str().into())
+            .set("vocab", self.vocab.into())
+            .set("d_model", self.d_model.into())
+            .set("n_layers", self.n_layers.into())
+            .set("n_heads", self.n_heads.into())
+            .set("n_kv_heads", self.n_kv_heads.into())
+            .set("d_ff", self.d_ff.into())
+            .set("max_seq", self.max_seq.into())
+            .set("rope_theta", (self.rope_theta as f64).into());
+        if let Some(enc) = &self.encoder {
+            let mut e = Json::obj();
+            e.set("n_layers", enc.n_layers.into()).set("d_input", enc.d_input.into());
+            j.set("encoder", e);
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ModelConfig> {
+        let get = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("config missing field {k}"))
+        };
+        Ok(ModelConfig {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("unnamed")
+                .to_string(),
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            n_kv_heads: get("n_kv_heads")?,
+            d_ff: get("d_ff")?,
+            max_seq: get("max_seq")?,
+            rope_theta: j
+                .get("rope_theta")
+                .and_then(Json::as_f64)
+                .unwrap_or(10000.0) as f32,
+            encoder: j.get("encoder").map(|e| {
+                Ok::<_, anyhow::Error>(EncoderConfig {
+                    n_layers: e
+                        .get("n_layers")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow::anyhow!("encoder.n_layers"))?,
+                    d_input: e
+                        .get("d_input")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow::anyhow!("encoder.d_input"))?,
+                })
+            })
+            .transpose()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_valid() {
+        for name in ModelConfig::PRESETS {
+            let c = ModelConfig::preset(name).unwrap();
+            assert_eq!(c.d_model % c.n_heads, 0, "{name}");
+            assert_eq!(c.n_heads % c.n_kv_heads, 0, "{name}");
+            assert!(c.compressible_params() > 0);
+        }
+        assert!(ModelConfig::preset("nope").is_none());
+    }
+
+    #[test]
+    fn shapes_are_heterogeneous() {
+        let c = ModelConfig::llama_micro();
+        let (qm, qn) = c.proj_shape(ProjKind::Q);
+        let (km, kn) = c.proj_shape(ProjKind::K);
+        let (um, un) = c.proj_shape(ProjKind::Up);
+        let (dm, dn) = c.proj_shape(ProjKind::Down);
+        assert_eq!((qm, qn), (96, 96));
+        assert_eq!((km, kn), (96, 32)); // GQA-narrow
+        assert_eq!((um, un), (96, 256)); // wide MLP
+        assert_eq!((dm, dn), (256, 96));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for name in ["llama-micro", "encdec-micro"] {
+            let c = ModelConfig::preset(name).unwrap();
+            let j = c.to_json();
+            let back = ModelConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+            assert_eq!(c, back);
+        }
+    }
+
+    #[test]
+    fn group_names_roundtrip() {
+        for p in ProjKind::DECODER_SET {
+            assert_eq!(ProjKind::from_group(p.group()), Some(p));
+        }
+    }
+}

@@ -1,0 +1,497 @@
+//! Encoder–decoder transformer (Whisper-like) and prefix-VLM — the
+//! substrates for the audio (Table 9/17) and vision-language (Table 8/16)
+//! transfer experiments.
+//!
+//! The encoder ingests continuous frames through an input projection and
+//! runs bidirectional blocks; the decoder adds cross-attention between
+//! self-attention and the MLP. Only *decoder* projections are compressed,
+//! matching the paper's Whisper protocol. The VLM variant is a prefix-LM:
+//! projected patches are prepended to the token embedding sequence of a
+//! plain decoder-only [`Model`].
+
+use super::config::{ModelConfig, ProjKind};
+use super::transformer::{apply_rope, attention_head, head_slice, rmsnorm, Block, Capture, Model};
+use super::weights::TensorFile;
+use crate::compress::LinearWeight;
+use crate::linalg::{gemm, Mat};
+use crate::util::Rng;
+
+/// Decoder block with cross-attention.
+#[derive(Clone, Debug)]
+pub struct CrossBlock {
+    /// Self-attention + MLP weights (the [`Block`] layout).
+    pub base: Block,
+    pub cross_norm: Vec<f32>,
+    pub cq: LinearWeight,
+    pub ck: LinearWeight,
+    pub cv: LinearWeight,
+    pub co: LinearWeight,
+}
+
+#[derive(Clone, Debug)]
+pub struct EncDecModel {
+    pub cfg: ModelConfig,
+    /// d_input × d projection of the continuous input frames.
+    pub input_proj: Mat,
+    pub enc_blocks: Vec<Block>,
+    pub enc_norm: Vec<f32>,
+    pub embed: Mat,
+    pub dec_blocks: Vec<CrossBlock>,
+    pub final_norm: Vec<f32>,
+    pub lm_head: Mat,
+    /// vocab × d_input synthetic codebook: the frame emission model shared
+    /// with the build-time generator (see DESIGN.md §3 — stored in the
+    /// weight file so training and evaluation share the distribution).
+    pub codebook: Mat,
+}
+
+impl CrossBlock {
+    pub fn random(cfg: &ModelConfig, rng: &mut Rng) -> CrossBlock {
+        let d = cfg.d_model;
+        let std = 0.6 / (d as f32).sqrt();
+        let kv = cfg.n_kv_heads * cfg.head_dim();
+        CrossBlock {
+            base: Block::random(cfg, rng),
+            cross_norm: vec![1.0; d],
+            cq: LinearWeight::Dense(Mat::randn(rng, d, d, std)),
+            ck: LinearWeight::Dense(Mat::randn(rng, d, kv, std)),
+            cv: LinearWeight::Dense(Mat::randn(rng, d, kv, std)),
+            co: LinearWeight::Dense(Mat::randn(rng, d, d, std)),
+        }
+    }
+
+    /// Forward: causal self-attention, cross-attention over `enc`, MLP.
+    pub fn forward(
+        &self,
+        x: &Mat,
+        enc: &Mat,
+        head_dim: usize,
+        theta: f32,
+        layer: usize,
+        mut capture: Option<&mut Capture>,
+    ) -> Mat {
+        // Self-attention + first residual (reuse Block's attention path by
+        // building a temporary block with identity MLP is messier than just
+        // inlining — Block::forward fuses attn+mlp, so we do the three
+        // sublayers explicitly here).
+        let b = &self.base;
+        let xn = rmsnorm(x, &b.attn_norm);
+        if let Some(c) = capture.as_deref_mut() {
+            c.record(layer, ProjKind::Q, &xn);
+            c.record(layer, ProjKind::K, &xn);
+            c.record(layer, ProjKind::V, &xn);
+        }
+        let mut q = b.q.apply(&xn);
+        let mut k = b.k.apply(&xn);
+        let v = b.v.apply(&xn);
+        apply_rope(&mut q, head_dim, theta, 0);
+        apply_rope(&mut k, head_dim, theta, 0);
+        let q_per_kv = b.n_heads / b.n_kv_heads;
+        let mut concat = Mat::zeros(x.rows(), b.n_heads * head_dim);
+        for h in 0..b.n_heads {
+            let oh = attention_head(
+                &head_slice(&q, h, head_dim),
+                &head_slice(&k, h / q_per_kv, head_dim),
+                &head_slice(&v, h / q_per_kv, head_dim),
+                true,
+            );
+            for t in 0..x.rows() {
+                concat.row_mut(t)[h * head_dim..(h + 1) * head_dim].copy_from_slice(oh.row(t));
+            }
+        }
+        if let Some(c) = capture.as_deref_mut() {
+            c.record(layer, ProjKind::O, &concat);
+        }
+        let x = x.add(&b.o.apply(&concat));
+
+        // Cross-attention (no RoPE: absolute alignment to encoder states).
+        let xn = rmsnorm(&x, &self.cross_norm);
+        if let Some(c) = capture.as_deref_mut() {
+            c.record(layer, ProjKind::CrossQ, &xn);
+        }
+        let q = self.cq.apply(&xn);
+        if let Some(c) = capture.as_deref_mut() {
+            c.record(layer, ProjKind::CrossK, enc);
+            c.record(layer, ProjKind::CrossV, enc);
+        }
+        let k = self.ck.apply(enc);
+        let v = self.cv.apply(enc);
+        let mut concat = Mat::zeros(x.rows(), b.n_heads * head_dim);
+        for h in 0..b.n_heads {
+            let oh = attention_head(
+                &head_slice(&q, h, head_dim),
+                &head_slice(&k, h / q_per_kv, head_dim),
+                &head_slice(&v, h / q_per_kv, head_dim),
+                false,
+            );
+            for t in 0..x.rows() {
+                concat.row_mut(t)[h * head_dim..(h + 1) * head_dim].copy_from_slice(oh.row(t));
+            }
+        }
+        if let Some(c) = capture.as_deref_mut() {
+            c.record(layer, ProjKind::CrossO, &concat);
+        }
+        let x = x.add(&self.co.apply(&concat));
+
+        // MLP.
+        let xn = rmsnorm(&x, &b.mlp_norm);
+        if let Some(c) = capture.as_deref_mut() {
+            c.record(layer, ProjKind::Gate, &xn);
+            c.record(layer, ProjKind::Up, &xn);
+        }
+        let g = b.gate.apply(&xn);
+        let u = b.up.apply(&xn);
+        let mut hmat = g;
+        for i in 0..hmat.rows() {
+            let hrow = hmat.row_mut(i);
+            for (hv, uv) in hrow.iter_mut().zip(u.row(i).iter()) {
+                *hv = (*hv / (1.0 + (-*hv).exp())) * uv;
+            }
+        }
+        if let Some(c) = capture.as_deref_mut() {
+            c.record(layer, ProjKind::Down, &hmat);
+        }
+        x.add(&b.down.apply(&hmat))
+    }
+}
+
+impl EncDecModel {
+    pub fn random(cfg: &ModelConfig, rng: &mut Rng) -> EncDecModel {
+        let enc = cfg.encoder.clone().expect("encdec config must have encoder");
+        let d = cfg.d_model;
+        let std = 0.6 / (d as f32).sqrt();
+        EncDecModel {
+            input_proj: Mat::randn(rng, enc.d_input, d, 1.0 / (enc.d_input as f32).sqrt()),
+            enc_blocks: (0..enc.n_layers).map(|_| Block::random(cfg, rng)).collect(),
+            enc_norm: vec![1.0; d],
+            embed: Mat::randn(rng, cfg.vocab, d, 1.0),
+            dec_blocks: (0..cfg.n_layers).map(|_| CrossBlock::random(cfg, rng)).collect(),
+            final_norm: vec![1.0; d],
+            lm_head: Mat::randn(rng, d, cfg.vocab, std),
+            codebook: Mat::randn(rng, cfg.vocab, enc.d_input, 1.0),
+            cfg: cfg.clone(),
+        }
+    }
+
+    /// Encode continuous frames (T_enc × d_input) to hidden states.
+    pub fn encode(&self, frames: &Mat) -> Mat {
+        let mut x = gemm::matmul(frames, &self.input_proj);
+        let hd = self.cfg.head_dim();
+        for (i, b) in self.enc_blocks.iter().enumerate() {
+            x = b.forward_with(&x, hd, self.cfg.rope_theta, false, i, None);
+        }
+        rmsnorm(&x, &self.enc_norm)
+    }
+
+    /// Decoder logits given encoder states and the (teacher-forced) token
+    /// prefix; optionally captures decoder calibration stats.
+    pub fn decode(&self, enc: &Mat, tokens: &[u16], mut capture: Option<&mut Capture>) -> Mat {
+        let d = self.cfg.d_model;
+        let mut x = Mat::zeros(tokens.len(), d);
+        for (t, &tok) in tokens.iter().enumerate() {
+            x.row_mut(t).copy_from_slice(self.embed.row(tok as usize));
+        }
+        let hd = self.cfg.head_dim();
+        for (i, b) in self.dec_blocks.iter().enumerate() {
+            x = b.forward(&x, enc, hd, self.cfg.rope_theta, i, capture.as_deref_mut());
+        }
+        gemm::matmul(&rmsnorm(&x, &self.final_norm), &self.lm_head)
+    }
+
+    /// Greedy transcription starting from BOS (token 0), up to `max_len`.
+    pub fn transcribe(&self, frames: &Mat, max_len: usize, eos: u16) -> Vec<u16> {
+        let enc = self.encode(frames);
+        let mut seq: Vec<u16> = vec![0];
+        for _ in 0..max_len {
+            let logits = self.decode(&enc, &seq, None);
+            let last = logits.row(logits.rows() - 1);
+            let mut best = 0usize;
+            for (i, &v) in last.iter().enumerate() {
+                if v > last[best] {
+                    best = i;
+                }
+            }
+            if best as u16 == eos {
+                break;
+            }
+            seq.push(best as u16);
+        }
+        seq[1..].to_vec()
+    }
+
+    /// Decoder projections, the compressible set for the audio experiments.
+    pub const DECODER_PROJS: [ProjKind; 11] = [
+        ProjKind::Q,
+        ProjKind::K,
+        ProjKind::V,
+        ProjKind::O,
+        ProjKind::Gate,
+        ProjKind::Up,
+        ProjKind::Down,
+        ProjKind::CrossQ,
+        ProjKind::CrossK,
+        ProjKind::CrossV,
+        ProjKind::CrossO,
+    ];
+
+    pub fn dec_proj(&self, layer: usize, p: ProjKind) -> &LinearWeight {
+        let b = &self.dec_blocks[layer];
+        match p {
+            ProjKind::CrossQ => &b.cq,
+            ProjKind::CrossK => &b.ck,
+            ProjKind::CrossV => &b.cv,
+            ProjKind::CrossO => &b.co,
+            other => b.base.proj(other),
+        }
+    }
+
+    pub fn dec_proj_mut(&mut self, layer: usize, p: ProjKind) -> &mut LinearWeight {
+        let b = &mut self.dec_blocks[layer];
+        match p {
+            ProjKind::CrossQ => &mut b.cq,
+            ProjKind::CrossK => &mut b.ck,
+            ProjKind::CrossV => &mut b.cv,
+            ProjKind::CrossO => &mut b.co,
+            other => b.base.proj_mut(other),
+        }
+    }
+
+    // ---- serialization (shared format with python/compile/pretrain.py) ----
+
+    pub fn to_tensor_file(&self) -> TensorFile {
+        let mut tf = TensorFile::new(self.cfg.clone());
+        tf.insert("input_proj", self.input_proj.clone());
+        tf.insert("embed", self.embed.clone());
+        tf.insert("lm_head", self.lm_head.clone());
+        tf.insert("codebook", self.codebook.clone());
+        tf.insert("enc_norm", Mat::from_vec(1, self.enc_norm.len(), self.enc_norm.clone()));
+        tf.insert("final_norm", Mat::from_vec(1, self.final_norm.len(), self.final_norm.clone()));
+        for (i, b) in self.enc_blocks.iter().enumerate() {
+            tf.insert(&format!("enc.{i}.attn_norm"), Mat::from_vec(1, b.attn_norm.len(), b.attn_norm.clone()));
+            tf.insert(&format!("enc.{i}.mlp_norm"), Mat::from_vec(1, b.mlp_norm.len(), b.mlp_norm.clone()));
+            for p in ProjKind::DECODER_SET {
+                tf.insert(&format!("enc.{i}.{}", p.group()), b.proj(p).to_dense());
+            }
+        }
+        for (i, b) in self.dec_blocks.iter().enumerate() {
+            tf.insert(&format!("dec.{i}.attn_norm"), Mat::from_vec(1, b.base.attn_norm.len(), b.base.attn_norm.clone()));
+            tf.insert(&format!("dec.{i}.mlp_norm"), Mat::from_vec(1, b.base.mlp_norm.len(), b.base.mlp_norm.clone()));
+            tf.insert(&format!("dec.{i}.cross_norm"), Mat::from_vec(1, b.cross_norm.len(), b.cross_norm.clone()));
+            for p in Self::DECODER_PROJS {
+                tf.insert(&format!("dec.{i}.{}", p.group()), self.dec_proj(i, p).to_dense());
+            }
+        }
+        tf
+    }
+
+    pub fn from_tensor_file(tf: &TensorFile) -> anyhow::Result<EncDecModel> {
+        let cfg = tf.config.clone();
+        let enc_cfg = cfg.encoder.clone().ok_or_else(|| anyhow::anyhow!("not an encdec config"))?;
+        let dense = |name: String| -> anyhow::Result<LinearWeight> {
+            Ok(LinearWeight::Dense(tf.get(&name)?.clone()))
+        };
+        let mut enc_blocks = Vec::new();
+        for i in 0..enc_cfg.n_layers {
+            enc_blocks.push(Block {
+                attn_norm: tf.get_vec(&format!("enc.{i}.attn_norm"))?,
+                mlp_norm: tf.get_vec(&format!("enc.{i}.mlp_norm"))?,
+                q: dense(format!("enc.{i}.q_proj"))?,
+                k: dense(format!("enc.{i}.k_proj"))?,
+                v: dense(format!("enc.{i}.v_proj"))?,
+                o: dense(format!("enc.{i}.o_proj"))?,
+                gate: dense(format!("enc.{i}.gate_proj"))?,
+                up: dense(format!("enc.{i}.up_proj"))?,
+                down: dense(format!("enc.{i}.down_proj"))?,
+                n_heads: cfg.n_heads,
+                n_kv_heads: cfg.n_kv_heads,
+            });
+        }
+        let mut dec_blocks = Vec::new();
+        for i in 0..cfg.n_layers {
+            dec_blocks.push(CrossBlock {
+                base: Block {
+                    attn_norm: tf.get_vec(&format!("dec.{i}.attn_norm"))?,
+                    mlp_norm: tf.get_vec(&format!("dec.{i}.mlp_norm"))?,
+                    q: dense(format!("dec.{i}.q_proj"))?,
+                    k: dense(format!("dec.{i}.k_proj"))?,
+                    v: dense(format!("dec.{i}.v_proj"))?,
+                    o: dense(format!("dec.{i}.o_proj"))?,
+                    gate: dense(format!("dec.{i}.gate_proj"))?,
+                    up: dense(format!("dec.{i}.up_proj"))?,
+                    down: dense(format!("dec.{i}.down_proj"))?,
+                    n_heads: cfg.n_heads,
+                    n_kv_heads: cfg.n_kv_heads,
+                },
+                cross_norm: tf.get_vec(&format!("dec.{i}.cross_norm"))?,
+                cq: dense(format!("dec.{i}.cross_q_proj"))?,
+                ck: dense(format!("dec.{i}.cross_k_proj"))?,
+                cv: dense(format!("dec.{i}.cross_v_proj"))?,
+                co: dense(format!("dec.{i}.cross_o_proj"))?,
+            });
+        }
+        Ok(EncDecModel {
+            input_proj: tf.get("input_proj")?.clone(),
+            embed: tf.get("embed")?.clone(),
+            lm_head: tf.get("lm_head")?.clone(),
+            codebook: tf.get("codebook")?.clone(),
+            enc_norm: tf.get_vec("enc_norm")?,
+            final_norm: tf.get_vec("final_norm")?,
+            enc_blocks,
+            dec_blocks,
+            cfg,
+        })
+    }
+}
+
+/// Prefix-VLM: a decoder-only LM consuming projected patch embeddings as a
+/// prefix before the caption tokens.
+#[derive(Clone, Debug)]
+pub struct VlmModel {
+    pub lm: Model,
+    /// d_input × d patch projector (part of the "vision module", kept
+    /// uncompressed — the paper compresses the language module only).
+    pub patch_proj: Mat,
+    /// concept vocab × d_input patch codebook (synthetic vision generator).
+    pub codebook: Mat,
+}
+
+impl VlmModel {
+    pub fn random(cfg: &ModelConfig, rng: &mut Rng) -> VlmModel {
+        let enc = cfg.encoder.clone().expect("vlm config needs encoder.d_input");
+        VlmModel {
+            lm: Model::random(cfg, rng),
+            patch_proj: Mat::randn(rng, enc.d_input, cfg.d_model, 1.0 / (enc.d_input as f32).sqrt()),
+            codebook: Mat::randn(rng, cfg.vocab, enc.d_input, 1.0),
+        }
+    }
+
+    /// Logits over the caption positions, conditioning on the patch prefix.
+    pub fn forward(&self, patches: &Mat, tokens: &[u16]) -> Mat {
+        let prefix = gemm::matmul(patches, &self.patch_proj);
+        let tok_emb = self.lm.embed_tokens(tokens);
+        let p = prefix.rows();
+        let mut x = Mat::zeros(p + tokens.len(), self.lm.cfg.d_model);
+        for i in 0..p {
+            x.row_mut(i).copy_from_slice(prefix.row(i));
+        }
+        for t in 0..tokens.len() {
+            x.row_mut(p + t).copy_from_slice(tok_emb.row(t));
+        }
+        let hd = self.lm.cfg.head_dim();
+        for (layer, stage) in self.lm.stages.iter().enumerate() {
+            x = match stage {
+                super::transformer::Stage::Block(b) => {
+                    b.forward(&x, hd, self.lm.cfg.rope_theta, layer, None)
+                }
+                super::transformer::Stage::Linear(t) => gemm::matmul(&x, t),
+            };
+        }
+        let h = rmsnorm(&x, &self.lm.final_norm);
+        // only caption positions
+        gemm::matmul(&h.rows_range(p, p + tokens.len()), &self.lm.lm_head)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_encdec() -> (ModelConfig, EncDecModel) {
+        let mut cfg = ModelConfig::test_tiny();
+        cfg.encoder = Some(super::super::config::EncoderConfig { n_layers: 1, d_input: 8 });
+        cfg.n_kv_heads = cfg.n_heads; // simple MHA for cross-attn tests
+        let m = EncDecModel::random(&cfg, &mut Rng::new(1));
+        (cfg, m)
+    }
+
+    #[test]
+    fn encdec_forward_shapes() {
+        let (_cfg, m) = tiny_encdec();
+        let mut rng = Rng::new(2);
+        let frames = Mat::randn(&mut rng, 10, 8, 1.0);
+        let enc = m.encode(&frames);
+        assert_eq!(enc.shape(), (10, 32));
+        let logits = m.decode(&enc, &[0, 5, 9], None);
+        assert_eq!(logits.shape(), (3, 64));
+        assert!(logits.data().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn decoder_is_causal_encoder_is_not() {
+        let (_cfg, m) = tiny_encdec();
+        let mut rng = Rng::new(3);
+        let frames = Mat::randn(&mut rng, 8, 8, 1.0);
+        let enc = m.encode(&frames);
+        let la = m.decode(&enc, &[0, 1, 2, 3], None);
+        let lb = m.decode(&enc, &[0, 1, 2, 9], None);
+        for j in 0..64 {
+            assert!((la[(1, j)] - lb[(1, j)]).abs() < 1e-4);
+        }
+        // encoder: perturbing a late frame changes early encoder outputs
+        let mut frames2 = frames.clone();
+        frames2[(7, 0)] += 10.0;
+        let enc2 = m.encode(&frames2);
+        assert!(enc.rel_err(&enc2) > 1e-6);
+        let mut early_changed = false;
+        for j in 0..32 {
+            if (enc[(0, j)] - enc2[(0, j)]).abs() > 1e-6 {
+                early_changed = true;
+            }
+        }
+        assert!(early_changed, "encoder must be bidirectional");
+    }
+
+    #[test]
+    fn cross_attention_uses_encoder_states() {
+        let (_cfg, m) = tiny_encdec();
+        let mut rng = Rng::new(4);
+        let f1 = Mat::randn(&mut rng, 6, 8, 1.0);
+        let f2 = Mat::randn(&mut rng, 6, 8, 1.0);
+        let l1 = m.decode(&m.encode(&f1), &[0, 1, 2], None);
+        let l2 = m.decode(&m.encode(&f2), &[0, 1, 2], None);
+        assert!(l1.rel_err(&l2) > 1e-6, "decoder must condition on audio");
+    }
+
+    #[test]
+    fn capture_includes_cross_projections() {
+        let (_cfg, m) = tiny_encdec();
+        let mut rng = Rng::new(5);
+        let frames = Mat::randn(&mut rng, 6, 8, 1.0);
+        let enc = m.encode(&frames);
+        let mut cap = Capture::default();
+        m.decode(&enc, &[0, 1, 2, 3], Some(&mut cap));
+        // 2 dec layers × 11 projections
+        assert_eq!(cap.stats.len(), 2 * 11);
+        assert!(cap.stats.contains_key(&(0, ProjKind::CrossK)));
+    }
+
+    #[test]
+    fn encdec_serialization_roundtrip() {
+        let (_cfg, m) = tiny_encdec();
+        let dir = std::env::temp_dir().join("compot_test_weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("encdec.bin");
+        m.to_tensor_file().save(&path).unwrap();
+        let back = EncDecModel::from_tensor_file(&TensorFile::load(&path).unwrap()).unwrap();
+        let mut rng = Rng::new(6);
+        let frames = Mat::randn(&mut rng, 5, 8, 1.0);
+        let a = m.decode(&m.encode(&frames), &[0, 2], None);
+        let b = back.decode(&back.encode(&frames), &[0, 2], None);
+        assert!(a.rel_err(&b) < 1e-6);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn vlm_conditions_on_patches() {
+        let mut cfg = ModelConfig::test_tiny();
+        cfg.encoder = Some(super::super::config::EncoderConfig { n_layers: 0, d_input: 8 });
+        let m = VlmModel::random(&cfg, &mut Rng::new(7));
+        let mut rng = Rng::new(8);
+        let p1 = Mat::randn(&mut rng, 4, 8, 1.0);
+        let p2 = Mat::randn(&mut rng, 4, 8, 1.0);
+        let l1 = m.forward(&p1, &[1, 2, 3]);
+        let l2 = m.forward(&p2, &[1, 2, 3]);
+        assert_eq!(l1.shape(), (3, 64));
+        assert!(l1.rel_err(&l2) > 1e-6);
+    }
+}

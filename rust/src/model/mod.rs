@@ -1,0 +1,20 @@
+//! Transformer model substrate.
+//!
+//! Pure-Rust forward passes over models whose projections may be dense or
+//! compressed ([`crate::compress::LinearWeight`]), so every compression
+//! method can be evaluated end-to-end without Python on the path. The
+//! decoder-only LM ([`transformer`]) covers the language tables; the
+//! encoder–decoder ([`encdec`]) covers the Whisper-like audio and VLM
+//! transfer experiments.
+//!
+//! Weights are *trained at build time* by `python/compile/pretrain.py` (JAX,
+//! `make artifacts`) and loaded from the binary format in [`weights`]; unit
+//! tests use randomly initialized models.
+
+pub mod config;
+pub mod encdec;
+pub mod transformer;
+pub mod weights;
+
+pub use config::{ModelConfig, ProjKind};
+pub use transformer::{Block, Model};

@@ -1,0 +1,253 @@
+//! Binary weight format shared with `python/compile/pretrain.py`.
+//!
+//! Layout:
+//! ```text
+//! b"CPT1" | u32 header_len | header JSON (utf-8) | f32-LE tensor data
+//! ```
+//! Header: `{"config": {...}, "tensors": [{"name", "rows", "cols", "offset"}]}`
+//! with `offset` in f32 elements from the start of the data section.
+//! Vector tensors (norms) are stored as 1×n matrices.
+
+use super::config::ModelConfig;
+use crate::linalg::Mat;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+pub const MAGIC: &[u8; 4] = b"CPT1";
+
+/// An on-disk bundle of named tensors plus the model config.
+#[derive(Clone, Debug)]
+pub struct TensorFile {
+    pub config: ModelConfig,
+    pub tensors: BTreeMap<String, Mat>,
+}
+
+impl TensorFile {
+    pub fn new(config: ModelConfig) -> TensorFile {
+        TensorFile { config, tensors: BTreeMap::new() }
+    }
+
+    pub fn insert(&mut self, name: &str, m: Mat) {
+        self.tensors.insert(name.to_string(), m);
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<&Mat> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("tensor '{name}' missing from weight file"))
+    }
+
+    /// Vector tensor (1×n) as a Vec.
+    pub fn get_vec(&self, name: &str) -> anyhow::Result<Vec<f32>> {
+        let m = self.get(name)?;
+        anyhow::ensure!(m.rows() == 1, "tensor '{name}' is not a vector");
+        Ok(m.row(0).to_vec())
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        let mut tensor_list = Vec::new();
+        let mut offset = 0usize;
+        for (name, m) in &self.tensors {
+            let mut t = Json::obj();
+            t.set("name", name.as_str().into())
+                .set("rows", m.rows().into())
+                .set("cols", m.cols().into())
+                .set("offset", offset.into());
+            tensor_list.push(t);
+            offset += m.rows() * m.cols();
+        }
+        let mut header = Json::obj();
+        header.set("config", self.config.to_json()).set("tensors", Json::Arr(tensor_list));
+        let header_bytes = header.to_string().into_bytes();
+
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(header_bytes.len() as u32).to_le_bytes())?;
+        f.write_all(&header_bytes)?;
+        for m in self.tensors.values() {
+            for &v in m.data() {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<TensorFile> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "bad magic in {path:?}");
+        let mut len4 = [0u8; 4];
+        f.read_exact(&mut len4)?;
+        let hlen = u32::from_le_bytes(len4) as usize;
+        let mut hbytes = vec![0u8; hlen];
+        f.read_exact(&mut hbytes)?;
+        let header = Json::parse(std::str::from_utf8(&hbytes)?)
+            .map_err(|e| anyhow::anyhow!("bad header json: {e}"))?;
+        let config = ModelConfig::from_json(
+            header.get("config").ok_or_else(|| anyhow::anyhow!("no config"))?,
+        )?;
+        let mut data = Vec::new();
+        f.read_to_end(&mut data)?;
+        anyhow::ensure!(data.len() % 4 == 0, "data not f32-aligned");
+        let floats: Vec<f32> = data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+
+        let mut tensors = BTreeMap::new();
+        for t in header
+            .get("tensors")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("no tensors"))?
+        {
+            let name = t.get("name").and_then(Json::as_str).unwrap_or_default().to_string();
+            let rows = t.get("rows").and_then(Json::as_usize).unwrap_or(0);
+            let cols = t.get("cols").and_then(Json::as_usize).unwrap_or(0);
+            let off = t.get("offset").and_then(Json::as_usize).unwrap_or(0);
+            anyhow::ensure!(off + rows * cols <= floats.len(), "tensor '{name}' out of range");
+            tensors.insert(
+                name,
+                Mat::from_vec(rows, cols, floats[off..off + rows * cols].to_vec()),
+            );
+        }
+        Ok(TensorFile { config, tensors })
+    }
+}
+
+/// Names used for the decoder-only LM.
+pub mod names {
+    use crate::model::config::ProjKind;
+
+    pub fn block(i: usize, p: ProjKind) -> String {
+        format!("blocks.{i}.{}", p.group())
+    }
+
+    pub fn block_norm(i: usize, which: &str) -> String {
+        format!("blocks.{i}.{which}")
+    }
+}
+
+impl super::transformer::Model {
+    /// Serialize (dense projections only — compressed models are an
+    /// in-memory concept; artifacts store the pretrained dense model).
+    pub fn to_tensor_file(&self) -> TensorFile {
+        use super::config::ProjKind;
+        use super::transformer::Stage;
+        let mut tf = TensorFile::new(self.cfg.clone());
+        tf.insert("embed", self.embed.clone());
+        tf.insert("lm_head", self.lm_head.clone());
+        tf.insert("final_norm", Mat::from_vec(1, self.final_norm.len(), self.final_norm.clone()));
+        for (i, stage) in self.stages.iter().enumerate() {
+            let Stage::Block(b) = stage else {
+                panic!("to_tensor_file: only dense block models are serializable")
+            };
+            tf.insert(
+                &names::block_norm(i, "attn_norm"),
+                Mat::from_vec(1, b.attn_norm.len(), b.attn_norm.clone()),
+            );
+            tf.insert(
+                &names::block_norm(i, "mlp_norm"),
+                Mat::from_vec(1, b.mlp_norm.len(), b.mlp_norm.clone()),
+            );
+            for p in ProjKind::DECODER_SET {
+                tf.insert(&names::block(i, p), b.proj(p).to_dense());
+            }
+        }
+        tf
+    }
+
+    pub fn from_tensor_file(tf: &TensorFile) -> anyhow::Result<Self> {
+        use super::config::ProjKind;
+        use super::transformer::{Block, Stage};
+        use crate::compress::LinearWeight;
+        let cfg = tf.config.clone();
+        let mut stages = Vec::new();
+        for i in 0..cfg.n_layers {
+            let mk = |p: ProjKind| -> anyhow::Result<LinearWeight> {
+                Ok(LinearWeight::Dense(tf.get(&names::block(i, p))?.clone()))
+            };
+            stages.push(Stage::Block(Block {
+                attn_norm: tf.get_vec(&names::block_norm(i, "attn_norm"))?,
+                q: mk(ProjKind::Q)?,
+                k: mk(ProjKind::K)?,
+                v: mk(ProjKind::V)?,
+                o: mk(ProjKind::O)?,
+                mlp_norm: tf.get_vec(&names::block_norm(i, "mlp_norm"))?,
+                gate: mk(ProjKind::Gate)?,
+                up: mk(ProjKind::Up)?,
+                down: mk(ProjKind::Down)?,
+                n_heads: cfg.n_heads,
+                n_kv_heads: cfg.n_kv_heads,
+            }));
+        }
+        Ok(Self {
+            embed: tf.get("embed")?.clone(),
+            lm_head: tf.get("lm_head")?.clone(),
+            final_norm: tf.get_vec("final_norm")?,
+            stages,
+            cfg,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        self.to_tensor_file().save(path)
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        Self::from_tensor_file(&TensorFile::load(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::transformer::Model;
+    use crate::util::Rng;
+
+    #[test]
+    fn model_roundtrip_through_disk() {
+        let cfg = ModelConfig::test_tiny();
+        let m = Model::random(&cfg, &mut Rng::new(1));
+        let dir = std::env::temp_dir().join("compot_test_weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny.bin");
+        m.save(&path).unwrap();
+        let back = Model::load(&path).unwrap();
+        assert_eq!(back.cfg, m.cfg);
+        let tokens: Vec<u16> = vec![3, 1, 4, 1, 5];
+        assert!(back.forward(&tokens).rel_err(&m.forward(&tokens)) < 1e-6);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_tensor_is_error() {
+        let cfg = ModelConfig::test_tiny();
+        let m = Model::random(&cfg, &mut Rng::new(2));
+        let mut tf = m.to_tensor_file();
+        tf.tensors.remove("embed");
+        assert!(Model::from_tensor_file(&tf).is_err());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("compot_test_weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.bin");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(TensorFile::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn vector_tensor_helpers() {
+        let mut tf = TensorFile::new(ModelConfig::test_tiny());
+        tf.insert("v", Mat::from_vec(1, 3, vec![1.0, 2.0, 3.0]));
+        assert_eq!(tf.get_vec("v").unwrap(), vec![1.0, 2.0, 3.0]);
+        tf.insert("m", Mat::zeros(2, 2));
+        assert!(tf.get_vec("m").is_err());
+        assert!(tf.get("nothere").is_err());
+    }
+}

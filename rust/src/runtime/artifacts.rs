@@ -1,0 +1,119 @@
+//! Artifact manifest (`artifacts/manifest.json`) — shape-keyed lookup of
+//! the AOT-compiled programs.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub path: PathBuf,
+    pub kind: String,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub s: usize,
+    pub inputs: Vec<(usize, usize)>,
+    pub outputs: Vec<(usize, usize)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+    pub models: Vec<String>,
+}
+
+/// Default artifacts directory: `$COMPOT_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("COMPOT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let shapes = |v: Option<&Json>| -> Vec<(usize, usize)> {
+            v.and_then(Json::as_arr)
+                .map(|arr| {
+                    arr.iter()
+                        .filter_map(|s| {
+                            let s = s.as_arr()?;
+                            Some((s[0].as_usize()?, s[1].as_usize()?))
+                        })
+                        .collect()
+                })
+                .unwrap_or_default()
+        };
+        let entries = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .map(|e| ArtifactEntry {
+                name: e.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                path: dir.join(e.get("path").and_then(Json::as_str).unwrap_or("")),
+                kind: e.get("kind").and_then(Json::as_str).unwrap_or("").to_string(),
+                m: e.get("m").and_then(Json::as_usize).unwrap_or(0),
+                n: e.get("n").and_then(Json::as_usize).unwrap_or(0),
+                k: e.get("k").and_then(Json::as_usize).unwrap_or(0),
+                s: e.get("s").and_then(Json::as_usize).unwrap_or(0),
+                inputs: shapes(e.get("inputs")),
+                outputs: shapes(e.get("outputs")),
+            })
+            .collect();
+        let models = j
+            .get("models")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|m| m.as_str().map(String::from))
+            .collect();
+        Ok(Manifest { dir: dir.to_path_buf(), entries, models })
+    }
+
+    /// The compot_iter artifact for a given (m, n, k, s), if exported.
+    pub fn compot_iter(&self, m: usize, n: usize, k: usize, s: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == "compot_iter" && e.m == m && e.n == n && e.k == k && e.s == s)
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn model_path(&self, preset: &str) -> Option<PathBuf> {
+        let file = format!("{preset}.bin");
+        self.models.contains(&file).then(|| self.dir.join(file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_json() {
+        let dir = std::env::temp_dir().join("compot_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts":[{"name":"compot_iter_96x256_k32_s16","path":"x.hlo.txt",
+                "kind":"compot_iter","m":96,"n":256,"k":32,"s":16,
+                "inputs":[[96,256],[96,32]],"outputs":[[32,256],[96,32]]}],
+                "models":["llama-micro.bin"]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.compot_iter(96, 256, 32, 16).unwrap();
+        assert_eq!(e.inputs, vec![(96, 256), (96, 32)]);
+        assert!(m.compot_iter(1, 2, 3, 4).is_none());
+        assert!(m.model_path("llama-micro").is_some());
+        assert!(m.model_path("nope").is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

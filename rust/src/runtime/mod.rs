@@ -1,0 +1,11 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts (built once by
+//! `python/compile/aot.py`) and execute them from the Rust hot path.
+//! Python is never on the request path — the artifacts are self-contained
+//! XLA programs.
+
+pub mod artifacts;
+pub mod compot_exec;
+pub mod pjrt;
+
+pub use artifacts::Manifest;
+pub use pjrt::PjrtEngine;

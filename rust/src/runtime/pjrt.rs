@@ -1,0 +1,74 @@
+//! Thin wrapper over the `xla` crate: one CPU PJRT client, a compile cache
+//! keyed by artifact path, and Mat ⇄ Literal conversion.
+
+use crate::linalg::Mat;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtEngine {
+    pub fn cpu() -> anyhow::Result<PjrtEngine> {
+        Ok(PjrtEngine { client: xla::PjRtClient::cpu()?, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached).
+    pub fn load(&self, path: &Path) -> anyhow::Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(path) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        self.cache.lock().unwrap().insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute with Mat inputs; outputs come back as Mats with the given
+    /// shapes (artifacts are lowered with `return_tuple=True`).
+    pub fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[&Mat],
+        out_shapes: &[(usize, usize)],
+    ) -> anyhow::Result<Vec<Mat>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|m| {
+                xla::Literal::vec1(m.data())
+                    .reshape(&[m.rows() as i64, m.cols() as i64])
+                    .map_err(|e| anyhow::anyhow!("reshape: {e}"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        anyhow::ensure!(
+            tuple.len() == out_shapes.len(),
+            "artifact returned {} outputs, expected {}",
+            tuple.len(),
+            out_shapes.len()
+        );
+        tuple
+            .into_iter()
+            .zip(out_shapes.iter())
+            .map(|(lit, &(r, c))| {
+                let v = lit.to_vec::<f32>()?;
+                anyhow::ensure!(v.len() == r * c, "output size {} != {r}x{c}", v.len());
+                Ok(Mat::from_vec(r, c, v))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT tests live in rust/tests/integration.rs (artifact-gated).
+}

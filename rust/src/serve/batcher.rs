@@ -1,0 +1,160 @@
+//! Request batching: collect up to `max_batch` requests or wait at most
+//! `max_wait`, whichever first — the standard dynamic-batching policy.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// A thread-safe FIFO with batch draining. `T` is the queued work item.
+pub struct Batcher<T> {
+    queue: Mutex<VecDeque<T>>,
+    signal: Condvar,
+    policy: BatchPolicy,
+    closed: Mutex<bool>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Batcher<T> {
+        Batcher {
+            queue: Mutex::new(VecDeque::new()),
+            signal: Condvar::new(),
+            policy,
+            closed: Mutex::new(false),
+        }
+    }
+
+    pub fn push(&self, item: T) {
+        self.queue.lock().unwrap().push_back(item);
+        self.signal.notify_one();
+    }
+
+    pub fn close(&self) {
+        *self.closed.lock().unwrap() = true;
+        self.signal.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        *self.closed.lock().unwrap()
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Block until at least one item is available (or closed), then drain up
+    /// to `max_batch` items, waiting at most `max_wait` to fill the batch.
+    /// Returns an empty vec only when closed and drained.
+    pub fn next_batch(&self) -> Vec<T> {
+        let mut q = self.queue.lock().unwrap();
+        while q.is_empty() {
+            if *self.closed.lock().unwrap() {
+                return Vec::new();
+            }
+            let (guard, _) = self.signal.wait_timeout(q, Duration::from_millis(50)).unwrap();
+            q = guard;
+        }
+        // First item arrived; give stragglers up to max_wait.
+        let deadline = Instant::now() + self.policy.max_wait;
+        while q.len() < self.policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, timeout) = self.signal.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let take = q.len().min(self.policy.max_batch);
+        q.drain(..take).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn drains_in_fifo_order_up_to_max_batch() {
+        let b: Batcher<u32> = Batcher::new(BatchPolicy {
+            max_batch: 3,
+            max_wait: Duration::from_millis(1),
+        });
+        for i in 0..5 {
+            b.push(i);
+        }
+        assert_eq!(b.next_batch(), vec![0, 1, 2]);
+        assert_eq!(b.next_batch(), vec![3, 4]);
+    }
+
+    #[test]
+    fn never_exceeds_max_batch_property() {
+        let b: Batcher<usize> = Batcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+        });
+        for i in 0..23 {
+            b.push(i);
+        }
+        let mut seen = Vec::new();
+        while !b.is_empty() {
+            let batch = b.next_batch();
+            assert!(batch.len() <= 4 && !batch.is_empty());
+            seen.extend(batch);
+        }
+        assert_eq!(seen, (0..23).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn close_unblocks_waiters() {
+        let b: Arc<Batcher<u32>> = Arc::new(Batcher::new(BatchPolicy::default()));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || b2.next_batch());
+        std::thread::sleep(Duration::from_millis(20));
+        b.close();
+        assert!(h.join().unwrap().is_empty());
+    }
+
+    #[test]
+    fn concurrent_producers_lose_nothing() {
+        let b: Arc<Batcher<usize>> = Arc::new(Batcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+        }));
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let b = b.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..25 {
+                    b.push(t * 100 + i);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut total = 0;
+        while !b.is_empty() {
+            total += b.next_batch().len();
+        }
+        assert_eq!(total, 100);
+    }
+}

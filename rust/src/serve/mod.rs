@@ -1,0 +1,13 @@
+//! Batched inference service over a (compressed) model.
+//!
+//! Request path is Rust-only: a TCP front-end accepts JSON-line requests,
+//! the [`batcher`] groups them under a max-batch/max-wait policy, and the
+//! worker decodes greedily over the in-memory model. Latency/throughput
+//! metrics come back per response and aggregated — the substrate for the
+//! serving comparison in `examples/serve_compressed.rs`.
+
+pub mod batcher;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use server::{serve_blocking, GenRequest, GenResponse};

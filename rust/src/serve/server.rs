@@ -1,0 +1,285 @@
+//! JSON-lines TCP inference server.
+//!
+//! Protocol (one JSON object per line):
+//!   → {"prompt": [1,2,3], "max_new": 16}
+//!   ← {"tokens": [...], "latency_ms": 1.8, "batch": 3}
+//!   → {"cmd": "stats"}   ← aggregated metrics
+//!   → {"cmd": "shutdown"}
+//!
+//! Thread-per-connection front-end feeds the shared [`Batcher`]; one worker
+//! thread drains batches and decodes. Everything std-only (offline env —
+//! no tokio), which is fine at this scale: the model forward dominates.
+
+use super::batcher::{BatchPolicy, Batcher};
+use crate::model::Model;
+use crate::util::json::Json;
+use crate::util::Timer;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub prompt: Vec<u16>,
+    pub max_new: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub tokens: Vec<u16>,
+    pub latency_ms: f64,
+    pub batch: usize,
+}
+
+struct Job {
+    req: GenRequest,
+    enqueued: Timer,
+    reply: mpsc::Sender<GenResponse>,
+}
+
+/// Aggregated serving metrics.
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub tokens_out: AtomicU64,
+    pub total_latency_us: AtomicU64,
+    pub batches: AtomicU64,
+}
+
+impl Metrics {
+    pub fn to_json(&self) -> Json {
+        let reqs = self.requests.load(Ordering::Relaxed).max(1);
+        let mut j = Json::obj();
+        j.set("requests", (self.requests.load(Ordering::Relaxed) as f64).into())
+            .set("tokens_out", (self.tokens_out.load(Ordering::Relaxed) as f64).into())
+            .set("batches", (self.batches.load(Ordering::Relaxed) as f64).into())
+            .set(
+                "mean_latency_ms",
+                (self.total_latency_us.load(Ordering::Relaxed) as f64 / reqs as f64 / 1e3).into(),
+            );
+        j
+    }
+}
+
+/// Run the server until a shutdown command. Returns the bound address
+/// through `on_ready` (port 0 = ephemeral).
+pub fn serve_blocking(
+    model: Arc<Model>,
+    addr: &str,
+    policy: BatchPolicy,
+    on_ready: impl FnOnce(std::net::SocketAddr),
+) -> anyhow::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    on_ready(listener.local_addr()?);
+
+    let batcher: Arc<Batcher<Job>> = Arc::new(Batcher::new(policy));
+    let metrics = Arc::new(Metrics::default());
+    let shutdown = Arc::new(AtomicBool::new(false));
+
+    // Worker: drain batches, decode, reply.
+    let worker = {
+        let batcher = batcher.clone();
+        let metrics = metrics.clone();
+        let model = model.clone();
+        std::thread::spawn(move || loop {
+            let batch = batcher.next_batch();
+            if batch.is_empty() {
+                break; // closed + drained
+            }
+            let bsize = batch.len();
+            metrics.batches.fetch_add(1, Ordering::Relaxed);
+            for job in batch {
+                let out = model.greedy_decode(&job.req.prompt, job.req.max_new);
+                let latency = job.enqueued.secs() * 1e3;
+                metrics.requests.fetch_add(1, Ordering::Relaxed);
+                metrics.tokens_out.fetch_add(out.len() as u64, Ordering::Relaxed);
+                metrics
+                    .total_latency_us
+                    .fetch_add((latency * 1e3) as u64, Ordering::Relaxed);
+                let _ = job.reply.send(GenResponse { tokens: out, latency_ms: latency, batch: bsize });
+            }
+        })
+    };
+
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !shutdown.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let batcher = batcher.clone();
+                let metrics = metrics.clone();
+                let shutdown = shutdown.clone();
+                conns.push(std::thread::spawn(move || {
+                    let _ = handle_conn(stream, &batcher, &metrics, &shutdown);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            Err(_) => break,
+        }
+    }
+    batcher.close();
+    for c in conns {
+        let _ = c.join();
+    }
+    let _ = worker.join();
+    Ok(())
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    batcher: &Batcher<Job>,
+    metrics: &Metrics,
+    shutdown: &AtomicBool,
+) -> anyhow::Result<()> {
+    stream.set_nonblocking(false)?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(&line).map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
+        if let Some(cmd) = j.get("cmd").and_then(Json::as_str) {
+            match cmd {
+                "stats" => {
+                    writeln!(writer, "{}", metrics.to_json().to_string())?;
+                }
+                "shutdown" => {
+                    shutdown.store(true, Ordering::Relaxed);
+                    writeln!(writer, "{{\"ok\":true}}")?;
+                    break;
+                }
+                _ => writeln!(writer, "{{\"error\":\"unknown cmd\"}}")?,
+            }
+            continue;
+        }
+        let prompt: Vec<u16> = j
+            .get("prompt")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(|x| x.as_usize().map(|v| v as u16)).collect())
+            .unwrap_or_default();
+        let max_new = j.get("max_new").and_then(Json::as_usize).unwrap_or(16);
+        let (tx, rx) = mpsc::channel();
+        batcher.push(Job { req: GenRequest { prompt, max_new }, enqueued: Timer::start(), reply: tx });
+        let resp = rx.recv()?;
+        let mut out = Json::obj();
+        out.set("tokens", Json::Arr(resp.tokens.iter().map(|&t| Json::Num(t as f64)).collect()))
+            .set("latency_ms", resp.latency_ms.into())
+            .set("batch", resp.batch.into());
+        writeln!(writer, "{}", out.to_string())?;
+    }
+    Ok(())
+}
+
+/// Simple blocking client used by tests and the serve example.
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> anyhow::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
+    }
+
+    pub fn request(&mut self, prompt: &[u16], max_new: usize) -> anyhow::Result<GenResponse> {
+        let mut j = Json::obj();
+        j.set("prompt", Json::Arr(prompt.iter().map(|&t| Json::Num(t as f64)).collect()))
+            .set("max_new", max_new.into());
+        writeln!(self.stream, "{}", j.to_string())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let r = Json::parse(&line).map_err(|e| anyhow::anyhow!("bad response: {e}"))?;
+        Ok(GenResponse {
+            tokens: r
+                .get("tokens")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(|x| x.as_usize().map(|v| v as u16)).collect())
+                .unwrap_or_default(),
+            latency_ms: r.get("latency_ms").and_then(Json::as_f64).unwrap_or(0.0),
+            batch: r.get("batch").and_then(Json::as_usize).unwrap_or(0),
+        })
+    }
+
+    pub fn stats(&mut self) -> anyhow::Result<Json> {
+        writeln!(self.stream, "{{\"cmd\":\"stats\"}}")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(&line).map_err(|e| anyhow::anyhow!("bad stats: {e}"))
+    }
+
+    pub fn shutdown(&mut self) -> anyhow::Result<()> {
+        writeln!(self.stream, "{{\"cmd\":\"shutdown\"}}")?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::util::Rng;
+
+    #[test]
+    fn end_to_end_serve_and_shutdown() {
+        let model = Arc::new(Model::random(&ModelConfig::test_tiny(), &mut Rng::new(1)));
+        let (addr_tx, addr_rx) = mpsc::channel();
+        let m2 = model.clone();
+        let server = std::thread::spawn(move || {
+            serve_blocking(m2, "127.0.0.1:0", BatchPolicy::default(), |a| {
+                addr_tx.send(a).unwrap();
+            })
+            .unwrap();
+        });
+        let addr = addr_rx.recv().unwrap();
+        let mut client = Client::connect(addr).unwrap();
+        let r = client.request(&[1, 2, 3], 4).unwrap();
+        assert_eq!(r.tokens.len(), 4);
+        assert!(r.latency_ms >= 0.0);
+        // deterministic: same prompt → same continuation
+        let r2 = client.request(&[1, 2, 3], 4).unwrap();
+        assert_eq!(r.tokens, r2.tokens);
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.get("requests").and_then(Json::as_usize), Some(2));
+        client.shutdown().unwrap();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn concurrent_clients_are_all_served() {
+        let model = Arc::new(Model::random(&ModelConfig::test_tiny(), &mut Rng::new(2)));
+        let (addr_tx, addr_rx) = mpsc::channel();
+        let m2 = model.clone();
+        let server = std::thread::spawn(move || {
+            serve_blocking(
+                m2,
+                "127.0.0.1:0",
+                BatchPolicy { max_batch: 4, max_wait: std::time::Duration::from_millis(3) },
+                |a| {
+                    addr_tx.send(a).unwrap();
+                },
+            )
+            .unwrap();
+        });
+        let addr = addr_rx.recv().unwrap();
+        let mut handles = Vec::new();
+        for i in 0..6u16 {
+            handles.push(std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                c.request(&[i, i + 1], 3).unwrap().tokens.len()
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 3);
+        }
+        let mut c = Client::connect(addr).unwrap();
+        c.shutdown().unwrap();
+        server.join().unwrap();
+    }
+}

@@ -1,0 +1,15 @@
+//! Small self-contained utilities.
+//!
+//! This environment is offline: only the `xla` crate's vendored dependency
+//! closure is available, so the usual ecosystem crates (rand, rayon, serde,
+//! clap, criterion, proptest) are replaced by the minimal in-tree versions
+//! below. Everything here is deterministic and dependency-free.
+
+pub mod json;
+pub mod parallel;
+pub mod prop;
+pub mod rng;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Timer;

@@ -1,0 +1,149 @@
+//! Minimal data-parallel helpers over `std::thread::scope` — the in-tree
+//! replacement for rayon (offline env). Used by the blocked GEMM and by the
+//! coordinator's layer-parallel compression pipeline.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use: `COMPOT_THREADS` env var, else the
+/// available parallelism, capped at 16.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("COMPOT_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// Run `f(i)` for every `i in 0..n`, work-stealing over an atomic counter.
+/// `f` must be Sync; use interior mutability / disjoint outputs.
+pub fn parallel_for<F>(n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = num_threads().min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = counter.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Map `f` over `0..n` in parallel, collecting results in index order.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    parallel_for(n, |i| {
+        let v = f(i);
+        *slots[i].lock().unwrap() = Some(v);
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("parallel_map slot not filled"))
+        .collect()
+}
+
+/// Split `out` into `chunks` contiguous chunks of (almost) equal length and
+/// run `f(chunk_index, start_offset, chunk)` on each in parallel. This is the
+/// mutable-output primitive GEMM uses to parallelize over row blocks.
+pub fn parallel_chunks_mut<T, F>(out: &mut [T], chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0);
+    let n_chunks = out.len().div_ceil(chunk_len);
+    if n_chunks <= 1 || num_threads() <= 1 {
+        f(0, 0, out);
+        return;
+    }
+    // Pre-split into disjoint &mut chunks, then hand them out via a shared
+    // work queue (LIFO order — irrelevant, chunks are independent).
+    let mut work: Vec<(usize, usize, &mut [T])> = Vec::with_capacity(n_chunks);
+    let mut rest = out;
+    let (mut off, mut idx) = (0usize, 0usize);
+    while !rest.is_empty() {
+        let take = chunk_len.min(rest.len());
+        let (head, tail) = rest.split_at_mut(take);
+        work.push((idx, off, head));
+        off += take;
+        idx += 1;
+        rest = tail;
+    }
+    let work = Mutex::new(work);
+    let threads = num_threads().min(n_chunks);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let item = work.lock().unwrap().pop();
+                match item {
+                    Some((idx, off, chunk)) => f(idx, off, chunk),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_visits_every_index_once() {
+        let hits: Vec<AtomicUsize> = (0..257).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(257, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let v = parallel_map(100, |i| i * i);
+        assert_eq!(v, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_chunks_cover_disjointly() {
+        let mut data = vec![0u64; 1003];
+        parallel_chunks_mut(&mut data, 100, |_idx, off, chunk| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = (off + i) as u64;
+            }
+        });
+        for (i, x) in data.iter().enumerate() {
+            assert_eq!(*x, i as u64);
+        }
+    }
+
+    #[test]
+    fn parallel_sum_matches_serial() {
+        let total = AtomicU64::new(0);
+        parallel_for(1000, |i| {
+            total.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 999 * 1000 / 2);
+    }
+}

@@ -1,0 +1,61 @@
+//! Tiny property-based testing helper (in-tree replacement for proptest,
+//! which is unavailable offline). `check` runs a property over `n` random
+//! cases drawn from a seeded [`Rng`]; on failure it reports the case index
+//! and seed so the exact failing input can be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Run `prop(&mut rng, case_index)` for `cases` cases. The property should
+/// panic (e.g. via assert!) on violation. A fixed `seed` makes runs
+/// reproducible; each case gets an independent forked stream, so failures
+/// can be replayed in isolation with `replay`.
+pub fn check<P: Fn(&mut Rng, usize)>(seed: u64, cases: usize, prop: P) {
+    for case in 0..cases {
+        let mut rng = case_rng(seed, case);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, case);
+        }));
+        if let Err(e) = result {
+            eprintln!("property failed: seed={seed} case={case} (replay with prop::replay)");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// The rng used for case `case` of `check(seed, ..)` — for failure replay.
+pub fn case_rng(seed: u64, case: usize) -> Rng {
+    Rng::new(seed ^ (case as u64).wrapping_mul(0xA24BAED4963EE407))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        check(1, 50, |rng, _| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn fails_false_property() {
+        check(2, 50, |rng, _| {
+            assert!(rng.f64() < 0.5, "eventually draws >= 0.5");
+        });
+    }
+
+    #[test]
+    fn replay_reproduces_case_stream() {
+        let seen = std::sync::Mutex::new(Vec::new());
+        check(3, 5, |rng, case| {
+            if case == 3 {
+                seen.lock().unwrap().push(rng.next_u64());
+            }
+        });
+        let mut r = case_rng(3, 3);
+        assert_eq!(seen.lock().unwrap()[0], r.next_u64());
+    }
+}

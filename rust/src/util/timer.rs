@@ -1,0 +1,118 @@
+//! Wall-clock timing + a tiny bench statistics helper (replacement for
+//! criterion's measurement core; the criterion crate is unavailable offline).
+
+use std::time::Instant;
+
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+/// Summary statistics of repeated timed runs.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub stddev_s: f64,
+}
+
+impl BenchStats {
+    pub fn format(&self, name: &str) -> String {
+        format!(
+            "{name:<44} {:>12} {:>12} {:>12}  (n={}, sd={})",
+            humanize(self.median_s),
+            humanize(self.mean_s),
+            humanize(self.min_s),
+            self.iters,
+            humanize(self.stddev_s),
+        )
+    }
+}
+
+pub fn humanize(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+/// Run `f` with warmup, then measure until `min_time_s` total or `max_iters`,
+/// whichever first. Returns per-iteration statistics.
+pub fn bench<F: FnMut()>(mut f: F, min_time_s: f64, max_iters: usize) -> BenchStats {
+    // Warmup: at least one run, up to ~10% of budget.
+    let warm = Timer::start();
+    f();
+    while warm.secs() < min_time_s * 0.1 {
+        f();
+    }
+    let mut samples = Vec::new();
+    let total = Timer::start();
+    while samples.len() < max_iters && (total.secs() < min_time_s || samples.len() < 3) {
+        let t = Timer::start();
+        f();
+        samples.push(t.secs());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    BenchStats {
+        iters: n,
+        mean_s: mean,
+        median_s: samples[n / 2],
+        min_s: samples[0],
+        max_s: samples[n - 1],
+        stddev_s: var.sqrt(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let mut x = 0u64;
+        let st = bench(
+            || {
+                for i in 0..1000 {
+                    x = x.wrapping_add(i);
+                }
+            },
+            0.01,
+            1000,
+        );
+        assert!(st.iters >= 3);
+        assert!(st.min_s <= st.median_s && st.median_s <= st.max_s);
+        assert!(st.mean_s > 0.0);
+    }
+
+    #[test]
+    fn humanize_units() {
+        assert!(humanize(2e-9).ends_with("ns"));
+        assert!(humanize(2e-6).ends_with("µs"));
+        assert!(humanize(2e-3).ends_with("ms"));
+        assert!(humanize(2.0).ends_with("s"));
+    }
+}

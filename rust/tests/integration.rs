@@ -1,0 +1,201 @@
+//! Artifact-gated integration tests: exercise the full three-layer stack
+//! (JAX/Pallas-built HLO artifacts + pretrained weights → PJRT runtime →
+//! Rust pipeline). Every test skips cleanly when `make artifacts` has not
+//! been run, so `cargo test` stays green in a fresh checkout.
+
+use compot::compress::compot::{factorize, CompotConfig, DictInit};
+use compot::coordinator::pipeline::{calibrate, compress_model, Method, PipelineConfig};
+use compot::data::corpus::corpus_split;
+use compot::eval::perplexity::perplexity;
+use compot::linalg::Mat;
+use compot::model::Model;
+use compot::runtime::compot_exec::CompotExec;
+use compot::runtime::{artifacts::artifacts_dir, Manifest, PjrtEngine};
+use compot::util::json::Json;
+use compot::util::Rng;
+
+fn manifest() -> Option<Manifest> {
+    Manifest::load(&artifacts_dir()).ok()
+}
+
+fn skip(name: &str) {
+    eprintln!("skipping {name}: run `make artifacts` first");
+}
+
+#[test]
+fn pjrt_loads_and_runs_matmul_demo() {
+    let Some(man) = manifest() else { return skip("pjrt_matmul") };
+    let Some(entry) = man.by_name("matmul_demo") else { return skip("pjrt_matmul") };
+    let engine = PjrtEngine::cpu().unwrap();
+    let exe = engine.load(&entry.path).unwrap();
+    let mut rng = Rng::new(1);
+    let a = Mat::randn(&mut rng, entry.inputs[0].0, entry.inputs[0].1, 1.0);
+    let b = Mat::randn(&mut rng, entry.inputs[1].0, entry.inputs[1].1, 1.0);
+    let out = engine.run(&exe, &[&a, &b], &entry.outputs).unwrap();
+    let expect = compot::linalg::gemm::matmul(&a, &b);
+    assert!(
+        out[0].rel_err(&expect) < 1e-4,
+        "XLA matmul disagrees with Rust GEMM: {}",
+        out[0].rel_err(&expect)
+    );
+}
+
+#[test]
+fn pjrt_compot_iter_matches_rust_engine() {
+    // The heart of the three-layer story: one alternating iteration through
+    // the AOT artifact (Pallas GEMM + hard-threshold + Newton–Schulz) must
+    // match the pure-Rust engine (exact Jacobi-SVD Procrustes) closely.
+    let Some(man) = manifest() else { return skip("pjrt_compot_iter") };
+    let Some(entry) = man.entries.iter().find(|e| e.kind == "compot_iter") else {
+        return skip("pjrt_compot_iter");
+    };
+    let (m, n, k, s) = (entry.m, entry.n, entry.k, entry.s);
+    let engine = PjrtEngine::cpu().unwrap();
+    let exec = CompotExec { engine: &engine, manifest: &man };
+
+    let mut rng = Rng::new(2);
+    let wt = Mat::randn(&mut rng, m, n, 1.0);
+    // Same SVD initialization on both sides.
+    let decomp = compot::linalg::svd::svd_thin(&wt);
+    let d0 = decomp.u.cols_range(0, k);
+
+    let (s_xla, d_xla) = exec.iter_once(&wt, &d0, k, s).unwrap();
+
+    // Rust side: S = H_s(DᵀW̃), M = W̃Sᵀ, D = procrustes(M).
+    let z_t = compot::linalg::gemm::matmul(&wt.transpose(), &d0);
+    let s_sparse = compot::compress::sparse::ColumnSparse::hard_threshold_zt(&z_t, s);
+    let s_rust = s_sparse.to_dense();
+    assert!(
+        s_xla.rel_err(&s_rust) < 1e-3,
+        "sparse codes disagree: {}",
+        s_xla.rel_err(&s_rust)
+    );
+    let mt = s_sparse.mt_product(&wt.transpose());
+    let d_rust = compot::linalg::svd::procrustes(&mt.transpose());
+    // Newton–Schulz vs Jacobi SVD: same orthogonal factor up to numerics.
+    assert!(
+        d_xla.rel_err(&d_rust) < 1e-2,
+        "Procrustes factors disagree: {}",
+        d_xla.rel_err(&d_rust)
+    );
+    assert!(d_xla.ortho_defect() < 1e-2);
+}
+
+#[test]
+fn pjrt_full_factorize_reaches_rust_quality() {
+    let Some(man) = manifest() else { return skip("pjrt_factorize") };
+    let Some(entry) = man.entries.iter().find(|e| e.kind == "compot_iter") else {
+        return skip("pjrt_factorize");
+    };
+    let (m, n, k, s) = (entry.m, entry.n, entry.k, entry.s);
+    let engine = PjrtEngine::cpu().unwrap();
+    let exec = CompotExec { engine: &engine, manifest: &man };
+    let mut rng = Rng::new(3);
+    let wt = Mat::randn(&mut rng, m, n, 1.0);
+
+    let (d_x, s_x) = exec.factorize(&wt, k, s, 5).unwrap();
+    let err_xla = wt.sub(&s_x.apply_after(&d_x)).fro_norm();
+
+    let cfg = CompotConfig { iters: 5, init: DictInit::Svd, ..Default::default() };
+    let res = factorize(&wt, k, s, &cfg, &mut rng);
+    let err_rust = wt.sub(&res.s.apply_after(&res.d)).fro_norm();
+    assert!(
+        (err_xla - err_rust).abs() / err_rust < 0.05,
+        "engines reach different quality: xla {err_xla} vs rust {err_rust}"
+    );
+}
+
+#[test]
+fn jax_rust_forward_parity_on_pretrained_model() {
+    let dir = artifacts_dir();
+    let parity_path = dir.join("parity.json");
+    if !parity_path.exists() {
+        return skip("parity");
+    }
+    let j = Json::parse(&std::fs::read_to_string(&parity_path).unwrap()).unwrap();
+    let name = j.get("model").and_then(Json::as_str).unwrap();
+    let model = Model::load(&dir.join(format!("{name}.bin"))).unwrap();
+    let tokens: Vec<u16> = j
+        .get("tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_usize().unwrap() as u16)
+        .collect();
+    let expect: Vec<f64> = j
+        .get("logits_last")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap())
+        .collect();
+    let logits = model.forward(&tokens);
+    let last = logits.row(logits.rows() - 1);
+    let mut max_err = 0f64;
+    let scale = expect.iter().fold(0.0f64, |m, &x| m.max(x.abs())).max(1.0);
+    for (a, b) in last.iter().zip(expect.iter()) {
+        max_err = max_err.max((*a as f64 - b).abs());
+    }
+    assert!(
+        max_err / scale < 1e-3,
+        "JAX↔Rust forward parity broke: max_err {max_err} (scale {scale})"
+    );
+}
+
+#[test]
+fn pretrained_model_beats_chance_and_compresses() {
+    let dir = artifacts_dir();
+    let path = dir.join("llama-micro.bin");
+    if !path.exists() {
+        return skip("pretrained");
+    }
+    let model = Model::load(&path).unwrap();
+    let wiki = corpus_split(&dir, "wiki", model.cfg.vocab, 8, 128, 5);
+    let ppl = perplexity(&model, &wiki);
+    assert!(
+        ppl < 60.0,
+        "pretrained model should be far below uniform (256): ppl {ppl}"
+    );
+
+    // Compress at CR 0.2 — perplexity should degrade but stay far from
+    // chance, and COMPOT should not lose to SVD-LLM (the paper's headline).
+    let calib = corpus_split(&dir, "train", model.cfg.vocab, 8, 128, 6);
+    let cap = calibrate(&model, &calib);
+    let run = |method: Method| {
+        let (m, r) =
+            compress_model(&model, &cap, &PipelineConfig::new(method, 0.2, false)).unwrap();
+        (perplexity(&m, &wiki), r.model_cr)
+    };
+    let (ppl_compot, cr1) = run(Method::Compot(CompotConfig::default()));
+    let (ppl_svdllm, cr2) = run(Method::SvdLlm);
+    assert!(cr1 >= 0.2 - 1e-9 && cr2 >= 0.2 - 1e-9);
+    assert!(ppl_compot < 256.0 && ppl_compot > ppl * 0.9);
+    assert!(
+        ppl_compot < ppl_svdllm * 1.1,
+        "COMPOT ({ppl_compot:.1}) should be ≤ SVD-LLM ({ppl_svdllm:.1}) at matched CR"
+    );
+}
+
+#[test]
+fn whitening_stats_are_sane_on_trained_model() {
+    let dir = artifacts_dir();
+    let path = dir.join("qwen-nano.bin");
+    if !path.exists() {
+        return skip("whitening_stats");
+    }
+    let model = Model::load(&path).unwrap();
+    let calib = corpus_split(&dir, "train", model.cfg.vocab, 4, 64, 7);
+    let cap = calibrate(&model, &calib);
+    assert_eq!(cap.stats.len(), model.cfg.n_layers * 7);
+    for ((layer, kind), st) in &cap.stats {
+        assert!(st.count > 0, "layer {layer} {kind:?}");
+        let rms = st.feature_rms();
+        assert!(rms.iter().all(|&r| r >= 0.0 && r.is_finite()));
+        let wh = compot::compress::whitening::Whitener::from_stats(st);
+        let w = Mat::randn(&mut Rng::new(8), st.dim(), 4, 1.0);
+        let back = wh.dewhiten(&wh.whiten(&w));
+        assert!(back.rel_err(&w) < 0.15, "layer {layer} {kind:?}: {}", back.rel_err(&w));
+    }
+}
