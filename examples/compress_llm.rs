@@ -1,4 +1,4 @@
-//! End-to-end driver (the repository's E2E validation, see EXPERIMENTS.md):
+//! End-to-end driver (the repository's E2E validation, see README.md):
 //! load the build-time-pretrained LM, calibrate on the shared synthetic
 //! corpus, run the full COMPOT pipeline (dynamic allocation) next to
 //! SVD-LLM and CoSpaDi at CR 0.2, and report perplexity + zero-shot
@@ -8,9 +8,7 @@
 //! Run after `make artifacts`:
 //!   cargo run --release --example compress_llm [preset] [cr]
 
-use compot::compress::compot::CompotConfig;
-use compot::compress::cospadi::CospadiConfig;
-use compot::coordinator::pipeline::Method;
+use compot::compress::MethodCall;
 use compot::eval::harness::{baseline_row, run_method, EvalSetup};
 use compot::model::Model;
 use compot::runtime::artifacts::artifacts_dir;
@@ -46,13 +44,13 @@ fn main() -> anyhow::Result<()> {
     );
 
     for (name, method, dynamic) in [
-        ("SVD-LLM", Method::SvdLlm, false),
-        ("CoSpaDi", Method::Cospadi(CospadiConfig::default()), false),
-        ("COMPOT-static", Method::Compot(CompotConfig::default()), false),
-        ("COMPOT", Method::Compot(CompotConfig::default()), true),
+        ("SVD-LLM", "svd-llm", false),
+        ("CoSpaDi", "cospadi", false),
+        ("COMPOT-static", "compot", false),
+        ("COMPOT", "compot", true),
     ] {
         let t = Timer::start();
-        let row = run_method(&model, &setup, method, cr, dynamic)?;
+        let row = run_method(&model, &setup, &MethodCall::new(method), cr, dynamic)?;
         println!(
             "{:<14} {:>6.2} {:>8.1} {:>9.2} {:>9.2} {:>8.1}s",
             name, row.model_cr, row.avg_acc, row.ppl_wiki, row.ppl_c4, t.secs()

@@ -6,21 +6,25 @@
 //! Run after `make artifacts`:
 //!   cargo run --release --example serve_compressed
 
-use compot::compress::compot::CompotConfig;
-use compot::coordinator::pipeline::{calibrate, compress_model, Method, PipelineConfig};
+use compot::compress::{CalibContext, MethodCall, StageConfig};
+use compot::coordinator::pipeline::compress_with;
 use compot::data::SynthLang;
 use compot::model::Model;
 use compot::runtime::artifacts::artifacts_dir;
 use compot::serve::server::Client;
 use compot::serve::{serve_blocking, BatchPolicy};
+use compot::util::json::Json;
 use compot::util::{Rng, Timer};
 use std::sync::{mpsc, Arc};
 
 fn drive(model: Arc<Model>, label: &str) -> anyhow::Result<(f64, f64)> {
     let (addr_tx, addr_rx) = mpsc::channel();
     let m2 = model.clone();
+    let label_owned = label.to_string();
     let server = std::thread::spawn(move || {
-        serve_blocking(m2, "127.0.0.1:0", BatchPolicy::default(), move |a| {
+        let mut info = Json::obj();
+        info.set("label", label_owned.as_str().into());
+        serve_blocking(m2, "127.0.0.1:0", BatchPolicy::default(), info, move |a| {
             addr_tx.send(a).unwrap();
         })
         .unwrap();
@@ -59,11 +63,12 @@ fn main() -> anyhow::Result<()> {
     println!("compressing at CR 0.4 (dynamic allocation)...");
     let lang = SynthLang::wiki(dense.cfg.vocab);
     let calib = lang.gen_batch(8, 96, &mut Rng::new(1));
-    let cap = calibrate(&dense, &calib);
-    let (compressed, report) = compress_model(
+    let ctx = CalibContext::build(&dense, &calib);
+    let (compressed, report) = compress_with(
         &dense,
-        &cap,
-        &PipelineConfig::new(Method::Compot(CompotConfig::default()), 0.4, true),
+        &ctx,
+        &MethodCall::new("compot"),
+        &StageConfig::new(0.4, true),
     )?;
     println!("achieved model CR {:.3} in {:.1}s\n", report.model_cr, report.wall_secs);
 
@@ -75,6 +80,6 @@ fn main() -> anyhow::Result<()> {
         tp_c / tp_d
     );
     println!("(storage CR is the paper's target; runtime effect depends on the");
-    println!(" sparse-apply path — see EXPERIMENTS.md section Perf.)");
+    println!(" sparse-apply path — see README.md.)");
     Ok(())
 }

@@ -1,0 +1,340 @@
+//! The model-level compression API.
+//!
+//! Every compression method — per-matrix factorizations, model-level
+//! allocators, structural pruning, and quantization — implements one trait,
+//! [`ModelCompressor`]: given a model, a [`CalibContext`], and a
+//! [`StageConfig`], produce a compressed model plus a [`CompressionReport`].
+//! The coordinator no longer dispatches over a closed method enum; methods
+//! register themselves by name in the [`crate::compress::registry`] and
+//! compose into [`crate::coordinator::plan::CompressionPlan`]s (e.g.
+//! factorization followed by PTQ, Table 7 / Eq. 25).
+//!
+//! Per-matrix methods (anything implementing [`Compressor`]) are lifted to
+//! the model level by the generic [`PerMatrix`] adapter, which owns the
+//! static/dynamic rank allocation (Algorithm 2) and the layer-parallel
+//! compression loop.
+
+use super::whitening::CalibStats;
+use super::{CompressedLayer, Compressor, LinearWeight};
+use crate::allocator::{allocate_global, AllocationConfig, Grouping, LayerAllocation, MatrixSpec};
+use crate::linalg::Mat;
+use crate::model::config::ProjKind;
+use crate::model::transformer::{Capture, Model, Stage};
+use crate::util::parallel::parallel_map;
+use crate::util::{Rng, Timer};
+
+/// Everything a compression stage may consume: the pristine model the run
+/// started from (composition stages account storage against it), the
+/// per-projection activation Grams captured on it, and the raw calibration
+/// sequences (structural methods like ReplaceMe re-run partial forwards).
+pub struct CalibContext<'a> {
+    pub original: &'a Model,
+    pub capture: Capture,
+    pub seqs: &'a [Vec<u16>],
+}
+
+impl<'a> CalibContext<'a> {
+    /// Run the calibration forward passes and capture activation statistics.
+    pub fn build(model: &'a Model, seqs: &'a [Vec<u16>]) -> CalibContext<'a> {
+        let mut capture = Capture::default();
+        for s in seqs {
+            model.forward_capture(s, &mut capture);
+        }
+        CalibContext { original: model, capture, seqs }
+    }
+
+    /// Wrap an already-computed capture (it must come from `model` over
+    /// `seqs`).
+    pub fn from_capture(model: &'a Model, capture: Capture, seqs: &'a [Vec<u16>]) -> CalibContext<'a> {
+        CalibContext { original: model, capture, seqs }
+    }
+
+    /// Calibration statistics for one projection.
+    pub fn stats(&self, layer: usize, proj: ProjKind) -> anyhow::Result<&CalibStats> {
+        self.capture
+            .stats
+            .get(&(layer, proj))
+            .ok_or_else(|| anyhow::anyhow!("no calibration stats for layer {layer} {proj:?}"))
+    }
+}
+
+/// Calibration stats are keyed by the *original* model's stage indices and
+/// feature dims; methods that consume them must refuse models whose stage
+/// list a structural stage (ReplaceMe) has already reshaped, instead of
+/// silently whitening with another layer's Gram.
+pub(crate) fn ensure_calibration_aligned(
+    method: &str,
+    model: &Model,
+    ctx: &CalibContext<'_>,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        model.stages.len() == ctx.original.stages.len(),
+        "{method}: model has {} stages but calibration was captured on {} — \
+         put structural stages (replaceme) after calibration-based ones in the plan",
+        model.stages.len(),
+        ctx.original.stages.len()
+    );
+    Ok(())
+}
+
+/// How per-matrix ratios are chosen for per-matrix methods.
+#[derive(Clone, Debug)]
+pub enum Allocation {
+    /// Uniform target CR on every projection (COMPOT† / Table 3 protocol).
+    Static,
+    /// Algorithm 2 (pooled SVs) with the given config.
+    Dynamic(AllocationConfig),
+}
+
+/// Per-stage knobs shared by every method: the storage target, how it is
+/// distributed over matrices (per-matrix methods only), and the RNG seed.
+#[derive(Clone, Debug)]
+pub struct StageConfig {
+    pub target_cr: f64,
+    pub allocation: Allocation,
+    pub seed: u64,
+}
+
+impl StageConfig {
+    pub fn new(target_cr: f64, dynamic: bool) -> StageConfig {
+        let allocation = if dynamic {
+            Allocation::Dynamic(AllocationConfig {
+                target_cr,
+                grouping: Grouping::AllGrouped,
+                ..Default::default()
+            })
+        } else {
+            Allocation::Static
+        };
+        StageConfig { target_cr, allocation, seed: 0xC0DE }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> StageConfig {
+        self.seed = seed;
+        self
+    }
+
+    pub fn is_dynamic(&self) -> bool {
+        matches!(self.allocation, Allocation::Dynamic(_))
+    }
+}
+
+/// Per-projection outcome.
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    pub layer: usize,
+    pub proj: ProjKind,
+    pub target_cr: f64,
+    pub achieved_cr: f64,
+    pub func_err: f64,
+    pub secs: f64,
+    pub dense: bool,
+}
+
+impl LayerReport {
+    /// Report for one compressed projection.
+    pub fn measured(
+        layer: usize,
+        proj: ProjKind,
+        target_cr: f64,
+        out: &CompressedLayer,
+        secs: f64,
+    ) -> LayerReport {
+        LayerReport {
+            layer,
+            proj,
+            target_cr,
+            achieved_cr: out.cr,
+            func_err: out.func_err.unwrap_or(f64::NAN),
+            secs,
+            dense: false,
+        }
+    }
+
+    /// Report for a projection the allocator left dense.
+    pub fn skipped_dense(layer: usize, proj: ProjKind) -> LayerReport {
+        LayerReport {
+            layer,
+            proj,
+            target_cr: 0.0,
+            achieved_cr: 0.0,
+            func_err: 0.0,
+            secs: 0.0,
+            dense: true,
+        }
+    }
+}
+
+/// Outcome of one compression stage. `model_cr` is always accounted against
+/// the *original* (pre-plan) model so stage reports compose (Eq. 25).
+#[derive(Clone, Debug)]
+pub struct CompressionReport {
+    pub method: String,
+    pub per_layer: Vec<LayerReport>,
+    /// Model-level CR over the compressible projections.
+    pub model_cr: f64,
+    pub wall_secs: f64,
+}
+
+impl CompressionReport {
+    /// Storage-budget check: achieved model CR within `eps` of the target.
+    pub fn achieved_cr_ok(&self, target_cr: f64, eps: f64) -> bool {
+        self.model_cr >= target_cr - eps
+    }
+}
+
+/// A model-level compression method: the single dispatch surface of the
+/// pipeline. Implementations live next to their math in `compress::*` and
+/// register a constructor in [`crate::compress::registry::MethodRegistry`].
+pub trait ModelCompressor: Sync {
+    /// Display name used in reports and tables.
+    fn name(&self) -> String;
+
+    /// Compress `model`. `ctx` carries calibration for the *original* model
+    /// of the run; `cfg` the storage target and allocation policy. The
+    /// returned report accounts storage against `ctx.original`.
+    fn compress(
+        &self,
+        model: &Model,
+        ctx: &CalibContext<'_>,
+        cfg: &StageConfig,
+    ) -> anyhow::Result<(Model, CompressionReport)>;
+}
+
+/// The (layer, projection, weight) job list of a model.
+pub(crate) fn job_list(model: &Model) -> Vec<(usize, ProjKind, Mat)> {
+    let mut jobs = Vec::new();
+    for (i, b) in model.blocks() {
+        for p in ProjKind::DECODER_SET {
+            jobs.push((i, p, b.proj(p).to_dense()));
+        }
+    }
+    jobs
+}
+
+pub(crate) fn set_proj(model: &mut Model, layer: usize, proj: ProjKind, w: LinearWeight) {
+    if let Stage::Block(b) = &mut model.stages[layer] {
+        *b.proj_mut(proj) = w;
+    }
+}
+
+/// Model CR from the per-layer reports: achieved per-matrix CRs weighted by
+/// the dense storage of each job (value-level methods like quantization are
+/// invisible to the assembled model's `storage_bits`, so reconstruct from
+/// the reports).
+pub(crate) fn model_cr_from_reports(
+    reports: &[LayerReport],
+    jobs: &[(usize, ProjKind, Mat)],
+) -> f64 {
+    let mut used = 0.0f64;
+    let mut total = 0.0f64;
+    for (r, (_, _, w)) in reports.iter().zip(jobs.iter()) {
+        let dense_bits = (16 * w.rows() * w.cols()) as f64;
+        total += dense_bits;
+        used += (1.0 - r.achieved_cr) * dense_bits;
+    }
+    if total == 0.0 {
+        0.0
+    } else {
+        1.0 - used / total
+    }
+}
+
+/// Lifts a per-matrix [`Compressor`] to a [`ModelCompressor`]: allocate
+/// per-matrix CRs (uniform or Algorithm 2), compress every (block,
+/// projection) job layer-parallel with deterministic per-job RNG streams,
+/// and assemble the compressed model.
+pub struct PerMatrix<C: Compressor> {
+    display: &'static str,
+    pub inner: C,
+}
+
+impl<C: Compressor> PerMatrix<C> {
+    pub fn new(display: &'static str, inner: C) -> PerMatrix<C> {
+        PerMatrix { display, inner }
+    }
+}
+
+fn allocate(jobs: &[(usize, ProjKind, Mat)], cfg: &StageConfig) -> Vec<LayerAllocation> {
+    match &cfg.allocation {
+        Allocation::Static => jobs
+            .iter()
+            .map(|_| LayerAllocation { cr: cfg.target_cr, rank: 0, dense: false })
+            .collect(),
+        Allocation::Dynamic(acfg) => {
+            let specs: Vec<MatrixSpec> = parallel_map(jobs.len(), |i| {
+                MatrixSpec::from_weight(&jobs[i].2, jobs[i].1.group())
+            });
+            let mut acfg = *acfg;
+            acfg.target_cr = cfg.target_cr;
+            allocate_global(&specs, &acfg)
+        }
+    }
+}
+
+impl<C: Compressor> ModelCompressor for PerMatrix<C> {
+    fn name(&self) -> String {
+        self.display.to_string()
+    }
+
+    fn compress(
+        &self,
+        model: &Model,
+        ctx: &CalibContext<'_>,
+        cfg: &StageConfig,
+    ) -> anyhow::Result<(Model, CompressionReport)> {
+        ensure_calibration_aligned(self.display, model, ctx)?;
+        let jobs = job_list(model);
+        let allocs = allocate(&jobs, cfg);
+        let results = parallel_map(jobs.len(), |i| {
+            let (layer, proj, ref w) = jobs[i];
+            let alloc = allocs[i];
+            if alloc.dense || alloc.cr <= 0.0 {
+                return Ok::<_, String>(None);
+            }
+            let stats = ctx
+                .capture
+                .stats
+                .get(&(layer, proj))
+                .ok_or_else(|| format!("no calibration stats for layer {layer} {proj:?}"))?;
+            if stats.dim() != w.rows() {
+                return Err(format!(
+                    "layer {layer} {proj:?}: calibration dim {} does not match weight rows {} \
+                     (was the model structurally changed after calibration?)",
+                    stats.dim(),
+                    w.rows()
+                ));
+            }
+            let mut rng = Rng::new(cfg.seed ^ ((layer as u64) << 32) ^ proj as u64);
+            let t = Timer::start();
+            let out = self
+                .inner
+                .compress(w, stats, alloc.cr, &mut rng)
+                .map_err(|e| format!("layer {layer} {proj:?}: {e}"))?;
+            Ok(Some((t.secs(), out)))
+        });
+
+        let mut compressed = model.clone();
+        let mut reports: Vec<LayerReport> = Vec::new();
+        for (i, res) in results.into_iter().enumerate() {
+            let (layer, proj, _) = jobs[i];
+            match res.map_err(|e| anyhow::anyhow!(e))? {
+                Some((secs, out)) => {
+                    reports.push(LayerReport::measured(layer, proj, allocs[i].cr, &out, secs));
+                    set_proj(&mut compressed, layer, proj, out.weight);
+                }
+                None => reports.push(LayerReport::skipped_dense(layer, proj)),
+            }
+        }
+        let model_cr = model_cr_from_reports(&reports, &jobs);
+        Ok((
+            compressed,
+            CompressionReport {
+                method: self.name(),
+                per_layer: reports,
+                model_cr,
+                wall_secs: 0.0,
+            },
+        ))
+    }
+}

@@ -203,6 +203,40 @@ impl Compressor for Compot {
     }
 }
 
+/// Registry entry: `compot` with options `iters`, `ks_ratio`, `init`
+/// (svd|rand), `tol` (early stop, Appendix A.7) and `whiten`.
+pub fn registry_entry() -> crate::compress::registry::MethodEntry {
+    crate::compress::registry::MethodEntry {
+        name: "compot",
+        aliases: &[],
+        about: "COMPOT: whitened orthogonal-dictionary sparse factorization (Alg. 1)",
+        defaults: &[],
+        build: |o| {
+            let mut cfg = CompotConfig::default();
+            if let Some(v) = o.get_f64("ks_ratio")? {
+                cfg.ks_ratio = v;
+            }
+            if let Some(v) = o.get_usize("iters")? {
+                cfg.iters = v;
+            }
+            if let Some(v) = o.get_str("init") {
+                cfg.init = match v {
+                    "svd" => DictInit::Svd,
+                    "rand" | "random" => DictInit::RandomColumns,
+                    other => anyhow::bail!("unknown init '{other}' (want svd|rand)"),
+                };
+            }
+            if let Some(v) = o.get_f64("tol")? {
+                cfg.early_stop_tol = Some(v);
+            }
+            if let Some(v) = o.get_bool("whiten")? {
+                cfg.whiten = v;
+            }
+            Ok(Box::new(crate::compress::PerMatrix::new("COMPOT", Compot { cfg })))
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

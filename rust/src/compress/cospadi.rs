@@ -325,6 +325,33 @@ impl Compressor for Cospadi {
     }
 }
 
+/// Registry entry: `cospadi` with options `iters`, `power_iters`,
+/// `ks_ratio`, `whiten`.
+pub fn registry_entry() -> crate::compress::registry::MethodEntry {
+    crate::compress::registry::MethodEntry {
+        name: "cospadi",
+        aliases: &[],
+        about: "CoSpaDi: K-SVD dictionary learning + OMP sparse coding",
+        defaults: &[],
+        build: |o| {
+            let mut cfg = CospadiConfig::default();
+            if let Some(v) = o.get_f64("ks_ratio")? {
+                cfg.ks_ratio = v;
+            }
+            if let Some(v) = o.get_usize("iters")? {
+                cfg.iters = v;
+            }
+            if let Some(v) = o.get_usize("power_iters")? {
+                cfg.power_iters = v;
+            }
+            if let Some(v) = o.get_bool("whiten")? {
+                cfg.whiten = v;
+            }
+            Ok(Box::new(crate::compress::PerMatrix::new("CoSpaDi", Cospadi { cfg })))
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -14,10 +14,12 @@
 //! Table 19: remapping re-densifies factors (possibly CR_fact < 0) and
 //! recovers the budget through b-bit quantization.
 
+use super::api::{self, CalibContext, CompressionReport, LayerReport, ModelCompressor, StageConfig};
 use super::svd_llm::whitened_truncate;
 use super::whitening::{CalibStats, Whitener};
 use super::{CompressedLayer, LinearWeight};
 use crate::linalg::{svd, Mat};
+use crate::model::transformer::Model;
 
 /// Per-matrix view of the allocation problem.
 pub struct DobiLayer<'a> {
@@ -101,6 +103,68 @@ pub fn compress_all(layers: &[DobiLayer<'_>], alloc: &DobiAllocation) -> Vec<Com
 /// `cr_target = 1 − (1−cr_fact)·b/16  ⇒  cr_fact = 1 − (1−cr_target)·16/b`.
 pub fn remapping_fact_cr(cr_target: f64, bits: u32) -> f64 {
     1.0 - (1.0 - cr_target) * 16.0 / bits as f64
+}
+
+/// Model-level Dobi-SVD*: loss-waterfilled rank allocation over all
+/// projections, then whitened truncation (own allocator; the `StageConfig`
+/// allocation policy does not apply).
+pub struct DobiSvd;
+
+impl ModelCompressor for DobiSvd {
+    fn name(&self) -> String {
+        "Dobi-SVD*".to_string()
+    }
+
+    fn compress(
+        &self,
+        model: &Model,
+        ctx: &CalibContext<'_>,
+        cfg: &StageConfig,
+    ) -> anyhow::Result<(Model, CompressionReport)> {
+        api::ensure_calibration_aligned("Dobi-SVD*", model, ctx)?;
+        let jobs = api::job_list(model);
+        let mut layers = Vec::with_capacity(jobs.len());
+        for (l, p, w) in &jobs {
+            let stats = ctx.stats(*l, *p)?;
+            anyhow::ensure!(
+                stats.dim() == w.rows(),
+                "Dobi-SVD*: layer {l} {p:?} calibration dim {} != weight rows {}",
+                stats.dim(),
+                w.rows()
+            );
+            layers.push(DobiLayer { w, stats });
+        }
+        let alloc = allocate(&layers, cfg.target_cr);
+        let outs = compress_all(&layers, &alloc);
+
+        let mut compressed = model.clone();
+        let mut reports = Vec::with_capacity(jobs.len());
+        for (&(layer, proj, _), out) in jobs.iter().zip(outs.into_iter()) {
+            reports.push(LayerReport::measured(layer, proj, cfg.target_cr, &out, 0.0));
+            api::set_proj(&mut compressed, layer, proj, out.weight);
+        }
+        let model_cr = api::model_cr_from_reports(&reports, &jobs);
+        Ok((
+            compressed,
+            CompressionReport {
+                method: self.name(),
+                per_layer: reports,
+                model_cr,
+                wall_secs: 0.0,
+            },
+        ))
+    }
+}
+
+/// Registry entry: `dobi` (no options).
+pub fn registry_entry() -> crate::compress::registry::MethodEntry {
+    crate::compress::registry::MethodEntry {
+        name: "dobi",
+        aliases: &["dobi-svd"],
+        about: "Dobi-SVD*: loss-waterfilled rank allocation + whitened truncation",
+        defaults: &[],
+        build: |_| Ok(Box::new(DobiSvd)),
+    }
 }
 
 #[cfg(test)]

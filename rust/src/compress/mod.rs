@@ -18,17 +18,30 @@
 //!   pruning (model-level, see that module).
 //! - [`quant`] — RTN and GPTQ weight quantization, composable with
 //!   factorization (Table 7).
+//!
+//! Model-level orchestration lives in [`api`] (the [`ModelCompressor`] trait
+//! and the [`PerMatrix`] adapter) and [`registry`] (string-name →
+//! constructor table); every method registers itself there, so adding one is
+//! a local change to its own module plus a single registration line.
 
+pub mod api;
 pub mod compot;
 pub mod cospadi;
 pub mod dobi;
 pub mod pruning;
 pub mod quant;
+pub mod registry;
 pub mod sparse;
 pub mod svd_baselines;
 pub mod svd_llm;
 pub mod svd_llm_v2;
 pub mod whitening;
+
+pub use api::{
+    Allocation, CalibContext, CompressionReport, LayerReport, ModelCompressor, PerMatrix,
+    StageConfig,
+};
+pub use registry::{MethodCall, MethodEntry, MethodOptions, MethodRegistry};
 
 use crate::linalg::{gemm, Mat};
 use crate::util::Rng;

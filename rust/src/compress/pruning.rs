@@ -7,10 +7,18 @@
 //!   and fit a single linear map on calibration activations (least squares)
 //!   to replace them.
 //!
-//! These operate on *groups* of matrices — the model-level pipeline in
-//! `coordinator` wires them to actual transformer blocks.
+//! The matrix-group helpers are wired to actual transformer blocks by the
+//! [`LlmPruner`] and [`ReplaceMe`] model compressors below, which run
+//! through the same unified `compress_model` path as every other method
+//! (ReplaceMe consumes the raw calibration sequences from the
+//! [`CalibContext`]).
 
+use super::api::{CalibContext, CompressionReport, LayerReport, ModelCompressor, StageConfig};
 use crate::linalg::{cholesky, gemm, solve, Mat};
+use crate::model::config::ProjKind;
+use crate::model::transformer::{Model, Stage};
+use crate::compress::LinearWeight;
+use crate::util::Timer;
 
 /// Importance of each MLP intermediate channel c:
 /// (‖gate[:,c]‖ + ‖up[:,c]‖) · ‖down[c,:]‖ · act_rms[c].
@@ -174,6 +182,209 @@ pub fn fit_linear_replacement(x_in: &Mat, x_out: &Mat) -> Mat {
     // Solve L·Lᵀ·T = rhs.
     let y = solve::solve_lower_left(&l, &rhs);
     solve::solve_lower_transpose_left(&l, &y)
+}
+
+/// LLM-Pruner-like structured pruning toward a target CR: prune MLP
+/// intermediate channels and attention KV groups uniformly across blocks.
+pub struct LlmPruner;
+
+impl ModelCompressor for LlmPruner {
+    fn name(&self) -> String {
+        "LLM-Pruner".to_string()
+    }
+
+    fn compress(
+        &self,
+        model: &Model,
+        ctx: &CalibContext<'_>,
+        cfg: &StageConfig,
+    ) -> anyhow::Result<(Model, CompressionReport)> {
+        super::api::ensure_calibration_aligned("LLM-Pruner", model, ctx)?;
+        let keep_frac = 1.0 - cfg.target_cr;
+        let hd = model.cfg.head_dim();
+        let mut compressed = model.clone();
+        for layer in 0..compressed.stages.len() {
+            let Stage::Block(b) = &compressed.stages[layer] else { continue };
+            let gate = b.gate.to_dense();
+            let up = b.up.to_dense();
+            let down = b.down.to_dense();
+            let act_rms = ctx.stats(layer, ProjKind::Down)?.feature_rms();
+            anyhow::ensure!(
+                act_rms.len() == up.cols(),
+                "LLM-Pruner: layer {layer} calibration dim {} != mlp width {}",
+                act_rms.len(),
+                up.cols()
+            );
+            let imp = mlp_channel_importance(&gate, &up, &down, &act_rms);
+            let keep = ((up.cols() as f64 * keep_frac).round() as usize).clamp(1, up.cols());
+            let (g2, u2, d2, _) = prune_mlp(&gate, &up, &down, &imp, keep);
+
+            let q = b.q.to_dense();
+            let k = b.k.to_dense();
+            let v = b.v.to_dense();
+            let o = b.o.to_dense();
+            let n_kv = b.n_kv_heads;
+            let imp_h = head_group_importance(&q, &k, &v, &o, hd, n_kv);
+            let keep_kv = ((n_kv as f64 * keep_frac).round() as usize).clamp(1, n_kv);
+            let (q2, k2, v2, o2, kept) = prune_heads(&q, &k, &v, &o, hd, n_kv, &imp_h, keep_kv);
+            let q_per_kv = b.n_heads / n_kv;
+
+            if let Stage::Block(b) = &mut compressed.stages[layer] {
+                b.gate = LinearWeight::Dense(g2);
+                b.up = LinearWeight::Dense(u2);
+                b.down = LinearWeight::Dense(d2);
+                b.q = LinearWeight::Dense(q2);
+                b.k = LinearWeight::Dense(k2);
+                b.v = LinearWeight::Dense(v2);
+                b.o = LinearWeight::Dense(o2);
+                b.n_kv_heads = kept.len();
+                b.n_heads = kept.len() * q_per_kv;
+            }
+        }
+        let model_cr =
+            1.0 - compressed.projection_bits() as f64 / ctx.original.projection_bits() as f64;
+        Ok((
+            compressed,
+            CompressionReport {
+                method: self.name(),
+                per_layer: Vec::new(),
+                model_cr,
+                wall_secs: 0.0,
+            },
+        ))
+    }
+}
+
+/// ReplaceMe-like depth pruning: delete the contiguous block span whose
+/// removal best fits a linear replacement, sized to the target CR.
+/// Calibration activations are re-captured at the span boundaries from the
+/// context's raw sequences.
+pub struct ReplaceMe;
+
+impl ModelCompressor for ReplaceMe {
+    fn name(&self) -> String {
+        "ReplaceMe".to_string()
+    }
+
+    fn compress(
+        &self,
+        model: &Model,
+        ctx: &CalibContext<'_>,
+        cfg: &StageConfig,
+    ) -> anyhow::Result<(Model, CompressionReport)> {
+        anyhow::ensure!(
+            !ctx.seqs.is_empty(),
+            "ReplaceMe needs calibration sequences in the CalibContext"
+        );
+        let wall = Timer::start();
+        let target_cr = cfg.target_cr;
+        let n_blocks = model.stages.len();
+        let d = model.cfg.d_model;
+        // Parameters of one block vs linear replacement.
+        let block_params: usize = ProjKind::DECODER_SET
+            .iter()
+            .map(|&p| {
+                let (m, n) = model.cfg.proj_shape(p);
+                m * n
+            })
+            .sum();
+        let total = block_params * n_blocks;
+        // drop `span` blocks, add d×d: choose smallest span meeting the target.
+        let mut span = 1;
+        while span < n_blocks
+            && ((span * block_params) as f64 - (d * d) as f64) < target_cr * total as f64
+        {
+            span += 1;
+        }
+        anyhow::ensure!(span < n_blocks, "target CR too high for depth pruning");
+
+        // Hidden states entering/leaving each candidate span, over calib data.
+        let hd = model.cfg.head_dim();
+        let mut best: Option<(usize, f64, Mat)> = None;
+        for start in 0..=(n_blocks - span) {
+            let mut xs_in: Vec<Mat> = Vec::new();
+            let mut xs_out: Vec<Mat> = Vec::new();
+            for seq in ctx.seqs {
+                let mut x = model.embed_tokens(seq);
+                for (i, stage) in model.stages.iter().enumerate() {
+                    if i == start {
+                        xs_in.push(x.clone());
+                    }
+                    x = match stage {
+                        Stage::Block(b) => b.forward(&x, hd, model.cfg.rope_theta, i, None),
+                        Stage::Linear(t) => gemm::matmul(&x, t),
+                    };
+                    if i == start + span - 1 {
+                        xs_out.push(x.clone());
+                    }
+                }
+            }
+            let stack = |xs: &[Mat]| {
+                let rows: usize = xs.iter().map(|m| m.rows()).sum();
+                let mut out = Mat::zeros(rows, d);
+                let mut r = 0;
+                for m in xs {
+                    for i in 0..m.rows() {
+                        out.row_mut(r).copy_from_slice(m.row(i));
+                        r += 1;
+                    }
+                }
+                out
+            };
+            let xin = stack(&xs_in);
+            let xout = stack(&xs_out);
+            let t = fit_linear_replacement(&xin, &xout);
+            let err = gemm::matmul(&xin, &t).sub(&xout).fro_norm() / xout.fro_norm().max(1e-30);
+            if best.as_ref().map(|(_, e, _)| err < *e).unwrap_or(true) {
+                best = Some((start, err, t));
+            }
+        }
+        let (start, err, t) = best.unwrap();
+
+        let mut out = model.clone();
+        out.stages.splice(start..start + span, [Stage::Linear(t)]);
+        let model_cr =
+            1.0 - out.projection_bits() as f64 / ctx.original.projection_bits() as f64;
+        Ok((
+            out,
+            CompressionReport {
+                method: self.name(),
+                per_layer: vec![LayerReport {
+                    layer: start,
+                    proj: ProjKind::Q,
+                    target_cr,
+                    achieved_cr: model_cr,
+                    func_err: err,
+                    secs: wall.secs(),
+                    dense: false,
+                }],
+                model_cr,
+                wall_secs: 0.0,
+            },
+        ))
+    }
+}
+
+/// Registry entry: `llm-pruner` (no options).
+pub fn llm_pruner_entry() -> crate::compress::registry::MethodEntry {
+    crate::compress::registry::MethodEntry {
+        name: "llm-pruner",
+        aliases: &[],
+        about: "LLM-Pruner-like structured channel/KV-head pruning",
+        defaults: &[],
+        build: |_| Ok(Box::new(LlmPruner)),
+    }
+}
+
+/// Registry entry: `replaceme` (no options).
+pub fn replaceme_entry() -> crate::compress::registry::MethodEntry {
+    crate::compress::registry::MethodEntry {
+        name: "replaceme",
+        aliases: &[],
+        about: "ReplaceMe-like depth pruning with a fitted linear replacement",
+        defaults: &[],
+        build: |_| Ok(Box::new(ReplaceMe)),
+    }
 }
 
 #[cfg(test)]

@@ -8,10 +8,15 @@
 //! (dequantized f32 values) for evaluation, with exact bit accounting:
 //! b bits per value + 16-bit scale per group of 128.
 
+use super::api::{
+    self, CalibContext, CompressionReport, LayerReport, ModelCompressor, StageConfig,
+};
 use super::sparse::ColumnSparse;
 use super::whitening::CalibStats;
 use super::{CompressedLayer, LinearWeight};
 use crate::linalg::{cholesky, gemm, solve, Mat};
+use crate::model::config::ProjKind;
+use crate::model::transformer::{Model, Stage};
 
 pub const GROUP: usize = 128;
 
@@ -130,31 +135,47 @@ pub fn quantize_layer(
     layer
 }
 
-/// Table 7 composition: quantize the *stored factors* of an
-/// already-factorized layer to `bits` (RTN groups; GPTQ needs activations of
-/// the factor inputs which exist only for A — we quantize A with GPTQ
-/// against the original Gram and S values with RTN, matching how
-/// SVD-LLM V2 + GPTQ composes).
-pub fn quantize_factors(
-    layer: &CompressedLayer,
+/// Quantize *whatever representation a layer currently stores* to `bits`:
+/// dense weights directly, low-rank / factorized layers factor-by-factor
+/// (Table 7 composition). GPTQ needs the Gram of the factor's *input*
+/// activations, which exists only for the input-side factor (A / B / W
+/// itself) — those get GPTQ when `use_gptq` and the stats dimension
+/// matches; everything else falls back to RTN. `original` is the dense
+/// reference the CR is accounted against (Eq. 25 on actual stored bits).
+pub fn quantize_weight(
+    current: &LinearWeight,
     original: &Mat,
-    stats: &CalibStats,
+    stats: Option<&CalibStats>,
     bits: u32,
+    use_gptq: bool,
 ) -> CompressedLayer {
-    let (weight, stored_values, mask_bits) = match &layer.weight {
+    let gptq_fits = |rows: usize| use_gptq && stats.map(|s| s.dim() == rows).unwrap_or(false);
+    let (weight, stored_values, mask_bits) = match current {
         LinearWeight::Dense(w) => {
-            let q = gptq_quantize(w, stats, bits);
+            let q = if gptq_fits(w.rows()) {
+                gptq_quantize(w, stats.unwrap(), bits)
+            } else {
+                rtn_quantize(w, bits)
+            };
             let count = w.rows() * w.cols();
             (LinearWeight::Dense(q), count, 0u64)
         }
         LinearWeight::LowRank { b, c } => {
-            let qb = gptq_quantize(b, stats, bits);
+            let qb = if gptq_fits(b.rows()) {
+                gptq_quantize(b, stats.unwrap(), bits)
+            } else {
+                rtn_quantize(b, bits)
+            };
             let qc = rtn_quantize(c, bits);
             let count = b.rows() * b.cols() + c.rows() * c.cols();
             (LinearWeight::LowRank { b: qb, c: qc }, count, 0u64)
         }
         LinearWeight::Factorized { a, s } => {
-            let qa = gptq_quantize(a, stats, bits);
+            let qa = if gptq_fits(a.rows()) {
+                gptq_quantize(a, stats.unwrap(), bits)
+            } else {
+                rtn_quantize(a, bits)
+            };
             let mut qs: ColumnSparse = s.clone();
             // RTN over the sparse values in groups of 128.
             let mut vals: Vec<f32> = qs.values().to_vec();
@@ -168,11 +189,151 @@ pub fn quantize_factors(
             (LinearWeight::Factorized { a: qa, s: qs }, count, mask)
         }
     };
-    let mut out = CompressedLayer::new(layer.method, original, weight, Some(stats));
+    let mut out = CompressedLayer::new(
+        if use_gptq { "GPTQ" } else { "RTN" },
+        original,
+        weight,
+        stats,
+    );
     out.bits = quant_bits(stored_values, bits) + mask_bits;
     out.cr = 1.0 - out.bits as f64 / (16 * original.rows() * original.cols()) as f64;
+    out
+}
+
+/// Table 7 composition: quantize the *stored factors* of an
+/// already-factorized layer to `bits` (GPTQ on the input-side factor, RTN on
+/// the rest — matching how SVD-LLM V2 + GPTQ composes).
+pub fn quantize_factors(
+    layer: &CompressedLayer,
+    original: &Mat,
+    stats: &CalibStats,
+    bits: u32,
+) -> CompressedLayer {
+    let mut out = quantize_weight(&layer.weight, original, Some(stats), bits, true);
+    out.method = layer.method;
     out.iters_run = layer.iters_run;
     out
+}
+
+/// Model-level quantization stage: b-bit RTN/GPTQ over every projection of
+/// the current model. On a dense model this is plain PTQ; on a factorized
+/// model it quantizes the stored factors, so `[factorize, quantize]` plans
+/// reproduce the paper's Eq. 25 composed-CR accounting from actual bits.
+pub struct Quantize {
+    pub bits: u32,
+    pub gptq: bool,
+}
+
+impl ModelCompressor for Quantize {
+    fn name(&self) -> String {
+        if self.gptq { "GPTQ".to_string() } else { "RTN".to_string() }
+    }
+
+    fn compress(
+        &self,
+        model: &Model,
+        ctx: &CalibContext<'_>,
+        _cfg: &StageConfig,
+    ) -> anyhow::Result<(Model, CompressionReport)> {
+        // Structural stages (ReplaceMe) change the stage list; calibration
+        // stats and original weights are only index-aligned when they don't.
+        let aligned = model.stages.len() == ctx.original.stages.len();
+        let mut out = model.clone();
+        let mut reports: Vec<LayerReport> = Vec::new();
+        let mut used_bits = 0u64;
+        let mut total_bits = 0u64;
+        for (layer, b) in model.blocks() {
+            for p in ProjKind::DECODER_SET {
+                let current = b.proj(p);
+                let stats = if aligned { ctx.capture.stats.get(&(layer, p)) } else { None };
+                // stats are usable only while the projection keeps its
+                // original input width (structured pruning shrinks it)
+                let stats = stats.filter(|s| s.dim() == current.in_dim());
+                let orig_w = match (aligned, ctx.original.stages.get(layer)) {
+                    (true, Some(Stage::Block(ob))) => ob.proj(p).to_dense(),
+                    _ => current.to_dense(),
+                };
+                // Structured pruning keeps the stage count but shrinks
+                // projections; account against the current shape then.
+                let orig_w = if orig_w.rows() == current.in_dim()
+                    && orig_w.cols() == current.out_dim()
+                {
+                    orig_w
+                } else {
+                    current.to_dense()
+                };
+                let q = quantize_weight(current, &orig_w, stats, self.bits, self.gptq);
+                used_bits += q.bits;
+                total_bits += 16 * (orig_w.rows() * orig_w.cols()) as u64;
+                reports.push(LayerReport::measured(
+                    layer,
+                    p,
+                    1.0 - self.bits as f64 / 16.0,
+                    &q,
+                    0.0,
+                ));
+                api::set_proj(&mut out, layer, p, q.weight);
+            }
+        }
+        // Linear replacement stages keep their 16-bit storage.
+        for stage in &model.stages {
+            if let Stage::Linear(t) = stage {
+                let bits = 16 * (t.rows() * t.cols()) as u64;
+                used_bits += bits;
+                total_bits += bits;
+            }
+        }
+        anyhow::ensure!(total_bits > 0, "model has no compressible projections");
+        let model_cr = 1.0 - used_bits as f64 / total_bits as f64;
+        Ok((
+            out,
+            CompressionReport {
+                method: self.name(),
+                per_layer: reports,
+                model_cr,
+                wall_secs: 0.0,
+            },
+        ))
+    }
+}
+
+fn build_quantize(o: &super::registry::MethodOptions, gptq: bool) -> anyhow::Result<Box<dyn ModelCompressor>> {
+    let bits = o.get_u32("bits")?.unwrap_or(4);
+    anyhow::ensure!((2..=16).contains(&bits), "bits must be in 2..=16, got {bits}");
+    Ok(Box::new(Quantize { bits, gptq }))
+}
+
+/// Registry entry: `rtn4` (alias `rtn`) with option `bits` (default 4).
+pub fn rtn_entry() -> crate::compress::registry::MethodEntry {
+    crate::compress::registry::MethodEntry {
+        name: "rtn4",
+        aliases: &["rtn"],
+        about: "round-to-nearest b-bit quantization (bits=4 default)",
+        defaults: &[("bits", "4")],
+        build: |o| build_quantize(o, false),
+    }
+}
+
+/// Registry entry: `gptq4` (alias `gptq`) with option `bits` (default 4).
+pub fn gptq_entry() -> crate::compress::registry::MethodEntry {
+    crate::compress::registry::MethodEntry {
+        name: "gptq4",
+        aliases: &["gptq"],
+        about: "GPTQ b-bit quantization with Hessian error compensation (bits=4 default)",
+        defaults: &[("bits", "4")],
+        build: |o| build_quantize(o, true),
+    }
+}
+
+/// Registry entry: `gptq3` — GPTQ at 3 bits (Table 7's memory-matched row).
+pub fn gptq3_entry() -> crate::compress::registry::MethodEntry {
+    crate::compress::registry::MethodEntry {
+        name: "gptq3",
+        aliases: &[],
+        about: "GPTQ 3-bit quantization (Table 7 matched-memory baseline)",
+        defaults: &[("bits", "3")],
+        build: |o| build_quantize(o, true),
+    }
 }
 
 #[cfg(test)]

@@ -115,6 +115,45 @@ impl Compressor for Asvd {
     }
 }
 
+/// Registry entry: `svd` — plain truncated SVD (no options).
+pub fn truncated_svd_entry() -> crate::compress::registry::MethodEntry {
+    crate::compress::registry::MethodEntry {
+        name: "svd",
+        aliases: &[],
+        about: "plain truncated SVD (no calibration)",
+        defaults: &[],
+        build: |_| Ok(Box::new(crate::compress::PerMatrix::new("SVD", TruncatedSvd))),
+    }
+}
+
+/// Registry entry: `fwsvd` — Fisher-weighted SVD (no options).
+pub fn fwsvd_entry() -> crate::compress::registry::MethodEntry {
+    crate::compress::registry::MethodEntry {
+        name: "fwsvd",
+        aliases: &[],
+        about: "FWSVD: Fisher/row-importance weighted truncated SVD",
+        defaults: &[],
+        build: |_| Ok(Box::new(crate::compress::PerMatrix::new("FWSVD", Fwsvd))),
+    }
+}
+
+/// Registry entry: `asvd` with option `alpha` (activation-scaling exponent).
+pub fn asvd_entry() -> crate::compress::registry::MethodEntry {
+    crate::compress::registry::MethodEntry {
+        name: "asvd",
+        aliases: &[],
+        about: "ASVD: activation-scaled truncated SVD",
+        defaults: &[],
+        build: |o| {
+            let mut asvd = Asvd::default();
+            if let Some(v) = o.get_f64("alpha")? {
+                asvd.alpha = v as f32;
+            }
+            Ok(Box::new(crate::compress::PerMatrix::new("ASVD", asvd)))
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

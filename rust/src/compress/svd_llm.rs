@@ -63,6 +63,17 @@ impl Compressor for SvdLlm {
     }
 }
 
+/// Registry entry: `svd-llm` (no options).
+pub fn registry_entry() -> crate::compress::registry::MethodEntry {
+    crate::compress::registry::MethodEntry {
+        name: "svd-llm",
+        aliases: &["svdllm"],
+        about: "SVD-LLM: whitened truncation with closed-form update",
+        defaults: &[],
+        build: |_| Ok(Box::new(crate::compress::PerMatrix::new("SVD-LLM", SvdLlm))),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -10,10 +10,12 @@
 //!    proportionally (listing 2);
 //! 3. compress each matrix by whitened truncation at its allocated ratio.
 
+use super::api::{self, CalibContext, CompressionReport, LayerReport, ModelCompressor, StageConfig};
 use super::svd_llm::{truncation_loss, whitened_truncate};
 use super::whitening::{CalibStats, Whitener};
 use super::{CompressedLayer, LinearWeight};
 use crate::linalg::Mat;
+use crate::model::transformer::Model;
 
 /// One projection matrix plus its group key (projection type, e.g. "q_proj").
 pub struct V2Layer<'a> {
@@ -81,6 +83,69 @@ pub fn compress_all_v2(layers: &[V2Layer<'_>], keeps: &[f64]) -> Vec<CompressedL
             CompressedLayer::new("SVD-LLM V2", l.w, LinearWeight::LowRank { b, c }, Some(l.stats))
         })
         .collect()
+}
+
+/// Model-level V2: allocates its own keep fractions per projection-type
+/// group (the `StageConfig` allocation policy does not apply).
+pub struct SvdLlmV2;
+
+impl ModelCompressor for SvdLlmV2 {
+    fn name(&self) -> String {
+        "SVD-LLM V2".to_string()
+    }
+
+    fn compress(
+        &self,
+        model: &Model,
+        ctx: &CalibContext<'_>,
+        cfg: &StageConfig,
+    ) -> anyhow::Result<(Model, CompressionReport)> {
+        api::ensure_calibration_aligned("SVD-LLM V2", model, ctx)?;
+        let jobs = api::job_list(model);
+        let mut layers = Vec::with_capacity(jobs.len());
+        for (l, p, w) in &jobs {
+            let stats = ctx.stats(*l, *p)?;
+            anyhow::ensure!(
+                stats.dim() == w.rows(),
+                "SVD-LLM V2: layer {l} {p:?} calibration dim {} != weight rows {}",
+                stats.dim(),
+                w.rows()
+            );
+            layers.push(V2Layer { w, stats, group: p.group() });
+        }
+        let keeps = allocate_v2(&layers, cfg.target_cr);
+        let outs = compress_all_v2(&layers, &keeps);
+
+        let mut compressed = model.clone();
+        let mut reports = Vec::with_capacity(jobs.len());
+        for ((&(layer, proj, _), &keep), out) in
+            jobs.iter().zip(keeps.iter()).zip(outs.into_iter())
+        {
+            reports.push(LayerReport::measured(layer, proj, 1.0 - keep, &out, 0.0));
+            api::set_proj(&mut compressed, layer, proj, out.weight);
+        }
+        let model_cr = api::model_cr_from_reports(&reports, &jobs);
+        Ok((
+            compressed,
+            CompressionReport {
+                method: self.name(),
+                per_layer: reports,
+                model_cr,
+                wall_secs: 0.0,
+            },
+        ))
+    }
+}
+
+/// Registry entry: `svd-llm-v2` (no options).
+pub fn registry_entry() -> crate::compress::registry::MethodEntry {
+    crate::compress::registry::MethodEntry {
+        name: "svd-llm-v2",
+        aliases: &["v2"],
+        about: "SVD-LLM V2: per-group theoretical-loss rank allocation (A.10)",
+        defaults: &[],
+        build: |_| Ok(Box::new(SvdLlmV2)),
+    }
 }
 
 #[cfg(test)]

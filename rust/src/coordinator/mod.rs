@@ -1,13 +1,16 @@
-//! L3 coordinator: the model-level compression pipeline
-//! (calibrate → allocate → compress layer-parallel → assemble), the
-//! model-level pruning/quantization flows, and the table/figure report
-//! renderers.
+//! L3 coordinator: the model-level compression pipeline (calibrate →
+//! registry-built [`pipeline::ModelCompressor`] stages → assemble),
+//! composable multi-stage [`plan::CompressionPlan`]s (factorize → quantize,
+//! Table 7), and the table/figure report renderers.
 
 pub mod pipeline;
+pub mod plan;
 pub mod report;
 
 pub mod tables;
 
 pub use pipeline::{
-    calibrate, compress_model, CompressionReport, Method, PipelineConfig,
+    calibrate, compress_model, compress_with, CalibContext, CompressionReport, MethodCall,
+    MethodRegistry, StageConfig,
 };
+pub use plan::{CompressionPlan, PlanReport};

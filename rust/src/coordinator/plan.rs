@@ -1,0 +1,351 @@
+//! Composable compression plans: an ordered list of registry stages run
+//! through the unified pipeline, with composed-CR accounting.
+//!
+//! The paper's Table 7 (factorize, then post-training-quantize the stored
+//! factors; Eq. 25) is the canonical two-stage plan:
+//!
+//! ```text
+//! compot compress --model llama-mini --plan "compot@0.25+gptq4"
+//! ```
+//!
+//! Plan syntax: stages separated by `+`; each stage is
+//! `name[@target_cr][,key=value]*`. The reserved keys `dynamic` and `seed`
+//! set the stage's [`StageConfig`]; everything else is a method option
+//! resolved by the [`MethodRegistry`]. Plans also round-trip through JSON
+//! ([`CompressionPlan::from_json`] / [`CompressionPlan::to_json`]) for run
+//! spec files.
+
+use crate::compress::api::{CalibContext, CompressionReport, StageConfig};
+use crate::compress::registry::{MethodCall, MethodRegistry};
+use crate::coordinator::pipeline::compress_model;
+use crate::model::transformer::Model;
+use crate::util::json::Json;
+use crate::util::Timer;
+
+/// One stage: a registry method call plus its stage config.
+#[derive(Clone, Debug)]
+pub struct PlanStage {
+    pub call: MethodCall,
+    pub cfg: StageConfig,
+}
+
+/// An ordered sequence of compression stages over one model.
+#[derive(Clone, Debug)]
+pub struct CompressionPlan {
+    pub stages: Vec<PlanStage>,
+}
+
+/// Per-stage reports plus the composed outcome. Stage reports account
+/// storage against the original model, so the last stage's `model_cr` *is*
+/// the composed CR (Eq. 25 realized on actual stored bits).
+#[derive(Clone, Debug)]
+pub struct PlanReport {
+    pub stages: Vec<CompressionReport>,
+    pub composed_cr: f64,
+    pub wall_secs: f64,
+}
+
+impl CompressionPlan {
+    pub fn single(call: MethodCall, cfg: StageConfig) -> CompressionPlan {
+        CompressionPlan { stages: vec![PlanStage { call, cfg }] }
+    }
+
+    pub fn then(mut self, call: MethodCall, cfg: StageConfig) -> CompressionPlan {
+        self.stages.push(PlanStage { call, cfg });
+        self
+    }
+
+    /// Parse `name[@cr][,k=v]*(+name[@cr][,k=v]*)*`. `defaults` supplies the
+    /// target CR, allocation policy, and seed for stages that don't override
+    /// them.
+    pub fn parse(spec: &str, defaults: &StageConfig) -> anyhow::Result<CompressionPlan> {
+        let mut stages = Vec::new();
+        for token in spec.split('+').map(str::trim).filter(|t| !t.is_empty()) {
+            let mut parts = token.split(',').map(str::trim);
+            let head = parts.next().unwrap_or_default();
+            anyhow::ensure!(!head.is_empty(), "empty stage in plan '{spec}'");
+            let (name, cr) = match head.split_once('@') {
+                Some((n, c)) => {
+                    let cr: f64 = c.parse().map_err(|_| {
+                        anyhow::anyhow!("bad target CR '{c}' in plan stage '{token}'")
+                    })?;
+                    (n, Some(cr))
+                }
+                None => (head, None),
+            };
+            let mut call = MethodCall::new(name);
+            let mut target_cr = cr.unwrap_or(defaults.target_cr);
+            let mut dynamic = defaults.is_dynamic();
+            let mut seed = defaults.seed;
+            for kv in parts {
+                let (k, v) = kv.split_once('=').ok_or_else(|| {
+                    anyhow::anyhow!("bad option '{kv}' in plan stage '{token}' (want key=value)")
+                })?;
+                match k {
+                    "cr" => {
+                        target_cr = v.parse().map_err(|_| {
+                            anyhow::anyhow!("bad cr '{v}' in plan stage '{token}'")
+                        })?
+                    }
+                    "dynamic" => {
+                        dynamic = matches!(v, "true" | "1" | "yes");
+                    }
+                    "seed" => {
+                        seed = v.parse().map_err(|_| {
+                            anyhow::anyhow!("bad seed '{v}' in plan stage '{token}'")
+                        })?
+                    }
+                    _ => call = call.with(k, v),
+                }
+            }
+            let cfg = StageConfig::new(target_cr, dynamic).with_seed(seed);
+            stages.push(PlanStage { call, cfg });
+        }
+        anyhow::ensure!(!stages.is_empty(), "empty plan '{spec}'");
+        Ok(CompressionPlan { stages })
+    }
+
+    /// Build from a JSON run spec:
+    /// `{"stages": [{"method": "compot", "cr": 0.25, "dynamic": true,
+    ///               "options": {"iters": 20}}, {"method": "gptq4"}]}`.
+    pub fn from_json(j: &Json, defaults: &StageConfig) -> anyhow::Result<CompressionPlan> {
+        let stages_json = j
+            .get("stages")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("plan spec needs a 'stages' array"))?;
+        let mut stages = Vec::new();
+        for sj in stages_json {
+            let name = sj
+                .get("method")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("plan stage needs a 'method' name"))?;
+            let mut call = MethodCall::new(name);
+            if let Some(Json::Obj(opts)) = sj.get("options") {
+                for (k, v) in opts {
+                    let sv = match v {
+                        Json::Str(s) => s.clone(),
+                        Json::Num(x) => format_num(*x),
+                        Json::Bool(b) => b.to_string(),
+                        other => anyhow::bail!("option '{k}': unsupported value {other:?}"),
+                    };
+                    call = call.with(k, sv);
+                }
+            }
+            let target_cr =
+                sj.get("cr").and_then(Json::as_f64).unwrap_or(defaults.target_cr);
+            let dynamic =
+                sj.get("dynamic").and_then(Json::as_bool).unwrap_or(defaults.is_dynamic());
+            let seed = match sj.get("seed") {
+                None | Some(Json::Null) => defaults.seed,
+                // Seeds are written as strings: u64 does not survive a trip
+                // through an f64 JSON number above 2^53.
+                Some(Json::Str(s)) => s
+                    .parse::<u64>()
+                    .map_err(|_| anyhow::anyhow!("plan stage seed '{s}' is not a u64"))?,
+                Some(Json::Num(x)) => {
+                    anyhow::ensure!(
+                        x.fract() == 0.0 && *x >= 0.0 && *x < 9007199254740992.0,
+                        "plan stage seed {x} is not an exactly-representable non-negative \
+                         integer — write large seeds as strings"
+                    );
+                    *x as u64
+                }
+                Some(other) => anyhow::bail!("plan stage seed must be a number or string, got {other:?}"),
+            };
+            let cfg = StageConfig::new(target_cr, dynamic).with_seed(seed);
+            stages.push(PlanStage { call, cfg });
+        }
+        anyhow::ensure!(!stages.is_empty(), "plan spec has no stages");
+        Ok(CompressionPlan { stages })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut out = Json::obj();
+        let stages = self
+            .stages
+            .iter()
+            .map(|s| {
+                let mut j = s.call.to_json();
+                j.set("cr", s.cfg.target_cr.into());
+                j.set("dynamic", s.cfg.is_dynamic().into());
+                // as a string: u64 seeds don't round-trip through f64
+                j.set("seed", s.cfg.seed.to_string().into());
+                j
+            })
+            .collect();
+        out.set("stages", Json::Arr(stages));
+        out
+    }
+
+    /// Human-readable form, e.g. `compot@0.25 → gptq4`.
+    pub fn describe(&self) -> String {
+        self.stages
+            .iter()
+            .map(|s| format!("{}@{:.2}", s.call.name, s.cfg.target_cr))
+            .collect::<Vec<_>>()
+            .join(" → ")
+    }
+
+    /// Calibrate on `model` over `seqs`, then run every stage in order.
+    pub fn run(&self, model: &Model, seqs: &[Vec<u16>]) -> anyhow::Result<(Model, PlanReport)> {
+        let ctx = CalibContext::build(model, seqs);
+        self.run_in(model, &ctx)
+    }
+
+    /// Run every stage in order against an existing calibration context
+    /// (`ctx.original` must be `model`).
+    pub fn run_in(
+        &self,
+        model: &Model,
+        ctx: &CalibContext<'_>,
+    ) -> anyhow::Result<(Model, PlanReport)> {
+        let wall = Timer::start();
+        let registry = MethodRegistry::global();
+        let mut current = model.clone();
+        let mut reports = Vec::with_capacity(self.stages.len());
+        for stage in &self.stages {
+            let compressor = registry.build(&stage.call)?;
+            let (next, report) = compress_model(&current, ctx, compressor.as_ref(), &stage.cfg)?;
+            current = next;
+            reports.push(report);
+        }
+        let composed_cr = reports.last().map(|r| r.model_cr).unwrap_or(0.0);
+        Ok((current, PlanReport { stages: reports, composed_cr, wall_secs: wall.secs() }))
+    }
+}
+
+/// Render an option number the way a user would type it (no trailing `.0`
+/// for integers).
+fn format_num(x: f64) -> String {
+    if x.fract() == 0.0 && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::composed_cr;
+    use crate::data::SynthLang;
+    use crate::model::config::ModelConfig;
+    use crate::model::Model;
+    use crate::util::Rng;
+
+    fn setup() -> (Model, Vec<Vec<u16>>) {
+        let cfg = ModelConfig::test_tiny();
+        let model = Model::random(&cfg, &mut Rng::new(1));
+        let lang = SynthLang::wiki(cfg.vocab);
+        let calib = lang.gen_batch(6, 48, &mut Rng::new(2));
+        (model, calib)
+    }
+
+    #[test]
+    fn parse_round_trips_stages_and_options() {
+        let defaults = StageConfig::new(0.2, false);
+        let plan = CompressionPlan::parse("compot@0.25,iters=5,dynamic=true+gptq4", &defaults)
+            .unwrap();
+        assert_eq!(plan.stages.len(), 2);
+        assert_eq!(plan.stages[0].call.name, "compot");
+        assert_eq!(
+            plan.stages[0].call.options,
+            vec![("iters".to_string(), "5".to_string())]
+        );
+        assert!((plan.stages[0].cfg.target_cr - 0.25).abs() < 1e-12);
+        assert!(plan.stages[0].cfg.is_dynamic());
+        assert_eq!(plan.stages[1].call.name, "gptq4");
+        assert!(!plan.stages[1].cfg.is_dynamic());
+
+        // JSON round trip preserves the plan.
+        let j = plan.to_json();
+        let back = CompressionPlan::from_json(&j, &defaults).unwrap();
+        assert_eq!(back.stages.len(), 2);
+        assert_eq!(back.stages[0].call, plan.stages[0].call);
+        assert!(back.stages[0].cfg.is_dynamic());
+
+        assert!(CompressionPlan::parse("", &defaults).is_err());
+        assert!(CompressionPlan::parse("compot@abc", &defaults).is_err());
+        assert!(CompressionPlan::parse("compot,oops", &defaults).is_err());
+
+        // u64 seeds above 2^53 survive the JSON round trip (stored as strings).
+        let big = CompressionPlan::parse("compot,seed=9007199254740993", &defaults).unwrap();
+        assert_eq!(big.stages[0].cfg.seed, 9007199254740993);
+        let back = CompressionPlan::from_json(&big.to_json(), &defaults).unwrap();
+        assert_eq!(back.stages[0].cfg.seed, 9007199254740993);
+    }
+
+    #[test]
+    fn structural_stage_before_calibrated_stage_is_rejected() {
+        // Calibration stats are keyed by the original stage indices; once
+        // replaceme deletes a span of ≥2 blocks the stage list shrinks and
+        // they no longer align, so the per-matrix stage must refuse instead
+        // of whitening with the wrong Grams. (A span of 1 replaces in place
+        // and stays aligned — that composition remains legal.)
+        let mut cfg = ModelConfig::test_tiny();
+        cfg.n_layers = 4;
+        let model = Model::random(&cfg, &mut Rng::new(3));
+        let lang = SynthLang::wiki(cfg.vocab);
+        let calib = lang.gen_batch(3, 32, &mut Rng::new(4));
+        // target 0.3 of 4 blocks forces a 2-block span on test-tiny shapes
+        let plan =
+            CompressionPlan::parse("replaceme@0.3+compot@0.2", &StageConfig::new(0.2, false))
+                .unwrap();
+        let err = plan.run(&model, &calib).unwrap_err().to_string();
+        assert!(err.contains("structural"), "{err}");
+    }
+
+    #[test]
+    fn unknown_stage_method_fails_at_run() {
+        let (model, calib) = setup();
+        let plan = CompressionPlan::parse("nonesuch", &StageConfig::new(0.2, false)).unwrap();
+        let err = plan.run(&model, &calib).unwrap_err().to_string();
+        assert!(err.contains("unknown method"), "{err}");
+    }
+
+    #[test]
+    fn two_stage_plan_matches_eq25_composed_cr() {
+        // Table 7's composition through the unified pipeline: factorize at
+        // 0.25, then 4-bit-quantize the stored factors. Eq. 25 predicts
+        // cr = 1 − (1−cr_fact)·b/16 for the value bits; the realized CR
+        // sits slightly below because sparse-mask bits and group scales
+        // don't quantize.
+        let (model, calib) = setup();
+        let plan =
+            CompressionPlan::parse("compot@0.25+gptq4", &StageConfig::new(0.25, false)).unwrap();
+        let (qmodel, report) = plan.run(&model, &calib).unwrap();
+        assert_eq!(report.stages.len(), 2);
+        let fact_cr = report.stages[0].model_cr;
+        let predicted = composed_cr(fact_cr, 4);
+        assert!(
+            report.composed_cr > fact_cr,
+            "composition must add compression: {} vs {fact_cr}",
+            report.composed_cr
+        );
+        assert!(
+            (report.composed_cr - predicted).abs() < 0.05,
+            "composed {} vs Eq.25 {predicted}",
+            report.composed_cr
+        );
+        assert!(report.composed_cr <= predicted + 1e-9, "mask/scale bits can only cost storage");
+        assert!(qmodel.forward(&[1, 2, 3]).data().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn single_stage_plan_equals_direct_compress() {
+        let (model, calib) = setup();
+        let defaults = StageConfig::new(0.3, false);
+        let plan = CompressionPlan::parse("svd-llm", &defaults).unwrap();
+        let (_, pr) = plan.run(&model, &calib).unwrap();
+        let ctx = CalibContext::build(&model, &calib);
+        let (_, direct) = crate::coordinator::pipeline::compress_with(
+            &model,
+            &ctx,
+            &MethodCall::new("svd-llm"),
+            &defaults,
+        )
+        .unwrap();
+        assert!((pr.composed_cr - direct.model_cr).abs() < 1e-12);
+        assert_eq!(pr.stages[0].method, "SVD-LLM");
+    }
+}

@@ -1,19 +1,19 @@
 //! Regeneration of every table and figure in the paper's evaluation
-//! (DESIGN.md §5 maps IDs to the paper). Each function writes markdown+CSV
+//! (README.md maps IDs to the paper). Each function writes markdown+CSV
 //! under `results/` and returns the markdown. Workload sizes are scaled by
 //! `Scale` so the full grid stays tractable on this single-core testbed;
 //! the *shape* of each comparison (who wins, roughly by how much, where
 //! crossovers fall) is the reproduction target, per the brief.
 
 use super::pipeline::{
-    calibrate, compress_model, quantize_model, Allocation, Method,
-    PipelineConfig,
+    calibrate, compress_model, compress_with, Allocation, CalibContext, MethodCall, StageConfig,
 };
+use super::plan::CompressionPlan;
 use super::report::{ascii_plot, f1, f2, ppl, Table};
 use crate::allocator::{allocate_global, AllocationConfig, Grouping, MatrixSpec};
 use crate::compress::compot::{factorize, Compot, CompotConfig, DictInit};
-use crate::compress::cospadi::CospadiConfig;
 use crate::compress::whitening::Whitener;
+use crate::compress::PerMatrix;
 use crate::data::tasks::TASK_NAMES;
 use crate::data::SynthLang;
 use crate::eval::harness::{baseline_row, evaluate, run_method, EvalRow, EvalSetup};
@@ -80,9 +80,9 @@ pub fn table1(sc: &Scale) -> anyhow::Result<String> {
         &["CR Allocation", "Init", "Avg Acc", "Wiki PPL", "Lambada-PPL proxy (C4)"],
     );
     for (alloc_name, dynamic) in [("Static", false), ("Dynamic", true)] {
-        for (init_name, init) in [("Rand", DictInit::RandomColumns), ("SVD", DictInit::Svd)] {
-            let cfg = CompotConfig { init, ..Default::default() };
-            let row = run_method(&model, &setup, Method::Compot(cfg), 0.2, dynamic)?;
+        for (init_name, init) in [("Rand", "rand"), ("SVD", "svd")] {
+            let call = MethodCall::new("compot").with("init", init);
+            let row = run_method(&model, &setup, &call, 0.2, dynamic)?;
             t.row(vec![
                 alloc_name.into(),
                 init_name.into(),
@@ -103,14 +103,13 @@ pub fn table2(sc: &Scale) -> anyhow::Result<String> {
         "Table 2 — grouping for dynamic allocation, llama-micro, CR 0.2",
         &["Grouping", "Avg Acc", "Wiki PPL", "C4 PPL"],
     );
+    let ctx = CalibContext::build(&model, &setup.calib);
     for (name, grouping) in [
         ("All indiv.", Grouping::AllIndividual),
         ("QKV&UpGate", Grouping::QkvUpGate),
         ("All grouped", Grouping::AllGrouped),
     ] {
-        let cap = calibrate(&model, &setup.calib);
-        let pcfg = PipelineConfig {
-            method: Method::Compot(CompotConfig::default()),
+        let pcfg = StageConfig {
             target_cr: 0.2,
             allocation: Allocation::Dynamic(AllocationConfig {
                 target_cr: 0.2,
@@ -119,7 +118,8 @@ pub fn table2(sc: &Scale) -> anyhow::Result<String> {
             }),
             seed: sc.seed,
         };
-        let (compressed, report) = compress_model(&model, &cap, &pcfg)?;
+        let (compressed, report) =
+            compress_with(&model, &ctx, &MethodCall::new("compot"), &pcfg)?;
         let row = evaluate(&compressed, &setup, name, 0.2, report.model_cr, report.wall_secs);
         t.row(vec![name.into(), f1(row.avg_acc), ppl(row.ppl_wiki), ppl(row.ppl_c4)]);
     }
@@ -130,7 +130,7 @@ pub fn table2(sc: &Scale) -> anyhow::Result<String> {
 fn method_grid(
     preset: &str,
     paper_model: &str,
-    methods: &[Method],
+    methods: &[MethodCall],
     crs: &[f64],
     dynamic: bool,
     sc: &Scale,
@@ -144,7 +144,7 @@ fn method_grid(
     t.row(acc_row(&base));
     for &cr in crs {
         for m in methods {
-            let row = run_method(&model, &setup, m.clone(), cr, dynamic)?;
+            let row = run_method(&model, &setup, m, cr, dynamic)?;
             t.row(acc_row(&row));
         }
     }
@@ -154,9 +154,9 @@ fn method_grid(
 /// Table 3: static-CR comparison on llama-small + qwen-micro.
 pub fn table3(sc: &Scale) -> anyhow::Result<String> {
     let methods = vec![
-        Method::SvdLlm,
-        Method::Cospadi(CospadiConfig::default()),
-        Method::Compot(CompotConfig::default()),
+        MethodCall::new("svd-llm"),
+        MethodCall::new("cospadi"),
+        MethodCall::new("compot"),
     ];
     let a = method_grid(
         "llama-small",
@@ -186,7 +186,7 @@ pub fn table4(sc: &Scale) -> anyhow::Result<String> {
     method_grid(
         "llama-mini",
         "Llama2-7B→llama-mini",
-        &[Method::DobiSvd, Method::Compot(CompotConfig::default())],
+        &[MethodCall::new("dobi"), MethodCall::new("compot")],
         &[0.2, 0.4, 0.6],
         true,
         sc,
@@ -206,8 +206,8 @@ pub fn table5(sc: &Scale) -> anyhow::Result<String> {
         let setup = setup_for(&model, sc);
         let base = baseline_row(&model, &setup, "orig");
         t.row(vec![preset.into(), "Original".into(), ppl(base.ppl_wiki), ppl(base.ppl_c4)]);
-        for m in [Method::SvdLlmV2, Method::Compot(CompotConfig::default())] {
-            let row = run_method(&model, &setup, m, 0.2, true)?;
+        for m in [MethodCall::new("svd-llm-v2"), MethodCall::new("compot")] {
+            let row = run_method(&model, &setup, &m, 0.2, true)?;
             t.row(vec![preset.into(), row.method.clone(), ppl(row.ppl_wiki), ppl(row.ppl_c4)]);
         }
     }
@@ -219,7 +219,11 @@ pub fn table6(sc: &Scale) -> anyhow::Result<String> {
     method_grid(
         "llama-small",
         "Llama3-8B→llama-small",
-        &[Method::ReplaceMe, Method::LlmPruner, Method::Compot(CompotConfig::default())],
+        &[
+            MethodCall::new("replaceme"),
+            MethodCall::new("llm-pruner"),
+            MethodCall::new("compot"),
+        ],
         &[0.2, 0.3, 0.4],
         true,
         sc,
@@ -228,42 +232,42 @@ pub fn table6(sc: &Scale) -> anyhow::Result<String> {
     )
 }
 
-/// Table 7: quantization composition under (approximately) equal memory.
+/// Table 7: quantization composition under (approximately) equal memory —
+/// first-class two-stage plans (`factorize@0.25 + gptq4`, Eq. 25 accounting
+/// on actual stored bits).
 pub fn table7(sc: &Scale) -> anyhow::Result<String> {
     let model = load_model("llama-mini")?;
     let setup = setup_for(&model, sc);
-    let cap = calibrate(&model, &setup.calib);
+    let ctx = CalibContext::build(&model, &setup.calib);
     let mut t = Table::new(
         "Table 7 — PTQ composition at matched memory, llama-mini (Llama-7B)",
         &["Method", "Quant CR", "Factor CR", "Total CR", "Wiki PPL"],
     );
     // GPTQ-3bit only.
-    let (q3, r3) = compress_model(
-        &model,
-        &cap,
-        &PipelineConfig::new(Method::Quant { bits: 3, gptq: true }, 0.0, false),
-    )?;
+    let plan3 = CompressionPlan::single(MethodCall::new("gptq3"), StageConfig::new(0.0, false));
+    let (q3, r3) = plan3.run_in(&model, &ctx)?;
     t.row(vec![
         "GPTQ-3bit".into(),
-        f2(r3.model_cr),
+        f2(r3.composed_cr),
         "N/A".into(),
-        f2(r3.model_cr),
+        f2(r3.composed_cr),
         ppl(perplexity(&q3, &setup.ppl_wiki)),
     ]);
-    // factorize at 0.25 then GPTQ-4bit.
+    // factorize at 0.25 then GPTQ-4bit on the stored factors.
     for (name, method, dynamic) in [
-        ("SVD-LLM V2+GPTQ4", Method::SvdLlmV2, true),
-        ("COMPOT†+GPTQ4", Method::Compot(CompotConfig::default()), false),
-        ("COMPOT+GPTQ4", Method::Compot(CompotConfig::default()), true),
+        ("SVD-LLM V2+GPTQ4", "svd-llm-v2", true),
+        ("COMPOT†+GPTQ4", "compot", false),
+        ("COMPOT+GPTQ4", "compot", true),
     ] {
-        let (fact, rf) =
-            compress_model(&model, &cap, &PipelineConfig::new(method, 0.25, dynamic))?;
-        let (qm, total_cr) = quantize_model(&model, &fact, &cap, 4);
+        let plan =
+            CompressionPlan::single(MethodCall::new(method), StageConfig::new(0.25, dynamic))
+                .then(MethodCall::new("gptq4"), StageConfig::new(0.0, false));
+        let (qm, pr) = plan.run_in(&model, &ctx)?;
         t.row(vec![
             name.into(),
             "0.75".into(),
-            f2(rf.model_cr),
-            f2(total_cr),
+            f2(pr.stages[0].model_cr),
+            f2(pr.composed_cr),
             ppl(perplexity(&qm, &setup.ppl_wiki)),
         ]);
     }
@@ -308,14 +312,19 @@ pub fn table8(sc: &Scale) -> anyhow::Result<String> {
     // calibration over caption data (prefix-free approximation: language-
     // only sequences — the paper also calibrates the language module alone)
     let setup = setup_for(&vlm.lm, sc);
-    let cap = calibrate(&vlm.lm, &setup.calib);
+    let ctx = CalibContext::build(&vlm.lm, &setup.calib);
     for &cr in &[0.2, 0.3, 0.4] {
         for (name, method, dynamic) in [
-            ("SVD-LLM", Method::SvdLlm, false),
-            ("COMPOT†", Method::Compot(CompotConfig::default()), false),
-            ("COMPOT", Method::Compot(CompotConfig::default()), true),
+            ("SVD-LLM", "svd-llm", false),
+            ("COMPOT†", "compot", false),
+            ("COMPOT", "compot", true),
         ] {
-            let (lm2, _) = compress_model(&vlm.lm, &cap, &PipelineConfig::new(method, cr, dynamic))?;
+            let (lm2, _) = compress_with(
+                &vlm.lm,
+                &ctx,
+                &MethodCall::new(method),
+                &StageConfig::new(cr, dynamic),
+            )?;
             let v2 = VlmModel {
                 lm: lm2,
                 patch_proj: vlm.patch_proj.clone(),
@@ -438,12 +447,12 @@ pub fn table10(sc: &Scale) -> anyhow::Result<String> {
     t.row(acc_row(&baseline_row(&model, &setup, "llama-micro (orig)")));
     for &cr in &[0.2, 0.3, 0.4] {
         for (m, dynamic) in [
-            (Method::SvdLlm, false),
-            (Method::Cospadi(CospadiConfig::default()), false),
-            (Method::Compot(CompotConfig::default()), false),
-            (Method::Compot(CompotConfig::default()), true),
+            (MethodCall::new("svd-llm"), false),
+            (MethodCall::new("cospadi"), false),
+            (MethodCall::new("compot"), false),
+            (MethodCall::new("compot"), true),
         ] {
-            let mut row = run_method(&model, &setup, m, cr, dynamic)?;
+            let mut row = run_method(&model, &setup, &m, cr, dynamic)?;
             if dynamic {
                 row.method = "COMPOT (dyn)".into();
             } else if row.method == "COMPOT" {
@@ -461,9 +470,9 @@ pub fn table11(sc: &Scale) -> anyhow::Result<String> {
         "qwen-nano",
         "Qwen3-0.6B→qwen-nano",
         &[
-            Method::SvdLlm,
-            Method::Cospadi(CospadiConfig::default()),
-            Method::Compot(CompotConfig::default()),
+            MethodCall::new("svd-llm"),
+            MethodCall::new("cospadi"),
+            MethodCall::new("compot"),
         ],
         &[0.2, 0.3, 0.4],
         false,
@@ -495,14 +504,19 @@ pub fn table12(sc: &Scale) -> anyhow::Result<String> {
         t.row(row);
     };
     eval_hard(&model, "Original", 0.0, &mut t);
-    let cap = calibrate(&model, &setup.calib);
+    let ctx = CalibContext::build(&model, &setup.calib);
     for &cr in &[0.2, 0.3] {
         for (name, method, dynamic) in [
-            ("SVD-LLM", Method::SvdLlm, false),
-            ("COMPOT†", Method::Compot(CompotConfig::default()), false),
-            ("COMPOT", Method::Compot(CompotConfig::default()), true),
+            ("SVD-LLM", "svd-llm", false),
+            ("COMPOT†", "compot", false),
+            ("COMPOT", "compot", true),
         ] {
-            let (m2, _) = compress_model(&model, &cap, &PipelineConfig::new(method, cr, dynamic))?;
+            let (m2, _) = compress_with(
+                &model,
+                &ctx,
+                &MethodCall::new(method),
+                &StageConfig::new(cr, dynamic),
+            )?;
             eval_hard(&m2, name, cr, &mut t);
         }
     }
@@ -537,7 +551,7 @@ pub fn table13(_sc: &Scale) -> anyhow::Result<String> {
             crate::compress::svd_llm::SvdLlm.compress(&w, stats, 0.2, &mut rng).map(|_| ())
         })?;
         let t_cospadi_20 = time_of(&mut || {
-            crate::compress::cospadi::Cospadi { cfg: CospadiConfig::default() }
+            crate::compress::cospadi::Cospadi::default()
                 .compress(&w, stats, 0.2, &mut rng)
                 .map(|_| ())
         })?;
@@ -579,29 +593,31 @@ pub fn table14(sc: &Scale) -> anyhow::Result<String> {
         "Table 14 — early-stop tolerance τ (random init, max 150 iters), llama-micro CR 0.2",
         &["τ", "Avg Acc", "Wiki PPL", "C4 PPL", "mean iters"],
     );
+    let ctx = CalibContext::build(&model, &setup.calib);
     for exp in [1.0f64, 1.5, 2.0, 2.5, 3.0, 3.5, 4.0] {
         let tol = 10f64.powf(-exp);
-        let cfg = CompotConfig {
-            iters: 150,
-            init: DictInit::RandomColumns,
-            early_stop_tol: Some(tol),
-            ..Default::default()
-        };
-        let cap = calibrate(&model, &setup.calib);
-        let (m2, report) = compress_model(
-            &model,
-            &cap,
-            &PipelineConfig::new(Method::Compot(cfg), 0.2, false),
-        )?;
+        // Config-heavy ablation: construct the per-matrix adapter directly
+        // (typed configs) — same unified pipeline as the registry path.
+        let compressor = PerMatrix::new(
+            "COMPOT",
+            Compot {
+                cfg: CompotConfig {
+                    iters: 150,
+                    init: DictInit::RandomColumns,
+                    early_stop_tol: Some(tol),
+                    ..Default::default()
+                },
+            },
+        );
+        let (m2, report) =
+            compress_model(&model, &ctx, &compressor, &StageConfig::new(0.2, false))?;
         let row = evaluate(&m2, &setup, "COMPOT†", 0.2, report.model_cr, report.wall_secs);
-        let mean_iters: f64 = 0.0; // per-layer iters live in CompressedLayer; report via func_err trace instead
-        let _ = mean_iters;
         t.row(vec![
             format!("1e-{exp:.1}"),
             f1(row.avg_acc),
             ppl(row.ppl_wiki),
             ppl(row.ppl_c4),
-            format!("≤150"),
+            "≤150".into(),
         ]);
     }
     Ok(t.write(&results_dir(), "table14")?)
@@ -616,8 +632,8 @@ pub fn table15(sc: &Scale) -> anyhow::Result<String> {
         &["k/s", "Avg Acc", "Wiki PPL", "C4 PPL"],
     );
     for ratio in [1.2, 1.4, 1.6, 1.8, 2.0, 2.4, 2.8, 3.2, 3.6, 4.0] {
-        let cfg = CompotConfig { ks_ratio: ratio, ..Default::default() };
-        let row = run_method(&model, &setup, Method::Compot(cfg), 0.2, false)?;
+        let call = MethodCall::new("compot").with("ks_ratio", ratio);
+        let row = run_method(&model, &setup, &call, 0.2, false)?;
         t.row(vec![format!("{ratio:.1}"), f1(row.avg_acc), ppl(row.ppl_wiki), ppl(row.ppl_c4)]);
     }
     Ok(t.write(&results_dir(), "table15")?)
@@ -635,13 +651,13 @@ pub fn table18(sc: &Scale) -> anyhow::Result<String> {
         let base = baseline_row(&model, &setup, "Original");
         t.row(vec![preset.into(), "Original".into(), ppl(base.ppl_wiki), f1(base.avg_acc)]);
         for (name, m, dynamic) in [
-            ("FWSVD", Method::Fwsvd, false),
-            ("ASVD", Method::Asvd, false),
-            ("SVD-LLM", Method::SvdLlm, false),
-            ("SVD-LLM V2", Method::SvdLlmV2, true),
-            ("COMPOT", Method::Compot(CompotConfig::default()), true),
+            ("FWSVD", "fwsvd", false),
+            ("ASVD", "asvd", false),
+            ("SVD-LLM", "svd-llm", false),
+            ("SVD-LLM V2", "svd-llm-v2", true),
+            ("COMPOT", "compot", true),
         ] {
-            let row = run_method(&model, &setup, m, 0.2, dynamic)?;
+            let row = run_method(&model, &setup, &MethodCall::new(m), 0.2, dynamic)?;
             t.row(vec![preset.into(), name.into(), ppl(row.ppl_wiki), f1(row.avg_acc)]);
         }
     }
@@ -652,7 +668,7 @@ pub fn table18(sc: &Scale) -> anyhow::Result<String> {
 pub fn table19(sc: &Scale) -> anyhow::Result<String> {
     let model = load_model("llama-mini")?;
     let setup = setup_for(&model, sc);
-    let cap = calibrate(&model, &setup.calib);
+    let ctx = CalibContext::build(&model, &setup.calib);
     let mut t = Table::new(
         "Table 19 — remapping accounting: Dobi-SVD* vs Dobi-SVD(remap, 8-bit) vs COMPOT",
         &["Method", "Target CR", "Fact CR", "Quant CR", "Wiki PPL"],
@@ -660,7 +676,7 @@ pub fn table19(sc: &Scale) -> anyhow::Result<String> {
     for &target in &[0.2, 0.4, 0.6] {
         // Dobi-SVD* — pure factorization at the target.
         let (m1, r1) =
-            compress_model(&model, &cap, &PipelineConfig::new(Method::DobiSvd, target, true))?;
+            compress_with(&model, &ctx, &MethodCall::new("dobi"), &StageConfig::new(target, true))?;
         t.row(vec![
             "Dobi-SVD*".into(),
             f2(target),
@@ -670,23 +686,26 @@ pub fn table19(sc: &Scale) -> anyhow::Result<String> {
         ]);
         // Dobi-SVD with remapping: Eq. 25 at 8-bit — factorization CR can be
         // negative; emulate with the *mildest beneficial* factorization
-        // (cr_fact clamped ≥ 0.02) + 8-bit quantization of the stored values.
+        // (cr_fact clamped ≥ 0.02) + 8-bit quantization of the stored
+        // factors, as a two-stage plan.
         let fact_cr = crate::compress::dobi::remapping_fact_cr(target, 8).max(0.02);
-        let (m2, _) =
-            compress_model(&model, &cap, &PipelineConfig::new(Method::DobiSvd, fact_cr, true))?;
-        let (m2q, total) = quantize_model(&model, &m2, &cap, 8);
+        let plan =
+            CompressionPlan::single(MethodCall::new("dobi"), StageConfig::new(fact_cr, true))
+                .then(MethodCall::new("gptq").with("bits", 8), StageConfig::new(0.0, false));
+        let (m2q, pr) = plan.run_in(&model, &ctx)?;
         t.row(vec![
             "Dobi-SVD (remap, 8-bit)".into(),
-            f2(total),
+            f2(pr.composed_cr),
             f2(crate::compress::dobi::remapping_fact_cr(target, 8)),
             "0.50".into(),
             ppl(perplexity(&m2q, &setup.ppl_wiki)),
         ]);
         // COMPOT at the target.
-        let (m3, r3) = compress_model(
+        let (m3, r3) = compress_with(
             &model,
-            &cap,
-            &PipelineConfig::new(Method::Compot(CompotConfig::default()), target, true),
+            &ctx,
+            &MethodCall::new("compot"),
+            &StageConfig::new(target, true),
         )?;
         t.row(vec![
             "COMPOT".into(),
@@ -706,11 +725,11 @@ pub fn figure3(sc: &Scale) -> anyhow::Result<String> {
     let setup = setup_for(&model, sc);
     let iters_grid = [1usize, 2, 5, 10, 20, 50, 100];
     let mut series = Vec::new();
-    for (name, init) in [("rand", DictInit::RandomColumns), ("svd", DictInit::Svd)] {
+    for name in ["rand", "svd"] {
         let mut accs = Vec::new();
         for &it in &iters_grid {
-            let cfg = CompotConfig { iters: it, init, ..Default::default() };
-            let row = run_method(&model, &setup, Method::Compot(cfg), 0.2, false)?;
+            let call = MethodCall::new("compot").with("iters", it).with("init", name);
+            let row = run_method(&model, &setup, &call, 0.2, false)?;
             accs.push(row.avg_acc);
         }
         series.push((name, accs));

@@ -1,10 +1,11 @@
-//! The method × CR grid runner: compress a model with a method at a target
-//! CR, evaluate perplexity + the zero-shot suite, and return one table row.
-//! This is what the `compot table <id>` commands are built from.
+//! The method × CR grid runner: compress a model with a registry method (or
+//! a multi-stage plan) at a target CR, evaluate perplexity + the zero-shot
+//! suite, and return one table row. This is what the `compot table <id>`
+//! commands are built from.
 
-use crate::coordinator::pipeline::{
-    calibrate, compress_model, replaceme_compress, Method, PipelineConfig,
-};
+use crate::compress::{CalibContext, MethodCall, StageConfig};
+use crate::coordinator::pipeline::compress_with;
+use crate::coordinator::plan::CompressionPlan;
 use crate::data::tasks::Task;
 use crate::data::SynthLang;
 use crate::model::Model;
@@ -64,23 +65,20 @@ pub fn evaluate(model: &Model, setup: &EvalSetup, method: &str, target_cr: f64, 
     }
 }
 
-/// Compress with `method` at `target_cr` (static or dynamic allocation) and
-/// evaluate. `ReplaceMe` routes through its own calibration-sequence flow.
+/// Compress with a registry method at `target_cr` (static or dynamic
+/// allocation) and evaluate. Every method — including structural ones like
+/// ReplaceMe — runs through the unified pipeline; the calibration sequences
+/// travel in the [`CalibContext`].
 pub fn run_method(
     model: &Model,
     setup: &EvalSetup,
-    method: Method,
+    call: &MethodCall,
     target_cr: f64,
     dynamic: bool,
 ) -> anyhow::Result<EvalRow> {
-    let (compressed, report) = match method {
-        Method::ReplaceMe => replaceme_compress(model, &setup.calib, target_cr)?,
-        m => {
-            let cap = calibrate(model, &setup.calib);
-            let cfg = PipelineConfig::new(m, target_cr, dynamic);
-            compress_model(model, &cap, &cfg)?
-        }
-    };
+    let ctx = CalibContext::build(model, &setup.calib);
+    let cfg = StageConfig::new(target_cr, dynamic);
+    let (compressed, report) = compress_with(model, &ctx, call, &cfg)?;
     Ok(evaluate(
         &compressed,
         setup,
@@ -91,6 +89,19 @@ pub fn run_method(
     ))
 }
 
+/// Run a multi-stage plan and evaluate the final model. The row's CR is the
+/// composed CR (Eq. 25 accounting on actual stored bits).
+pub fn run_plan(
+    model: &Model,
+    setup: &EvalSetup,
+    plan: &CompressionPlan,
+    label: &str,
+) -> anyhow::Result<EvalRow> {
+    let (compressed, report) = plan.run(model, &setup.calib)?;
+    let target = plan.stages.first().map(|s| s.cfg.target_cr).unwrap_or(0.0);
+    Ok(evaluate(&compressed, setup, label, target, report.composed_cr, report.wall_secs))
+}
+
 /// The uncompressed reference row.
 pub fn baseline_row(model: &Model, setup: &EvalSetup, name: &str) -> EvalRow {
     evaluate(model, setup, name, 0.0, 0.0, 0.0)
@@ -99,7 +110,6 @@ pub fn baseline_row(model: &Model, setup: &EvalSetup, name: &str) -> EvalRow {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compress::compot::CompotConfig;
     use crate::model::config::ModelConfig;
 
     #[test]
@@ -113,7 +123,7 @@ mod tests {
         let row = run_method(
             &model,
             &setup,
-            Method::Compot(CompotConfig { iters: 3, ..Default::default() }),
+            &MethodCall::new("compot").with("iters", 3),
             0.25,
             false,
         )
@@ -123,5 +133,14 @@ mod tests {
         // compression should not *improve* ppl on a random model much; just
         // check finiteness and ordering sanity
         assert!(row.ppl_wiki.is_finite() && row.ppl_c4.is_finite());
+    }
+
+    #[test]
+    fn replaceme_runs_through_run_method() {
+        let cfg = ModelConfig::test_tiny();
+        let model = Model::random(&cfg, &mut Rng::new(2));
+        let setup = EvalSetup::standard(cfg.vocab, 3, 32, 2, 7);
+        let row = run_method(&model, &setup, &MethodCall::new("replaceme"), 0.3, false).unwrap();
+        assert!(row.model_cr > 0.2, "cr {}", row.model_cr);
     }
 }

@@ -4,15 +4,18 @@
 //! Procrustes Orthogonalization for Transformers Compression"* as a
 //! three-layer Rust + JAX + Pallas stack:
 //!
-//! - **L3 (this crate)** — the coordinator: compression pipeline, the paper's
-//!   one-shot global CR allocator, every baseline method, the evaluation
-//!   harness, and a batched inference server over compressed models.
+//! - **L3 (this crate)** — the coordinator: the registry-driven compression
+//!   pipeline (every method is a [`compress::ModelCompressor`] built by name
+//!   from the [`compress::MethodRegistry`], composable into
+//!   [`coordinator::plan::CompressionPlan`]s), the paper's one-shot global CR
+//!   allocator, every baseline method, the evaluation harness, and a batched
+//!   inference server over compressed models.
 //! - **L2/L1 (python/compile)** — JAX model + Pallas kernels, AOT-lowered to
 //!   HLO text at build time (`make artifacts`), loaded at runtime through the
 //!   PJRT C API (`runtime` module). Python is never on the request path.
 //!
-//! See `DESIGN.md` for the system inventory and the per-experiment index, and
-//! `EXPERIMENTS.md` for paper-vs-measured results.
+//! See the repository `README.md` for the registry/plan API, the method
+//! table, and CLI examples.
 
 pub mod allocator;
 pub mod compress;

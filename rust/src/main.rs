@@ -4,33 +4,81 @@
 //! compot table <id> [--items N] [--calib N] [--seed S]   regenerate a paper table
 //! compot figure <id|alloc:<preset>>                      regenerate a figure
 //! compot compress --model <preset> --method <m> --cr <x> [--dynamic]
+//!                 [--set k=v ...]                        method options via the registry
+//! compot compress --model <preset> --plan "compot@0.25+gptq4"
+//!                                                        multi-stage compression plan
 //! compot eval --model <preset>                           baseline evaluation
-//! compot serve --model <preset> [--addr host:port] [--cr x --method m]
+//! compot serve --model <preset> [--addr host:port] [--cr x --method m | --plan p]
 //! compot allocate --model <preset>                       print Algorithm-2 allocation
 //! compot info                                            artifacts / presets
+//! compot help                                            usage + registered methods
 //! ```
+//!
+//! Methods are resolved by name through the `MethodRegistry`; `compot help`
+//! lists every registered method. Unknown flags and unknown `--set` options
+//! are errors, not silently ignored.
 
-use compot::compress::compot::CompotConfig;
-use compot::compress::cospadi::CospadiConfig;
-use compot::coordinator::pipeline::{calibrate, compress_model, Method, PipelineConfig};
+use compot::compress::{MethodCall, MethodRegistry, StageConfig};
+use compot::coordinator::plan::CompressionPlan;
 use compot::coordinator::tables::{self, Scale};
-use compot::eval::harness::{baseline_row, run_method, EvalSetup};
+use compot::eval::harness::{baseline_row, evaluate, EvalSetup};
 use compot::model::config::ModelConfig;
 use compot::model::Model;
 use compot::runtime::artifacts::artifacts_dir;
-use std::collections::HashMap;
+use compot::util::json::Json;
 
-fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+/// Parsed `--flag [value]` pairs, in order (flags may repeat, e.g. `--set`).
+struct Flags {
+    pairs: Vec<(String, String)>,
+}
+
+impl Flags {
+    fn get(&self, key: &str) -> Option<&str> {
+        self.pairs.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    fn get_all<'a>(&'a self, key: &'a str) -> impl Iterator<Item = &'a str> {
+        self.pairs.iter().filter(move |(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.get(key).is_some()
+    }
+
+    fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> anyhow::Result<Option<T>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--{key}: cannot parse '{v}'")),
+        }
+    }
+
+    /// Reject flags the current command does not understand.
+    fn expect_known(&self, command: &str, allowed: &[&str]) -> anyhow::Result<()> {
+        for (k, _) in &self.pairs {
+            anyhow::ensure!(
+                allowed.contains(&k.as_str()),
+                "unknown flag --{k} for `compot {command}` (allowed: {})",
+                allowed.iter().map(|a| format!("--{a}")).collect::<Vec<_>>().join(" ")
+            );
+        }
+        Ok(())
+    }
+}
+
+fn parse_flags(args: &[String]) -> (Vec<String>, Flags) {
     let mut positional = Vec::new();
-    let mut flags = HashMap::new();
+    let mut pairs = Vec::new();
     let mut i = 0;
     while i < args.len() {
         if let Some(name) = args[i].strip_prefix("--") {
             if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                flags.insert(name.to_string(), args[i + 1].clone());
+                pairs.push((name.to_string(), args[i + 1].clone()));
                 i += 2;
             } else {
-                flags.insert(name.to_string(), "true".to_string());
+                pairs.push((name.to_string(), "true".to_string()));
                 i += 1;
             }
         } else {
@@ -38,44 +86,86 @@ fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
             i += 1;
         }
     }
-    (positional, flags)
+    (positional, Flags { pairs })
 }
 
-fn method_by_name(name: &str) -> anyhow::Result<Method> {
-    Ok(match name {
-        "compot" => Method::Compot(CompotConfig::default()),
-        "svd-llm" | "svdllm" => Method::SvdLlm,
-        "svd-llm-v2" | "v2" => Method::SvdLlmV2,
-        "cospadi" => Method::Cospadi(CospadiConfig::default()),
-        "dobi" => Method::DobiSvd,
-        "svd" => Method::TruncatedSvd,
-        "fwsvd" => Method::Fwsvd,
-        "asvd" => Method::Asvd,
-        "llm-pruner" => Method::LlmPruner,
-        "replaceme" => Method::ReplaceMe,
-        "rtn4" => Method::Quant { bits: 4, gptq: false },
-        "gptq4" => Method::Quant { bits: 4, gptq: true },
-        "gptq3" => Method::Quant { bits: 3, gptq: true },
-        other => anyhow::bail!("unknown method '{other}'"),
-    })
+/// Collect `--set k=v` (repeatable, comma-separable) method options.
+fn method_options(flags: &Flags) -> anyhow::Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    for spec in flags.get_all("set") {
+        for kv in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("--set '{kv}': want key=value"))?;
+            out.push((k.trim().to_string(), v.trim().to_string()));
+        }
+    }
+    Ok(out)
 }
 
-fn scale_from(flags: &HashMap<String, String>) -> Scale {
+fn scale_from(flags: &Flags) -> anyhow::Result<Scale> {
     let mut sc = Scale::default();
-    if let Some(v) = flags.get("items").and_then(|v| v.parse().ok()) {
+    if let Some(v) = flags.get_parsed("items")? {
         sc.items = v;
     }
-    if let Some(v) = flags.get("calib").and_then(|v| v.parse().ok()) {
+    if let Some(v) = flags.get_parsed("calib")? {
         sc.calib = v;
     }
-    if let Some(v) = flags.get("seed").and_then(|v| v.parse().ok()) {
+    if let Some(v) = flags.get_parsed("seed")? {
         sc.seed = v;
     }
-    sc
+    Ok(sc)
 }
 
 fn load(preset: &str) -> anyhow::Result<Model> {
     Model::load(&artifacts_dir().join(format!("{preset}.bin")))
+}
+
+/// Build the compression plan a command's flags describe: either an explicit
+/// `--plan` spec or a single `--method` stage with `--set` options.
+/// `default_dynamic` is the allocation policy when `--dynamic` is absent
+/// (serve has always compressed with Algorithm 2; compress defaults static).
+fn plan_from_flags(
+    flags: &Flags,
+    sc: &Scale,
+    default_dynamic: bool,
+) -> anyhow::Result<CompressionPlan> {
+    let cr: f64 = flags.get_parsed("cr")?.unwrap_or(0.2);
+    let dynamic = flags.has("dynamic") || default_dynamic;
+    let defaults = StageConfig::new(cr, dynamic).with_seed(sc.seed);
+    if let Some(spec) = flags.get("plan") {
+        anyhow::ensure!(
+            !flags.has("method") && !flags.has("set"),
+            "--plan already names methods; drop --method/--set (stage options go inline: \
+             \"compot@0.25,iters=5+gptq4\")"
+        );
+        return CompressionPlan::parse(spec, &defaults);
+    }
+    let name = flags.get("method").unwrap_or("compot");
+    let mut call = MethodCall::new(name);
+    for (k, v) in method_options(flags)? {
+        call = call.with(k, v);
+    }
+    // Fail fast on unknown methods/options before any model work.
+    MethodRegistry::global().build(&call)?;
+    Ok(CompressionPlan::single(call, defaults))
+}
+
+fn print_help() {
+    println!(
+        "compot — COMPOT reproduction coordinator\n\n\
+         usage:\n  compot table <1|2|3|4|5|6|7|8|9|10|11|12|13|14|15|18|19> [--items N] [--calib N] [--seed S]\n  \
+         compot figure <3|4..12|alloc:PRESET>\n  \
+         compot compress --model PRESET [--method M [--set k=v]... | --plan SPEC] --cr X [--dynamic]\n  \
+         compot eval --model PRESET\n  \
+         compot allocate --model PRESET\n  \
+         compot serve --model PRESET [--addr HOST:PORT] [--cr X [--method M | --plan SPEC]]\n  \
+         compot info\n\n\
+         plans: stages joined by '+', each 'name[@cr][,key=value]*'\n       \
+         e.g. --plan \"compot@0.25,iters=20+gptq4\"  (Table 7 composition)\n\n\
+         methods (MethodRegistry):"
+    );
+    print!("{}", MethodRegistry::global().help_table());
 }
 
 fn main() -> anyhow::Result<()> {
@@ -84,8 +174,9 @@ fn main() -> anyhow::Result<()> {
     let cmd = pos.first().map(String::as_str).unwrap_or("help");
     match cmd {
         "table" => {
+            flags.expect_known("table", &["items", "calib", "seed"])?;
             let id = pos.get(1).map(String::as_str).unwrap_or("");
-            let sc = scale_from(&flags);
+            let sc = scale_from(&flags)?;
             let md = match id {
                 "1" => tables::table1(&sc)?,
                 "2" => tables::table2(&sc)?,
@@ -104,13 +195,14 @@ fn main() -> anyhow::Result<()> {
                 "15" => tables::table15(&sc)?,
                 "18" => tables::table18(&sc)?,
                 "19" => tables::table19(&sc)?,
-                other => anyhow::bail!("unknown table '{other}' (see DESIGN.md §5)"),
+                other => anyhow::bail!("unknown table '{other}' (see README.md)"),
             };
             println!("{md}");
         }
         "figure" => {
+            flags.expect_known("figure", &["items", "calib", "seed"])?;
             let id = pos.get(1).map(String::as_str).unwrap_or("");
-            let sc = scale_from(&flags);
+            let sc = scale_from(&flags)?;
             let out = if id == "3" {
                 tables::figure3(&sc)?
             } else if let Some(preset) = id.strip_prefix("alloc:") {
@@ -136,31 +228,46 @@ fn main() -> anyhow::Result<()> {
             println!("{out}");
         }
         "compress" => {
-            let preset = flags.get("model").map(String::as_str).unwrap_or("llama-micro");
-            let method =
-                method_by_name(flags.get("method").map(String::as_str).unwrap_or("compot"))?;
-            let cr: f64 = flags.get("cr").and_then(|v| v.parse().ok()).unwrap_or(0.2);
-            let dynamic = flags.contains_key("dynamic");
-            let sc = scale_from(&flags);
+            flags.expect_known(
+                "compress",
+                &["model", "method", "plan", "set", "cr", "dynamic", "items", "calib", "seed"],
+            )?;
+            let preset = flags.get("model").unwrap_or("llama-micro");
+            let sc = scale_from(&flags)?;
+            let plan = plan_from_flags(&flags, &sc, false)?;
             let model = load(preset)?;
             let setup =
                 EvalSetup::standard(model.cfg.vocab, sc.calib, sc.seq_len, sc.items, sc.seed);
-            let row = run_method(&model, &setup, method, cr, dynamic)?;
+            let (compressed, report) = plan.run(&model, &setup.calib)?;
+            let row = evaluate(
+                &compressed,
+                &setup,
+                &plan.describe(),
+                plan.stages[0].cfg.target_cr,
+                report.composed_cr,
+                report.wall_secs,
+            );
+            for (stage, sr) in plan.stages.iter().zip(report.stages.iter()) {
+                println!(
+                    "stage {:<12} target CR {:.2} → achieved {:.3} ({})",
+                    stage.call.name, stage.cfg.target_cr, sr.model_cr, sr.method
+                );
+            }
             println!(
-                "{} @ CR {:.2} (achieved {:.3}) on {}: avg acc {:.1} | wiki ppl {:.2} | c4 ppl {:.2} | {:.1}s",
+                "{} (composed CR {:.3}) on {}: avg acc {:.1} | wiki ppl {:.2} | c4 ppl {:.2} | {:.1}s",
                 row.method,
-                cr,
                 row.model_cr,
                 preset,
                 row.avg_acc,
                 row.ppl_wiki,
                 row.ppl_c4,
-                row.compress_secs
+                report.wall_secs
             );
         }
         "eval" => {
-            let preset = flags.get("model").map(String::as_str).unwrap_or("llama-micro");
-            let sc = scale_from(&flags);
+            flags.expect_known("eval", &["model", "items", "calib", "seed"])?;
+            let preset = flags.get("model").unwrap_or("llama-micro");
+            let sc = scale_from(&flags)?;
             let model = load(preset)?;
             let setup =
                 EvalSetup::standard(model.cfg.vocab, sc.calib, sc.seq_len, sc.items, sc.seed);
@@ -174,25 +281,35 @@ fn main() -> anyhow::Result<()> {
             }
         }
         "allocate" => {
-            let preset = flags.get("model").map(String::as_str).unwrap_or("llama-micro");
-            let sc = scale_from(&flags);
+            flags.expect_known("allocate", &["model", "items", "calib", "seed"])?;
+            let preset = flags.get("model").unwrap_or("llama-micro");
+            let sc = scale_from(&flags)?;
             let out = tables::figure_alloc(preset, &sc)?;
             println!("{out}");
         }
         "serve" => {
-            let preset = flags.get("model").map(String::as_str).unwrap_or("llama-micro");
-            let addr = flags.get("addr").map(String::as_str).unwrap_or("127.0.0.1:7199");
+            flags.expect_known(
+                "serve",
+                &["model", "addr", "method", "plan", "set", "cr", "dynamic", "seed"],
+            )?;
+            let preset = flags.get("model").unwrap_or("llama-micro");
+            let addr = flags.get("addr").unwrap_or("127.0.0.1:7199");
             let model = load(preset)?;
-            let model = if let Some(crs) = flags.get("cr") {
-                let cr: f64 = crs.parse()?;
-                let method =
-                    method_by_name(flags.get("method").map(String::as_str).unwrap_or("compot"))?;
+            let mut info = Json::obj();
+            info.set("model", preset.into());
+            let model = if flags.has("cr") || flags.has("plan") {
+                let sc = scale_from(&flags)?;
+                let plan = plan_from_flags(&flags, &sc, true)?;
                 let lang = compot::data::SynthLang::wiki(model.cfg.vocab);
                 let calib = lang.gen_batch(8, 96, &mut compot::util::Rng::new(1));
-                let cap = calibrate(&model, &calib);
-                let (m, report) =
-                    compress_model(&model, &cap, &PipelineConfig::new(method, cr, true))?;
-                println!("serving compressed model (CR {:.3})", report.model_cr);
+                let (m, report) = plan.run(&model, &calib)?;
+                println!(
+                    "serving compressed model ({}; CR {:.3})",
+                    plan.describe(),
+                    report.composed_cr
+                );
+                info.set("plan", plan.describe().into());
+                info.set("model_cr", report.composed_cr.into());
                 m
             } else {
                 model
@@ -202,10 +319,12 @@ fn main() -> anyhow::Result<()> {
                 std::sync::Arc::new(model),
                 addr,
                 compot::serve::BatchPolicy::default(),
+                info,
                 |a| println!("ready on {a}"),
             )?;
         }
         "info" => {
+            flags.expect_known("info", &[])?;
             println!("artifacts dir: {:?}", artifacts_dir());
             match compot::runtime::Manifest::load(&artifacts_dir()) {
                 Ok(man) => {
@@ -219,18 +338,13 @@ fn main() -> anyhow::Result<()> {
             }
             println!("presets: {:?}", ModelConfig::PRESETS);
         }
-        _ => {
-            println!(
-                "compot — COMPOT reproduction coordinator\n\n\
-                 usage:\n  compot table <1|2|3|4|5|6|7|8|9|10|11|12|13|14|15|18|19> [--items N]\n  \
-                 compot figure <3|4..12|alloc:PRESET>\n  \
-                 compot compress --model PRESET --method M --cr X [--dynamic]\n  \
-                 compot eval --model PRESET\n  \
-                 compot allocate --model PRESET\n  \
-                 compot serve --model PRESET [--cr X]\n  \
-                 compot info\n\n\
-                 methods: compot svd-llm svd-llm-v2 cospadi dobi svd fwsvd asvd llm-pruner replaceme gptq4 gptq3 rtn4"
-            );
+        "help" => {
+            flags.expect_known("help", &[])?;
+            print_help();
+        }
+        other => {
+            print_help();
+            anyhow::bail!("unknown command '{other}'");
         }
     }
     Ok(())

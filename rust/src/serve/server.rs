@@ -4,6 +4,7 @@
 //!   → {"prompt": [1,2,3], "max_new": 16}
 //!   ← {"tokens": [...], "latency_ms": 1.8, "batch": 3}
 //!   → {"cmd": "stats"}   ← aggregated metrics
+//!   → {"cmd": "info"}    ← static serving metadata (model, compression plan, CR)
 //!   → {"cmd": "shutdown"}
 //!
 //! Thread-per-connection front-end feeds the shared [`Batcher`]; one worker
@@ -63,17 +64,21 @@ impl Metrics {
 }
 
 /// Run the server until a shutdown command. Returns the bound address
-/// through `on_ready` (port 0 = ephemeral).
+/// through `on_ready` (port 0 = ephemeral). `info` is static serving
+/// metadata (model preset, compression plan, achieved CR — whatever the
+/// launcher knows) exposed verbatim on `{"cmd":"info"}`.
 pub fn serve_blocking(
     model: Arc<Model>,
     addr: &str,
     policy: BatchPolicy,
+    info: Json,
     on_ready: impl FnOnce(std::net::SocketAddr),
 ) -> anyhow::Result<()> {
     let listener = TcpListener::bind(addr)?;
     listener.set_nonblocking(true)?;
     on_ready(listener.local_addr()?);
 
+    let info = Arc::new(info);
     let batcher: Arc<Batcher<Job>> = Arc::new(Batcher::new(policy));
     let metrics = Arc::new(Metrics::default());
     let shutdown = Arc::new(AtomicBool::new(false));
@@ -110,8 +115,9 @@ pub fn serve_blocking(
                 let batcher = batcher.clone();
                 let metrics = metrics.clone();
                 let shutdown = shutdown.clone();
+                let info = info.clone();
                 conns.push(std::thread::spawn(move || {
-                    let _ = handle_conn(stream, &batcher, &metrics, &shutdown);
+                    let _ = handle_conn(stream, &batcher, &metrics, &info, &shutdown);
                 }));
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -132,6 +138,7 @@ fn handle_conn(
     stream: TcpStream,
     batcher: &Batcher<Job>,
     metrics: &Metrics,
+    info: &Json,
     shutdown: &AtomicBool,
 ) -> anyhow::Result<()> {
     stream.set_nonblocking(false)?;
@@ -147,6 +154,9 @@ fn handle_conn(
             match cmd {
                 "stats" => {
                     writeln!(writer, "{}", metrics.to_json().to_string())?;
+                }
+                "info" => {
+                    writeln!(writer, "{}", info.to_string())?;
                 }
                 "shutdown" => {
                     shutdown.store(true, Ordering::Relaxed);
@@ -214,6 +224,13 @@ impl Client {
         Json::parse(&line).map_err(|e| anyhow::anyhow!("bad stats: {e}"))
     }
 
+    pub fn info(&mut self) -> anyhow::Result<Json> {
+        writeln!(self.stream, "{{\"cmd\":\"info\"}}")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(&line).map_err(|e| anyhow::anyhow!("bad info: {e}"))
+    }
+
     pub fn shutdown(&mut self) -> anyhow::Result<()> {
         writeln!(self.stream, "{{\"cmd\":\"shutdown\"}}")?;
         Ok(())
@@ -232,13 +249,17 @@ mod tests {
         let (addr_tx, addr_rx) = mpsc::channel();
         let m2 = model.clone();
         let server = std::thread::spawn(move || {
-            serve_blocking(m2, "127.0.0.1:0", BatchPolicy::default(), |a| {
+            let mut info = Json::obj();
+            info.set("model", "test-tiny".into());
+            serve_blocking(m2, "127.0.0.1:0", BatchPolicy::default(), info, |a| {
                 addr_tx.send(a).unwrap();
             })
             .unwrap();
         });
         let addr = addr_rx.recv().unwrap();
         let mut client = Client::connect(addr).unwrap();
+        let info = client.info().unwrap();
+        assert_eq!(info.get("model").and_then(Json::as_str), Some("test-tiny"));
         let r = client.request(&[1, 2, 3], 4).unwrap();
         assert_eq!(r.tokens.len(), 4);
         assert!(r.latency_ms >= 0.0);
@@ -261,6 +282,7 @@ mod tests {
                 m2,
                 "127.0.0.1:0",
                 BatchPolicy { max_batch: 4, max_wait: std::time::Duration::from_millis(3) },
+                Json::obj(),
                 |a| {
                     addr_tx.send(a).unwrap();
                 },

@@ -4,7 +4,8 @@
 //! been run, so `cargo test` stays green in a fresh checkout.
 
 use compot::compress::compot::{factorize, CompotConfig, DictInit};
-use compot::coordinator::pipeline::{calibrate, compress_model, Method, PipelineConfig};
+use compot::compress::{CalibContext, MethodCall, StageConfig};
+use compot::coordinator::pipeline::{calibrate, compress_with};
 use compot::data::corpus::corpus_split;
 use compot::eval::perplexity::perplexity;
 use compot::linalg::Mat;
@@ -162,14 +163,19 @@ fn pretrained_model_beats_chance_and_compresses() {
     // Compress at CR 0.2 — perplexity should degrade but stay far from
     // chance, and COMPOT should not lose to SVD-LLM (the paper's headline).
     let calib = corpus_split(&dir, "train", model.cfg.vocab, 8, 128, 6);
-    let cap = calibrate(&model, &calib);
-    let run = |method: Method| {
-        let (m, r) =
-            compress_model(&model, &cap, &PipelineConfig::new(method, 0.2, false)).unwrap();
+    let ctx = CalibContext::build(&model, &calib);
+    let run = |method: &str| {
+        let (m, r) = compress_with(
+            &model,
+            &ctx,
+            &MethodCall::new(method),
+            &StageConfig::new(0.2, false),
+        )
+        .unwrap();
         (perplexity(&m, &wiki), r.model_cr)
     };
-    let (ppl_compot, cr1) = run(Method::Compot(CompotConfig::default()));
-    let (ppl_svdllm, cr2) = run(Method::SvdLlm);
+    let (ppl_compot, cr1) = run("compot");
+    let (ppl_svdllm, cr2) = run("svd-llm");
     assert!(cr1 >= 0.2 - 1e-9 && cr2 >= 0.2 - 1e-9);
     assert!(ppl_compot < 256.0 && ppl_compot > ppl * 0.9);
     assert!(
