@@ -1,0 +1,130 @@
+//! Decode-throughput benchmark: prefill tok/s, KV-cached vs uncached decode
+//! tok/s, and direct evidence that per-token decode cost is O(T) with the
+//! cache (a step at position 2N is nowhere near 2× a step at position N,
+//! while the uncached full forward scales ~quadratically).
+//!
+//! Run: `cargo bench --bench decode` (add `-- --tiny` for the CI smoke run
+//! on the test-tiny config). Writes the numbers to `BENCH_decode.json`
+//! (override the path with `BENCH_DECODE_OUT`).
+
+use compot::model::config::ModelConfig;
+use compot::model::decode::{DecodeSession, SamplerCfg};
+use compot::model::Model;
+use compot::util::json::Json;
+use compot::util::timer::{bench, humanize};
+use compot::util::{Rng, Timer};
+
+/// Median seconds of one decode step taken from the session's current
+/// position, sampled over fresh clones so the position never advances.
+fn step_cost(model: &Model, at: &DecodeSession, reps: usize) -> f64 {
+    let mut samples: Vec<f64> = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let mut s = at.clone();
+        let t = Timer::start();
+        s.step(model);
+        samples.push(t.secs());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+/// Step a session forward until `target` tokens are cached.
+fn advance_to(model: &Model, s: &mut DecodeSession, target: usize) {
+    while s.position() < target && s.step(model).is_some() {}
+}
+
+fn main() {
+    let tiny = std::env::args().any(|a| a == "--tiny");
+    let budget = std::env::var("BENCH_SECS").ok().and_then(|v| v.parse().ok()).unwrap_or(0.4);
+    let (cfg, prompt_len, gen_len, n_pos) = if tiny {
+        (ModelConfig::test_tiny(), 12usize, 12usize, 16usize)
+    } else {
+        (ModelConfig::llama_micro(), 32, 32, 32)
+    };
+    let mut rng = Rng::new(99);
+    let model = Model::random(&cfg, &mut rng);
+    let prompt: Vec<u16> = (0..prompt_len as u16).map(|i| (i * 7 + 1) % cfg.vocab as u16).collect();
+
+    // --- prefill throughput ---
+    let st_prefill = bench(
+        || {
+            let mut cache = model.new_cache();
+            std::hint::black_box(model.prefill(&mut cache, &prompt));
+        },
+        budget,
+        2000,
+    );
+    let prefill_tok_s = prompt_len as f64 / st_prefill.median_s;
+    println!("{}", st_prefill.format(&format!("prefill {prompt_len} tokens ({})", cfg.name)));
+
+    // --- end-to-end generation: KV-cached sessions vs full re-forward ---
+    let st_cached = bench(
+        || {
+            std::hint::black_box(model.greedy_decode(&prompt, gen_len));
+        },
+        budget,
+        500,
+    );
+    let st_full = bench(
+        || {
+            std::hint::black_box(model.greedy_decode_full(&prompt, gen_len));
+        },
+        budget,
+        500,
+    );
+    let cached_tok_s = gen_len as f64 / st_cached.median_s;
+    let full_tok_s = gen_len as f64 / st_full.median_s;
+    println!("{}", st_cached.format(&format!("generate {gen_len} cached (incremental)")));
+    println!("{}", st_full.format(&format!("generate {gen_len} uncached (full fwd)")));
+    println!(
+        "decode throughput: {cached_tok_s:.0} tok/s cached vs {full_tok_s:.0} tok/s uncached \
+         ({:.2}x speedup)",
+        cached_tok_s / full_tok_s
+    );
+
+    // --- O(T) scaling: step cost at position N vs position 2N ---
+    // The acceptance bar: generating token 2N from an N-token prompt must
+    // not cost ~2× token N+1. With the cache, a step is dominated by the
+    // (position-independent) projections plus O(T) attention.
+    let reps = 60;
+    let mut session = DecodeSession::start(
+        &model,
+        &prompt[..n_pos.min(prompt_len)],
+        usize::MAX,
+        SamplerCfg::greedy(),
+    );
+    advance_to(&model, &mut session, n_pos);
+    let step_n = step_cost(&model, &session, reps);
+    advance_to(&model, &mut session, 2 * n_pos);
+    let step_2n = step_cost(&model, &session, reps);
+    let ratio = step_2n / step_n;
+    println!(
+        "step cost @T={n_pos}: {} | @T={}: {} | ratio {ratio:.2} (O(T²) would be ≥2)",
+        humanize(step_n),
+        2 * n_pos,
+        humanize(step_2n)
+    );
+    if ratio >= 2.0 {
+        eprintln!("WARNING: step-cost ratio {ratio:.2} ≥ 2 — cache not amortizing");
+    }
+
+    // --- record the trajectory point ---
+    let mut j = Json::obj();
+    j.set("bench", "decode".into())
+        .set("model", cfg.name.as_str().into())
+        .set("prompt_len", prompt_len.into())
+        .set("gen_len", gen_len.into())
+        .set("prefill_tok_s", prefill_tok_s.into())
+        .set("decode_tok_s_cached", cached_tok_s.into())
+        .set("decode_tok_s_uncached", full_tok_s.into())
+        .set("cached_speedup", (cached_tok_s / full_tok_s).into())
+        .set("step_s_at_n", step_n.into())
+        .set("step_s_at_2n", step_2n.into())
+        .set("step_cost_ratio_2n_vs_n", ratio.into())
+        .set("o_t_scaling_ok", Json::Bool(ratio < 2.0));
+    let out = std::env::var("BENCH_DECODE_OUT").unwrap_or_else(|_| "BENCH_decode.json".into());
+    match std::fs::write(&out, j.to_string() + "\n") {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

@@ -91,6 +91,20 @@ impl LinearWeight {
         }
     }
 
+    /// Single-token decode step: y = x·W for one activation row, executed
+    /// natively in the stored representation — Dense is one mat-vec, LowRank
+    /// is two rank-r mat-vecs, Factorized is a mat-vec through the dictionary
+    /// followed by the sparse gather. No densification, no batch-Mat
+    /// round-trip; mirrors [`apply`](Self::apply)'s accumulation order so the
+    /// KV-cached decode path stays bit-identical to the batched forward.
+    pub fn apply_row(&self, x: &[f32]) -> Vec<f32> {
+        match self {
+            LinearWeight::Dense(w) => gemm::matvec_row(x, w),
+            LinearWeight::LowRank { b, c } => gemm::matvec_row(&gemm::matvec_row(x, b), c),
+            LinearWeight::Factorized { a, s } => s.apply_after_row(&gemm::matvec_row(x, a)),
+        }
+    }
+
     /// Materialize the represented Ŵ (tests, error measurement).
     pub fn to_dense(&self) -> Mat {
         match self {
@@ -279,5 +293,38 @@ mod tests {
         assert_eq!(lw.storage_bits(), 16 * 200);
         assert_eq!(lw.in_dim(), 10);
         assert_eq!(lw.out_dim(), 20);
+    }
+
+    #[test]
+    fn apply_row_matches_apply_for_every_variant() {
+        // Incremental decode correctness hinges on this: the per-token path
+        // must agree with the batched path on the same activation row.
+        let mut rng = Rng::new(40);
+        let (m, n, r, k, s) = (24usize, 36usize, 6usize, 12usize, 5usize);
+        let variants = [
+            LinearWeight::Dense(Mat::randn(&mut rng, m, n, 1.0)),
+            LinearWeight::LowRank {
+                b: Mat::randn(&mut rng, m, r, 1.0),
+                c: Mat::randn(&mut rng, r, n, 1.0),
+            },
+            LinearWeight::Factorized {
+                a: Mat::randn(&mut rng, m, k, 1.0),
+                s: ColumnSparse::hard_threshold(&Mat::randn(&mut rng, k, n, 1.0), s),
+            },
+        ];
+        for lw in &variants {
+            let x = Mat::randn(&mut rng, 1, m, 1.0);
+            let batched = lw.apply(&x);
+            let row = lw.apply_row(x.row(0));
+            assert_eq!(row.len(), lw.out_dim());
+            for j in 0..n {
+                assert!(
+                    (row[j] - batched[(0, j)]).abs() == 0.0,
+                    "{lw:?} col {j}: {} vs {}",
+                    row[j],
+                    batched[(0, j)]
+                );
+            }
+        }
     }
 }

@@ -34,7 +34,14 @@ impl ColumnSparse {
     /// copies per iteration on the hot path.
     pub fn hard_threshold_zt(zt: &Mat, s: usize) -> ColumnSparse {
         let (n, k) = zt.shape();
+        // s is clamped to k (keeping more entries than a column has is the
+        // identity); s = 0 or an empty matrix degenerates to the all-zero
+        // sparse map — both must work, the allocator can produce them at
+        // extreme CRs.
         let s = s.min(k);
+        if s == 0 || n == 0 {
+            return ColumnSparse { k, n, s, idx: Vec::new(), val: Vec::new() };
+        }
         let mut idx = vec![0u32; n * s];
         let mut val = vec![0f32; n * s];
         let mut order: Vec<u32> = Vec::with_capacity(k);
@@ -42,11 +49,13 @@ impl ColumnSparse {
             let row = zt.row(j);
             order.clear();
             order.extend(0..k as u32);
-            // Partial selection of the s largest |z|.
-            let (top, _, _) = order.select_nth_unstable_by(s.saturating_sub(1), |&a, &b| {
+            // Partial selection of the s largest |z|. total_cmp keeps the
+            // comparator a total order even on NaN/±0 inputs, so selection
+            // cannot panic on degenerate calibration data.
+            let (top, _, _) = order.select_nth_unstable_by(s - 1, |&a, &b| {
                 let ma = row[a as usize].abs();
                 let mb = row[b as usize].abs();
-                mb.partial_cmp(&ma).unwrap().then(a.cmp(&b))
+                mb.total_cmp(&ma).then(a.cmp(&b))
             });
             let mut chosen: Vec<u32> = top.to_vec();
             chosen.push(order[s - 1]);
@@ -142,18 +151,34 @@ impl ColumnSparse {
         }
         let mut out = Mat::zeros(rows, self.n);
         for r in 0..rows {
-            let trow = t.row(r);
-            let orow = out.row_mut(r);
-            for j in 0..self.n {
-                let base = j * s;
-                let mut acc = 0f32;
-                for tti in 0..s {
-                    acc += trow[self.idx[base + tti] as usize] * self.val[base + tti];
-                }
-                orow[j] = acc;
-            }
+            self.gather_row_into(t.row(r), out.row_mut(r));
         }
         out
+    }
+
+    /// Single-row [`apply_after`]: y = t·S for one activation row (len k).
+    /// The compressed-native decode step of the `S_O` half — one token's
+    /// output features via an s-wide gather per column, never densifying.
+    pub fn apply_after_row(&self, t: &[f32]) -> Vec<f32> {
+        let mut out = vec![0f32; self.n];
+        self.gather_row_into(t, &mut out);
+        out
+    }
+
+    /// Shared row kernel: overwrite `out` (len n) with t·S. Writes every
+    /// slot, so callers need no zero-init of their own.
+    fn gather_row_into(&self, t: &[f32], out: &mut [f32]) {
+        assert_eq!(t.len(), self.k, "apply_after_row: inner dim");
+        debug_assert_eq!(out.len(), self.n);
+        let s = self.s;
+        for (j, o) in out.iter_mut().enumerate() {
+            let base = j * s;
+            let mut acc = 0f32;
+            for tti in 0..s {
+                acc += t[self.idx[base + tti] as usize] * self.val[base + tti];
+            }
+            *o = acc;
+        }
     }
 
     /// Squared Frobenius norm (used by the free error identity
@@ -319,6 +344,81 @@ mod tests {
         assert_eq!(d[(3, 0)], 1.5);
         assert_eq!(d[(1, 1)], 0.25);
         assert_eq!(cs.s(), 2);
+    }
+
+    #[test]
+    fn s_zero_yields_empty_map() {
+        let mut rng = Rng::new(80);
+        let z = Mat::randn(&mut rng, 5, 3, 1.0);
+        let cs = ColumnSparse::hard_threshold(&z, 0);
+        assert_eq!((cs.k(), cs.n(), cs.s()), (5, 3, 0));
+        assert_eq!(cs.to_dense(), Mat::zeros(5, 3));
+        assert_eq!(cs.fro_sq(), 0.0);
+        // mask bits still accounted (Eq. 11 charges the k×n position mask)
+        assert_eq!(cs.storage_bits(), 15);
+        // both apply branches produce zeros
+        for rows in [1, 6] {
+            let t = Mat::randn(&mut rng, rows, 5, 1.0);
+            assert_eq!(cs.apply_after(&t), Mat::zeros(rows, 3));
+        }
+        assert_eq!(cs.iter().count(), 0);
+    }
+
+    #[test]
+    fn s_larger_than_k_clamps_to_identity() {
+        let mut rng = Rng::new(81);
+        let z = Mat::randn(&mut rng, 4, 6, 1.0);
+        let cs = ColumnSparse::hard_threshold(&z, 10);
+        assert_eq!(cs.s(), 4);
+        assert_eq!(cs.to_dense(), z);
+    }
+
+    #[test]
+    fn empty_matrices_do_not_panic() {
+        // n = 0: no columns at all.
+        let cs = ColumnSparse::hard_threshold(&Mat::zeros(4, 0), 2);
+        assert_eq!((cs.k(), cs.n(), cs.s()), (4, 0, 2));
+        assert_eq!(cs.to_dense().shape(), (4, 0));
+        assert_eq!(cs.apply_after(&Mat::zeros(3, 4)).shape(), (3, 0));
+        // k = 0: columns with no rows — s clamps to 0.
+        let cs = ColumnSparse::hard_threshold(&Mat::zeros(0, 5), 2);
+        assert_eq!((cs.k(), cs.n(), cs.s()), (0, 5, 0));
+        assert_eq!(cs.apply_after(&Mat::zeros(2, 0)), Mat::zeros(2, 5));
+        // 0 × 0.
+        let cs = ColumnSparse::hard_threshold(&Mat::zeros(0, 0), 1);
+        assert_eq!(cs.storage_bits(), 0);
+    }
+
+    #[test]
+    fn non_finite_entries_do_not_panic_selection() {
+        // total_cmp keeps the selection deterministic even with NaN columns.
+        let mut z = Mat::zeros(4, 2);
+        z[(1, 0)] = f32::NAN;
+        z[(2, 0)] = 3.0;
+        z[(0, 1)] = -2.0;
+        let cs = ColumnSparse::hard_threshold(&z, 2);
+        assert_eq!(cs.s(), 2);
+        // finite column selected normally
+        assert_eq!(cs.to_dense()[(0, 1)], -2.0);
+        // the finite large entry of column 0 survives alongside the NaN
+        assert_eq!(cs.to_dense()[(2, 0)], 3.0);
+    }
+
+    #[test]
+    fn apply_after_row_matches_batched() {
+        prop::check(82, 20, |rng, _| {
+            let k = rng.range(1, 12);
+            let n = rng.range(1, 12);
+            let s = rng.range(0, k + 1);
+            let z = Mat::randn(rng, k, n, 1.0);
+            let cs = ColumnSparse::hard_threshold(&z, s);
+            let t = Mat::randn(rng, 1, k, 1.0);
+            let row = cs.apply_after_row(t.row(0));
+            let full = cs.apply_after(&t);
+            for j in 0..n {
+                assert!((row[j] - full[(0, j)]).abs() == 0.0);
+            }
+        });
     }
 
     #[test]

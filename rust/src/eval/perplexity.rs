@@ -16,9 +16,13 @@ pub fn log_prob(logits_row: &[f32], target: usize) -> f64 {
 }
 
 /// Total negative log-likelihood and token count of one sequence
-/// (predicting tokens 1..T from 0..T-1).
+/// (predicting tokens 1..T from 0..T-1). Runs through the incremental
+/// runtime's prefill, which is bit-identical to the stateless forward (see
+/// `model::decode`) — so perplexity exercises the same execution path the
+/// server decodes with.
 pub fn sequence_nll(model: &Model, tokens: &[u16]) -> (f64, usize) {
-    let logits = model.forward(tokens);
+    let mut cache = model.new_cache_with(tokens.len());
+    let logits = model.prefill(&mut cache, tokens);
     nll_from_logits(&logits, tokens)
 }
 
@@ -53,6 +57,17 @@ mod tests {
         assert!((total - 1.0).abs() < 1e-9);
         // argmax target has highest prob
         assert!(log_prob(&logits, 1) > log_prob(&logits, 0));
+    }
+
+    #[test]
+    fn prefill_nll_is_identical_to_stateless_forward() {
+        let cfg = ModelConfig::test_tiny();
+        let model = crate::model::Model::random(&cfg, &mut Rng::new(9));
+        let seq: Vec<u16> = (0..24u16).map(|i| (i * 13) % 64).collect();
+        let (nll_pre, count_pre) = sequence_nll(&model, &seq);
+        let (nll_full, count_full) = nll_from_logits(&model.forward(&seq), &seq);
+        assert_eq!(count_pre, count_full);
+        assert_eq!(nll_pre, nll_full);
     }
 
     #[test]

@@ -8,8 +8,9 @@
 //!   pipeline (every method is a [`compress::ModelCompressor`] built by name
 //!   from the [`compress::MethodRegistry`], composable into
 //!   [`coordinator::plan::CompressionPlan`]s), the paper's one-shot global CR
-//!   allocator, every baseline method, the evaluation harness, and a batched
-//!   inference server over compressed models.
+//!   allocator, every baseline method, the evaluation harness, and a
+//!   continuously batched inference server that decodes through KV-cached
+//!   sessions executing compressed weights natively ([`model::decode`]).
 //! - **L2/L1 (python/compile)** — JAX model + Pallas kernels, AOT-lowered to
 //!   HLO text at build time (`make artifacts`), loaded at runtime through the
 //!   PJRT C API (`runtime` module). Python is never on the request path.

@@ -55,6 +55,33 @@ fn axpy(a: f32, x: &[f32], c: &mut [f32]) {
     }
 }
 
+/// y = x·B for a single activation row (x: len k, B: k×n ⇒ y: len n).
+///
+/// The matrix–vector kernel the incremental decode path runs per token.
+/// Mirrors [`matmul`]'s per-row accumulation exactly (ascending k, zero
+/// multipliers skipped) so a KV-cached decode step is bit-identical to the
+/// same row of the batched forward.
+pub fn matvec_row(x: &[f32], b: &Mat) -> Vec<f32> {
+    assert_eq!(
+        x.len(),
+        b.rows(),
+        "matvec_row: inner dims {} · {}x{}",
+        x.len(),
+        b.rows(),
+        b.cols()
+    );
+    let n = b.cols();
+    let mut out = vec![0.0f32; n];
+    let b_data = b.data();
+    for (kk, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        axpy(xi, &b_data[kk * n..kk * n + n], &mut out);
+    }
+    out
+}
+
 /// C = Aᵀ · B  (A: k×m, B: k×n ⇒ C: m×n).
 ///
 /// Uses an explicit transpose of A then the row-major kernel — the transpose
@@ -178,6 +205,29 @@ mod tests {
         let ym = matmul(&a, &xm);
         for i in 0..33 {
             assert!((y[i] - ym[(i, 0)]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matvec_row_is_bit_identical_to_matmul_row() {
+        // The decode path leans on this: a single-row product must reproduce
+        // the batched GEMM's row exactly (same accumulation order).
+        let mut rng = Rng::new(14);
+        for &(t, k, n) in &[(1usize, 7usize, 5usize), (6, 96, 256), (9, 129, 67)] {
+            let a = Mat::randn(&mut rng, t, k, 1.0);
+            let b = Mat::randn(&mut rng, k, n, 1.0);
+            let c = matmul(&a, &b);
+            for i in 0..t {
+                let y = matvec_row(a.row(i), &b);
+                for j in 0..n {
+                    assert!(
+                        (y[j] - c[(i, j)]).abs() == 0.0,
+                        "row {i} col {j}: {} vs {}",
+                        y[j],
+                        c[(i, j)]
+                    );
+                }
+            }
         }
     }
 

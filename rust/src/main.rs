@@ -8,7 +8,8 @@
 //! compot compress --model <preset> --plan "compot@0.25+gptq4"
 //!                                                        multi-stage compression plan
 //! compot eval --model <preset>                           baseline evaluation
-//! compot serve --model <preset> [--addr host:port] [--cr x --method m | --plan p]
+//! compot serve --model <preset> [--addr host:port] [--max-batch n]
+//!              [--max-wait-ms ms] [--cr x --method m | --plan p]
 //! compot allocate --model <preset>                       print Algorithm-2 allocation
 //! compot info                                            artifacts / presets
 //! compot help                                            usage + registered methods
@@ -159,7 +160,8 @@ fn print_help() {
          compot compress --model PRESET [--method M [--set k=v]... | --plan SPEC] --cr X [--dynamic]\n  \
          compot eval --model PRESET\n  \
          compot allocate --model PRESET\n  \
-         compot serve --model PRESET [--addr HOST:PORT] [--cr X [--method M | --plan SPEC]]\n  \
+         compot serve --model PRESET [--addr HOST:PORT] [--max-batch N] [--max-wait-ms MS]\n              \
+         [--cr X [--method M | --plan SPEC]]\n  \
          compot info\n\n\
          plans: stages joined by '+', each 'name[@cr][,key=value]*'\n       \
          e.g. --plan \"compot@0.25,iters=20+gptq4\"  (Table 7 composition)\n\n\
@@ -290,10 +292,21 @@ fn main() -> anyhow::Result<()> {
         "serve" => {
             flags.expect_known(
                 "serve",
-                &["model", "addr", "method", "plan", "set", "cr", "dynamic", "seed"],
+                &[
+                    "model", "addr", "method", "plan", "set", "cr", "dynamic", "seed",
+                    "max-batch", "max-wait-ms",
+                ],
             )?;
             let preset = flags.get("model").unwrap_or("llama-micro");
             let addr = flags.get("addr").unwrap_or("127.0.0.1:7199");
+            let mut policy = compot::serve::BatchPolicy::default();
+            if let Some(v) = flags.get_parsed::<usize>("max-batch")? {
+                anyhow::ensure!(v >= 1, "--max-batch must be at least 1");
+                policy.max_batch = v;
+            }
+            if let Some(v) = flags.get_parsed::<u64>("max-wait-ms")? {
+                policy.max_wait = std::time::Duration::from_millis(v);
+            }
             let model = load(preset)?;
             let mut info = Json::obj();
             info.set("model", preset.into());
@@ -315,13 +328,9 @@ fn main() -> anyhow::Result<()> {
                 model
             };
             println!("listening on {addr} (json-lines; {{\"cmd\":\"shutdown\"}} to stop)");
-            compot::serve::serve_blocking(
-                std::sync::Arc::new(model),
-                addr,
-                compot::serve::BatchPolicy::default(),
-                info,
-                |a| println!("ready on {a}"),
-            )?;
+            compot::serve::serve_blocking(std::sync::Arc::new(model), addr, policy, info, |a| {
+                println!("ready on {a}")
+            })?;
         }
         "info" => {
             flags.expect_known("info", &[])?;

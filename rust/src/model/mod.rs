@@ -5,16 +5,20 @@
 //! method can be evaluated end-to-end without Python on the path. The
 //! decoder-only LM ([`transformer`]) covers the language tables; the
 //! encoder–decoder ([`encdec`]) covers the Whisper-like audio and VLM
-//! transfer experiments.
+//! transfer experiments. Generation runs through the KV-cached incremental
+//! runtime ([`decode`]): prefill once, then O(T) compressed-native decode
+//! steps per token.
 //!
 //! Weights are *trained at build time* by `python/compile/pretrain.py` (JAX,
 //! `make artifacts`) and loaded from the binary format in [`weights`]; unit
 //! tests use randomly initialized models.
 
 pub mod config;
+pub mod decode;
 pub mod encdec;
 pub mod transformer;
 pub mod weights;
 
 pub use config::{ModelConfig, ProjKind};
+pub use decode::{DecodeSession, KvCache, Sampler, SamplerCfg};
 pub use transformer::{Block, Model};

@@ -64,43 +64,61 @@ impl Capture {
 
 pub fn rmsnorm(x: &Mat, gain: &[f32]) -> Mat {
     let mut out = x.clone();
-    let d = x.cols();
-    assert_eq!(gain.len(), d);
     for i in 0..x.rows() {
-        let row = out.row_mut(i);
-        let ms: f64 = row.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / d as f64;
-        let inv = 1.0 / (ms + 1e-6).sqrt() as f32;
-        for (v, g) in row.iter_mut().zip(gain.iter()) {
-            *v *= inv * *g;
-        }
+        rmsnorm_row_inplace(out.row_mut(i), gain);
     }
     out
 }
 
+/// RMSNorm of a single activation row, in place — the per-token form the
+/// incremental decode path runs (identical arithmetic to [`rmsnorm`]).
+pub fn rmsnorm_row_inplace(row: &mut [f32], gain: &[f32]) {
+    let d = row.len();
+    assert_eq!(gain.len(), d);
+    let ms: f64 = row.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / d as f64;
+    let inv = 1.0 / (ms + 1e-6).sqrt() as f32;
+    for (v, g) in row.iter_mut().zip(gain.iter()) {
+        *v *= inv * *g;
+    }
+}
+
+/// Allocating convenience form of [`rmsnorm_row_inplace`].
+pub fn rmsnorm_row(row: &[f32], gain: &[f32]) -> Vec<f32> {
+    let mut out = row.to_vec();
+    rmsnorm_row_inplace(&mut out, gain);
+    out
+}
+
 #[inline]
-fn silu(x: f32) -> f32 {
+pub(crate) fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
 /// Rotary position embedding applied in place over heads of width
 /// `head_dim`, positions offset by `pos0`.
 pub fn apply_rope(x: &mut Mat, head_dim: usize, theta: f32, pos0: usize) {
-    let (t_len, width) = x.shape();
+    for t in 0..x.rows() {
+        rope_row(x.row_mut(t), head_dim, theta, pos0 + t);
+    }
+}
+
+/// RoPE for a single row at absolute position `pos` — the per-token form
+/// the incremental decode path runs (identical arithmetic to
+/// [`apply_rope`]).
+pub fn rope_row(row: &mut [f32], head_dim: usize, theta: f32, pos: usize) {
+    let width = row.len();
     assert_eq!(width % head_dim, 0);
     let half = head_dim / 2;
-    for t in 0..t_len {
-        let pos = (pos0 + t) as f32;
-        let row = x.row_mut(t);
-        for h in 0..width / head_dim {
-            let base = h * head_dim;
-            for i in 0..half {
-                let freq = theta.powf(-2.0 * i as f32 / head_dim as f32);
-                let (sin, cos) = (pos * freq).sin_cos();
-                let a = row[base + i];
-                let b = row[base + half + i];
-                row[base + i] = a * cos - b * sin;
-                row[base + half + i] = a * sin + b * cos;
-            }
+    let pos = pos as f32;
+    for h in 0..width / head_dim {
+        let base = h * head_dim;
+        for i in 0..half {
+            let freq = theta.powf(-2.0 * i as f32 / head_dim as f32);
+            let (sin, cos) = (pos * freq).sin_cos();
+            let a = row[base + i];
+            let b = row[base + half + i];
+            row[base + i] = a * cos - b * sin;
+            row[base + half + i] = a * sin + b * cos;
         }
     }
 }
@@ -176,6 +194,25 @@ impl Block {
         layer: usize,
         capture: Option<&mut Capture>,
     ) -> Mat {
+        self.forward_core(x, head_dim, theta, causal, layer, capture, None)
+    }
+
+    /// The one batched block body. With `cache`, RoPE positions start at the
+    /// cache offset, the block's post-RoPE K/V rows are appended, and
+    /// attention runs over the cached prefix plus the new rows (the prefill
+    /// path); without it, this is the stateless forward. Keeping a single
+    /// body is what guarantees the cached and stateless paths cannot drift.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn forward_core(
+        &self,
+        x: &Mat,
+        head_dim: usize,
+        theta: f32,
+        causal: bool,
+        layer: usize,
+        capture: Option<&mut Capture>,
+        cache: Option<(&mut crate::model::decode::LayerKv, usize)>,
+    ) -> Mat {
         let mut cap = capture;
         // ---- attention ----
         let xn = rmsnorm(x, &self.attn_norm);
@@ -184,18 +221,30 @@ impl Block {
             c.record(layer, ProjKind::K, &xn);
             c.record(layer, ProjKind::V, &xn);
         }
+        let pos0 = cache.as_ref().map_or(0, |(_, p)| *p);
         let mut q = self.q.apply(&xn);
         let mut k = self.k.apply(&xn);
         let v = self.v.apply(&xn);
-        apply_rope(&mut q, head_dim, theta, 0);
-        apply_rope(&mut k, head_dim, theta, 0);
+        apply_rope(&mut q, head_dim, theta, pos0);
+        apply_rope(&mut k, head_dim, theta, pos0);
+        // Attention context: the new K/V rows alone, or (prefill) the cache
+        // contents up to and including them. The cached rows 0..pos0+T are
+        // bit-identical to what the stateless path would recompute.
+        let (k_ctx, v_ctx) = match cache {
+            Some((kv, p)) => {
+                kv.append(p, &k, &v);
+                let total = p + x.rows();
+                (kv.k_rows(total), kv.v_rows(total))
+            }
+            None => (k, v),
+        };
         let q_per_kv = self.n_heads / self.n_kv_heads;
         let mut concat = Mat::zeros(x.rows(), self.n_heads * head_dim);
         for h in 0..self.n_heads {
             let kvh = h / q_per_kv;
             let qh = head_slice(&q, h, head_dim);
-            let kh = head_slice(&k, kvh, head_dim);
-            let vh = head_slice(&v, kvh, head_dim);
+            let kh = head_slice(&k_ctx, kvh, head_dim);
+            let vh = head_slice(&v_ctx, kvh, head_dim);
             let oh = attention_head(&qh, &kh, &vh, causal);
             for t in 0..x.rows() {
                 concat.row_mut(t)[h * head_dim..(h + 1) * head_dim].copy_from_slice(oh.row(t));
@@ -327,19 +376,24 @@ impl Model {
         gemm::matmul(&self.hidden_states(tokens, Some(capture)), &self.lm_head)
     }
 
-    /// Greedy continuation of `prompt` by `max_new` tokens.
+    /// Greedy continuation of `prompt` by `max_new` tokens, via the
+    /// KV-cached incremental runtime ([`crate::model::decode`]): one prefill
+    /// over the prompt, then O(T) decode steps. Returns `[]` on an empty
+    /// prompt.
     pub fn greedy_decode(&self, prompt: &[u16], max_new: usize) -> Vec<u16> {
+        self.generate(prompt, max_new, crate::model::decode::SamplerCfg::greedy())
+    }
+
+    /// Reference greedy decode that recomputes the full O(T²) forward for
+    /// every generated token. Kept for cached-vs-uncached parity tests and
+    /// the decode benchmark; everything else should use
+    /// [`greedy_decode`](Self::greedy_decode).
+    pub fn greedy_decode_full(&self, prompt: &[u16], max_new: usize) -> Vec<u16> {
         let mut seq: Vec<u16> = prompt.to_vec();
         for _ in 0..max_new {
             let logits = self.forward(&seq);
             let last = logits.row(logits.rows() - 1);
-            let mut best = 0usize;
-            for (i, &v) in last.iter().enumerate() {
-                if v > last[best] {
-                    best = i;
-                }
-            }
-            seq.push(best as u16);
+            seq.push(crate::model::decode::argmax(last));
             if seq.len() >= self.cfg.max_seq {
                 break;
             }

@@ -1,7 +1,11 @@
-//! Request batching: collect up to `max_batch` requests or wait at most
-//! `max_wait`, whichever first — the standard dynamic-batching policy.
+//! Request queueing for the continuous-batching worker: a blocking batch
+//! drain (up to `max_batch` items or `max_wait`, whichever first — the
+//! standard dynamic-batching admission policy) plus a non-blocking
+//! [`Batcher::try_drain`] the worker uses to admit new sessions into a
+//! running token-step batch without stalling the sessions already decoding.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -22,7 +26,7 @@ pub struct Batcher<T> {
     queue: Mutex<VecDeque<T>>,
     signal: Condvar,
     policy: BatchPolicy,
-    closed: Mutex<bool>,
+    closed: AtomicBool,
 }
 
 impl<T> Batcher<T> {
@@ -31,22 +35,37 @@ impl<T> Batcher<T> {
             queue: Mutex::new(VecDeque::new()),
             signal: Condvar::new(),
             policy,
-            closed: Mutex::new(false),
+            closed: AtomicBool::new(false),
         }
     }
 
-    pub fn push(&self, item: T) {
-        self.queue.lock().unwrap().push_back(item);
+    /// Enqueue an item. Returns `false` (item dropped) once the batcher is
+    /// closed — the closed check happens under the queue lock, so an item
+    /// accepted here is guaranteed to be seen by the draining worker before
+    /// it observes the closed-and-empty exit condition.
+    pub fn push(&self, item: T) -> bool {
+        let mut q = self.queue.lock().unwrap();
+        if self.closed.load(Ordering::SeqCst) {
+            return false;
+        }
+        q.push_back(item);
+        drop(q);
         self.signal.notify_one();
+        true
     }
 
+    /// Close the queue: already-enqueued items still drain (graceful
+    /// shutdown), new pushes are rejected.
     pub fn close(&self) {
-        *self.closed.lock().unwrap() = true;
+        // Take the lock so close serializes against in-flight pushes; after
+        // this returns, every accepted item is in the queue.
+        let _q = self.queue.lock().unwrap();
+        self.closed.store(true, Ordering::SeqCst);
         self.signal.notify_all();
     }
 
     pub fn is_closed(&self) -> bool {
-        *self.closed.lock().unwrap()
+        self.closed.load(Ordering::SeqCst)
     }
 
     pub fn len(&self) -> usize {
@@ -63,7 +82,7 @@ impl<T> Batcher<T> {
     pub fn next_batch(&self) -> Vec<T> {
         let mut q = self.queue.lock().unwrap();
         while q.is_empty() {
-            if *self.closed.lock().unwrap() {
+            if self.closed.load(Ordering::SeqCst) {
                 return Vec::new();
             }
             let (guard, _) = self.signal.wait_timeout(q, Duration::from_millis(50)).unwrap();
@@ -85,6 +104,14 @@ impl<T> Batcher<T> {
         let take = q.len().min(self.policy.max_batch);
         q.drain(..take).collect()
     }
+
+    /// Non-blocking drain of up to `max` items — how the continuous-batching
+    /// worker tops up a running batch between token steps.
+    pub fn try_drain(&self, max: usize) -> Vec<T> {
+        let mut q = self.queue.lock().unwrap();
+        let take = q.len().min(max);
+        q.drain(..take).collect()
+    }
 }
 
 #[cfg(test)]
@@ -99,7 +126,7 @@ mod tests {
             max_wait: Duration::from_millis(1),
         });
         for i in 0..5 {
-            b.push(i);
+            assert!(b.push(i));
         }
         assert_eq!(b.next_batch(), vec![0, 1, 2]);
         assert_eq!(b.next_batch(), vec![3, 4]);
@@ -134,6 +161,33 @@ mod tests {
     }
 
     #[test]
+    fn close_drains_queued_items_but_rejects_new_ones() {
+        let b: Batcher<u32> = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+        });
+        assert!(b.push(1));
+        assert!(b.push(2));
+        b.close();
+        assert!(!b.push(3), "push after close must be rejected");
+        assert_eq!(b.next_batch(), vec![1, 2]);
+        assert!(b.next_batch().is_empty());
+        assert_eq!(b.len(), 0);
+    }
+
+    #[test]
+    fn try_drain_is_non_blocking_and_bounded() {
+        let b: Batcher<u32> = Batcher::new(BatchPolicy::default());
+        assert!(b.try_drain(4).is_empty());
+        for i in 0..6 {
+            b.push(i);
+        }
+        assert_eq!(b.try_drain(4), vec![0, 1, 2, 3]);
+        assert_eq!(b.try_drain(4), vec![4, 5]);
+        assert!(b.try_drain(4).is_empty());
+    }
+
+    #[test]
     fn concurrent_producers_lose_nothing() {
         let b: Arc<Batcher<usize>> = Arc::new(Batcher::new(BatchPolicy {
             max_batch: 8,
@@ -144,7 +198,7 @@ mod tests {
             let b = b.clone();
             handles.push(std::thread::spawn(move || {
                 for i in 0..25 {
-                    b.push(t * 100 + i);
+                    assert!(b.push(t * 100 + i));
                 }
             }));
         }

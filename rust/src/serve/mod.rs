@@ -1,13 +1,16 @@
-//! Batched inference service over a (compressed) model.
+//! Continuously batched inference service over a (compressed) model.
 //!
-//! Request path is Rust-only: a TCP front-end accepts JSON-line requests,
-//! the [`batcher`] groups them under a max-batch/max-wait policy, and the
-//! worker decodes greedily over the in-memory model. Latency/throughput
+//! Request path is Rust-only: a TCP front-end accepts JSON-line requests
+//! (prompt + optional sampling controls), the [`batcher`] queues them, and
+//! one worker steps a set of KV-cached [`crate::model::DecodeSession`]s —
+//! one token per session per round, sessions joining and leaving the batch
+//! as they arrive and finish (continuous batching). Latency/throughput
 //! metrics come back per response and aggregated — the substrate for the
-//! serving comparison in `examples/serve_compressed.rs`.
+//! serving comparison in `examples/serve_compressed.rs` and the decode
+//! benchmark (`benches/decode.rs`).
 
 pub mod batcher;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use server::{serve_blocking, GenRequest, GenResponse};
+pub use server::{serve_blocking, Client, GenRequest, GenResponse};

@@ -205,3 +205,33 @@ fn whitening_stats_are_sane_on_trained_model() {
         assert!(back.rel_err(&w) < 0.15, "layer {layer} {kind:?}: {}", back.rel_err(&w));
     }
 }
+
+#[test]
+fn kv_cached_decode_is_bit_identical_for_compressed_plans() {
+    // NOT artifact-gated: a random tiny model stands in for trained weights —
+    // decode parity is about the execution paths, not model quality. Covers
+    // the acceptance matrix: Dense, LowRank (svd-llm), Factorized (compot),
+    // and the multi-stage factorize+quantize composition (Table 7 / Eq. 25).
+    use compot::coordinator::plan::CompressionPlan;
+    use compot::data::SynthLang;
+    use compot::model::config::ModelConfig;
+
+    let model = Model::random(&ModelConfig::test_tiny(), &mut Rng::new(42));
+    let lang = SynthLang::wiki(model.cfg.vocab);
+    let calib = lang.gen_batch(6, 48, &mut Rng::new(43));
+    let prompt: Vec<u16> = vec![2, 7, 1, 8, 2, 8];
+    assert_eq!(
+        model.greedy_decode(&prompt, 10),
+        model.greedy_decode_full(&prompt, 10),
+        "dense: KV-cached decode diverged from full forward"
+    );
+    let defaults = StageConfig::new(0.25, false);
+    for spec in ["svd-llm@0.2", "compot@0.25", "compot@0.25+gptq4"] {
+        let plan = CompressionPlan::parse(spec, &defaults).unwrap();
+        let (compressed, _) = plan.run(&model, &calib).unwrap();
+        let cached = compressed.greedy_decode(&prompt, 10);
+        let full = compressed.greedy_decode_full(&prompt, 10);
+        assert_eq!(cached, full, "{spec}: KV-cached decode diverged from full forward");
+        assert_eq!(cached.len(), 10);
+    }
+}
