@@ -1,0 +1,125 @@
+//! Quantized-storage benchmark: resident weight bytes (measured from the
+//! actual packed buffers) and decode throughput through the packed-native
+//! `apply_row` kernels, for a 4-bit RTN plan and the Table-7
+//! `compot@0.25+gptq4` composition.
+//!
+//! Gates (the process exits non-zero if either fails):
+//! - a 4-bit quantized model's resident weight bytes are **< 0.5×** the
+//!   dense f32 model's;
+//! - greedy decode through the packed path is **token-identical** to the
+//!   fake-quant f32 reference model.
+//!
+//! Run: `cargo bench --bench quant_decode` (add `-- --tiny` for the CI
+//! smoke run). Writes `BENCH_quant.json` (override with `BENCH_QUANT_OUT`).
+
+use compot::compress::StageConfig;
+use compot::coordinator::plan::CompressionPlan;
+use compot::data::SynthLang;
+use compot::model::config::ModelConfig;
+use compot::model::Model;
+use compot::util::json::Json;
+use compot::util::timer::bench;
+use compot::util::Rng;
+
+fn decode_tok_s(model: &Model, prompt: &[u16], gen_len: usize, budget: f64) -> f64 {
+    let st = bench(
+        || {
+            std::hint::black_box(model.greedy_decode(prompt, gen_len));
+        },
+        budget,
+        500,
+    );
+    gen_len as f64 / st.median_s
+}
+
+fn main() {
+    let tiny = std::env::args().any(|a| a == "--tiny");
+    let budget = std::env::var("BENCH_SECS").ok().and_then(|v| v.parse().ok()).unwrap_or(0.4);
+    let (cfg, prompt_len, gen_len) = if tiny {
+        (ModelConfig::test_tiny(), 12usize, 12usize)
+    } else {
+        (ModelConfig::llama_micro(), 32, 32)
+    };
+    let mut rng = Rng::new(77);
+    let model = Model::random(&cfg, &mut rng);
+    let lang = SynthLang::wiki(cfg.vocab);
+    let calib = lang.gen_batch(6, 48, &mut Rng::new(78));
+    let prompt: Vec<u16> =
+        (0..prompt_len as u16).map(|i| (i * 7 + 1) % cfg.vocab as u16).collect();
+    let dense_bytes = model.resident_weight_bytes();
+    let defaults = StageConfig::new(0.25, false);
+
+    // --- 4-bit RTN: the resident-bytes acceptance gate ---
+    let plan4 = CompressionPlan::parse("rtn4", &defaults).expect("rtn4 plan");
+    let (q4, _) = plan4.run(&model, &calib).expect("rtn4 run");
+    let q4_bytes = q4.resident_weight_bytes();
+    let ratio = q4_bytes as f64 / dense_bytes as f64;
+    println!("resident weight bytes: dense {dense_bytes} | rtn4 packed {q4_bytes} ({ratio:.3}x)");
+
+    // --- packed decode parity vs the fake-quant f32 reference ---
+    let reference = q4.dequantize_projections();
+    let packed_out = q4.greedy_decode(&prompt, gen_len);
+    let reference_out = reference.greedy_decode(&prompt, gen_len);
+    let parity = packed_out == reference_out;
+    println!(
+        "packed decode parity vs fake-quant reference: {}",
+        if parity { "token-identical" } else { "DIVERGED" }
+    );
+
+    // --- decode throughput: dense vs packed vs dequantized reference ---
+    let dense_tok_s = decode_tok_s(&model, &prompt, gen_len, budget);
+    let packed_tok_s = decode_tok_s(&q4, &prompt, gen_len, budget);
+    let reference_tok_s = decode_tok_s(&reference, &prompt, gen_len, budget);
+    println!(
+        "decode tok/s ({}): dense {dense_tok_s:.0} | rtn4 packed {packed_tok_s:.0} | \
+         dequantized reference {reference_tok_s:.0}",
+        cfg.name
+    );
+
+    // --- Table 7 composition: factorize then 4-bit GPTQ the factors ---
+    let plan_t7 = CompressionPlan::parse("compot@0.25+gptq4", &defaults).expect("t7 plan");
+    let (t7, report) = plan_t7.run(&model, &calib).expect("t7 run");
+    let t7_bytes = t7.resident_weight_bytes();
+    let t7_tok_s = decode_tok_s(&t7, &prompt, gen_len, budget);
+    let t7_reference = t7.dequantize_projections();
+    let t7_parity =
+        t7.greedy_decode(&prompt, gen_len) == t7_reference.greedy_decode(&prompt, gen_len);
+    println!(
+        "compot@0.25+gptq4: composed CR {:.3} | {t7_bytes} resident bytes ({:.3}x) | \
+         {t7_tok_s:.0} tok/s | parity {}",
+        report.composed_cr,
+        t7_bytes as f64 / dense_bytes as f64,
+        if t7_parity { "ok" } else { "DIVERGED" }
+    );
+
+    // --- record the trajectory point ---
+    let mut j = Json::obj();
+    j.set("bench", "quant_decode".into())
+        .set("model", cfg.name.as_str().into())
+        .set("prompt_len", prompt_len.into())
+        .set("gen_len", gen_len.into())
+        .set("dense_resident_bytes", dense_bytes.into())
+        .set("rtn4_resident_bytes", q4_bytes.into())
+        .set("rtn4_bytes_ratio", ratio.into())
+        .set("decode_tok_s_dense", dense_tok_s.into())
+        .set("decode_tok_s_rtn4_packed", packed_tok_s.into())
+        .set("decode_tok_s_dequant_reference", reference_tok_s.into())
+        .set("rtn4_parity_vs_reference", Json::Bool(parity))
+        .set("t7_composed_cr", report.composed_cr.into())
+        .set("t7_resident_bytes", t7_bytes.into())
+        .set("decode_tok_s_t7_packed", t7_tok_s.into())
+        .set("t7_parity_vs_reference", Json::Bool(t7_parity));
+    let out = std::env::var("BENCH_QUANT_OUT").unwrap_or_else(|_| "BENCH_quant.json".into());
+    match std::fs::write(&out, j.to_string() + "\n") {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+
+    // --- hard gates (after the JSON so CI still records the numbers) ---
+    assert!(
+        ratio < 0.5,
+        "4-bit packed model must be < 0.5x dense resident bytes, got {ratio:.3}"
+    );
+    assert!(parity, "packed rtn4 decode diverged from the fake-quant f32 reference");
+    assert!(t7_parity, "packed compot+gptq4 decode diverged from its reference");
+}

@@ -43,15 +43,21 @@ pub use api::{
 };
 pub use registry::{MethodCall, MethodEntry, MethodOptions, MethodRegistry};
 
-use crate::linalg::{gemm, Mat};
+use crate::linalg::{gemm, Mat, QuantMat};
 use crate::util::Rng;
-use sparse::ColumnSparse;
+use sparse::{ColumnSparse, QuantColumnSparse};
 use whitening::CalibStats;
 
 /// Bits per stored value for dense fp16 storage (the paper's Eq. 11 baseline).
 pub const VALUE_BITS: u64 = 16;
 
 /// A weight in one of the representations the runtime can apply.
+///
+/// The `Quant*` variants hold b-bit *packed* storage
+/// ([`crate::linalg::qmat::QuantMat`]) emitted by the `quant` stage: their
+/// `apply`/`apply_row` kernels fuse dequantization into the product while
+/// staying bit-identical to applying the dequantized f32 weights, and their
+/// `storage_bits` are measured from the actual packed buffers.
 #[derive(Clone, Debug)]
 pub enum LinearWeight {
     /// Dense m×n.
@@ -61,6 +67,13 @@ pub enum LinearWeight {
     /// COMPOT/CoSpaDi factorization `W ≈ A·S` with dense A m×k and
     /// column-s-sparse S k×n.
     Factorized { a: Mat, s: ColumnSparse },
+    /// b-bit packed dense weight (RTN/GPTQ on a dense projection).
+    QuantDense(QuantMat),
+    /// Low-rank with both factors b-bit packed (Table 7 on SVD methods).
+    QuantLowRank { b: QuantMat, c: QuantMat },
+    /// COMPOT/CoSpaDi factorization with packed dictionary and packed
+    /// column-aligned sparse values (Table 7 / Eq. 25 realized in storage).
+    QuantFactorized { a: QuantMat, s: QuantColumnSparse },
 }
 
 impl LinearWeight {
@@ -70,6 +83,9 @@ impl LinearWeight {
             LinearWeight::Dense(w) => w.rows(),
             LinearWeight::LowRank { b, .. } => b.rows(),
             LinearWeight::Factorized { a, .. } => a.rows(),
+            LinearWeight::QuantDense(w) => w.rows(),
+            LinearWeight::QuantLowRank { b, .. } => b.rows(),
+            LinearWeight::QuantFactorized { a, .. } => a.rows(),
         }
     }
 
@@ -79,29 +95,41 @@ impl LinearWeight {
             LinearWeight::Dense(w) => w.cols(),
             LinearWeight::LowRank { c, .. } => c.cols(),
             LinearWeight::Factorized { s, .. } => s.n(),
+            LinearWeight::QuantDense(w) => w.cols(),
+            LinearWeight::QuantLowRank { c, .. } => c.cols(),
+            LinearWeight::QuantFactorized { s, .. } => s.n(),
         }
     }
 
-    /// y = x·W for a batch x (rows = tokens).
+    /// y = x·W for a batch x (rows = tokens). Quantized variants run fused
+    /// dequant GEMM over packed group panels — never a densified weight.
     pub fn apply(&self, x: &Mat) -> Mat {
         match self {
             LinearWeight::Dense(w) => gemm::matmul(x, w),
             LinearWeight::LowRank { b, c } => gemm::matmul(&gemm::matmul(x, b), c),
             LinearWeight::Factorized { a, s } => s.apply_after(&gemm::matmul(x, a)),
+            LinearWeight::QuantDense(w) => w.apply(x),
+            LinearWeight::QuantLowRank { b, c } => c.apply(&b.apply(x)),
+            LinearWeight::QuantFactorized { a, s } => s.apply_after(&a.apply(x)),
         }
     }
 
     /// Single-token decode step: y = x·W for one activation row, executed
     /// natively in the stored representation — Dense is one mat-vec, LowRank
     /// is two rank-r mat-vecs, Factorized is a mat-vec through the dictionary
-    /// followed by the sparse gather. No densification, no batch-Mat
-    /// round-trip; mirrors [`apply`](Self::apply)'s accumulation order so the
-    /// KV-cached decode path stays bit-identical to the batched forward.
+    /// followed by the sparse gather, and the quantized variants run the
+    /// same shapes as fused dequant matvecs straight off the packed buffers.
+    /// No densification, no batch-Mat round-trip; mirrors
+    /// [`apply`](Self::apply)'s accumulation order so the KV-cached decode
+    /// path stays bit-identical to the batched forward.
     pub fn apply_row(&self, x: &[f32]) -> Vec<f32> {
         match self {
             LinearWeight::Dense(w) => gemm::matvec_row(x, w),
             LinearWeight::LowRank { b, c } => gemm::matvec_row(&gemm::matvec_row(x, b), c),
             LinearWeight::Factorized { a, s } => s.apply_after_row(&gemm::matvec_row(x, a)),
+            LinearWeight::QuantDense(w) => w.apply_row(x),
+            LinearWeight::QuantLowRank { b, c } => c.apply_row(&b.apply_row(x)),
+            LinearWeight::QuantFactorized { a, s } => s.apply_after_row(&a.apply_row(x)),
         }
     }
 
@@ -111,11 +139,41 @@ impl LinearWeight {
             LinearWeight::Dense(w) => w.clone(),
             LinearWeight::LowRank { b, c } => gemm::matmul(b, c),
             LinearWeight::Factorized { a, s } => s.apply_after(a),
+            LinearWeight::QuantDense(w) => w.dequantize(),
+            LinearWeight::QuantLowRank { b, c } => gemm::matmul(&b.dequantize(), &c.dequantize()),
+            LinearWeight::QuantFactorized { a, s } => s.apply_after(&a.dequantize()),
         }
     }
 
-    /// Exact storage bits under the paper's accounting (Eq. 11 for the
-    /// factorized form; 16-bit dense values otherwise).
+    /// Packed-quantized variants mapped back to their fake-quant f32 forms
+    /// (bit-identical values — the decode-parity reference); everything else
+    /// clones unchanged.
+    pub fn dequantized(&self) -> LinearWeight {
+        match self {
+            LinearWeight::QuantDense(w) => LinearWeight::Dense(w.dequantize()),
+            LinearWeight::QuantLowRank { b, c } => {
+                LinearWeight::LowRank { b: b.dequantize(), c: c.dequantize() }
+            }
+            LinearWeight::QuantFactorized { a, s } => {
+                LinearWeight::Factorized { a: a.dequantize(), s: s.dequantize() }
+            }
+            other => other.clone(),
+        }
+    }
+
+    /// Whether this weight is stored b-bit packed.
+    pub fn is_quantized(&self) -> bool {
+        matches!(
+            self,
+            LinearWeight::QuantDense(_)
+                | LinearWeight::QuantLowRank { .. }
+                | LinearWeight::QuantFactorized { .. }
+        )
+    }
+
+    /// Exact storage bits: Eq. 11 accounting for the 16-bit forms, and
+    /// bits *measured from the actual packed buffers* for the quantized
+    /// forms (plus the Eq.-11 position mask on quantized sparse factors).
     pub fn storage_bits(&self) -> u64 {
         match self {
             LinearWeight::Dense(w) => VALUE_BITS * (w.rows() * w.cols()) as u64,
@@ -125,6 +183,23 @@ impl LinearWeight {
             LinearWeight::Factorized { a, s } => {
                 VALUE_BITS * (a.rows() * a.cols()) as u64 + s.storage_bits()
             }
+            LinearWeight::QuantDense(w) => w.storage_bits(),
+            LinearWeight::QuantLowRank { b, c } => b.storage_bits() + c.storage_bits(),
+            LinearWeight::QuantFactorized { a, s } => a.storage_bits() + s.storage_bits(),
+        }
+    }
+
+    /// Actual resident heap bytes of the stored buffers: f32 values at 4 B,
+    /// packed codes/scales and u32 sparse indices at their real sizes — the
+    /// quantity the `quant_decode` benchmark reports.
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            LinearWeight::Dense(w) => 4 * w.rows() * w.cols(),
+            LinearWeight::LowRank { b, c } => 4 * (b.rows() * b.cols() + c.rows() * c.cols()),
+            LinearWeight::Factorized { a, s } => 4 * a.rows() * a.cols() + s.resident_bytes(),
+            LinearWeight::QuantDense(w) => w.packed_bytes(),
+            LinearWeight::QuantLowRank { b, c } => b.packed_bytes() + c.packed_bytes(),
+            LinearWeight::QuantFactorized { a, s } => a.packed_bytes() + s.resident_bytes(),
         }
     }
 }
@@ -311,6 +386,18 @@ mod tests {
                 a: Mat::randn(&mut rng, m, k, 1.0),
                 s: ColumnSparse::hard_threshold(&Mat::randn(&mut rng, k, n, 1.0), s),
             },
+            LinearWeight::QuantDense(QuantMat::quantize_from(&Mat::randn(&mut rng, m, n, 1.0), 4)),
+            LinearWeight::QuantLowRank {
+                b: QuantMat::quantize_from(&Mat::randn(&mut rng, m, r, 1.0), 4),
+                c: QuantMat::quantize_from(&Mat::randn(&mut rng, r, n, 1.0), 4),
+            },
+            LinearWeight::QuantFactorized {
+                a: QuantMat::quantize_from(&Mat::randn(&mut rng, m, k, 1.0), 4),
+                s: QuantColumnSparse::quantize_from(
+                    &ColumnSparse::hard_threshold(&Mat::randn(&mut rng, k, n, 1.0), s),
+                    4,
+                ),
+            },
         ];
         for lw in &variants {
             let x = Mat::randn(&mut rng, 1, m, 1.0);
@@ -326,5 +413,23 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn quantized_weights_measure_packed_storage() {
+        let mut rng = Rng::new(41);
+        let w = Mat::randn(&mut rng, 64, 256, 1.0);
+        let dense = LinearWeight::Dense(w.clone());
+        let qd = LinearWeight::QuantDense(QuantMat::quantize_from(&w, 4));
+        assert_eq!((qd.in_dim(), qd.out_dim()), (64, 256));
+        // 4-bit values + f16 scales ≈ 4.5/16 of the fp16 accounting …
+        assert!(qd.storage_bits() * 3 < dense.storage_bits());
+        // … and well under half the resident f32 bytes (the bench gate).
+        assert!((qd.resident_bytes() as f64) < 0.5 * dense.resident_bytes() as f64);
+        // dequantized() maps back to a bit-identical fake-quant dense form
+        let fake = qd.dequantized();
+        assert!(matches!(fake, LinearWeight::Dense(_)));
+        assert_eq!(fake.to_dense(), qd.to_dense());
+        assert!(qd.is_quantized() && !fake.is_quantized());
     }
 }

@@ -4,58 +4,76 @@
 //! GPTQ quantizes the weight one input-row at a time, compensating the
 //! rounding error on the not-yet-quantized rows using the inverse Hessian
 //! `H = 2·XᵀX + λI` (here: the calibration Gram). We implement the classic
-//! Cholesky formulation. Quantized weights are stored *fake-quantized*
-//! (dequantized f32 values) for evaluation, with exact bit accounting:
-//! b bits per value + 16-bit scale per group of 128.
+//! Cholesky formulation.
+//!
+//! **Storage.** For 2..=8 bits the stage emits *packed* storage
+//! ([`QuantMat`] / [`QuantColumnSparse`] inside the `Quant*`
+//! [`LinearWeight`] variants): b-bit codes in `u32` words plus f16 group
+//! scales, with `bits` **measured from the actual packed buffers** — the
+//! Eq.-25 formula (`b·count + 16·⌈count/128⌉`) is kept as a cross-check
+//! floor. Packing shares one arithmetic core with the fake-quant path
+//! (`linalg::qmat`), so dequantized packed values are bit-identical to the
+//! fake-quantized f32 values and every error/CR measurement keeps its
+//! meaning. Widths above 8 bits keep the legacy fake-quantized (dense f32)
+//! representation with formula accounting.
+//!
+//! Quantization groups are **column-aligned** on sparse factors (one
+//! column's outlier cannot poison its neighbors' scales) and row-aligned on
+//! dense/low-rank factors; clamping is symmetric (`[-qmax, qmax]`), so a
+//! dequantized value never overshoots its group's amax by a step.
 
 use super::api::{
     self, CalibContext, CompressionReport, LayerReport, ModelCompressor, StageConfig,
 };
-use super::sparse::ColumnSparse;
+use super::sparse::{ColumnSparse, QuantColumnSparse};
 use super::whitening::CalibStats;
 use super::{CompressedLayer, LinearWeight};
+use crate::linalg::qmat::{self, QuantMat};
 use crate::linalg::{cholesky, gemm, solve, Mat};
 use crate::model::config::ProjKind;
 use crate::model::transformer::{Model, Stage};
 
-pub const GROUP: usize = 128;
+pub use crate::linalg::qmat::GROUP;
 
-/// Per-group symmetric quantization parameters for a value slice.
+/// Per-group symmetric quantization of a value slice (fake-quant form).
+/// Shares the packed path's arithmetic core — see `linalg::qmat`.
 fn quantize_group(vals: &mut [f32], bits: u32) {
-    let qmax = ((1i64 << (bits - 1)) - 1) as f32;
-    let amax = vals.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-    if amax == 0.0 {
-        return;
-    }
-    let scale = amax / qmax;
-    for v in vals.iter_mut() {
-        let q = (*v / scale).round().clamp(-qmax - 1.0, qmax);
-        *v = q * scale;
-    }
+    qmat::fake_quantize_group(vals, bits);
 }
 
-/// Storage bits for `count` values at b bits + one 16-bit scale per group.
+/// Eq.-25-style formula bits for `count` values at b bits + one 16-bit
+/// scale per flat group of 128. For packed storage this is a *floor*: the
+/// measured size adds word padding and per-row/column group alignment.
 pub fn quant_bits(count: usize, bits: u32) -> u64 {
     (count as u64) * bits as u64 + (count.div_ceil(GROUP) as u64) * 16
 }
 
-/// RTN: per-row groups of 128 along the output dimension.
+/// RTN: per-row groups of 128 along the output dimension (fake-quant f32).
 pub fn rtn_quantize(w: &Mat, bits: u32) -> Mat {
     let mut q = w.clone();
     for i in 0..q.rows() {
         let row = q.row_mut(i);
-        for g in (0..row.len()).step_by(GROUP) {
-            let end = (g + GROUP).min(row.len());
+        let cols = row.len();
+        for g in (0..cols).step_by(GROUP) {
+            let end = (g + GROUP).min(cols);
             quantize_group(&mut row[g..end], bits);
         }
     }
     q
 }
 
+/// RTN straight into packed storage; `dequantize()` of the result is
+/// bit-identical to [`rtn_quantize`].
+pub fn rtn_quantize_packed(w: &Mat, bits: u32) -> QuantMat {
+    QuantMat::quantize_from(w, bits)
+}
+
 /// GPTQ over the input dimension (rows of W, convention y = x·W, H = Gram of
 /// x). Processes rows in natural order with full error compensation:
 /// after quantizing row i, the remaining rows absorb `−e·H⁻¹[i, j]/H⁻¹[i,i]`.
-pub fn gptq_quantize(w: &Mat, stats: &CalibStats, bits: u32) -> Mat {
+/// Returns the fake-quantized matrix plus, for packable widths, the same
+/// values in packed storage (bit-identical on dequantization).
+fn gptq_core(w: &Mat, stats: &CalibStats, bits: u32) -> (Mat, Option<QuantMat>) {
     let m = w.rows();
     assert_eq!(stats.dim(), m, "gptq: Hessian dim must match input dim");
     // H = 2G + λI (damping 1% of mean diagonal, GPTQ's default style).
@@ -70,25 +88,26 @@ pub fn gptq_quantize(w: &Mat, stats: &CalibStats, bits: u32) -> Mat {
     let linv = solve::solve_lower_left(&l, &Mat::eye(m)); // L⁻¹
     let hinv = gemm::matmul_tn(&linv, &linv); // L⁻ᵀL⁻¹
 
-    let qmax = ((1i64 << (bits - 1)) - 1) as f32;
     let mut work = w.clone();
     let mut out = Mat::zeros(w.rows(), w.cols());
     let n = w.cols();
+    let pack = QuantMat::supported_bits(bits);
+    let mut codes: Vec<u16> = if pack { vec![0; m * n] } else { Vec::new() };
+    let mut scales: Vec<u16> = Vec::with_capacity(if pack { m * n.div_ceil(GROUP) } else { 0 });
+    let mut gcodes = [0u16; GROUP];
 
     // Per-(row-slice) group scales, computed on the *current* (compensated)
     // values as in the reference implementation.
     for i in 0..m {
-        // Quantize row i in groups.
+        // Quantize row i in groups through the shared packed/fake core.
         let mut qrow = work.row(i).to_vec();
         for g in (0..n).step_by(GROUP) {
             let end = (g + GROUP).min(n);
-            let seg = &mut qrow[g..end];
-            let amax = seg.iter().fold(0.0f32, |mx, &v| mx.max(v.abs()));
-            if amax > 0.0 {
-                let scale = amax / qmax;
-                for v in seg.iter_mut() {
-                    *v = (*v / scale).round().clamp(-qmax - 1.0, qmax) * scale;
-                }
+            let sbits =
+                qmat::quantize_group_inplace(&mut qrow[g..end], bits, &mut gcodes[..end - g]);
+            if pack {
+                codes[i * n + g..i * n + end].copy_from_slice(&gcodes[..end - g]);
+                scales.push(sbits);
             }
         }
         let dii = hinv[(i, i)].max(1e-12);
@@ -112,27 +131,30 @@ pub fn gptq_quantize(w: &Mat, stats: &CalibStats, bits: u32) -> Mat {
             }
         }
     }
-    out
+    let packed = pack.then(|| QuantMat::from_codes(m, n, bits, &codes, scales));
+    (out, packed)
 }
 
-/// Quantize a dense layer: returns the fake-quantized layer with adjusted
-/// bit accounting.
+/// GPTQ returning the fake-quantized (dense f32) matrix.
+pub fn gptq_quantize(w: &Mat, stats: &CalibStats, bits: u32) -> Mat {
+    gptq_core(w, stats, bits).0
+}
+
+/// GPTQ straight into packed storage (2..=8 bits); `dequantize()` of the
+/// result is bit-identical to [`gptq_quantize`].
+pub fn gptq_quantize_packed(w: &Mat, stats: &CalibStats, bits: u32) -> QuantMat {
+    gptq_core(w, stats, bits).1.expect("gptq_quantize_packed: bits must be in 2..=8")
+}
+
+/// Quantize a dense layer: returns the packed layer (fake-quantized above
+/// 8 bits) with measured bit accounting.
 pub fn quantize_layer(
     w: &Mat,
     stats: &CalibStats,
     bits: u32,
     use_gptq: bool,
 ) -> CompressedLayer {
-    let q = if use_gptq { gptq_quantize(w, stats, bits) } else { rtn_quantize(w, bits) };
-    let mut layer = CompressedLayer::new(
-        if use_gptq { "GPTQ" } else { "RTN" },
-        w,
-        LinearWeight::Dense(q),
-        Some(stats),
-    );
-    layer.bits = quant_bits(w.rows() * w.cols(), bits);
-    layer.cr = 1.0 - layer.bits as f64 / (16 * w.rows() * w.cols()) as f64;
-    layer
+    quantize_weight(&LinearWeight::Dense(w.clone()), w, Some(stats), bits, use_gptq)
 }
 
 /// Quantize *whatever representation a layer currently stores* to `bits`:
@@ -141,7 +163,8 @@ pub fn quantize_layer(
 /// activations, which exists only for the input-side factor (A / B / W
 /// itself) — those get GPTQ when `use_gptq` and the stats dimension
 /// matches; everything else falls back to RTN. `original` is the dense
-/// reference the CR is accounted against (Eq. 25 on actual stored bits).
+/// reference the CR is accounted against (Eq. 25 realized on actual stored
+/// bits for 2..=8-bit packed storage).
 pub fn quantize_weight(
     current: &LinearWeight,
     original: &Mat,
@@ -150,44 +173,98 @@ pub fn quantize_weight(
     use_gptq: bool,
 ) -> CompressedLayer {
     let gptq_fits = |rows: usize| use_gptq && stats.map(|s| s.dim() == rows).unwrap_or(false);
-    let (weight, stored_values, mask_bits) = match current {
+    // Re-quantizing an already-packed weight re-runs on its (bit-identical)
+    // fake-quant values.
+    let current = current.dequantized();
+    let pack = QuantMat::supported_bits(bits);
+
+    // A quantized dense factor in whichever representation the bit width
+    // supports.
+    enum QFactor {
+        Packed(QuantMat),
+        Fake(Mat),
+    }
+    // One quantizer for every dense factor: GPTQ on input-side factors when
+    // the calibration Gram matches, RTN otherwise; packed at 2..=8 bits,
+    // legacy fake-quant f32 above.
+    let quantize_mat = |w: &Mat, input_side: bool| -> QFactor {
+        let gptq = input_side && gptq_fits(w.rows());
+        match (pack, gptq) {
+            (true, true) => QFactor::Packed(gptq_quantize_packed(w, stats.unwrap(), bits)),
+            (true, false) => QFactor::Packed(rtn_quantize_packed(w, bits)),
+            (false, true) => QFactor::Fake(gptq_quantize(w, stats.unwrap(), bits)),
+            (false, false) => QFactor::Fake(rtn_quantize(w, bits)),
+        }
+    };
+
+    // stored value count, non-value (mask) bits, the packed-alignment slack
+    // for the formula cross-check (≤ one extra 16-bit scale per stored
+    // row/column for ragged group tails + one u32 of padding per packed
+    // matrix), and — for the legacy fake-quant representation only — an
+    // exact bit accounting when the flat formula would miscount.
+    let (weight, stored_values, mask_bits, slack_bits, fake_bits) = match &current {
         LinearWeight::Dense(w) => {
-            let q = if gptq_fits(w.rows()) {
-                gptq_quantize(w, stats.unwrap(), bits)
-            } else {
-                rtn_quantize(w, bits)
-            };
             let count = w.rows() * w.cols();
-            (LinearWeight::Dense(q), count, 0u64)
+            let slack = 16 * w.rows() as u64 + 31;
+            let weight = match quantize_mat(w, true) {
+                QFactor::Packed(qm) => LinearWeight::QuantDense(qm),
+                QFactor::Fake(q) => LinearWeight::Dense(q),
+            };
+            (weight, count, 0u64, slack, None)
         }
         LinearWeight::LowRank { b, c } => {
-            let qb = if gptq_fits(b.rows()) {
-                gptq_quantize(b, stats.unwrap(), bits)
-            } else {
-                rtn_quantize(b, bits)
-            };
-            let qc = rtn_quantize(c, bits);
             let count = b.rows() * b.cols() + c.rows() * c.cols();
-            (LinearWeight::LowRank { b: qb, c: qc }, count, 0u64)
+            let slack = 16 * (b.rows() + c.rows()) as u64 + 2 * 31;
+            let weight = match (quantize_mat(b, true), quantize_mat(c, false)) {
+                (QFactor::Packed(qb), QFactor::Packed(qc)) => {
+                    LinearWeight::QuantLowRank { b: qb, c: qc }
+                }
+                (QFactor::Fake(qb), QFactor::Fake(qc)) => {
+                    LinearWeight::LowRank { b: qb, c: qc }
+                }
+                _ => unreachable!("representation is decided by `pack` alone"),
+            };
+            (weight, count, 0u64, slack, None)
         }
         LinearWeight::Factorized { a, s } => {
-            let qa = if gptq_fits(a.rows()) {
-                gptq_quantize(a, stats.unwrap(), bits)
-            } else {
-                rtn_quantize(a, bits)
-            };
-            let mut qs: ColumnSparse = s.clone();
-            // RTN over the sparse values in groups of 128.
-            let mut vals: Vec<f32> = qs.values().to_vec();
-            for g in (0..vals.len()).step_by(GROUP) {
-                let end = (g + GROUP).min(vals.len());
-                quantize_group(&mut vals[g..end], bits);
-            }
-            qs.set_values(&vals);
             let count = a.rows() * a.cols() + s.s() * s.n();
             let mask = (s.k() * s.n()) as u64;
-            (LinearWeight::Factorized { a: qa, s: qs }, count, mask)
+            let slack = 16 * (a.rows() + s.n()) as u64 + 2 * 31;
+            // Groups over the sparse values align to columns either way:
+            // one column's outlier cannot poison its neighbors' scales.
+            match quantize_mat(a, true) {
+                QFactor::Packed(qa) => {
+                    let weight = LinearWeight::QuantFactorized {
+                        a: qa,
+                        s: QuantColumnSparse::quantize_from(s, bits),
+                    };
+                    (weight, count, mask, slack, None)
+                }
+                QFactor::Fake(qa) => {
+                    let mut qs: ColumnSparse = s.clone();
+                    let mut vals: Vec<f32> = qs.values().to_vec();
+                    if qs.s() > 0 {
+                        for col in vals.chunks_mut(qs.s()) {
+                            let len = col.len();
+                            for g in (0..len).step_by(GROUP) {
+                                quantize_group(&mut col[g..(g + GROUP).min(len)], bits);
+                            }
+                        }
+                    }
+                    qs.set_values(&vals);
+                    // Column-aligned groups cost one scale per column group
+                    // (n·⌈s/128⌉) — account them exactly; the flat formula
+                    // would under-count them.
+                    let sparse_vals = (s.s() * s.n()) as u64;
+                    let exact = quant_bits(a.rows() * a.cols(), bits)
+                        + sparse_vals * bits as u64
+                        + (s.n() * s.s().div_ceil(GROUP)) as u64 * 16
+                        + mask;
+                    (LinearWeight::Factorized { a: qa, s: qs }, count, mask, slack, Some(exact))
+                }
+            }
         }
+        _ => unreachable!("dequantized() returns only 16-bit forms"),
     };
     let mut out = CompressedLayer::new(
         if use_gptq { "GPTQ" } else { "RTN" },
@@ -195,7 +272,19 @@ pub fn quantize_weight(
         weight,
         stats,
     );
-    out.bits = quant_bits(stored_values, bits) + mask_bits;
+    let formula = quant_bits(stored_values, bits) + mask_bits;
+    if pack {
+        // `CompressedLayer::new` measured the bits from the packed buffers;
+        // the Eq.-25 formula is kept as a cross-check envelope.
+        assert!(
+            out.bits >= formula && out.bits <= formula + slack_bits,
+            "packed storage accounting out of envelope: measured {} vs formula {formula} \
+             (+ slack {slack_bits})",
+            out.bits
+        );
+    } else {
+        out.bits = fake_bits.unwrap_or(formula);
+    }
     out.cr = 1.0 - out.bits as f64 / (16 * original.rows() * original.cols()) as f64;
     out
 }
@@ -218,7 +307,9 @@ pub fn quantize_factors(
 /// Model-level quantization stage: b-bit RTN/GPTQ over every projection of
 /// the current model. On a dense model this is plain PTQ; on a factorized
 /// model it quantizes the stored factors, so `[factorize, quantize]` plans
-/// reproduce the paper's Eq. 25 composed-CR accounting from actual bits.
+/// reproduce the paper's Eq. 25 composed-CR accounting from actual bits —
+/// and, at 2..=8 bits, from actually-packed buffers the decode runtime
+/// executes on natively.
 pub struct Quantize {
     pub bits: u32,
     pub gptq: bool,
@@ -308,7 +399,7 @@ pub fn rtn_entry() -> crate::compress::registry::MethodEntry {
     crate::compress::registry::MethodEntry {
         name: "rtn4",
         aliases: &["rtn"],
-        about: "round-to-nearest b-bit quantization (bits=4 default)",
+        about: "round-to-nearest b-bit quantization, packed storage (bits=4 default)",
         defaults: &[("bits", "4")],
         build: |o| build_quantize(o, false),
     }
@@ -319,7 +410,7 @@ pub fn gptq_entry() -> crate::compress::registry::MethodEntry {
     crate::compress::registry::MethodEntry {
         name: "gptq4",
         aliases: &["gptq"],
-        about: "GPTQ b-bit quantization with Hessian error compensation (bits=4 default)",
+        about: "GPTQ b-bit quantization, Hessian-compensated, packed storage (bits=4 default)",
         defaults: &[("bits", "4")],
         build: |o| build_quantize(o, true),
     }
@@ -353,21 +444,65 @@ mod tests {
         (w, CalibStats::from_activations(&x))
     }
 
+    fn assert_bitwise(a: &Mat, b: &Mat, what: &str) {
+        assert_eq!(a.shape(), b.shape(), "{what}: shape");
+        for i in 0..a.rows() {
+            for j in 0..a.cols() {
+                assert!(
+                    (a[(i, j)] - b[(i, j)]).abs() == 0.0,
+                    "{what} ({i},{j}): {} vs {}",
+                    a[(i, j)],
+                    b[(i, j)]
+                );
+            }
+        }
+    }
+
     #[test]
     fn rtn_error_bounded_by_step() {
         let (w, _) = problem(150, 16, 64);
         let q = rtn_quantize(&w, 4);
-        // max error ≤ scale/2, scale = amax/7 per group
+        // max error ≤ scale/2 with the f16-rounded group scale; the
+        // symmetric clamp additionally bounds |q̂| by the group amax on the
+        // *negative* edge (the old −qmax−1 level could overshoot it by a
+        // full step).
         for i in 0..16 {
             let row = w.row(i);
             for g in (0..64).step_by(GROUP) {
                 let end = (g + GROUP).min(64);
                 let amax = row[g..end].iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-                let step = amax / 7.0;
+                let step = qmat::f16_decode(qmat::f16_encode(amax / 7.0));
                 for j in g..end {
-                    assert!((w[(i, j)] - q[(i, j)]).abs() <= step / 2.0 + 1e-6);
+                    assert!((w[(i, j)] - q[(i, j)]).abs() <= step / 2.0 + 1e-7);
+                    assert!(
+                        q[(i, j)].abs() <= 7.0 * step + 1e-7,
+                        "({i},{j}): |{}| overshoots amax {amax}",
+                        q[(i, j)]
+                    );
+                    assert!(q[(i, j)] >= -7.0 * step - 1e-7, "negative edge at ({i},{j})");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn packed_rtn_roundtrip_is_bit_exact() {
+        // Ragged tails on purpose: 150 cols crosses the 128-group edge.
+        for &bits in &[2u32, 3, 4, 8] {
+            let (w, _) = problem(160 + bits as u64, 9, 150);
+            let fake = rtn_quantize(&w, bits);
+            let packed = rtn_quantize_packed(&w, bits);
+            assert_bitwise(&packed.dequantize(), &fake, &format!("rtn bits {bits}"));
+        }
+    }
+
+    #[test]
+    fn packed_gptq_roundtrip_is_bit_exact() {
+        for &bits in &[3u32, 4, 8] {
+            let (w, stats) = problem(170 + bits as u64, 24, 40);
+            let fake = gptq_quantize(&w, &stats, bits);
+            let packed = gptq_quantize_packed(&w, &stats, bits);
+            assert_bitwise(&packed.dequantize(), &fake, &format!("gptq bits {bits}"));
         }
     }
 
@@ -395,12 +530,77 @@ mod tests {
 
     #[test]
     fn bit_accounting() {
+        // The Eq.-25 formula itself is unchanged …
         assert_eq!(quant_bits(256, 4), 256 * 4 + 2 * 16);
         assert_eq!(quant_bits(100, 3), 300 + 16);
+        // … but layer bits are now *measured* from the packed buffers:
+        // 16×32 at 4 bits = 2048 value bits (64 words) + 16 per-row scales.
         let (w, stats) = problem(153, 16, 32);
         let layer = quantize_layer(&w, &stats, 4, false);
-        assert_eq!(layer.bits, quant_bits(16 * 32, 4));
+        assert!(matches!(layer.weight, LinearWeight::QuantDense(_)));
+        assert_eq!(layer.bits, 64 * 32 + 16 * 16);
+        assert_eq!(layer.bits, layer.weight.storage_bits());
+        assert!(layer.bits >= quant_bits(16 * 32, 4), "formula must stay a floor");
         assert!(layer.cr > 0.7 && layer.cr < 0.76); // ≈ 1 − 4/16 minus scales
+    }
+
+    #[test]
+    fn quantize_weight_emits_packed_variants() {
+        let mut rng = Rng::new(155);
+        let (w, stats) = problem(156, 32, 64);
+        let variants = [
+            LinearWeight::Dense(w.clone()),
+            LinearWeight::LowRank {
+                b: Mat::randn(&mut rng, 32, 8, 0.2),
+                c: Mat::randn(&mut rng, 8, 64, 0.2),
+            },
+            LinearWeight::Factorized {
+                a: Mat::randn(&mut rng, 32, 12, 0.2),
+                s: ColumnSparse::hard_threshold(&Mat::randn(&mut rng, 12, 64, 0.2), 5),
+            },
+        ];
+        for current in &variants {
+            let out = quantize_weight(current, &w, Some(&stats), 4, true);
+            assert!(out.weight.is_quantized(), "{current:?} not packed");
+            assert_eq!(out.weight.in_dim(), current.in_dim());
+            assert_eq!(out.weight.out_dim(), current.out_dim());
+            assert_eq!(out.bits, out.weight.storage_bits());
+            // packed apply must be bit-identical to the dequantized form
+            let x = Mat::randn(&mut rng, 3, 32, 1.0);
+            assert_bitwise(
+                &out.weight.apply(&x),
+                &out.weight.dequantized().apply(&x),
+                "fused apply",
+            );
+            // quantizing the quantized layer again is a no-op on the values
+            let again = quantize_weight(&out.weight, &w, Some(&stats), 4, false);
+            assert_bitwise(&again.weight.to_dense(), &out.weight.to_dense(), "requant");
+        }
+    }
+
+    #[test]
+    fn wide_bit_widths_fall_back_to_fake_quant() {
+        let (w, stats) = problem(157, 8, 16);
+        let layer = quantize_weight(&LinearWeight::Dense(w.clone()), &w, Some(&stats), 12, false);
+        assert!(matches!(layer.weight, LinearWeight::Dense(_)));
+        assert_eq!(layer.bits, quant_bits(8 * 16, 12));
+
+        // Factorized fake-quant accounts its column-aligned sparse scales
+        // exactly: one 16-bit scale per column group (n·⌈s/128⌉), not the
+        // flat formula's under-count.
+        let mut rng = Rng::new(158);
+        let (w2, stats2) = problem(159, 32, 64);
+        let current = LinearWeight::Factorized {
+            a: Mat::randn(&mut rng, 32, 12, 0.2),
+            s: ColumnSparse::hard_threshold(&Mat::randn(&mut rng, 12, 64, 0.2), 5),
+        };
+        let layer = quantize_weight(&current, &w2, Some(&stats2), 12, false);
+        assert!(matches!(layer.weight, LinearWeight::Factorized { .. }));
+        let expected = quant_bits(32 * 12, 12)   // dense dictionary, flat legacy
+            + (5 * 64) as u64 * 12               // sparse values
+            + 64 * 16                            // one scale per column (s=5 ≤ 128)
+            + (12 * 64) as u64;                  // Eq.-11 position mask
+        assert_eq!(layer.bits, expected);
     }
 
     #[test]
@@ -411,7 +611,9 @@ mod tests {
         let mut rng = Rng::new(1);
         let fact = Compot::default().compress(&w, &stats, 0.25, &mut rng).unwrap();
         let q = quantize_factors(&fact, &w, &stats, 4);
-        // Composed CR must exceed factorization-only CR.
+        // Composition must emit packed factors…
+        assert!(matches!(q.weight, LinearWeight::QuantFactorized { .. }));
+        // …and exceed factorization-only CR.
         assert!(q.cr > fact.cr, "{} vs {}", q.cr, fact.cr);
         // And error should grow only modestly.
         assert!(q.func_err.unwrap() >= fact.func_err.unwrap() * 0.99);

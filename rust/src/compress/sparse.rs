@@ -6,6 +6,7 @@
 //! concatenation, indices sorted ascending within a column. The regular
 //! structure keeps [`apply_after`] branch-free in the hot loop.
 
+use crate::linalg::qmat::QuantMat;
 use crate::linalg::Mat;
 
 #[derive(Clone, Debug, PartialEq)]
@@ -236,6 +237,138 @@ impl ColumnSparse {
     pub fn values(&self) -> &[f32] {
         &self.val
     }
+
+    /// Actual resident heap bytes: f32 values + u32 indices.
+    pub fn resident_bytes(&self) -> usize {
+        4 * self.val.len() + 4 * self.idx.len()
+    }
+}
+
+/// Packed-quantized [`ColumnSparse`]: same `(index, value)` layout, but the
+/// values live b-bit packed in a [`QuantMat`] whose row `j` holds column
+/// `j`'s `s` values. Quantization groups therefore **never straddle column
+/// boundaries** — one column's outlier cannot poison its neighbors' scales,
+/// and the scale count is `n·⌈s/128⌉` (accounted by the `QuantMat`'s
+/// measured storage).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantColumnSparse {
+    k: usize,
+    /// len = n·s, same layout as [`ColumnSparse::idx`].
+    idx: Vec<u32>,
+    /// n×s: row j = quantized values of column j (column-aligned groups).
+    val: QuantMat,
+}
+
+impl QuantColumnSparse {
+    /// Quantize a sparse map's values to `bits`, column-aligned.
+    pub fn quantize_from(cs: &ColumnSparse, bits: u32) -> QuantColumnSparse {
+        let vmat = Mat::from_vec(cs.n, cs.s, cs.val.clone());
+        QuantColumnSparse {
+            k: cs.k,
+            idx: cs.idx.clone(),
+            val: QuantMat::quantize_from(&vmat, bits),
+        }
+    }
+
+    /// Fake-quant f32 form — bit-identical values to what the packed apply
+    /// kernels compute with.
+    pub fn dequantize(&self) -> ColumnSparse {
+        ColumnSparse {
+            k: self.k,
+            n: self.n(),
+            s: self.s(),
+            idx: self.idx.clone(),
+            val: self.val.dequantize().into_data(),
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.val.rows()
+    }
+
+    pub fn s(&self) -> usize {
+        self.val.cols()
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.val.bits()
+    }
+
+    /// Fused-dequant T·S (mirrors [`ColumnSparse::apply_after`]'s
+    /// accumulation exactly, dequantizing one column's values at a time —
+    /// bit-identical to `self.dequantize().apply_after(t)`).
+    pub fn apply_after(&self, t: &Mat) -> Mat {
+        assert_eq!(t.cols(), self.k, "apply_after: inner dim");
+        let rows = t.rows();
+        let (n, s) = (self.n(), self.s());
+        if rows >= 4 {
+            let tt = t.transpose();
+            let mut out_t = Mat::zeros(n, rows);
+            let mut vbuf = vec![0f32; s];
+            for j in 0..n {
+                self.val.dequant_row_into(j, &mut vbuf);
+                let base = j * s;
+                let orow = out_t.row_mut(j);
+                for (tti, &v) in vbuf.iter().enumerate() {
+                    if v == 0.0 {
+                        continue;
+                    }
+                    let trow = tt.row(self.idx[base + tti] as usize);
+                    for (o, x) in orow.iter_mut().zip(trow.iter()) {
+                        *o += v * *x;
+                    }
+                }
+            }
+            return out_t.transpose();
+        }
+        let mut out = Mat::zeros(rows, n);
+        for r in 0..rows {
+            self.gather_row_into(t.row(r), out.row_mut(r));
+        }
+        out
+    }
+
+    /// Single-row fused-dequant gather — the packed-native decode step of
+    /// the `S_O` half.
+    pub fn apply_after_row(&self, t: &[f32]) -> Vec<f32> {
+        let mut out = vec![0f32; self.n()];
+        self.gather_row_into(t, &mut out);
+        out
+    }
+
+    /// Mirrors `ColumnSparse::gather_row_into`: same accumulation order,
+    /// values dequantized per column on the fly.
+    fn gather_row_into(&self, t: &[f32], out: &mut [f32]) {
+        assert_eq!(t.len(), self.k, "apply_after_row: inner dim");
+        debug_assert_eq!(out.len(), self.n());
+        let s = self.s();
+        let mut vbuf = vec![0f32; s];
+        for (j, o) in out.iter_mut().enumerate() {
+            self.val.dequant_row_into(j, &mut vbuf);
+            let base = j * s;
+            let mut acc = 0f32;
+            for (tti, &v) in vbuf.iter().enumerate() {
+                acc += t[self.idx[base + tti] as usize] * v;
+            }
+            *o = acc;
+        }
+    }
+
+    /// Storage bits: packed values + scales *measured from the buffers*,
+    /// plus the paper's 1-bit k×n position mask (Eq. 11 — the storable
+    /// format for the sparsity pattern).
+    pub fn storage_bits(&self) -> u64 {
+        self.val.storage_bits() + (self.k * self.n()) as u64
+    }
+
+    /// Actual resident heap bytes (packed values + scales + u32 indices).
+    pub fn resident_bytes(&self) -> usize {
+        self.val.packed_bytes() + 4 * self.idx.len()
+    }
 }
 
 #[cfg(test)]
@@ -428,5 +561,79 @@ mod tests {
         let cs = ColumnSparse::hard_threshold(&z, 4);
         let d = cs.to_dense().fro_norm();
         assert!((cs.fro_sq().sqrt() - d).abs() < 1e-5);
+    }
+
+    #[test]
+    fn quant_sparse_apply_matches_dequantized_bitwise() {
+        // The packed sparse kernels must agree bit-for-bit with the
+        // fake-quant ColumnSparse they round-trip through.
+        prop::check(83, 25, |rng, _| {
+            let bits = [2u32, 3, 4, 8][rng.range(0, 4)];
+            let k = rng.range(1, 14);
+            let n = rng.range(1, 14);
+            let s = rng.range(0, k + 1);
+            let z = Mat::randn(rng, k, n, 1.0);
+            let cs = ColumnSparse::hard_threshold(&z, s);
+            let qs = QuantColumnSparse::quantize_from(&cs, bits);
+            assert_eq!((qs.k(), qs.n(), qs.s()), (cs.k(), cs.n(), cs.s()));
+            let fake = qs.dequantize();
+            for rows in [1usize, 6] {
+                let t = Mat::randn(rng, rows, k, 1.0);
+                let a = qs.apply_after(&t);
+                let b = fake.apply_after(&t);
+                assert_eq!(a.shape(), b.shape());
+                for i in 0..rows {
+                    for j in 0..n {
+                        assert!(
+                            (a[(i, j)] - b[(i, j)]).abs() == 0.0,
+                            "rows {rows} ({i},{j}): {} vs {}",
+                            a[(i, j)],
+                            b[(i, j)]
+                        );
+                    }
+                }
+            }
+            let t = Mat::randn(rng, 1, k, 1.0);
+            let row = qs.apply_after_row(t.row(0));
+            let full = qs.apply_after(&t);
+            for j in 0..n {
+                assert!((row[j] - full[(0, j)]).abs() == 0.0, "col {j}");
+            }
+        });
+    }
+
+    #[test]
+    fn quant_sparse_groups_are_column_aligned() {
+        // One column with a huge value must not poison its neighbor's
+        // scale: the tiny column keeps its own (fine) quantization step.
+        let z = Mat::from_vec(2, 2, vec![
+            1000.0, 0.001, //
+            -900.0, 0.0009,
+        ]);
+        let cs = ColumnSparse::hard_threshold(&z, 2);
+        let qs = QuantColumnSparse::quantize_from(&cs, 4);
+        let d = qs.dequantize().to_dense();
+        // column 1's step is ~0.001/7 ≈ 1.4e-4; a flattened group sharing
+        // column 0's scale (step ~143) would zero it out entirely.
+        assert!((d[(0, 1)] - 0.001).abs() < 2e-4, "poisoned: {}", d[(0, 1)]);
+        assert!(d[(0, 1)] != 0.0);
+        // column 0 still quantized sanely
+        assert!((d[(0, 0)] - 1000.0).abs() <= 1000.0 / 7.0);
+    }
+
+    #[test]
+    fn quant_sparse_storage_and_resident_accounting() {
+        let z = Mat::zeros(128, 256);
+        let cs = ColumnSparse::hard_threshold(&z, 16);
+        let qs = QuantColumnSparse::quantize_from(&cs, 4);
+        // 256 columns × 16 values at 4 bits = 16384 bits = 512 words; one
+        // scale per column (16 ≤ 128); mask 128×256.
+        assert_eq!(qs.storage_bits(), 512 * 32 + 256 * 16 + 128 * 256);
+        assert_eq!(qs.resident_bytes(), 512 * 4 + 256 * 2 + 4 * 256 * 16);
+        assert!(qs.storage_bits() < cs.storage_bits());
+        // s = 0 degenerates cleanly
+        let qs0 = QuantColumnSparse::quantize_from(&ColumnSparse::hard_threshold(&z, 0), 4);
+        assert_eq!(qs0.s(), 0);
+        assert_eq!(qs0.apply_after_row(&[0.0; 128]), vec![0.0; 256]);
     }
 }

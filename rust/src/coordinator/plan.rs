@@ -307,8 +307,10 @@ mod tests {
     fn two_stage_plan_matches_eq25_composed_cr() {
         // Table 7's composition through the unified pipeline: factorize at
         // 0.25, then 4-bit-quantize the stored factors. Eq. 25 predicts
-        // cr = 1 − (1−cr_fact)·b/16 for the value bits; the realized CR
-        // sits slightly below because sparse-mask bits and group scales
+        // cr = 1 − (1−cr_fact)·b/16 for the value bits; the realized CR —
+        // now *measured from the packed buffers* — sits below because
+        // sparse-mask bits, f16 group scales (one per row/column group,
+        // noticeable on test-tiny's small factors), and u32 word padding
         // don't quantize.
         let (model, calib) = setup();
         let plan =
@@ -323,12 +325,20 @@ mod tests {
             report.composed_cr
         );
         assert!(
-            (report.composed_cr - predicted).abs() < 0.05,
+            (report.composed_cr - predicted).abs() < 0.12,
             "composed {} vs Eq.25 {predicted}",
             report.composed_cr
         );
         assert!(report.composed_cr <= predicted + 1e-9, "mask/scale bits can only cost storage");
         assert!(qmodel.forward(&[1, 2, 3]).data().iter().all(|x| x.is_finite()));
+        // The quantize stage must emit *packed* storage on every projection,
+        // and the packed model must actually be smaller in resident bytes.
+        for (_, b) in qmodel.blocks() {
+            for p in crate::model::config::ProjKind::DECODER_SET {
+                assert!(b.proj(p).is_quantized(), "{p:?} left unpacked by gptq4");
+            }
+        }
+        assert!(qmodel.resident_weight_bytes() < model.resident_weight_bytes());
     }
 
     #[test]

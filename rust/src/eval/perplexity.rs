@@ -21,12 +21,23 @@ pub fn log_prob(logits_row: &[f32], target: usize) -> f64 {
 /// `model::decode`) — so perplexity exercises the same execution path the
 /// server decodes with.
 pub fn sequence_nll(model: &Model, tokens: &[u16]) -> (f64, usize) {
+    // A sequence shorter than 2 tokens has no next-token predictions (and
+    // prefill rejects empty input) — contribute nothing instead of
+    // underflowing the token count.
+    if tokens.len() < 2 {
+        return (0.0, 0);
+    }
     let mut cache = model.new_cache_with(tokens.len());
     let logits = model.prefill(&mut cache, tokens);
     nll_from_logits(&logits, tokens)
 }
 
 pub fn nll_from_logits(logits: &Mat, tokens: &[u16]) -> (f64, usize) {
+    // Guard the `tokens.len() - 1` loop bound and returned count against
+    // empty / length-1 sequences (usize underflow).
+    if tokens.len() < 2 {
+        return (0.0, 0);
+    }
     let mut nll = 0.0;
     for t in 0..tokens.len() - 1 {
         nll -= log_prob(logits.row(t), tokens[t + 1] as usize);
@@ -68,6 +79,26 @@ mod tests {
         let (nll_full, count_full) = nll_from_logits(&model.forward(&seq), &seq);
         assert_eq!(count_pre, count_full);
         assert_eq!(nll_pre, nll_full);
+    }
+
+    #[test]
+    fn degenerate_sequences_contribute_nothing() {
+        let cfg = ModelConfig::test_tiny();
+        let model = crate::model::Model::random(&cfg, &mut Rng::new(11));
+        // Empty and length-1 sequences used to underflow `len - 1`.
+        assert_eq!(sequence_nll(&model, &[]), (0.0, 0));
+        assert_eq!(sequence_nll(&model, &[3]), (0.0, 0));
+        assert_eq!(nll_from_logits(&Mat::zeros(0, 4), &[]), (0.0, 0));
+        assert_eq!(nll_from_logits(&Mat::zeros(1, 4), &[2]), (0.0, 0));
+        // A corpus of only degenerate sequences yields a neutral perplexity
+        // (exp(0/1) = 1) instead of panicking.
+        let ppl = perplexity(&model, &[vec![], vec![7]]);
+        assert_eq!(ppl, 1.0);
+        // Mixed corpora count only the real predictions.
+        let seq: Vec<u16> = (0..8u16).collect();
+        let alone = perplexity(&model, std::slice::from_ref(&seq));
+        let mixed = perplexity(&model, &[seq.clone(), vec![], vec![5]]);
+        assert_eq!(alone, mixed);
     }
 
     #[test]

@@ -46,9 +46,11 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
-/// c += a * x (contiguous), written so LLVM vectorizes it.
+/// c += a * x (contiguous), written so LLVM vectorizes it. Shared with the
+/// fused-dequant kernels in [`super::qmat`] so the packed path cannot drift
+/// from this accumulation.
 #[inline]
-fn axpy(a: f32, x: &[f32], c: &mut [f32]) {
+pub(crate) fn axpy(a: f32, x: &[f32], c: &mut [f32]) {
     debug_assert_eq!(x.len(), c.len());
     for (ci, xi) in c.iter_mut().zip(x.iter()) {
         *ci += a * *xi;

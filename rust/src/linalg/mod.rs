@@ -7,12 +7,15 @@
 //! arbitrary-shape path; see DESIGN.md §2).
 //!
 //! Storage is row-major `f32` ([`Mat`]); numerically sensitive reductions
-//! (dots inside Cholesky/SVD/eigh) accumulate in `f64`.
+//! (dots inside Cholesky/SVD/eigh) accumulate in `f64`. Quantized weights
+//! live in [`qmat::QuantMat`] — b-bit packed codes with f16 group scales and
+//! fused-dequant kernels that stay bit-identical to the f32 reference.
 
 pub mod cholesky;
 pub mod eigh;
 pub mod gemm;
 pub mod matrix;
+pub mod qmat;
 pub mod qr;
 pub mod solve;
 pub mod svd;
@@ -21,6 +24,7 @@ pub use cholesky::cholesky;
 pub use eigh::eigh;
 pub use gemm::{matmul, matmul_nt, matmul_tn};
 pub use matrix::Mat;
+pub use qmat::QuantMat;
 pub use qr::{complete_basis, qr_thin, random_orthonormal};
 pub use solve::{solve_lower_transpose_left, solve_lower_left};
 pub use svd::{procrustes, svd_thin, Svd};

@@ -1,0 +1,651 @@
+//! Packed b-bit quantized matrix storage with fused-dequant kernels.
+//!
+//! [`QuantMat`] stores a row-major matrix as b-bit (2..=8) integer codes
+//! bit-packed into `u32` words, plus one f16-encoded scale per group of
+//! [`GROUP`] values along each row (groups never straddle rows). This is the
+//! storage the `compress::quant` stage emits: the bit *accounting* the
+//! pipeline always did (b bits per value + 16-bit scale per group, Eq. 25)
+//! becomes bits that are actually resident in memory.
+//!
+//! **Bit-exactness contract.** Quantization and dequantization share one
+//! arithmetic core ([`quantize_group_to_codes`] / [`dequant_codes_into`]):
+//! the group scale is `amax/qmax` rounded to f16 and decoded back to f32,
+//! codes are `round(v/scale)` clamped symmetrically to `[-qmax, qmax]`, and
+//! a dequantized value is `(code - qmax) as f32 * scale`. The fake-quant
+//! path ([`fake_quantize_group`], used by `compress::quant::rtn_quantize`
+//! and the GPTQ inner loop) runs the *same* core, so
+//! `QuantMat::quantize_from(w, b).dequantize()` reproduces the fake-quant
+//! f32 values bit-for-bit and every existing error/CR measurement keeps its
+//! meaning on packed storage.
+//!
+//! The fused [`QuantMat::apply`] (batched, dequantized group panels) and
+//! [`QuantMat::apply_row`] (per-token decode matvec) mirror
+//! [`gemm::matmul`](super::gemm::matmul)'s accumulation order exactly
+//! (ascending inner index, zero multipliers skipped), so KV-cached decode
+//! over packed weights stays bit-identical to the batched forward over the
+//! dequantized weights.
+
+use super::gemm::axpy;
+use super::matrix::Mat;
+use crate::util::parallel::parallel_chunks_mut;
+
+/// Values per quantization group (one f16 scale each).
+pub const GROUP: usize = 128;
+
+/// Largest positive quantization level for b-bit symmetric quantization.
+#[inline]
+pub fn qmax(bits: u32) -> f32 {
+    ((1i64 << (bits - 1)) - 1) as f32
+}
+
+// ---------------------------------------------------------------------------
+// f16 (IEEE 754 binary16) conversion — no `half` crate in this offline env.
+// ---------------------------------------------------------------------------
+
+/// Round an f32 to the nearest f16 (ties to even) and return its bits.
+/// Handles subnormals; overflow saturates to ±inf.
+pub fn f16_encode(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // inf / NaN (NaN keeps a quiet payload bit)
+        return sign | 0x7c00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp - 127;
+    if e >= 16 {
+        return sign | 0x7c00; // overflow → ±inf
+    }
+    if e >= -14 {
+        // normal f16: keep 10 mantissa bits, round-to-nearest-even on the
+        // 13 dropped bits
+        let mut m = man >> 13;
+        let rest = man & 0x1fff;
+        if rest > 0x1000 || (rest == 0x1000 && (m & 1) == 1) {
+            m += 1;
+        }
+        let mut he = (e + 15) as u32;
+        if m == 0x400 {
+            // mantissa carry into the exponent
+            m = 0;
+            he += 1;
+            if he >= 31 {
+                return sign | 0x7c00;
+            }
+        }
+        return sign | ((he as u16) << 10) | (m as u16);
+    }
+    if e >= -25 {
+        // subnormal f16: shift the full 24-bit significand into place
+        let full = man | 0x0080_0000;
+        let shift = (-1 - e) as u32; // (-14 - e) + 13 dropped bits
+        let mut m = full >> shift;
+        let rest = full & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        if rest > half || (rest == half && (m & 1) == 1) {
+            m += 1; // may carry into the smallest normal — still valid bits
+        }
+        return sign | m as u16;
+    }
+    sign // underflows to ±0
+}
+
+/// Exact f32 value of an f16 bit pattern.
+pub fn f16_decode(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 31 {
+        sign | 0x7f80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign // ±0
+        } else {
+            // subnormal: normalize into an f32 normal
+            let mut e = -14i32;
+            let mut m = man;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x3ff;
+            sign | (((e + 127) as u32) << 23) | (m << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+// ---------------------------------------------------------------------------
+// Shared quantization core (packed and fake paths run the same arithmetic).
+// ---------------------------------------------------------------------------
+
+/// Quantize one group (≤ [`GROUP`] values; codes.len() == vals.len()):
+/// writes offset-binary codes `q + qmax` and returns the f16 scale bits.
+/// A zero (or below-f16-resolution) amax yields scale bits 0 and all-zero
+/// levels — both paths then dequantize the group to exact zeros.
+pub fn quantize_group_to_codes(vals: &[f32], bits: u32, codes: &mut [u16]) -> u16 {
+    debug_assert_eq!(vals.len(), codes.len());
+    assert!((2..=16).contains(&bits), "quantization bits must be in 2..=16, got {bits}");
+    let qm = qmax(bits);
+    let iqmax = qm as i32;
+    let amax = vals.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let mut sbits = f16_encode(amax / qm);
+    if sbits == 0x7c00 && amax.is_finite() {
+        // A finite amax whose scale overflows f16 (possible when GPTQ error
+        // compensation blows a row up) saturates to the largest finite f16
+        // instead of +inf — an inf scale would dequantize the whole group
+        // to 0·inf = NaN.
+        sbits = 0x7bff;
+    }
+    let scale = f16_decode(sbits);
+    if scale == 0.0 {
+        for c in codes.iter_mut() {
+            *c = iqmax as u16; // q = 0
+        }
+        return sbits; // == 0
+    }
+    for (c, &v) in codes.iter_mut().zip(vals.iter()) {
+        // Symmetric clamp: the lowest level is −qmax, not −qmax−1, so a
+        // dequantized value can never overshoot the group's amax by a step.
+        let q = (v / scale).round().clamp(-qm, qm) as i32;
+        *c = (q + iqmax) as u16;
+    }
+    sbits
+}
+
+/// Dequantize codes of one group into `out` (the one dequant formula both
+/// the packed kernels and the fake-quant path use).
+pub fn dequant_codes_into(codes: &[u16], sbits: u16, bits: u32, out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    let scale = f16_decode(sbits);
+    let iqmax = qmax(bits) as i32;
+    for (o, &c) in out.iter_mut().zip(codes.iter()) {
+        *o = (c as i32 - iqmax) as f32 * scale;
+    }
+}
+
+/// Quantize one group in place (fake-quant) and also expose its codes.
+/// Returns the f16 scale bits.
+pub fn quantize_group_inplace(vals: &mut [f32], bits: u32, codes: &mut [u16]) -> u16 {
+    let sbits = quantize_group_to_codes(vals, bits, codes);
+    dequant_codes_into(codes, sbits, bits, vals);
+    sbits
+}
+
+/// Fake-quantize one group (≤ [`GROUP`] values) in place — bit-identical to
+/// packing with [`quantize_group_to_codes`] and dequantizing.
+pub fn fake_quantize_group(vals: &mut [f32], bits: u32) {
+    assert!(vals.len() <= GROUP, "group larger than {GROUP}");
+    let mut codes = [0u16; GROUP];
+    quantize_group_inplace(vals, bits, &mut codes[..vals.len()]);
+}
+
+// ---------------------------------------------------------------------------
+// Packed storage.
+// ---------------------------------------------------------------------------
+
+/// A b-bit (2..=8) packed quantized matrix: offset-binary codes bit-packed
+/// into `u32` words (value `t` of the row-major stream occupies bits
+/// `[t·b, (t+1)·b)`), plus one f16 scale per per-row group of [`GROUP`].
+#[derive(Clone, PartialEq)]
+pub struct QuantMat {
+    rows: usize,
+    cols: usize,
+    bits: u32,
+    packed: Vec<u32>,
+    scales: Vec<u16>,
+}
+
+impl std::fmt::Debug for QuantMat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "QuantMat({}x{} @ {} bits)", self.rows, self.cols, self.bits)
+    }
+}
+
+fn pack_codes(codes: &[u16], bits: u32) -> Vec<u32> {
+    let total_bits = codes.len() * bits as usize;
+    let mut words = vec![0u32; total_bits.div_ceil(32)];
+    let mut bit = 0usize;
+    for &c in codes {
+        let c = c as u32;
+        let w = bit >> 5;
+        let off = bit & 31;
+        words[w] |= c << off;
+        if off + bits as usize > 32 {
+            words[w + 1] |= c >> (32 - off);
+        }
+        bit += bits as usize;
+    }
+    words
+}
+
+impl QuantMat {
+    /// Whether [`QuantMat`] can pack values at this width.
+    pub fn supported_bits(bits: u32) -> bool {
+        (2..=8).contains(&bits)
+    }
+
+    /// RTN-quantize a dense matrix into packed storage. `dequantize()` of
+    /// the result is bit-identical to fake-quantizing `w` with
+    /// [`fake_quantize_group`] over per-row groups of [`GROUP`].
+    pub fn quantize_from(w: &Mat, bits: u32) -> QuantMat {
+        assert!(Self::supported_bits(bits), "QuantMat packs 2..=8 bits, got {bits}");
+        let (rows, cols) = w.shape();
+        let gpr = cols.div_ceil(GROUP);
+        let mut scales = Vec::with_capacity(rows * gpr);
+        let mut codes: Vec<u16> = vec![0; rows * cols];
+        let mut group = [0u16; GROUP];
+        for i in 0..rows {
+            let row = w.row(i);
+            for g in (0..cols).step_by(GROUP) {
+                let end = (g + GROUP).min(cols);
+                let sbits = quantize_group_to_codes(&row[g..end], bits, &mut group[..end - g]);
+                scales.push(sbits);
+                codes[i * cols + g..i * cols + end].copy_from_slice(&group[..end - g]);
+            }
+        }
+        Self::from_codes(rows, cols, bits, &codes, scales)
+    }
+
+    /// Assemble from explicit codes (row-major, offset-binary) and per-row
+    /// group scales — the GPTQ loop builds these incrementally.
+    pub fn from_codes(
+        rows: usize,
+        cols: usize,
+        bits: u32,
+        codes: &[u16],
+        scales: Vec<u16>,
+    ) -> QuantMat {
+        assert!(Self::supported_bits(bits), "QuantMat packs 2..=8 bits, got {bits}");
+        assert_eq!(codes.len(), rows * cols, "from_codes: code count");
+        assert_eq!(scales.len(), rows * cols.div_ceil(GROUP), "from_codes: scale count");
+        let max_code = (1u32 << bits) - 1;
+        debug_assert!(codes.iter().all(|&c| (c as u32) < max_code), "code out of b-bit range");
+        QuantMat { rows, cols, bits, packed: pack_codes(codes, bits), scales }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    #[inline]
+    fn code_at(&self, t: usize) -> u32 {
+        let bits = self.bits as usize;
+        let bit = t * bits;
+        let w = bit >> 5;
+        let off = bit & 31;
+        let mask = (1u32 << bits) - 1;
+        let mut v = self.packed[w] >> off;
+        if off + bits > 32 {
+            v |= self.packed[w + 1] << (32 - off);
+        }
+        v & mask
+    }
+
+    /// Dequantize row `i` into `out` (len == cols).
+    pub fn dequant_row_into(&self, i: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.cols, "dequant_row_into: width");
+        let gpr = self.cols.div_ceil(GROUP);
+        let iqmax = qmax(self.bits) as i32;
+        for (g, chunk) in out.chunks_mut(GROUP).enumerate() {
+            let scale = f16_decode(self.scales[i * gpr + g]);
+            let base = i * self.cols + g * GROUP;
+            for (t, o) in chunk.iter_mut().enumerate() {
+                *o = (self.code_at(base + t) as i32 - iqmax) as f32 * scale;
+            }
+        }
+    }
+
+    /// Materialize the dequantized dense matrix.
+    pub fn dequantize(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            self.dequant_row_into(i, m.row_mut(i));
+        }
+        m
+    }
+
+    /// Fused-dequant batched product `y = x·W`: dequantize panels of weight
+    /// rows once per panel and accumulate like
+    /// [`gemm::matmul`](super::gemm::matmul) (ascending inner index, zero
+    /// multipliers skipped) — bit-identical to
+    /// `matmul(x, &self.dequantize())`.
+    pub fn apply(&self, x: &Mat) -> Mat {
+        assert_eq!(
+            x.cols(),
+            self.rows,
+            "QuantMat::apply: inner dims {}x{} · {}x{}",
+            x.rows(),
+            x.cols(),
+            self.rows,
+            self.cols
+        );
+        // Panel height matches gemm's K-block; any value preserves the
+        // per-output-row accumulation order, this one keeps the panel in L2.
+        const KB: usize = 64;
+        // Row chunk per task, matching gemm's threading granularity.
+        const ROWS_PER_TASK: usize = 16;
+        let (t, m, n) = (x.rows(), self.rows, self.cols);
+        let mut out = Mat::zeros(t, n);
+        if t == 0 || m == 0 || n == 0 {
+            return out;
+        }
+        let mut panel = vec![0.0f32; KB.min(m) * n];
+        for kb in (0..m).step_by(KB) {
+            let k1 = (kb + KB).min(m);
+            for kk in kb..k1 {
+                self.dequant_row_into(kk, &mut panel[(kk - kb) * n..(kk - kb + 1) * n]);
+            }
+            // Accumulate the panel into all output rows, threaded over
+            // disjoint row chunks like gemm::matmul — per-row accumulation
+            // order (ascending kk, zeros skipped) is unchanged, so the
+            // bit-identical contract survives threading.
+            let panel = &panel;
+            parallel_chunks_mut(out.data_mut(), ROWS_PER_TASK * n, |_idx, off, chunk| {
+                let r0 = off / n;
+                let rows_here = chunk.len() / n;
+                for r in 0..rows_here {
+                    let xrow = x.row(r0 + r);
+                    let orow = &mut chunk[r * n..(r + 1) * n];
+                    for kk in kb..k1 {
+                        let xv = xrow[kk];
+                        if xv == 0.0 {
+                            continue;
+                        }
+                        axpy(xv, &panel[(kk - kb) * n..(kk - kb) * n + n], orow);
+                    }
+                }
+            });
+        }
+        out
+    }
+
+    /// Per-token fused-dequant matvec `y = x·W` for one activation row —
+    /// the packed-native decode kernel. Mirrors
+    /// [`gemm::matvec_row`](super::gemm::matvec_row), so it is bit-identical
+    /// to `matvec_row(x, &self.dequantize())`.
+    pub fn apply_row(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.rows, "QuantMat::apply_row: inner dim");
+        let mut out = vec![0.0f32; self.cols];
+        if self.cols == 0 {
+            return out;
+        }
+        let mut wrow = vec![0.0f32; self.cols];
+        for (kk, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            self.dequant_row_into(kk, &mut wrow);
+            axpy(xi, &wrow, &mut out);
+        }
+        out
+    }
+
+    /// Storage bits *measured from the actual packed buffers*: packed words
+    /// at 32 bits each plus f16 scales. Always ≥ the Eq.-25 formula
+    /// (`count·b + ⌈count/128⌉·16`) — word padding and per-row group
+    /// alignment only add.
+    pub fn storage_bits(&self) -> u64 {
+        32 * self.packed.len() as u64 + 16 * self.scales.len() as u64
+    }
+
+    /// Resident heap bytes of the packed buffers.
+    pub fn packed_bytes(&self) -> usize {
+        4 * self.packed.len() + 2 * self.scales.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm;
+    use crate::util::{prop, Rng};
+
+    #[test]
+    fn f16_known_values() {
+        for &(x, h) in &[
+            (0.0f32, 0x0000u16),
+            (1.0, 0x3c00),
+            (-1.0, 0xbc00),
+            (0.5, 0x3800),
+            (2.0, 0x4000),
+            (65504.0, 0x7bff),          // f16 max
+            (6.103_515_6e-5, 0x0400),   // smallest normal
+            (5.960_464_5e-8, 0x0001),   // smallest subnormal
+        ] {
+            assert_eq!(f16_encode(x), h, "encode {x}");
+            assert_eq!(f16_decode(h), x, "decode {h:#x}");
+        }
+        // overflow saturates, -0 keeps its sign
+        assert_eq!(f16_encode(1e6), 0x7c00);
+        assert_eq!(f16_encode(-1e6), 0xfc00);
+        assert_eq!(f16_encode(-0.0), 0x8000);
+        assert!(f16_decode(0x7c00).is_infinite());
+        assert!(f16_decode(0x7e00).is_nan());
+        assert!(f16_encode(f32::NAN) & 0x7c00 == 0x7c00 && f16_encode(f32::NAN) & 0x3ff != 0);
+    }
+
+    #[test]
+    fn f16_roundtrip_all_bit_patterns() {
+        // decode→encode is the identity on every non-NaN f16.
+        for h in 0..=u16::MAX {
+            let exp = (h >> 10) & 0x1f;
+            let man = h & 0x3ff;
+            if exp == 31 && man != 0 {
+                assert!(f16_decode(h).is_nan());
+                continue;
+            }
+            assert_eq!(f16_encode(f16_decode(h)), h, "pattern {h:#06x}");
+        }
+    }
+
+    #[test]
+    fn f16_encode_rounds_to_nearest() {
+        prop::check(90, 300, |rng, _| {
+            let x = rng.gauss32() * 10f32.powi(rng.range(0, 9) as i32 - 4);
+            let h = f16_decode(f16_encode(x));
+            // relative error of round-to-nearest f16 ≤ 2^-11 in normal range
+            if x.abs() > 6.2e-5 && x.abs() < 65000.0 {
+                assert!(((h - x) / x).abs() <= 1.0 / 2048.0, "{x} → {h}");
+            }
+        });
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_ragged() {
+        let mut rng = Rng::new(91);
+        for bits in [2u32, 3, 4, 5, 7, 8] {
+            let max_code = (1u32 << bits) - 1;
+            for count in [1usize, 7, 32, 33, 129, 300] {
+                let codes: Vec<u16> =
+                    (0..count).map(|_| (rng.range(0, max_code as usize)) as u16).collect();
+                let rows = 1;
+                let scales = vec![0x3c00u16; count.div_ceil(GROUP)];
+                let qm = QuantMat::from_codes(rows, count, bits, &codes, scales);
+                for (t, &c) in codes.iter().enumerate() {
+                    assert_eq!(qm.code_at(t), c as u32, "bits {bits} count {count} t {t}");
+                }
+            }
+        }
+    }
+
+    /// Reference fake-quant: per-row groups of GROUP using the shared core.
+    fn fake_rtn(w: &Mat, bits: u32) -> Mat {
+        let mut q = w.clone();
+        for i in 0..q.rows() {
+            let row = q.row_mut(i);
+            let cols = row.len();
+            for g in (0..cols).step_by(GROUP) {
+                let end = (g + GROUP).min(cols);
+                fake_quantize_group(&mut row[g..end], bits);
+            }
+        }
+        q
+    }
+
+    #[test]
+    fn dequantize_matches_fake_quant_bit_for_bit() {
+        // The tentpole contract: packed storage reproduces the fake-quant
+        // f32 values exactly, for every bit width and ragged group tails.
+        prop::check(92, 40, |rng, _| {
+            for &bits in &[2u32, 3, 4, 8] {
+                let m = rng.range(1, 12);
+                let n = rng.range(1, 300); // crosses the 128/256 group edges
+                let w = Mat::randn(rng, m, n, 0.3);
+                let qm = QuantMat::quantize_from(&w, bits);
+                let deq = qm.dequantize();
+                let fake = fake_rtn(&w, bits);
+                for i in 0..m {
+                    for j in 0..n {
+                        assert!(
+                            (deq[(i, j)] - fake[(i, j)]).abs() == 0.0,
+                            "bits {bits} ({i},{j}): {} vs {}",
+                            deq[(i, j)],
+                            fake[(i, j)]
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn symmetric_clamp_never_overshoots_amax() {
+        // The asymmetric −qmax−1 level could dequantize a value below
+        // −amax − step/2; the symmetric clamp keeps |v̂| ≤ qmax·scale.
+        prop::check(93, 60, |rng, _| {
+            let bits = [2u32, 3, 4, 8][rng.range(0, 4)];
+            let n = rng.range(1, 100);
+            let vals: Vec<f32> = (0..n).map(|_| rng.gauss32()).collect();
+            let amax = vals.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let mut q = vals.clone();
+            fake_quantize_group(&mut q, bits);
+            // f16 scale rounding can stretch the ceiling by ≤ 2^-11 relative
+            let ceil = amax * (1.0 + 1.0 / 1024.0) + 1e-12;
+            for (t, &v) in q.iter().enumerate() {
+                assert!(v.abs() <= ceil, "t {t}: |{v}| > amax {amax} (bits {bits})");
+            }
+        });
+    }
+
+    #[test]
+    fn huge_groups_saturate_scale_without_nan() {
+        // A finite amax whose amax/qmax overflows f16 must clamp the scale
+        // to the largest finite f16 (65504), never to +inf — an inf scale
+        // would dequantize the group to NaN.
+        for bits in [2u32, 4, 8] {
+            let mut vals = vec![3.0e38f32, -1.0e38, 0.5, 0.0];
+            fake_quantize_group(&mut vals, bits);
+            assert!(vals.iter().all(|v| v.is_finite()), "bits {bits}: {vals:?}");
+            // the huge magnitudes clamp to qmax·65504 with the right signs
+            assert!(vals[0] > 0.0 && vals[1] < 0.0, "bits {bits}: {vals:?}");
+            let w = Mat::from_vec(1, 4, vec![3.0e38, -1.0e38, 0.5, 0.0]);
+            let qm = QuantMat::quantize_from(&w, 4);
+            assert!(qm.dequantize().data().iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn zero_and_tiny_groups_quantize_to_zero() {
+        let mut vals = vec![0.0f32, -0.0, 0.0];
+        fake_quantize_group(&mut vals, 4);
+        assert!(vals.iter().all(|&v| v == 0.0));
+        // below f16 subnormal resolution: flushed to an exact-zero group
+        let mut tiny = vec![1e-40f32, -1e-41, 0.0];
+        fake_quantize_group(&mut tiny, 4);
+        assert!(tiny.iter().all(|&v| v == 0.0));
+        let qm = QuantMat::quantize_from(&Mat::zeros(3, 5), 4);
+        assert_eq!(qm.dequantize(), Mat::zeros(3, 5));
+    }
+
+    #[test]
+    fn apply_matches_dense_matmul_bitwise() {
+        prop::check(94, 25, |rng, _| {
+            let bits = [2u32, 4, 8][rng.range(0, 3)];
+            let m = rng.range(1, 80);
+            let n = rng.range(1, 140);
+            let t = rng.range(1, 6);
+            let w = Mat::randn(rng, m, n, 0.5);
+            let qm = QuantMat::quantize_from(&w, bits);
+            let deq = qm.dequantize();
+            let x = Mat::randn(rng, t, m, 1.0);
+            let fused = qm.apply(&x);
+            let dense = gemm::matmul(&x, &deq);
+            assert_eq!(fused.shape(), dense.shape());
+            for i in 0..t {
+                for j in 0..n {
+                    assert!(
+                        (fused[(i, j)] - dense[(i, j)]).abs() == 0.0,
+                        "({i},{j}): {} vs {}",
+                        fused[(i, j)],
+                        dense[(i, j)]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn apply_row_matches_apply_bitwise() {
+        prop::check(95, 25, |rng, _| {
+            let bits = [3u32, 4, 8][rng.range(0, 3)];
+            let m = rng.range(1, 70);
+            let n = rng.range(1, 150);
+            let w = Mat::randn(rng, m, n, 0.5);
+            let qm = QuantMat::quantize_from(&w, bits);
+            let x = Mat::randn(rng, 1, m, 1.0);
+            let row = qm.apply_row(x.row(0));
+            let full = qm.apply(&x);
+            assert_eq!(row.len(), n);
+            for j in 0..n {
+                assert!((row[j] - full[(0, j)]).abs() == 0.0, "col {j}");
+            }
+        });
+    }
+
+    #[test]
+    fn storage_is_measured_from_buffers() {
+        // 16×200 at 4 bits: 3200 value bits → 100 words, per-row groups
+        // ⌈200/128⌉ = 2 per row → 32 scales.
+        let w = Mat::zeros(16, 200);
+        let qm = QuantMat::quantize_from(&w, 4);
+        assert_eq!(qm.storage_bits(), 100 * 32 + 32 * 16);
+        assert_eq!(qm.packed_bytes(), 400 + 64);
+        // measured ≥ the flat Eq.-25 formula
+        let formula = (16 * 200 * 4) as u64 + ((16 * 200usize).div_ceil(GROUP) as u64) * 16;
+        assert!(qm.storage_bits() >= formula);
+        // 3 bits on a ragged row: 11·3 = 33 bits pad to 2 words, 1 scale
+        let qm3 = QuantMat::quantize_from(&Mat::zeros(1, 11), 3);
+        assert_eq!(qm3.storage_bits(), 2 * 32 + 16);
+    }
+
+    #[test]
+    fn empty_shapes_do_not_panic() {
+        for (r, c) in [(0usize, 5usize), (5, 0), (0, 0)] {
+            let qm = QuantMat::quantize_from(&Mat::zeros(r, c), 4);
+            assert_eq!(qm.shape(), (r, c));
+            assert_eq!(qm.dequantize(), Mat::zeros(r, c));
+            assert_eq!(qm.storage_bits(), 0);
+            let x = Mat::zeros(3, r);
+            assert_eq!(qm.apply(&x), Mat::zeros(3, c));
+            assert_eq!(qm.apply_row(&vec![0.0; r]), vec![0.0; c]);
+        }
+    }
+}

@@ -265,6 +265,13 @@ fn main() -> anyhow::Result<()> {
                 row.ppl_c4,
                 report.wall_secs
             );
+            let (before, after) =
+                (model.resident_weight_bytes(), compressed.resident_weight_bytes());
+            println!(
+                "resident weight bytes: {before} → {after} ({:.3}× — measured from stored \
+                 buffers, packed for quantized stages)",
+                after as f64 / before as f64
+            );
         }
         "eval" => {
             flags.expect_known("eval", &["model", "items", "calib", "seed"])?;
@@ -317,9 +324,11 @@ fn main() -> anyhow::Result<()> {
                 let calib = lang.gen_batch(8, 96, &mut compot::util::Rng::new(1));
                 let (m, report) = plan.run(&model, &calib)?;
                 println!(
-                    "serving compressed model ({}; CR {:.3})",
+                    "serving compressed model ({}; CR {:.3}; {} resident weight bytes vs {} dense)",
                     plan.describe(),
-                    report.composed_cr
+                    report.composed_cr,
+                    m.resident_weight_bytes(),
+                    model.resident_weight_bytes()
                 );
                 info.set("plan", plan.describe().into());
                 info.set("model_cr", report.composed_cr.into());

@@ -9,9 +9,10 @@
 //!   [`KvCache`] with every layer's post-RoPE K and V rows;
 //! - **decode step** — one token per call: each projection runs natively in
 //!   its stored representation ([`LinearWeight::apply_row`] — dense mat-vec,
-//!   low-rank double mat-vec, or dictionary mat-vec + sparse gather, never a
-//!   densified weight), and attention reads the cache, costing O(T) instead
-//!   of O(T²).
+//!   low-rank double mat-vec, dictionary mat-vec + sparse gather, or the
+//!   fused-dequant matvec straight off b-bit packed buffers for the
+//!   quantized variants; never a densified weight), and attention reads the
+//!   cache, costing O(T) instead of O(T²).
 //!
 //! Both phases reuse the exact per-row arithmetic of the batched path
 //! (`rmsnorm_row`, `rope_row`, `attention_head`, `matvec_row` mirroring
@@ -441,8 +442,9 @@ pub fn sampler_cfg_from_json(j: &crate::util::json::Json) -> SamplerCfg {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compress::sparse::ColumnSparse;
+    use crate::compress::sparse::{ColumnSparse, QuantColumnSparse};
     use crate::compress::LinearWeight;
+    use crate::linalg::QuantMat;
     use crate::model::config::{ModelConfig, ProjKind};
 
     fn tiny_model(seed: u64) -> Model {
@@ -506,6 +508,34 @@ mod tests {
         m
     }
 
+    /// Every projection swapped for its 4-bit packed form (rtn on whatever
+    /// the base model stores) — the packed-native decode acceptance matrix.
+    fn quantized(model: &Model) -> Model {
+        let mut m = model.clone();
+        for stage in m.stages.iter_mut() {
+            if let Stage::Block(b) = stage {
+                for p in ProjKind::DECODER_SET {
+                    let packed = match b.proj(p) {
+                        LinearWeight::Dense(w) => {
+                            LinearWeight::QuantDense(QuantMat::quantize_from(w, 4))
+                        }
+                        LinearWeight::LowRank { b: lb, c } => LinearWeight::QuantLowRank {
+                            b: QuantMat::quantize_from(lb, 4),
+                            c: QuantMat::quantize_from(c, 4),
+                        },
+                        LinearWeight::Factorized { a, s } => LinearWeight::QuantFactorized {
+                            a: QuantMat::quantize_from(a, 4),
+                            s: QuantColumnSparse::quantize_from(s, 4),
+                        },
+                        other => other.clone(),
+                    };
+                    *b.proj_mut(p) = packed;
+                }
+            }
+        }
+        m
+    }
+
     #[test]
     fn prefill_matches_forward_bitwise() {
         for model in [tiny_model(21), lowrank_model(21), factorized_model(21)] {
@@ -552,6 +582,59 @@ mod tests {
             let full = model.greedy_decode_full(&prompt, 12);
             assert_eq!(cached, full, "{name}: cached vs full-forward continuation");
             assert_eq!(cached.len(), 12);
+        }
+    }
+
+    #[test]
+    fn cached_greedy_parity_quantized_variants() {
+        // Packed-native decode: for every quantized LinearWeight variant the
+        // KV-cached greedy continuation must equal both the full forward and
+        // the fake-quant f32 reference model, token for token.
+        for (name, model) in [
+            ("quant-dense", quantized(&tiny_model(33))),
+            ("quant-lowrank", quantized(&lowrank_model(34))),
+            ("quant-factorized", quantized(&factorized_model(35))),
+        ] {
+            let prompt: Vec<u16> = vec![3, 1, 4, 1, 5];
+            let cached = model.greedy_decode(&prompt, 12);
+            let full = model.greedy_decode_full(&prompt, 12);
+            assert_eq!(cached, full, "{name}: cached vs full-forward continuation");
+            let reference = model.dequantize_projections();
+            assert_eq!(
+                cached,
+                reference.greedy_decode(&prompt, 12),
+                "{name}: packed decode vs fake-quant f32 reference"
+            );
+            assert_eq!(cached.len(), 12);
+            // packing must actually shrink the resident weights
+            assert!(model.resident_weight_bytes() < reference.resident_weight_bytes());
+        }
+    }
+
+    #[test]
+    fn quantized_decode_step_matches_full_forward_bitwise() {
+        // The fused per-row dequant kernel vs the fused batched panels: one
+        // decode step must reproduce the batched forward's last logits row
+        // exactly for every packed variant.
+        for (name, model) in [
+            ("quant-dense", quantized(&tiny_model(36))),
+            ("quant-lowrank", quantized(&lowrank_model(37))),
+            ("quant-factorized", quantized(&factorized_model(38))),
+        ] {
+            let tokens: Vec<u16> = (0..16u16).map(|i| (i * 7 + 3) % 64).collect();
+            let mut cache = model.new_cache();
+            model.prefill(&mut cache, &tokens[..tokens.len() - 1]);
+            let step = model.decode_step(&mut cache, tokens[tokens.len() - 1]);
+            let full = model.forward(&tokens);
+            let last = full.row(full.rows() - 1);
+            for j in 0..last.len() {
+                assert!(
+                    (step[j] - last[j]).abs() == 0.0,
+                    "{name} logit {j}: {} vs {}",
+                    step[j],
+                    last[j]
+                );
+            }
         }
     }
 

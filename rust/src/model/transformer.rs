@@ -429,6 +429,46 @@ impl Model {
         bits
     }
 
+    /// Actual resident bytes of every weight buffer: embed, LM head, and
+    /// norms at 4 B/f32, and each projection in its *stored* representation
+    /// — packed-quantized projections count their real packed size (codes +
+    /// f16 scales + sparse indices). This is the memory-bandwidth quantity
+    /// the `quant_decode` benchmark gates on, as opposed to the paper's
+    /// [`storage_bits`](Self::storage_bits) accounting protocol.
+    pub fn resident_weight_bytes(&self) -> usize {
+        let mut bytes = 4 * (self.embed.rows() * self.embed.cols()
+            + self.lm_head.rows() * self.lm_head.cols()
+            + self.final_norm.len());
+        for stage in &self.stages {
+            match stage {
+                Stage::Block(b) => {
+                    bytes += 4 * (b.attn_norm.len() + b.mlp_norm.len());
+                    for p in ProjKind::DECODER_SET {
+                        bytes += b.proj(p).resident_bytes();
+                    }
+                }
+                Stage::Linear(t) => bytes += 4 * t.rows() * t.cols(),
+            }
+        }
+        bytes
+    }
+
+    /// Packed-quantized projections replaced by their dequantized f32 forms
+    /// (bit-identical values) — the fake-quant reference the packed decode
+    /// path is parity-tested against.
+    pub fn dequantize_projections(&self) -> Model {
+        let mut out = self.clone();
+        for stage in out.stages.iter_mut() {
+            if let Stage::Block(b) = stage {
+                for p in ProjKind::DECODER_SET {
+                    let w = b.proj(p).dequantized();
+                    *b.proj_mut(p) = w;
+                }
+            }
+        }
+        out
+    }
+
     /// Storage bits of the compressible projections only (the quantity the
     /// model-level CR is defined over, matching the paper's protocol).
     pub fn projection_bits(&self) -> u64 {

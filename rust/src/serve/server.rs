@@ -114,6 +114,10 @@ pub fn serve_blocking(
     listener.set_nonblocking(true)?;
     on_ready(listener.local_addr()?);
 
+    // The server always knows its real memory footprint: packed-quantized
+    // models report the bytes actually resident, not the fp16 accounting.
+    let mut info = info;
+    info.set("resident_weight_bytes", model.resident_weight_bytes().into());
     let info = Arc::new(info);
     let batcher: Arc<Batcher<Job>> = Arc::new(Batcher::new(policy));
     let metrics = Arc::new(Metrics::default());
@@ -382,6 +386,8 @@ mod tests {
         let mut client = Client::connect(addr).unwrap();
         let info = client.info().unwrap();
         assert_eq!(info.get("model").and_then(Json::as_str), Some("test-tiny"));
+        // the server injects its real memory footprint into the metadata
+        assert!(info.get("resident_weight_bytes").and_then(Json::as_usize).unwrap() > 0);
         let r = client.request(&[1, 2, 3], 4).unwrap();
         assert_eq!(r.tokens.len(), 4);
         assert!(r.latency_ms >= 0.0);

@@ -233,5 +233,22 @@ fn kv_cached_decode_is_bit_identical_for_compressed_plans() {
         let full = compressed.greedy_decode_full(&prompt, 10);
         assert_eq!(cached, full, "{spec}: KV-cached decode diverged from full forward");
         assert_eq!(cached.len(), 10);
+        if spec.contains("gptq4") {
+            // The quantize stage emits *packed* storage on every projection;
+            // the packed decode path must match the fake-quant f32 reference
+            // token for token, while actually occupying fewer resident bytes.
+            for (_, b) in compressed.blocks() {
+                for p in compot::model::config::ProjKind::DECODER_SET {
+                    assert!(b.proj(p).is_quantized(), "{spec}: {p:?} left unpacked");
+                }
+            }
+            let reference = compressed.dequantize_projections();
+            assert_eq!(
+                cached,
+                reference.greedy_decode(&prompt, 10),
+                "{spec}: packed decode diverged from the fake-quant reference"
+            );
+            assert!(compressed.resident_weight_bytes() < reference.resident_weight_bytes());
+        }
     }
 }
