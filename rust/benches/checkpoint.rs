@@ -1,0 +1,130 @@
+//! Checkpoint benchmark: cold-loading a CPT2 compressed checkpoint vs
+//! recompressing from the dense model at startup — the number that decides
+//! whether serve restarts scale with compressed size or with model size.
+//!
+//! Gates (the process exits non-zero if any fails):
+//! - round trip is lossless: the reloaded model greedy-decodes
+//!   **token-identically** to the in-memory compressed model and reports
+//!   **equal** `resident_weight_bytes()`;
+//! - cold load is **strictly faster** than the recompress path
+//!   (calibration + plan run) on the bench model.
+//!
+//! Run: `cargo bench --bench checkpoint` (add `-- --tiny` for the CI
+//! round-trip smoke run). Writes `BENCH_checkpoint.json` (override with
+//! `BENCH_CHECKPOINT_OUT`).
+
+use compot::compress::StageConfig;
+use compot::coordinator::plan::CompressionPlan;
+use compot::data::SynthLang;
+use compot::model::config::ModelConfig;
+use compot::model::Model;
+use compot::util::json::Json;
+use compot::util::timer::{bench, humanize};
+use compot::util::Rng;
+
+const PLAN: &str = "compot@0.25+gptq4";
+
+fn main() {
+    let tiny = std::env::args().any(|a| a == "--tiny");
+    let budget: f64 =
+        std::env::var("BENCH_SECS").ok().and_then(|v| v.parse().ok()).unwrap_or(0.4);
+    let (cfg, prompt_len, gen_len) = if tiny {
+        (ModelConfig::test_tiny(), 12usize, 12usize)
+    } else {
+        (ModelConfig::llama_micro(), 32, 32)
+    };
+    let mut rng = Rng::new(171);
+    let model = Model::random(&cfg, &mut rng);
+    let lang = SynthLang::wiki(cfg.vocab);
+    let calib = lang.gen_batch(6, 48, &mut Rng::new(172));
+    let prompt: Vec<u16> =
+        (0..prompt_len as u16).map(|i| (i * 7 + 1) % cfg.vocab as u16).collect();
+    let plan = CompressionPlan::parse(PLAN, &StageConfig::new(0.25, false)).expect("plan");
+
+    // --- recompress path: what a serve restart costs without a checkpoint ---
+    let st_recompress = bench(
+        || {
+            std::hint::black_box(plan.run(&model, &calib).expect("plan run"));
+        },
+        budget,
+        50,
+    );
+    println!("{}", st_recompress.format(&format!("recompress ({PLAN}, {})", cfg.name)));
+    let (compressed, report) = plan.run(&model, &calib).expect("plan run");
+
+    // --- save, then cold-load the checkpoint ---
+    let path = std::env::temp_dir().join(format!("compot_bench_{}.cpt2", cfg.name));
+    compressed.save_compressed(&path, Some(&plan.describe())).expect("save_compressed");
+    let file_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    let st_load = bench(
+        || {
+            std::hint::black_box(Model::load_compressed(&path).expect("load_compressed"));
+        },
+        budget,
+        200,
+    );
+    println!("{}", st_load.format("cold-load CPT2 checkpoint"));
+    let speedup = st_recompress.median_s / st_load.median_s;
+    println!(
+        "cold load {} vs recompress {} — {speedup:.1}x faster restart ({file_bytes} B on disk)",
+        humanize(st_load.median_s),
+        humanize(st_recompress.median_s)
+    );
+
+    // --- round-trip losslessness ---
+    let (reloaded, info) = Model::load_compressed(&path).expect("load_compressed");
+    let bytes_match = reloaded.resident_weight_bytes() == compressed.resident_weight_bytes();
+    let tokens_match =
+        reloaded.greedy_decode(&prompt, gen_len) == compressed.greedy_decode(&prompt, gen_len);
+    println!(
+        "round trip: resident bytes {} | greedy decode {} | recorded plan '{}'",
+        if bytes_match { "equal" } else { "DIFFER" },
+        if tokens_match { "token-identical" } else { "DIVERGED" },
+        info.plan.as_deref().unwrap_or("?")
+    );
+    let loaded_tok_s = {
+        let st = bench(
+            || {
+                std::hint::black_box(reloaded.greedy_decode(&prompt, gen_len));
+            },
+            budget,
+            500,
+        );
+        gen_len as f64 / st.median_s
+    };
+    println!("decode through the reloaded checkpoint: {loaded_tok_s:.0} tok/s");
+    std::fs::remove_file(&path).ok();
+
+    // --- record the trajectory point ---
+    let mut j = Json::obj();
+    j.set("bench", "checkpoint".into())
+        .set("model", cfg.name.as_str().into())
+        .set("plan", PLAN.into())
+        .set("prompt_len", prompt_len.into())
+        .set("gen_len", gen_len.into())
+        .set("checkpoint_file_bytes", (file_bytes as usize).into())
+        .set("resident_bytes", compressed.resident_weight_bytes().into())
+        .set("composed_cr", report.composed_cr.into())
+        .set("cold_load_s", st_load.median_s.into())
+        .set("recompress_s", st_recompress.median_s.into())
+        .set("cold_load_speedup", speedup.into())
+        .set("decode_tok_s_loaded", loaded_tok_s.into())
+        .set("roundtrip_tokens_identical", Json::Bool(tokens_match))
+        .set("roundtrip_bytes_equal", Json::Bool(bytes_match));
+    let out =
+        std::env::var("BENCH_CHECKPOINT_OUT").unwrap_or_else(|_| "BENCH_checkpoint.json".into());
+    match std::fs::write(&out, j.to_string() + "\n") {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+
+    // --- hard gates (after the JSON so CI still records the numbers) ---
+    assert!(tokens_match, "reloaded checkpoint decode diverged from the in-memory model");
+    assert!(bytes_match, "reloaded checkpoint resident bytes differ from the in-memory model");
+    assert!(
+        st_load.median_s < st_recompress.median_s,
+        "cold load ({}) must beat recompression ({})",
+        humanize(st_load.median_s),
+        humanize(st_recompress.median_s)
+    );
+}

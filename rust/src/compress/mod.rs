@@ -58,7 +58,7 @@ pub const VALUE_BITS: u64 = 16;
 /// `apply`/`apply_row` kernels fuse dequantization into the product while
 /// staying bit-identical to applying the dequantized f32 weights, and their
 /// `storage_bits` are measured from the actual packed buffers.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum LinearWeight {
     /// Dense m×n.
     Dense(Mat),

@@ -238,6 +238,39 @@ impl ColumnSparse {
         &self.val
     }
 
+    /// Raw row indices (len n·s, column-major, ascending within a column) —
+    /// what a CPT2 checkpoint writes and reads back verbatim.
+    pub fn indices(&self) -> &[u32] {
+        &self.idx
+    }
+
+    /// Reassemble from raw checkpoint buffers, validating the layout
+    /// invariants (lengths, s ≤ k, every index < k) — the buffers come from
+    /// disk, so violations are errors, not panics.
+    pub fn from_raw_parts(
+        k: usize,
+        n: usize,
+        s: usize,
+        idx: Vec<u32>,
+        val: Vec<f32>,
+    ) -> anyhow::Result<ColumnSparse> {
+        anyhow::ensure!(s <= k, "sparse map s={s} exceeds k={k}");
+        let want = n
+            .checked_mul(s)
+            .ok_or_else(|| anyhow::anyhow!("sparse map n·s overflows (n={n}, s={s})"))?;
+        anyhow::ensure!(
+            idx.len() == want && val.len() == want,
+            "sparse map buffers ({} idx, {} val) do not match n·s = {want}",
+            idx.len(),
+            val.len()
+        );
+        anyhow::ensure!(
+            idx.iter().all(|&i| (i as usize) < k),
+            "sparse map index out of range (k={k})"
+        );
+        Ok(ColumnSparse { k, n, s, idx, val })
+    }
+
     /// Actual resident heap bytes: f32 values + u32 indices.
     pub fn resident_bytes(&self) -> usize {
         4 * self.val.len() + 4 * self.idx.len()
@@ -363,6 +396,41 @@ impl QuantColumnSparse {
     /// format for the sparsity pattern).
     pub fn storage_bits(&self) -> u64 {
         self.val.storage_bits() + (self.k * self.n()) as u64
+    }
+
+    /// Raw row indices (len n·s, same layout as [`ColumnSparse::indices`]).
+    pub fn indices(&self) -> &[u32] {
+        &self.idx
+    }
+
+    /// The packed n×s value matrix (row j = column j's quantized values).
+    pub fn values_qmat(&self) -> &QuantMat {
+        &self.val
+    }
+
+    /// Reassemble from raw checkpoint buffers: `val` row count is n, its
+    /// column count is s. Validates the same invariants as
+    /// [`ColumnSparse::from_raw_parts`].
+    pub fn from_raw_parts(
+        k: usize,
+        idx: Vec<u32>,
+        val: QuantMat,
+    ) -> anyhow::Result<QuantColumnSparse> {
+        let (n, s) = val.shape();
+        anyhow::ensure!(s <= k, "quantized sparse map s={s} exceeds k={k}");
+        let want = n
+            .checked_mul(s)
+            .ok_or_else(|| anyhow::anyhow!("quantized sparse map n·s overflows"))?;
+        anyhow::ensure!(
+            idx.len() == want,
+            "quantized sparse map has {} indices, want n·s = {want}",
+            idx.len()
+        );
+        anyhow::ensure!(
+            idx.iter().all(|&i| (i as usize) < k),
+            "quantized sparse map index out of range (k={k})"
+        );
+        Ok(QuantColumnSparse { k, idx, val })
     }
 
     /// Actual resident heap bytes (packed values + scales + u32 indices).
@@ -619,6 +687,43 @@ mod tests {
         assert!(d[(0, 1)] != 0.0);
         // column 0 still quantized sanely
         assert!((d[(0, 0)] - 1000.0).abs() <= 1000.0 / 7.0);
+    }
+
+    #[test]
+    fn raw_parts_roundtrip_both_layouts() {
+        let mut rng = Rng::new(84);
+        let z = Mat::randn(&mut rng, 9, 6, 1.0);
+        let cs = ColumnSparse::hard_threshold(&z, 3);
+        let back = ColumnSparse::from_raw_parts(
+            cs.k(),
+            cs.n(),
+            cs.s(),
+            cs.indices().to_vec(),
+            cs.values().to_vec(),
+        )
+        .unwrap();
+        assert_eq!(back, cs);
+        let qs = QuantColumnSparse::quantize_from(&cs, 4);
+        let qback = QuantColumnSparse::from_raw_parts(
+            qs.k(),
+            qs.indices().to_vec(),
+            qs.values_qmat().clone(),
+        )
+        .unwrap();
+        assert_eq!(qback, qs);
+        // validation: mismatched lengths, s > k, out-of-range indices
+        assert!(ColumnSparse::from_raw_parts(9, 6, 3, vec![0; 5], vec![0.0; 18]).is_err());
+        let (idx, val) = (cs.indices().to_vec(), cs.values().to_vec());
+        assert!(ColumnSparse::from_raw_parts(2, 6, 3, idx, val).is_err());
+        assert!(ColumnSparse::from_raw_parts(9, 1, 1, vec![9], vec![1.0]).is_err());
+        let (qidx, qval) = (qs.indices().to_vec(), qs.values_qmat().clone());
+        assert!(QuantColumnSparse::from_raw_parts(1, qidx, qval).is_err());
+        // degenerate s = 0 round-trips too
+        let empty = ColumnSparse::hard_threshold(&z, 0);
+        assert_eq!(
+            ColumnSparse::from_raw_parts(9, 6, 0, vec![], vec![]).unwrap(),
+            empty
+        );
     }
 
     #[test]

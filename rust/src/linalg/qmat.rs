@@ -406,6 +406,65 @@ impl QuantMat {
         32 * self.packed.len() as u64 + 16 * self.scales.len() as u64
     }
 
+    // -- raw-buffer (de)serialization accessors (CPT2 checkpoints) --
+
+    /// The raw bit-packed code words, exactly as resident in memory — what a
+    /// checkpoint writes and a loader reads back verbatim.
+    pub fn packed_words(&self) -> &[u32] {
+        &self.packed
+    }
+
+    /// The raw f16 scale bit patterns (one per per-row group of [`GROUP`]).
+    pub fn scale_bits(&self) -> &[u16] {
+        &self.scales
+    }
+
+    /// Packed-word count a `rows×cols` matrix at `bits` occupies, or `None`
+    /// on arithmetic overflow (untrusted header shapes).
+    pub fn packed_len(rows: usize, cols: usize, bits: u32) -> Option<usize> {
+        let total_bits = (rows as u64)
+            .checked_mul(cols as u64)?
+            .checked_mul(bits as u64)?;
+        usize::try_from(total_bits.div_ceil(32)).ok()
+    }
+
+    /// Scale count of a `rows×cols` matrix (per-row groups of [`GROUP`]), or
+    /// `None` on overflow.
+    pub fn scales_len(rows: usize, cols: usize) -> Option<usize> {
+        rows.checked_mul(cols.div_ceil(GROUP))
+    }
+
+    /// Reassemble from raw checkpoint buffers. Unlike the panicking
+    /// constructors this validates everything and returns errors — the
+    /// buffers come from disk, not from our own quantizer.
+    pub fn from_raw_parts(
+        rows: usize,
+        cols: usize,
+        bits: u32,
+        packed: Vec<u32>,
+        scales: Vec<u16>,
+    ) -> anyhow::Result<QuantMat> {
+        anyhow::ensure!(
+            Self::supported_bits(bits),
+            "quantized tensor bits must be in 2..=8, got {bits}"
+        );
+        let want_packed = Self::packed_len(rows, cols, bits)
+            .ok_or_else(|| anyhow::anyhow!("quantized tensor {rows}x{cols} overflows"))?;
+        anyhow::ensure!(
+            packed.len() == want_packed,
+            "packed word count {} does not match {rows}x{cols} @ {bits} bits (want {want_packed})",
+            packed.len()
+        );
+        let want_scales = Self::scales_len(rows, cols)
+            .ok_or_else(|| anyhow::anyhow!("quantized tensor {rows}x{cols} overflows"))?;
+        anyhow::ensure!(
+            scales.len() == want_scales,
+            "scale count {} does not match {rows}x{cols} (want {want_scales})",
+            scales.len()
+        );
+        Ok(QuantMat { rows, cols, bits, packed, scales })
+    }
+
     /// Resident heap bytes of the packed buffers.
     pub fn packed_bytes(&self) -> usize {
         4 * self.packed.len() + 2 * self.scales.len()
@@ -634,6 +693,32 @@ mod tests {
         // 3 bits on a ragged row: 11·3 = 33 bits pad to 2 words, 1 scale
         let qm3 = QuantMat::quantize_from(&Mat::zeros(1, 11), 3);
         assert_eq!(qm3.storage_bits(), 2 * 32 + 16);
+    }
+
+    #[test]
+    fn raw_parts_roundtrip_is_bit_identical() {
+        let mut rng = Rng::new(96);
+        for bits in [2u32, 4, 8] {
+            let w = Mat::randn(&mut rng, 5, 131, 0.5);
+            let qm = QuantMat::quantize_from(&w, bits);
+            let back = QuantMat::from_raw_parts(
+                qm.rows(),
+                qm.cols(),
+                qm.bits(),
+                qm.packed_words().to_vec(),
+                qm.scale_bits().to_vec(),
+            )
+            .unwrap();
+            assert_eq!(back, qm, "bits {bits}");
+        }
+        // validation: wrong widths / lengths are errors, not panics
+        let qm = QuantMat::quantize_from(&Mat::zeros(2, 3), 4);
+        let (p, s) = (qm.packed_words().to_vec(), qm.scale_bits().to_vec());
+        assert!(QuantMat::from_raw_parts(2, 3, 1, p.clone(), s.clone()).is_err());
+        assert!(QuantMat::from_raw_parts(2, 3, 9, p.clone(), s.clone()).is_err());
+        assert!(QuantMat::from_raw_parts(2, 3, 4, vec![], s.clone()).is_err());
+        assert!(QuantMat::from_raw_parts(2, 3, 4, p.clone(), vec![0; 5]).is_err());
+        assert!(QuantMat::from_raw_parts(usize::MAX, usize::MAX, 8, p, s).is_err());
     }
 
     #[test]

@@ -6,10 +6,12 @@
 //! compot compress --model <preset> --method <m> --cr <x> [--dynamic]
 //!                 [--set k=v ...]                        method options via the registry
 //! compot compress --model <preset> --plan "compot@0.25+gptq4"
-//!                                                        multi-stage compression plan
-//! compot eval --model <preset>                           baseline evaluation
+//!                 [--save-compressed <file>]             multi-stage plan; persist as CPT2
+//! compot eval --model <preset> | --load-compressed <file>  baseline evaluation
 //! compot serve --model <preset> [--addr host:port] [--max-batch n]
 //!              [--max-wait-ms ms] [--cr x --method m | --plan p]
+//! compot serve --load-compressed <file>                  serve a CPT2 checkpoint as-is
+//!                                                        (no compression stage runs)
 //! compot allocate --model <preset>                       print Algorithm-2 allocation
 //! compot info                                            artifacts / presets
 //! compot help                                            usage + registered methods
@@ -24,9 +26,10 @@ use compot::coordinator::plan::CompressionPlan;
 use compot::coordinator::tables::{self, Scale};
 use compot::eval::harness::{baseline_row, evaluate, EvalSetup};
 use compot::model::config::ModelConfig;
-use compot::model::Model;
-use compot::runtime::artifacts::artifacts_dir;
+use compot::model::{CheckpointInfo, Model};
+use compot::runtime::artifacts::{artifacts_dir, record_checkpoint, CheckpointEntry};
 use compot::util::json::Json;
+use std::path::{Path, PathBuf};
 
 /// Parsed `--flag [value]` pairs, in order (flags may repeat, e.g. `--set`).
 struct Flags {
@@ -122,6 +125,21 @@ fn load(preset: &str) -> anyhow::Result<Model> {
     Model::load(&artifacts_dir().join(format!("{preset}.bin")))
 }
 
+/// Load a checkpoint named by `--load-compressed` through the versioned
+/// entry point (CPT1 or CPT2) and print what was loaded. No compression
+/// stage runs.
+fn load_checkpoint_verbose(path: &str) -> anyhow::Result<(Model, CheckpointInfo)> {
+    let (model, ck) = Model::load_checkpoint(Path::new(path))?;
+    println!(
+        "loaded {} checkpoint {path} ({}; plan {}; {} resident weight bytes)",
+        ck.format,
+        model.cfg.name,
+        ck.plan.as_deref().unwrap_or("none recorded"),
+        model.resident_weight_bytes()
+    );
+    Ok((model, ck))
+}
+
 /// Build the compression plan a command's flags describe: either an explicit
 /// `--plan` spec or a single `--method` stage with `--set` options.
 /// `default_dynamic` is the allocation policy when `--dynamic` is absent
@@ -157,11 +175,13 @@ fn print_help() {
         "compot — COMPOT reproduction coordinator\n\n\
          usage:\n  compot table <1|2|3|4|5|6|7|8|9|10|11|12|13|14|15|18|19> [--items N] [--calib N] [--seed S]\n  \
          compot figure <3|4..12|alloc:PRESET>\n  \
-         compot compress --model PRESET [--method M [--set k=v]... | --plan SPEC] --cr X [--dynamic]\n  \
-         compot eval --model PRESET\n  \
+         compot compress --model PRESET [--method M [--set k=v]... | --plan SPEC] --cr X [--dynamic]\n           \
+         [--save-compressed FILE.cpt2]\n  \
+         compot eval [--model PRESET | --load-compressed FILE]\n  \
          compot allocate --model PRESET\n  \
          compot serve --model PRESET [--addr HOST:PORT] [--max-batch N] [--max-wait-ms MS]\n              \
          [--cr X [--method M | --plan SPEC]]\n  \
+         compot serve --load-compressed FILE.cpt2 [--addr HOST:PORT]   (no compression stage runs)\n  \
          compot info\n\n\
          plans: stages joined by '+', each 'name[@cr][,key=value]*'\n       \
          e.g. --plan \"compot@0.25,iters=20+gptq4\"  (Table 7 composition)\n\n\
@@ -232,7 +252,18 @@ fn main() -> anyhow::Result<()> {
         "compress" => {
             flags.expect_known(
                 "compress",
-                &["model", "method", "plan", "set", "cr", "dynamic", "items", "calib", "seed"],
+                &[
+                    "model",
+                    "method",
+                    "plan",
+                    "set",
+                    "cr",
+                    "dynamic",
+                    "items",
+                    "calib",
+                    "seed",
+                    "save-compressed",
+                ],
             )?;
             let preset = flags.get("model").unwrap_or("llama-micro");
             let sc = scale_from(&flags)?;
@@ -272,12 +303,47 @@ fn main() -> anyhow::Result<()> {
                  buffers, packed for quantized stages)",
                 after as f64 / before as f64
             );
+            if let Some(out) = flags.get("save-compressed") {
+                let out_path = PathBuf::from(out);
+                compressed.save_compressed(&out_path, Some(&plan.describe()))?;
+                let name = out_path
+                    .file_stem()
+                    .map(|s| s.to_string_lossy().into_owned())
+                    .unwrap_or_else(|| preset.to_string());
+                record_checkpoint(
+                    &artifacts_dir(),
+                    &CheckpointEntry {
+                        name,
+                        path: out_path.clone(),
+                        format: "cpt2".to_string(),
+                        plan: Some(plan.describe()),
+                    },
+                )?;
+                let bytes = std::fs::metadata(&out_path).map(|m| m.len()).unwrap_or(0);
+                println!(
+                    "saved CPT2 checkpoint {out} ({bytes} bytes; plan recorded in the \
+                     artifacts manifest) — reload with `compot serve --load-compressed {out}`"
+                );
+            }
         }
         "eval" => {
-            flags.expect_known("eval", &["model", "items", "calib", "seed"])?;
-            let preset = flags.get("model").unwrap_or("llama-micro");
+            flags.expect_known(
+                "eval",
+                &["model", "items", "calib", "seed", "load-compressed"],
+            )?;
             let sc = scale_from(&flags)?;
-            let model = load(preset)?;
+            let (model, label) = if let Some(ckpt) = flags.get("load-compressed") {
+                anyhow::ensure!(
+                    !flags.has("model"),
+                    "--load-compressed evaluates the checkpoint; drop --model"
+                );
+                let (m, _) = load_checkpoint_verbose(ckpt)?;
+                (m, ckpt.to_string())
+            } else {
+                let preset = flags.get("model").unwrap_or("llama-micro");
+                (load(preset)?, preset.to_string())
+            };
+            let preset = label.as_str();
             let setup =
                 EvalSetup::standard(model.cfg.vocab, sc.calib, sc.seq_len, sc.items, sc.seed);
             let row = baseline_row(&model, &setup, preset);
@@ -300,11 +366,19 @@ fn main() -> anyhow::Result<()> {
             flags.expect_known(
                 "serve",
                 &[
-                    "model", "addr", "method", "plan", "set", "cr", "dynamic", "seed",
-                    "max-batch", "max-wait-ms",
+                    "model",
+                    "addr",
+                    "method",
+                    "plan",
+                    "set",
+                    "cr",
+                    "dynamic",
+                    "seed",
+                    "max-batch",
+                    "max-wait-ms",
+                    "load-compressed",
                 ],
             )?;
-            let preset = flags.get("model").unwrap_or("llama-micro");
             let addr = flags.get("addr").unwrap_or("127.0.0.1:7199");
             let mut policy = compot::serve::BatchPolicy::default();
             if let Some(v) = flags.get_parsed::<usize>("max-batch")? {
@@ -314,27 +388,51 @@ fn main() -> anyhow::Result<()> {
             if let Some(v) = flags.get_parsed::<u64>("max-wait-ms")? {
                 policy.max_wait = std::time::Duration::from_millis(v);
             }
-            let model = load(preset)?;
             let mut info = Json::obj();
-            info.set("model", preset.into());
-            let model = if flags.has("cr") || flags.has("plan") {
-                let sc = scale_from(&flags)?;
-                let plan = plan_from_flags(&flags, &sc, true)?;
-                let lang = compot::data::SynthLang::wiki(model.cfg.vocab);
-                let calib = lang.gen_batch(8, 96, &mut compot::util::Rng::new(1));
-                let (m, report) = plan.run(&model, &calib)?;
-                println!(
-                    "serving compressed model ({}; CR {:.3}; {} resident weight bytes vs {} dense)",
-                    plan.describe(),
-                    report.composed_cr,
-                    m.resident_weight_bytes(),
-                    model.resident_weight_bytes()
-                );
-                info.set("plan", plan.describe().into());
-                info.set("model_cr", report.composed_cr.into());
+            let model = if let Some(ckpt) = flags.get("load-compressed") {
+                // The checkpoint *is* the compressed artifact: serving it
+                // must not invoke any compression stage, so the compression
+                // and preset flags are contradictions, not fallbacks —
+                // silently ignoring --model would serve different weights
+                // than the operator asked for.
+                for f in ["cr", "plan", "method", "set", "model", "dynamic", "seed"] {
+                    anyhow::ensure!(
+                        !flags.has(f),
+                        "--load-compressed serves the checkpoint as-is; drop --{f}"
+                    );
+                }
+                let (m, ck) = load_checkpoint_verbose(ckpt)?;
+                info.set("model", m.cfg.name.as_str().into());
+                info.set("checkpoint", ckpt.into());
+                info.set("checkpoint_format", ck.format.into());
+                if let Some(p) = ck.plan {
+                    info.set("plan", p.into());
+                }
                 m
             } else {
-                model
+                let preset = flags.get("model").unwrap_or("llama-micro");
+                let model = load(preset)?;
+                info.set("model", preset.into());
+                if flags.has("cr") || flags.has("plan") {
+                    let sc = scale_from(&flags)?;
+                    let plan = plan_from_flags(&flags, &sc, true)?;
+                    let lang = compot::data::SynthLang::wiki(model.cfg.vocab);
+                    let calib = lang.gen_batch(8, 96, &mut compot::util::Rng::new(1));
+                    let (m, report) = plan.run(&model, &calib)?;
+                    println!(
+                        "serving compressed model ({}; CR {:.3}; {} resident weight bytes \
+                         vs {} dense)",
+                        plan.describe(),
+                        report.composed_cr,
+                        m.resident_weight_bytes(),
+                        model.resident_weight_bytes()
+                    );
+                    info.set("plan", plan.describe().into());
+                    info.set("model_cr", report.composed_cr.into());
+                    m
+                } else {
+                    model
+                }
             };
             println!("listening on {addr} (json-lines; {{\"cmd\":\"shutdown\"}} to stop)");
             compot::serve::serve_blocking(std::sync::Arc::new(model), addr, policy, info, |a| {
@@ -350,6 +448,18 @@ fn main() -> anyhow::Result<()> {
                     println!("artifacts: {}", man.entries.len());
                     for e in &man.entries {
                         println!("  {} ({})", e.name, e.kind);
+                    }
+                    if !man.checkpoints.is_empty() {
+                        println!("compressed checkpoints: {}", man.checkpoints.len());
+                        for c in &man.checkpoints {
+                            println!(
+                                "  {} ({}; plan {}) at {:?}",
+                                c.name,
+                                c.format,
+                                c.plan.as_deref().unwrap_or("unrecorded"),
+                                c.path
+                            );
+                        }
                     }
                 }
                 Err(e) => println!("no manifest ({e}); run `make artifacts`"),

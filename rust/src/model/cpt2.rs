@@ -1,0 +1,960 @@
+//! `CPT2` — the compressed-checkpoint format: every [`LinearWeight`]
+//! variant serialized *natively*, so a compressed (and possibly packed-
+//! quantized) model reloads in one pass with **zero recompression and zero
+//! requantization**. The factorization is the deployable artifact
+//! (CoSpaDi/ProcrustesGPT); this module makes it durable.
+//!
+//! Layout:
+//! ```text
+//! b"CPT2" | u32 header_len | header JSON (utf-8)
+//!         | zero pad to ALIGN | section payloads (LE, each ALIGN-aligned)
+//! ```
+//!
+//! The header carries `{"version", "config", "plan"?, "align", "sections",
+//! "stages"}`. Each section record is `{"name", "dtype": "f32"|"u32"|"u16",
+//! "len", "offset", "crc32"}` with `offset` in bytes from the start of the
+//! (aligned) data region — so a loader can `read_exact`/`mmap` a section
+//! straight into its resident buffer. Each stage entry tags its projections
+//! with a variant (`dense`, `low_rank`, `factorized`, `quant_dense`,
+//! `quant_low_rank`, `quant_factorized`), shapes, and bit widths; the
+//! quantized variants reference raw u32 code-word and u16 f16-scale
+//! sections that are byte-for-byte the in-memory [`QuantMat`] buffers.
+//!
+//! Every field read from disk is validated against the actual file size
+//! before any allocation, every section payload is CRC32-checked, and every
+//! reconstruction goes through the fallible `from_raw_parts` constructors —
+//! a corrupt or adversarial checkpoint yields an error, never a panic or a
+//! huge allocation.
+//!
+//! [`Model::load_checkpoint`] is the versioned entry point: it sniffs the
+//! magic and accepts both the dense `CPT1` tensor format
+//! ([`super::weights`]) and `CPT2`.
+
+use super::config::ProjKind;
+use super::transformer::{Block, Model, Stage};
+use super::weights::TensorFile;
+use crate::compress::sparse::{ColumnSparse, QuantColumnSparse};
+use crate::compress::LinearWeight;
+use crate::linalg::{Mat, QuantMat};
+use crate::model::config::ModelConfig;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::{Read, Seek, Write};
+use std::path::Path;
+
+pub const MAGIC: &[u8; 4] = b"CPT2";
+pub const VERSION: usize = 2;
+/// Section payload alignment (bytes) — sized for cache lines / mmap-friendly
+/// direct reads into the resident buffers.
+pub const ALIGN: usize = 64;
+
+/// What a checkpoint said about itself — surfaced by `serve`'s info
+/// response so operators can tell a cold-loaded artifact from an in-process
+/// compression run.
+#[derive(Clone, Debug)]
+pub struct CheckpointInfo {
+    /// `"cpt1"` or `"cpt2"`.
+    pub format: &'static str,
+    /// Compression-plan provenance recorded at save time (CPT2 only).
+    pub plan: Option<String>,
+}
+
+/// Byte-at-a-time CRC32 lookup table, built at compile time. The table
+/// version runs ~8× faster than the bitwise loop — checksumming must not
+/// become the cold-load bottleneck this format exists to remove.
+const CRC_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut b = 0;
+        while b < 8 {
+            c = if c & 1 != 0 { (c >> 1) ^ 0xedb8_8320 } else { c >> 1 };
+            b += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC32 (IEEE, reflected) of a byte slice — in-tree, no crc crate in this
+/// offline env.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xffff_ffffu32;
+    for &b in bytes {
+        crc = (crc >> 8) ^ CRC_TABLE[((crc ^ b as u32) & 0xff) as usize];
+    }
+    !crc
+}
+
+fn align_up(x: usize, a: usize) -> usize {
+    x.div_ceil(a) * a
+}
+
+// ---------------------------------------------------------------------------
+// Section writer.
+// ---------------------------------------------------------------------------
+
+struct PendingSection {
+    name: String,
+    dtype: &'static str,
+    len: usize,
+    bytes: Vec<u8>,
+}
+
+#[derive(Default)]
+struct SectionWriter {
+    sections: Vec<PendingSection>,
+}
+
+impl SectionWriter {
+    fn add(&mut self, name: &str, dtype: &'static str, len: usize, bytes: Vec<u8>) {
+        self.sections.push(PendingSection { name: name.to_string(), dtype, len, bytes });
+    }
+
+    fn add_f32(&mut self, name: &str, vals: &[f32]) {
+        let mut b = Vec::with_capacity(4 * vals.len());
+        for v in vals {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        self.add(name, "f32", vals.len(), b);
+    }
+
+    fn add_u32(&mut self, name: &str, vals: &[u32]) {
+        let mut b = Vec::with_capacity(4 * vals.len());
+        for v in vals {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        self.add(name, "u32", vals.len(), b);
+    }
+
+    fn add_u16(&mut self, name: &str, vals: &[u16]) {
+        let mut b = Vec::with_capacity(2 * vals.len());
+        for v in vals {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        self.add(name, "u16", vals.len(), b);
+    }
+
+    /// Lay the sections out ALIGN-aligned; returns (section records, payload).
+    fn finish(self) -> (Vec<Json>, Vec<u8>) {
+        let mut records = Vec::with_capacity(self.sections.len());
+        let mut payload: Vec<u8> = Vec::new();
+        for s in self.sections {
+            let offset = align_up(payload.len(), ALIGN);
+            payload.resize(offset, 0);
+            let mut rec = Json::obj();
+            rec.set("name", s.name.as_str().into())
+                .set("dtype", s.dtype.into())
+                .set("len", s.len.into())
+                .set("offset", offset.into())
+                .set("crc32", (crc32(&s.bytes) as usize).into());
+            records.push(rec);
+            payload.extend_from_slice(&s.bytes);
+        }
+        (records, payload)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Section reader.
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+struct SectionDesc {
+    dtype_size: usize,
+    len: usize,
+    offset: usize,
+}
+
+struct SectionReader<'a> {
+    data: &'a [u8],
+    by_name: BTreeMap<String, (SectionDesc, &'static str)>,
+}
+
+impl<'a> SectionReader<'a> {
+    fn new(header: &Json, data: &'a [u8]) -> anyhow::Result<SectionReader<'a>> {
+        let mut by_name = BTreeMap::new();
+        for rec in header
+            .get("sections")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint header has no 'sections' array"))?
+        {
+            let name = rec
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("section record without a name"))?;
+            let (dtype, size): (&'static str, usize) =
+                match rec.get("dtype").and_then(Json::as_str) {
+                    Some("f32") => ("f32", 4),
+                    Some("u32") => ("u32", 4),
+                    Some("u16") => ("u16", 2),
+                    other => anyhow::bail!("section '{name}': unknown dtype {other:?}"),
+                };
+            let len = rec
+                .get("len")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("section '{name}': missing len"))?;
+            let offset = rec
+                .get("offset")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("section '{name}': missing offset"))?;
+            let byte_len = len
+                .checked_mul(size)
+                .ok_or_else(|| anyhow::anyhow!("section '{name}': length overflows"))?;
+            let end = offset
+                .checked_add(byte_len)
+                .ok_or_else(|| anyhow::anyhow!("section '{name}': offset overflows"))?;
+            anyhow::ensure!(
+                end <= data.len(),
+                "section '{name}' ({len}×{size} B at offset {offset}) runs past the data \
+                 region ({} B) — truncated or corrupt checkpoint",
+                data.len()
+            );
+            let want_crc = rec
+                .get("crc32")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("section '{name}': missing crc32"))?;
+            let got = crc32(&data[offset..end]) as usize;
+            anyhow::ensure!(
+                got == want_crc,
+                "section '{name}': crc mismatch (header {want_crc:#x}, payload {got:#x})"
+            );
+            by_name.insert(
+                name.to_string(),
+                (SectionDesc { dtype_size: size, len, offset }, dtype),
+            );
+        }
+        Ok(SectionReader { data, by_name })
+    }
+
+    fn desc(&self, name: &str, dtype: &str, expect_len: usize) -> anyhow::Result<SectionDesc> {
+        let (desc, have_dtype) = self
+            .by_name
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint is missing section '{name}'"))?;
+        anyhow::ensure!(
+            *have_dtype == dtype,
+            "section '{name}': dtype {have_dtype}, expected {dtype}"
+        );
+        anyhow::ensure!(
+            desc.len == expect_len,
+            "section '{name}': {} elements on disk, header metadata implies {expect_len}",
+            desc.len
+        );
+        Ok(*desc)
+    }
+
+    fn f32s(&self, name: &str, expect_len: usize) -> anyhow::Result<Vec<f32>> {
+        let d = self.desc(name, "f32", expect_len)?;
+        let raw = &self.data[d.offset..d.offset + d.len * d.dtype_size];
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn u32s(&self, name: &str, expect_len: usize) -> anyhow::Result<Vec<u32>> {
+        let d = self.desc(name, "u32", expect_len)?;
+        let raw = &self.data[d.offset..d.offset + d.len * d.dtype_size];
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn u16s(&self, name: &str, expect_len: usize) -> anyhow::Result<Vec<u16>> {
+        let d = self.desc(name, "u16", expect_len)?;
+        let raw = &self.data[d.offset..d.offset + d.len * d.dtype_size];
+        Ok(raw.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect())
+    }
+
+    fn mat(&self, name: &str, rows: usize, cols: usize) -> anyhow::Result<Mat> {
+        let len = rows
+            .checked_mul(cols)
+            .ok_or_else(|| anyhow::anyhow!("section '{name}': {rows}x{cols} overflows"))?;
+        Ok(Mat::from_vec(rows, cols, self.f32s(name, len)?))
+    }
+
+    /// `bits` is pre-validated by `meta_bits` (projection-named error);
+    /// `QuantMat::from_raw_parts` re-checks it as the fallible constructor
+    /// every path funnels through — no third check here.
+    fn qmat(&self, base: &str, rows: usize, cols: usize, bits: u32) -> anyhow::Result<QuantMat> {
+        let np = QuantMat::packed_len(rows, cols, bits)
+            .ok_or_else(|| anyhow::anyhow!("'{base}': {rows}x{cols} overflows"))?;
+        let ns = QuantMat::scales_len(rows, cols)
+            .ok_or_else(|| anyhow::anyhow!("'{base}': {rows}x{cols} overflows"))?;
+        let packed = self.u32s(&format!("{base}.codes"), np)?;
+        let scales = self.u16s(&format!("{base}.scales"), ns)?;
+        QuantMat::from_raw_parts(rows, cols, bits, packed, scales)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LinearWeight ⇄ sections.
+// ---------------------------------------------------------------------------
+
+fn write_qmat(sw: &mut SectionWriter, base: &str, q: &QuantMat) {
+    sw.add_u32(&format!("{base}.codes"), q.packed_words());
+    sw.add_u16(&format!("{base}.scales"), q.scale_bits());
+}
+
+/// Serialize one projection under `base`, returning its header metadata.
+fn write_weight(sw: &mut SectionWriter, base: &str, w: &LinearWeight) -> Json {
+    let mut meta = Json::obj();
+    match w {
+        LinearWeight::Dense(m) => {
+            meta.set("variant", "dense".into())
+                .set("rows", m.rows().into())
+                .set("cols", m.cols().into());
+            sw.add_f32(&format!("{base}.w"), m.data());
+        }
+        LinearWeight::LowRank { b, c } => {
+            meta.set("variant", "low_rank".into())
+                .set("m", b.rows().into())
+                .set("r", b.cols().into())
+                .set("n", c.cols().into());
+            sw.add_f32(&format!("{base}.b"), b.data());
+            sw.add_f32(&format!("{base}.c"), c.data());
+        }
+        LinearWeight::Factorized { a, s } => {
+            meta.set("variant", "factorized".into())
+                .set("m", a.rows().into())
+                .set("k", a.cols().into())
+                .set("n", s.n().into())
+                .set("s", s.s().into());
+            sw.add_f32(&format!("{base}.a"), a.data());
+            sw.add_u32(&format!("{base}.s.idx"), s.indices());
+            sw.add_f32(&format!("{base}.s.val"), s.values());
+        }
+        LinearWeight::QuantDense(q) => {
+            meta.set("variant", "quant_dense".into())
+                .set("rows", q.rows().into())
+                .set("cols", q.cols().into())
+                .set("bits", (q.bits() as usize).into());
+            write_qmat(sw, &format!("{base}.w"), q);
+        }
+        LinearWeight::QuantLowRank { b, c } => {
+            meta.set("variant", "quant_low_rank".into())
+                .set("m", b.rows().into())
+                .set("r", b.cols().into())
+                .set("n", c.cols().into())
+                .set("bits_b", (b.bits() as usize).into())
+                .set("bits_c", (c.bits() as usize).into());
+            write_qmat(sw, &format!("{base}.b"), b);
+            write_qmat(sw, &format!("{base}.c"), c);
+        }
+        LinearWeight::QuantFactorized { a, s } => {
+            let v = s.values_qmat();
+            meta.set("variant", "quant_factorized".into())
+                .set("m", a.rows().into())
+                .set("k", a.cols().into())
+                .set("n", s.n().into())
+                .set("s", s.s().into())
+                .set("bits_a", (a.bits() as usize).into())
+                .set("bits_val", (v.bits() as usize).into());
+            write_qmat(sw, &format!("{base}.a"), a);
+            sw.add_u32(&format!("{base}.s.idx"), s.indices());
+            write_qmat(sw, &format!("{base}.s.val"), v);
+        }
+    }
+    meta
+}
+
+fn meta_usize(meta: &Json, base: &str, key: &str) -> anyhow::Result<usize> {
+    meta.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow::anyhow!("projection '{base}': missing field '{key}'"))
+}
+
+fn meta_bits(meta: &Json, base: &str, key: &str) -> anyhow::Result<u32> {
+    let b = meta_usize(meta, base, key)?;
+    anyhow::ensure!(
+        (2..=8).contains(&b),
+        "projection '{base}': {key}={b} outside the packable 2..=8 range"
+    );
+    Ok(b as u32)
+}
+
+/// Reconstruct one projection from its header metadata + sections.
+fn read_weight(sr: &SectionReader, base: &str, meta: &Json) -> anyhow::Result<LinearWeight> {
+    let variant = meta
+        .get("variant")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("projection '{base}': missing variant tag"))?;
+    match variant {
+        "dense" => {
+            let rows = meta_usize(meta, base, "rows")?;
+            let cols = meta_usize(meta, base, "cols")?;
+            Ok(LinearWeight::Dense(sr.mat(&format!("{base}.w"), rows, cols)?))
+        }
+        "low_rank" => {
+            let m = meta_usize(meta, base, "m")?;
+            let r = meta_usize(meta, base, "r")?;
+            let n = meta_usize(meta, base, "n")?;
+            Ok(LinearWeight::LowRank {
+                b: sr.mat(&format!("{base}.b"), m, r)?,
+                c: sr.mat(&format!("{base}.c"), r, n)?,
+            })
+        }
+        "factorized" => {
+            let m = meta_usize(meta, base, "m")?;
+            let k = meta_usize(meta, base, "k")?;
+            let n = meta_usize(meta, base, "n")?;
+            let s = meta_usize(meta, base, "s")?;
+            let ns = n
+                .checked_mul(s)
+                .ok_or_else(|| anyhow::anyhow!("projection '{base}': n·s overflows"))?;
+            let idx = sr.u32s(&format!("{base}.s.idx"), ns)?;
+            let val = sr.f32s(&format!("{base}.s.val"), ns)?;
+            Ok(LinearWeight::Factorized {
+                a: sr.mat(&format!("{base}.a"), m, k)?,
+                s: ColumnSparse::from_raw_parts(k, n, s, idx, val)?,
+            })
+        }
+        "quant_dense" => {
+            let rows = meta_usize(meta, base, "rows")?;
+            let cols = meta_usize(meta, base, "cols")?;
+            let bits = meta_bits(meta, base, "bits")?;
+            Ok(LinearWeight::QuantDense(sr.qmat(&format!("{base}.w"), rows, cols, bits)?))
+        }
+        "quant_low_rank" => {
+            let m = meta_usize(meta, base, "m")?;
+            let r = meta_usize(meta, base, "r")?;
+            let n = meta_usize(meta, base, "n")?;
+            Ok(LinearWeight::QuantLowRank {
+                b: sr.qmat(&format!("{base}.b"), m, r, meta_bits(meta, base, "bits_b")?)?,
+                c: sr.qmat(&format!("{base}.c"), r, n, meta_bits(meta, base, "bits_c")?)?,
+            })
+        }
+        "quant_factorized" => {
+            let m = meta_usize(meta, base, "m")?;
+            let k = meta_usize(meta, base, "k")?;
+            let n = meta_usize(meta, base, "n")?;
+            let s = meta_usize(meta, base, "s")?;
+            let ns = n
+                .checked_mul(s)
+                .ok_or_else(|| anyhow::anyhow!("projection '{base}': n·s overflows"))?;
+            let idx = sr.u32s(&format!("{base}.s.idx"), ns)?;
+            let val = sr.qmat(&format!("{base}.s.val"), n, s, meta_bits(meta, base, "bits_val")?)?;
+            Ok(LinearWeight::QuantFactorized {
+                a: sr.qmat(&format!("{base}.a"), m, k, meta_bits(meta, base, "bits_a")?)?,
+                s: QuantColumnSparse::from_raw_parts(k, idx, val)?,
+            })
+        }
+        other => anyhow::bail!("projection '{base}': unknown variant tag '{other}'"),
+    }
+}
+
+/// Structural contract the forward pass will index into: a CRC-valid
+/// checkpoint whose per-tensor shapes are internally consistent could still
+/// describe a block the attention/MLP code would panic on. Head widths are
+/// per-block (structured pruning shrinks them) but must agree with the
+/// config's global head_dim; the MLP hidden width is free (channel pruning)
+/// but gate/up/down must agree with each other.
+fn validate_block_shapes(i: usize, b: &Block, d: usize, head_dim: usize) -> anyhow::Result<()> {
+    let check = |name: &str, got: (usize, usize), want: (usize, usize)| -> anyhow::Result<()> {
+        anyhow::ensure!(
+            got == want,
+            "stage {i}: {name} shape {}x{} does not match the structural contract {}x{}",
+            got.0,
+            got.1,
+            want.0,
+            want.1
+        );
+        Ok(())
+    };
+    // Head counts come from the header: checked arithmetic, like every
+    // other untrusted multiplication in this module.
+    let qw = b
+        .n_heads
+        .checked_mul(head_dim)
+        .ok_or_else(|| anyhow::anyhow!("stage {i}: n_heads·head_dim overflows"))?;
+    let kvw = b
+        .n_kv_heads
+        .checked_mul(head_dim)
+        .ok_or_else(|| anyhow::anyhow!("stage {i}: n_kv_heads·head_dim overflows"))?;
+    check("q_proj", (b.q.in_dim(), b.q.out_dim()), (d, qw))?;
+    check("k_proj", (b.k.in_dim(), b.k.out_dim()), (d, kvw))?;
+    check("v_proj", (b.v.in_dim(), b.v.out_dim()), (d, kvw))?;
+    check("o_proj", (b.o.in_dim(), b.o.out_dim()), (qw, d))?;
+    let ff = b.gate.out_dim();
+    check("gate_proj", (b.gate.in_dim(), ff), (d, ff))?;
+    check("up_proj", (b.up.in_dim(), b.up.out_dim()), (d, ff))?;
+    check("down_proj", (b.down.in_dim(), b.down.out_dim()), (ff, d))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Model save / load.
+// ---------------------------------------------------------------------------
+
+impl Model {
+    /// Serialize this model — compressed or not — as a CPT2 checkpoint.
+    /// Every projection is stored in its *native* representation (packed
+    /// quantized buffers included), so reloading never re-runs compression
+    /// or requantization. `plan` records the compression-plan provenance in
+    /// the header.
+    pub fn save_compressed(&self, path: &Path, plan: Option<&str>) -> anyhow::Result<()> {
+        let mut sw = SectionWriter::default();
+        sw.add_f32("embed", self.embed.data());
+        sw.add_f32("lm_head", self.lm_head.data());
+        sw.add_f32("final_norm", &self.final_norm);
+        let mut stages = Vec::with_capacity(self.stages.len());
+        for (i, stage) in self.stages.iter().enumerate() {
+            let mut sj = Json::obj();
+            match stage {
+                Stage::Block(b) => {
+                    sj.set("kind", "block".into())
+                        .set("n_heads", b.n_heads.into())
+                        .set("n_kv_heads", b.n_kv_heads.into());
+                    sw.add_f32(&format!("stages.{i}.attn_norm"), &b.attn_norm);
+                    sw.add_f32(&format!("stages.{i}.mlp_norm"), &b.mlp_norm);
+                    let mut projs = Json::obj();
+                    for p in ProjKind::DECODER_SET {
+                        let base = format!("stages.{i}.{}", p.group());
+                        projs.set(p.group(), write_weight(&mut sw, &base, b.proj(p)));
+                    }
+                    sj.set("projections", projs);
+                }
+                Stage::Linear(t) => {
+                    sj.set("kind", "linear".into())
+                        .set("rows", t.rows().into())
+                        .set("cols", t.cols().into());
+                    sw.add_f32(&format!("stages.{i}.linear"), t.data());
+                }
+            }
+            stages.push(sj);
+        }
+        let (records, payload) = sw.finish();
+        let mut header = Json::obj();
+        header
+            .set("version", VERSION.into())
+            .set("config", self.cfg.to_json())
+            .set("align", ALIGN.into())
+            .set("sections", Json::Arr(records))
+            .set("stages", Json::Arr(stages));
+        if let Some(p) = plan {
+            header.set("plan", p.into());
+        }
+        let header_bytes = header.to_string().into_bytes();
+        let data_start = align_up(8 + header_bytes.len(), ALIGN);
+
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(header_bytes.len() as u32).to_le_bytes())?;
+        f.write_all(&header_bytes)?;
+        f.write_all(&vec![0u8; data_start - 8 - header_bytes.len()])?;
+        f.write_all(&payload)?;
+        // Flush explicitly: the drop-time flush swallows errors, and a
+        // silently truncated checkpoint (disk full) must not report Ok.
+        f.flush()?;
+        Ok(())
+    }
+
+    /// Load a CPT2 checkpoint. Returns the model plus what the checkpoint
+    /// recorded about its origin. No compression stage runs; packed
+    /// quantized buffers are read back verbatim.
+    pub fn load_compressed(path: &Path) -> anyhow::Result<(Model, CheckpointInfo)> {
+        let mut f = std::fs::File::open(path)?;
+        let file_len = f.metadata()?.len();
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "bad magic in {path:?} (not a CPT2 checkpoint)");
+        let mut len4 = [0u8; 4];
+        f.read_exact(&mut len4)?;
+        let hlen = u32::from_le_bytes(len4) as u64;
+        // Validate the header length against the actual file size *before*
+        // allocating — a corrupt length must not drive a huge allocation.
+        anyhow::ensure!(
+            8 + hlen <= file_len,
+            "header length {hlen} exceeds file size {file_len} — truncated checkpoint"
+        );
+        let mut hbytes = vec![0u8; hlen as usize];
+        f.read_exact(&mut hbytes)?;
+        let header = Json::parse(std::str::from_utf8(&hbytes)?)
+            .map_err(|e| anyhow::anyhow!("bad checkpoint header json: {e}"))?;
+        let version = header.get("version").and_then(Json::as_usize).unwrap_or(0);
+        anyhow::ensure!(
+            version == VERSION,
+            "unsupported CPT2 version {version} (this build reads version {VERSION})"
+        );
+        let cfg = ModelConfig::from_json(
+            header.get("config").ok_or_else(|| anyhow::anyhow!("checkpoint has no config"))?,
+        )?;
+        // head_dim() divides by n_heads — reject a config that would panic.
+        anyhow::ensure!(
+            cfg.n_heads >= 1 && cfg.d_model >= 1 && cfg.d_model % cfg.n_heads == 0,
+            "checkpoint config has invalid head geometry (d_model {}, n_heads {})",
+            cfg.d_model,
+            cfg.n_heads
+        );
+        let plan = header.get("plan").and_then(Json::as_str).map(String::from);
+
+        let data_start = align_up(8 + hlen as usize, ALIGN) as u64;
+        anyhow::ensure!(data_start <= file_len, "truncated checkpoint (no data region)");
+        // Seek past the alignment pad, then pull the data region. The region
+        // is bounded by the real file size, so section bounds checked
+        // against `data.len()` are checked against reality.
+        f.seek(std::io::SeekFrom::Start(data_start))?;
+        let mut data = Vec::with_capacity((file_len - data_start) as usize);
+        f.read_to_end(&mut data)?;
+        let sr = SectionReader::new(&header, &data)?;
+
+        let d = cfg.d_model;
+        let embed = sr.mat("embed", cfg.vocab, d)?;
+        let lm_head = sr.mat("lm_head", d, cfg.vocab)?;
+        let final_norm = sr.f32s("final_norm", d)?;
+        let mut stages = Vec::new();
+        for (i, sj) in header
+            .get("stages")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint header has no 'stages' array"))?
+            .iter()
+            .enumerate()
+        {
+            match sj.get("kind").and_then(Json::as_str) {
+                Some("block") => {
+                    let n_heads = sj
+                        .get("n_heads")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow::anyhow!("stage {i}: missing n_heads"))?;
+                    let n_kv_heads = sj
+                        .get("n_kv_heads")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow::anyhow!("stage {i}: missing n_kv_heads"))?;
+                    anyhow::ensure!(
+                        n_kv_heads >= 1 && n_heads >= n_kv_heads && n_heads % n_kv_heads == 0,
+                        "stage {i}: invalid head counts {n_heads}/{n_kv_heads}"
+                    );
+                    let projs = sj
+                        .get("projections")
+                        .ok_or_else(|| anyhow::anyhow!("stage {i}: missing projections"))?;
+                    let get = |p: ProjKind| -> anyhow::Result<LinearWeight> {
+                        let base = format!("stages.{i}.{}", p.group());
+                        let meta = projs.get(p.group()).ok_or_else(|| {
+                            anyhow::anyhow!("stage {i}: missing projection '{}'", p.group())
+                        })?;
+                        read_weight(&sr, &base, meta)
+                    };
+                    let block = Block {
+                        attn_norm: sr.f32s(&format!("stages.{i}.attn_norm"), d)?,
+                        q: get(ProjKind::Q)?,
+                        k: get(ProjKind::K)?,
+                        v: get(ProjKind::V)?,
+                        o: get(ProjKind::O)?,
+                        mlp_norm: sr.f32s(&format!("stages.{i}.mlp_norm"), d)?,
+                        gate: get(ProjKind::Gate)?,
+                        up: get(ProjKind::Up)?,
+                        down: get(ProjKind::Down)?,
+                        n_heads,
+                        n_kv_heads,
+                    };
+                    validate_block_shapes(i, &block, d, cfg.head_dim())?;
+                    stages.push(Stage::Block(block));
+                }
+                Some("linear") => {
+                    let rows = sj
+                        .get("rows")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow::anyhow!("stage {i}: missing rows"))?;
+                    let cols = sj
+                        .get("cols")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow::anyhow!("stage {i}: missing cols"))?;
+                    anyhow::ensure!(
+                        rows == d && cols == d,
+                        "stage {i}: linear shape {rows}x{cols} does not preserve the \
+                         d={d} residual stream"
+                    );
+                    stages.push(Stage::Linear(sr.mat(&format!("stages.{i}.linear"), rows, cols)?));
+                }
+                other => anyhow::bail!("stage {i}: unknown stage kind {other:?}"),
+            }
+        }
+        let model = Model { cfg, embed, stages, final_norm, lm_head };
+        Ok((model, CheckpointInfo { format: "cpt2", plan }))
+    }
+
+    /// Versioned checkpoint entry point: sniffs the magic and loads either
+    /// the dense `CPT1` tensor format or a `CPT2` compressed checkpoint.
+    pub fn load_checkpoint(path: &Path) -> anyhow::Result<(Model, CheckpointInfo)> {
+        let mut f = std::fs::File::open(path)?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        drop(f);
+        if &magic == MAGIC {
+            Self::load_compressed(path)
+        } else if &magic == super::weights::MAGIC {
+            let model = Self::from_tensor_file(&TensorFile::load(path)?)?;
+            Ok((model, CheckpointInfo { format: "cpt1", plan: None }))
+        } else {
+            anyhow::bail!(
+                "{path:?}: unknown checkpoint magic {magic:?} (expected CPT1 or CPT2)"
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::StageConfig;
+    use crate::coordinator::plan::CompressionPlan;
+    use crate::data::SynthLang;
+    use crate::util::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("compot_cpt2_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn tiny() -> Model {
+        Model::random(&ModelConfig::test_tiny(), &mut Rng::new(11))
+    }
+
+    fn compressed(spec: &str) -> Model {
+        let model = tiny();
+        let lang = SynthLang::wiki(model.cfg.vocab);
+        let calib = lang.gen_batch(6, 48, &mut Rng::new(12));
+        let plan = CompressionPlan::parse(spec, &StageConfig::new(0.25, false)).unwrap();
+        plan.run(&model, &calib).unwrap().0
+    }
+
+    fn assert_identical(a: &Model, b: &Model) {
+        assert_eq!(a.cfg, b.cfg);
+        assert_eq!(a.resident_weight_bytes(), b.resident_weight_bytes());
+        assert_eq!(a.storage_bits(), b.storage_bits());
+        assert_eq!(a.stages.len(), b.stages.len());
+        for (sa, sb) in a.stages.iter().zip(b.stages.iter()) {
+            match (sa, sb) {
+                (Stage::Block(ba), Stage::Block(bb)) => {
+                    assert_eq!(ba.attn_norm, bb.attn_norm);
+                    assert_eq!(ba.mlp_norm, bb.mlp_norm);
+                    for p in ProjKind::DECODER_SET {
+                        // bit-identical buffers, variant included
+                        assert_eq!(ba.proj(p), bb.proj(p), "{p:?}");
+                    }
+                }
+                (Stage::Linear(ta), Stage::Linear(tb)) => assert_eq!(ta, tb),
+                _ => panic!("stage kind changed across the round trip"),
+            }
+        }
+        let prompt = [1u16, 2, 3, 4];
+        assert_eq!(a.greedy_decode(&prompt, 8), b.greedy_decode(&prompt, 8));
+    }
+
+    #[test]
+    fn dense_model_roundtrip() {
+        let m = tiny();
+        let path = tmp("dense.cpt2");
+        m.save_compressed(&path, None).unwrap();
+        let (back, info) = Model::load_compressed(&path).unwrap();
+        assert_eq!(info.format, "cpt2");
+        assert!(info.plan.is_none());
+        assert_identical(&m, &back);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn every_compressed_variant_roundtrips_bit_identically() {
+        // One plan per LinearWeight variant the pipeline can emit:
+        // LowRank, Factorized, QuantDense, QuantLowRank, QuantFactorized.
+        for (spec, name) in [
+            ("svd-llm@0.2", "lowrank"),
+            ("compot@0.25", "factorized"),
+            ("rtn4", "quant_dense"),
+            ("svd-llm@0.2+rtn4", "quant_lowrank"),
+            ("compot@0.25+gptq4", "quant_factorized"),
+        ] {
+            let m = compressed(spec);
+            let path = tmp(&format!("{name}.cpt2"));
+            m.save_compressed(&path, Some(spec)).unwrap();
+            let (back, info) = Model::load_checkpoint(&path).unwrap();
+            assert_eq!(info.plan.as_deref(), Some(spec), "{spec}");
+            assert_identical(&m, &back);
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn linear_stage_roundtrips() {
+        let mut m = tiny();
+        let d = m.cfg.d_model;
+        m.stages[1] = Stage::Linear(Mat::randn(&mut Rng::new(13), d, d, 0.2));
+        let path = tmp("linear.cpt2");
+        m.save_compressed(&path, None).unwrap();
+        let (back, _) = Model::load_compressed(&path).unwrap();
+        assert_identical(&m, &back);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn cpt1_loads_through_the_versioned_entry_point() {
+        let m = tiny();
+        let path = tmp("old.cpt1");
+        m.save(&path).unwrap();
+        let (back, info) = Model::load_checkpoint(&path).unwrap();
+        assert_eq!(info.format, "cpt1");
+        let prompt = [3u16, 1, 4];
+        assert_eq!(m.greedy_decode(&prompt, 6), back.greedy_decode(&prompt, 6));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_magic_is_an_error() {
+        let path = tmp("junk.cpt2");
+        std::fs::write(&path, b"NOPE\x00\x00\x00\x00rest of the junk").unwrap();
+        assert!(Model::load_compressed(&path).is_err());
+        let err = Model::load_checkpoint(&path).unwrap_err().to_string();
+        assert!(err.contains("unknown checkpoint magic"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_header_and_sections_are_errors() {
+        let m = tiny();
+        let path = tmp("trunc.cpt2");
+        m.save_compressed(&path, None).unwrap();
+        let full = std::fs::read(&path).unwrap();
+
+        // header length field claims more bytes than the file has
+        let mut huge = full.clone();
+        huge[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&path, &huge).unwrap();
+        let err = Model::load_compressed(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+
+        // file cut inside the header
+        std::fs::write(&path, &full[..64]).unwrap();
+        assert!(Model::load_compressed(&path).is_err());
+
+        // file cut inside the section payloads: bounds check, no panic
+        std::fs::write(&path, &full[..full.len() - 97]).unwrap();
+        let err = Model::load_compressed(&path).unwrap_err().to_string();
+        assert!(
+            err.contains("runs past the data region") || err.contains("crc mismatch"),
+            "{err}"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_payload_fails_crc() {
+        let m = compressed("rtn4");
+        let path = tmp("crc.cpt2");
+        m.save_compressed(&path, None).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xff; // flip a bit in the last section's payload
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Model::load_compressed(&path).unwrap_err().to_string();
+        assert!(err.contains("crc mismatch"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    fn mangle_header(path: &Path, from: &str, to: &str) {
+        // Same-length textual header edits keep offsets valid so the
+        // specific validator under test is the one that fires.
+        assert_eq!(from.len(), to.len());
+        let bytes = std::fs::read(path).unwrap();
+        let hlen = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
+        let header = String::from_utf8(bytes[8..8 + hlen].to_vec()).unwrap();
+        assert!(header.contains(from), "header does not contain '{from}'");
+        let patched = header.replacen(from, to, 1);
+        let mut out = bytes[..8].to_vec();
+        out.extend_from_slice(patched.as_bytes());
+        out.extend_from_slice(&bytes[8 + hlen..]);
+        std::fs::write(path, &out).unwrap();
+    }
+
+    #[test]
+    fn unknown_variant_tag_is_an_error() {
+        let m = compressed("rtn4");
+        let path = tmp("variant.cpt2");
+        m.save_compressed(&path, None).unwrap();
+        mangle_header(&path, "\"quant_dense\"", "\"quant_blorp\"");
+        let err = Model::load_compressed(&path).unwrap_err().to_string();
+        assert!(err.contains("unknown variant tag"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bits_outside_packable_range_are_errors() {
+        let m = compressed("rtn4");
+        let path = tmp("bits.cpt2");
+        m.save_compressed(&path, None).unwrap();
+        mangle_header(&path, "\"bits\":4", "\"bits\":9");
+        let err = Model::load_compressed(&path).unwrap_err().to_string();
+        assert!(err.contains("2..=8"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn header_section_length_mismatch_is_an_error() {
+        let m = tiny();
+        let path = tmp("mismatch.cpt2");
+        m.save_compressed(&path, None).unwrap();
+        // final_norm has d_model = 32 elements; claim 64 → the recorded CRC
+        // no longer matches the (bounds-checked, never-trusted) enlarged
+        // range, or the range runs past the data region.
+        mangle_header(
+            &path,
+            "\"len\":32,\"name\":\"final_norm\"",
+            "\"len\":64,\"name\":\"final_norm\"",
+        );
+        let err = Model::load_compressed(&path).unwrap_err().to_string();
+        assert!(
+            err.contains("final_norm"),
+            "mismatch must be caught on the named section: {err}"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn structurally_inconsistent_shapes_are_rejected() {
+        // Per-tensor shapes can be internally consistent (sections + CRCs
+        // valid) while describing a block the forward pass would panic on:
+        // the loader must reject it, never defer the panic to serve time.
+        let mut m = tiny();
+        let d = m.cfg.d_model;
+        if let Stage::Block(b) = &mut m.stages[0] {
+            // 24 ≠ n_heads · head_dim for test-tiny
+            b.q = LinearWeight::Dense(Mat::zeros(d, 24));
+        }
+        let path = tmp("badshape.cpt2");
+        m.save_compressed(&path, None).unwrap();
+        let err = Model::load_compressed(&path).unwrap_err().to_string();
+        assert!(err.contains("structural contract"), "{err}");
+        std::fs::remove_file(&path).ok();
+
+        // A linear stage that changes the residual width is rejected too.
+        let mut m = tiny();
+        m.stages[1] = Stage::Linear(Mat::zeros(d, d + 1));
+        let path = tmp("badlinear.cpt2");
+        m.save_compressed(&path, None).unwrap();
+        let err = Model::load_compressed(&path).unwrap_err().to_string();
+        assert!(err.contains("residual stream"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn future_version_is_rejected() {
+        let m = tiny();
+        let path = tmp("version.cpt2");
+        m.save_compressed(&path, None).unwrap();
+        mangle_header(&path, "\"version\":2", "\"version\":7");
+        let err = Model::load_compressed(&path).unwrap_err().to_string();
+        assert!(err.contains("unsupported CPT2 version"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // IEEE CRC32 of "123456789" is the classic check value.
+        assert_eq!(crc32(b"123456789"), 0xcbf43926);
+        assert_eq!(crc32(b""), 0);
+    }
+}

@@ -14,11 +14,13 @@
 //! tests use randomly initialized models.
 
 pub mod config;
+pub mod cpt2;
 pub mod decode;
 pub mod encdec;
 pub mod transformer;
 pub mod weights;
 
 pub use config::{ModelConfig, ProjKind};
+pub use cpt2::CheckpointInfo;
 pub use decode::{DecodeSession, KvCache, Sampler, SamplerCfg};
 pub use transformer::{Block, Model};

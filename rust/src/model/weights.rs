@@ -7,6 +7,10 @@
 //! Header: `{"config": {...}, "tensors": [{"name", "rows", "cols", "offset"}]}`
 //! with `offset` in f32 elements from the start of the data section.
 //! Vector tensors (norms) are stored as 1×n matrices.
+//!
+//! CPT1 carries dense f32 tensors only. Compressed models serialize through
+//! the `CPT2` format in [`super::cpt2`]; [`Model::load_checkpoint`]
+//! (`super::cpt2`) sniffs the magic and accepts both.
 
 use super::config::ModelConfig;
 use crate::linalg::Mat;
@@ -75,13 +79,22 @@ impl TensorFile {
     }
 
     pub fn load(path: &Path) -> anyhow::Result<TensorFile> {
-        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let file = std::fs::File::open(path)?;
+        let file_len = file.metadata()?.len();
+        let mut f = std::io::BufReader::new(file);
         let mut magic = [0u8; 4];
         f.read_exact(&mut magic)?;
         anyhow::ensure!(&magic == MAGIC, "bad magic in {path:?}");
         let mut len4 = [0u8; 4];
         f.read_exact(&mut len4)?;
         let hlen = u32::from_le_bytes(len4) as usize;
+        // Never trust the header length field: bound it by the actual file
+        // size *before* allocating, so a corrupt or adversarial file cannot
+        // drive a huge allocation or a short-read panic.
+        anyhow::ensure!(
+            8 + hlen as u64 <= file_len,
+            "header length {hlen} exceeds file size {file_len} in {path:?}"
+        );
         let mut hbytes = vec![0u8; hlen];
         f.read_exact(&mut hbytes)?;
         let header = Json::parse(std::str::from_utf8(&hbytes)?)
@@ -107,11 +120,17 @@ impl TensorFile {
             let rows = t.get("rows").and_then(Json::as_usize).unwrap_or(0);
             let cols = t.get("cols").and_then(Json::as_usize).unwrap_or(0);
             let off = t.get("offset").and_then(Json::as_usize).unwrap_or(0);
-            anyhow::ensure!(off + rows * cols <= floats.len(), "tensor '{name}' out of range");
-            tensors.insert(
-                name,
-                Mat::from_vec(rows, cols, floats[off..off + rows * cols].to_vec()),
-            );
+            // Element counts come from the header too: checked arithmetic so
+            // oversized claims fail cleanly instead of wrapping, then bound
+            // against the floats actually read from the file.
+            let count = rows
+                .checked_mul(cols)
+                .ok_or_else(|| anyhow::anyhow!("tensor '{name}' shape overflows"))?;
+            let end = off
+                .checked_add(count)
+                .ok_or_else(|| anyhow::anyhow!("tensor '{name}' offset overflows"))?;
+            anyhow::ensure!(end <= floats.len(), "tensor '{name}' out of range");
+            tensors.insert(name, Mat::from_vec(rows, cols, floats[off..end].to_vec()));
         }
         Ok(TensorFile { config, tensors })
     }
@@ -238,6 +257,61 @@ mod tests {
         let path = dir.join("junk.bin");
         std::fs::write(&path, b"NOPE....").unwrap();
         assert!(TensorFile::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn header_len_is_bounded_by_file_size() {
+        // A 4 GB header-length claim on an 8-byte file must error cleanly
+        // before any allocation, not attempt a huge Vec or short-read panic.
+        let dir = std::env::temp_dir().join("compot_test_weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("hugelen.bin");
+        let mut bytes = MAGIC.to_vec();
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = TensorFile::load(&path).unwrap_err().to_string();
+        assert!(err.contains("exceeds file size"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn oversized_tensor_claims_are_errors() {
+        let cfg = ModelConfig::test_tiny();
+        let m = Model::random(&cfg, &mut Rng::new(3));
+        let dir = std::env::temp_dir().join("compot_test_weights");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("oversized.bin");
+        m.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let hlen = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
+        let header = String::from_utf8(bytes[8..8 + hlen].to_vec()).unwrap();
+        let rewrite = |patched: &str| {
+            let mut out = MAGIC.to_vec();
+            out.extend_from_slice(&(patched.len() as u32).to_le_bytes());
+            out.extend_from_slice(patched.as_bytes());
+            out.extend_from_slice(&bytes[8 + hlen..]);
+            std::fs::write(&path, &out).unwrap();
+        };
+        // Claim a vastly larger row count for one tensor: far beyond the
+        // data section, so the bound check must reject it. ("rows" is the
+        // last key of a record in the BTreeMap serialization, hence "}".)
+        let patched = header.replacen("\"rows\":1}", "\"rows\":99999999}", 1);
+        assert_ne!(patched, header, "expected a 1-row tensor in the header");
+        rewrite(&patched);
+        let err = TensorFile::load(&path).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        // Shapes that overflow usize arithmetic are errors, not wraps.
+        rewrite(&header.replacen(
+            "\"rows\":1}",
+            "\"rows\":9999999999999999999}",
+            1,
+        ));
+        let err = TensorFile::load(&path).unwrap_err().to_string();
+        assert!(
+            err.contains("overflows") || err.contains("out of range"),
+            "{err}"
+        );
         std::fs::remove_file(&path).ok();
     }
 

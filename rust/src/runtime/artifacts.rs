@@ -1,8 +1,73 @@
 //! Artifact manifest (`artifacts/manifest.json`) — shape-keyed lookup of
-//! the AOT-compiled programs.
+//! the AOT-compiled programs, plus provenance records for saved CPT2
+//! compressed checkpoints (which plan produced which file).
 
 use crate::util::json::Json;
 use std::path::{Path, PathBuf};
+
+/// One saved compressed checkpoint: where it lives and which compression
+/// plan produced it, so a serve host can pick an artifact by plan without
+/// re-deriving anything.
+#[derive(Clone, Debug)]
+pub struct CheckpointEntry {
+    pub name: String,
+    pub path: PathBuf,
+    /// Container format, `"cpt2"` (or `"cpt1"` for dense snapshots).
+    pub format: String,
+    /// Compression-plan provenance (e.g. `compot@0.25 → gptq4`), if known.
+    pub plan: Option<String>,
+}
+
+impl CheckpointEntry {
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", self.name.as_str().into())
+            .set("path", self.path.to_string_lossy().as_ref().into())
+            .set("format", self.format.as_str().into());
+        if let Some(p) = &self.plan {
+            j.set("plan", p.as_str().into());
+        }
+        j
+    }
+
+    fn from_json(j: &Json) -> Option<CheckpointEntry> {
+        Some(CheckpointEntry {
+            name: j.get("name").and_then(Json::as_str)?.to_string(),
+            path: PathBuf::from(j.get("path").and_then(Json::as_str)?),
+            format: j.get("format").and_then(Json::as_str).unwrap_or("cpt2").to_string(),
+            plan: j.get("plan").and_then(Json::as_str).map(String::from),
+        })
+    }
+}
+
+/// Append (or replace, keyed by *path* — re-saving the same file updates
+/// its record, while distinct files that happen to share a stem both
+/// persist) a checkpoint record in `<dir>/manifest.json`, creating the
+/// manifest if the artifacts build has not run — checkpoint provenance
+/// must not require `make artifacts`.
+pub fn record_checkpoint(dir: &Path, entry: &CheckpointEntry) -> anyhow::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let manifest_path = dir.join("manifest.json");
+    let mut root = match std::fs::read_to_string(&manifest_path) {
+        Ok(text) => Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?,
+        // Only a genuinely absent manifest starts from scratch — any other
+        // read error must propagate, or a transient failure would rewrite
+        // the manifest and destroy the artifact/model records.
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Json::obj(),
+        Err(e) => return Err(e.into()),
+    };
+    let mut list: Vec<Json> = root
+        .get("checkpoints")
+        .and_then(Json::as_arr)
+        .map(|a| a.to_vec())
+        .unwrap_or_default();
+    let path_str = entry.path.to_string_lossy().into_owned();
+    list.retain(|c| c.get("path").and_then(Json::as_str) != Some(path_str.as_str()));
+    list.push(entry.to_json());
+    root.set("checkpoints", Json::Arr(list));
+    std::fs::write(&manifest_path, root.to_string() + "\n")?;
+    Ok(())
+}
 
 #[derive(Clone, Debug)]
 pub struct ArtifactEntry {
@@ -22,6 +87,8 @@ pub struct Manifest {
     pub dir: PathBuf,
     pub entries: Vec<ArtifactEntry>,
     pub models: Vec<String>,
+    /// Saved compressed checkpoints (see [`record_checkpoint`]).
+    pub checkpoints: Vec<CheckpointEntry>,
 }
 
 /// Default artifacts directory: `$COMPOT_ARTIFACTS` or `./artifacts`.
@@ -71,7 +138,20 @@ impl Manifest {
             .iter()
             .filter_map(|m| m.as_str().map(String::from))
             .collect();
-        Ok(Manifest { dir: dir.to_path_buf(), entries, models })
+        let checkpoints = j
+            .get("checkpoints")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(CheckpointEntry::from_json)
+            .collect();
+        Ok(Manifest { dir: dir.to_path_buf(), entries, models, checkpoints })
+    }
+
+    /// Look up a recorded checkpoint by name. Records are keyed by path, so
+    /// distinct files may share a name — the most recently recorded wins.
+    pub fn checkpoint(&self, name: &str) -> Option<&CheckpointEntry> {
+        self.checkpoints.iter().rev().find(|c| c.name == name)
     }
 
     /// The compot_iter artifact for a given (m, n, k, s), if exported.
@@ -114,6 +194,59 @@ mod tests {
         assert!(m.compot_iter(1, 2, 3, 4).is_none());
         assert!(m.model_path("llama-micro").is_some());
         assert!(m.model_path("nope").is_none());
+        assert!(m.checkpoints.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_records_roundtrip_and_replace() {
+        // record_checkpoint must work with *no* pre-existing manifest (a
+        // checkpoint save must not require `make artifacts`), append to an
+        // existing one without touching artifact entries, and replace
+        // records that reuse a name.
+        let dir = std::env::temp_dir().join("compot_manifest_ckpt_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let entry = CheckpointEntry {
+            name: "tiny-t7".to_string(),
+            path: dir.join("tiny-t7.cpt2"),
+            format: "cpt2".to_string(),
+            plan: Some("compot@0.25 → gptq4".to_string()),
+        };
+        record_checkpoint(&dir, &entry).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.checkpoints.len(), 1);
+        let c = m.checkpoint("tiny-t7").unwrap();
+        assert_eq!(c.format, "cpt2");
+        assert_eq!(c.plan.as_deref(), Some("compot@0.25 → gptq4"));
+        assert!(m.checkpoint("nope").is_none());
+        // same path replaces its record, a different path appends
+        record_checkpoint(&dir, &CheckpointEntry { plan: None, ..entry.clone() }).unwrap();
+        record_checkpoint(
+            &dir,
+            &CheckpointEntry {
+                name: "other".to_string(),
+                path: dir.join("other.cpt2"),
+                ..entry.clone()
+            },
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.checkpoints.len(), 2);
+        assert!(m.checkpoint("tiny-t7").unwrap().plan.is_none());
+        // two distinct files sharing one name: both records persist and the
+        // most recently recorded one wins the name lookup
+        record_checkpoint(
+            &dir,
+            &CheckpointEntry {
+                path: dir.join("elsewhere/tiny-t7.cpt2"),
+                plan: Some("svd-llm@0.20".to_string()),
+                ..entry.clone()
+            },
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.checkpoints.len(), 3);
+        assert_eq!(m.checkpoint("tiny-t7").unwrap().plan.as_deref(), Some("svd-llm@0.20"));
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -7,5 +7,5 @@ pub mod artifacts;
 pub mod compot_exec;
 pub mod pjrt;
 
-pub use artifacts::Manifest;
+pub use artifacts::{record_checkpoint, CheckpointEntry, Manifest};
 pub use pjrt::PjrtEngine;

@@ -118,6 +118,13 @@ pub fn serve_blocking(
     // models report the bytes actually resident, not the fp16 accounting.
     let mut info = info;
     info.set("resident_weight_bytes", model.resident_weight_bytes().into());
+    // Where the weights came from: a cold-loaded compressed checkpoint
+    // (launcher set "checkpoint") or an in-process model — so operators can
+    // tell a CPT2-restored server from one that recompressed at startup.
+    if info.get("weights_source").is_none() {
+        let src = if info.get("checkpoint").is_some() { "checkpoint" } else { "in-memory" };
+        info.set("weights_source", src.into());
+    }
     let info = Arc::new(info);
     let batcher: Arc<Batcher<Job>> = Arc::new(Batcher::new(policy));
     let metrics = Arc::new(Metrics::default());
@@ -400,6 +407,32 @@ mod tests {
         let stats = client.stats().unwrap();
         assert_eq!(stats.get("requests").and_then(Json::as_usize), Some(3));
         assert!(stats.get("decode_steps").and_then(Json::as_usize).unwrap() >= 6);
+        client.shutdown().unwrap();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn info_reports_checkpoint_origin() {
+        // A launcher serving a CPT2 checkpoint passes its path and plan in
+        // the metadata; the server must surface them plus a weights_source
+        // tag, and default to "in-memory" otherwise.
+        let mut info = Json::obj();
+        info.set("model", "test-tiny".into())
+            .set("checkpoint", "tiny-t7.cpt2".into())
+            .set("plan", "compot@0.25 → gptq4".into());
+        let (addr, server) = spawn_server(7, BatchPolicy::default(), info);
+        let mut client = Client::connect(addr).unwrap();
+        let got = client.info().unwrap();
+        assert_eq!(got.get("checkpoint").and_then(Json::as_str), Some("tiny-t7.cpt2"));
+        assert_eq!(got.get("plan").and_then(Json::as_str), Some("compot@0.25 → gptq4"));
+        assert_eq!(got.get("weights_source").and_then(Json::as_str), Some("checkpoint"));
+        client.shutdown().unwrap();
+        server.join().unwrap();
+
+        let (addr, server) = spawn_server(8, BatchPolicy::default(), Json::obj());
+        let mut client = Client::connect(addr).unwrap();
+        let got = client.info().unwrap();
+        assert_eq!(got.get("weights_source").and_then(Json::as_str), Some("in-memory"));
         client.shutdown().unwrap();
         server.join().unwrap();
     }

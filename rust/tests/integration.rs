@@ -207,6 +207,75 @@ fn whitening_stats_are_sane_on_trained_model() {
 }
 
 #[test]
+fn cpt2_roundtrip_preserves_every_variant_and_decode() {
+    // NOT artifact-gated. The acceptance matrix for the checkpoint
+    // subsystem: for Dense, LowRank, Factorized, and all three packed
+    // quantized variants, save_compressed → load_compressed reproduces
+    // bit-identical buffers (LinearWeight equality covers packed code
+    // words, f16 scales, and sparse indices) and token-identical KV-cached
+    // greedy decode vs the in-memory model — with no compression stage run
+    // at load time.
+    use compot::coordinator::plan::CompressionPlan;
+    use compot::data::SynthLang;
+    use compot::model::config::{ModelConfig, ProjKind};
+    use compot::model::transformer::Stage;
+
+    let model = Model::random(&ModelConfig::test_tiny(), &mut Rng::new(50));
+    let lang = SynthLang::wiki(model.cfg.vocab);
+    let calib = lang.gen_batch(6, 48, &mut Rng::new(51));
+    let prompt: Vec<u16> = vec![2, 7, 1, 8, 2, 8];
+    let dir = std::env::temp_dir().join("compot_cpt2_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let defaults = StageConfig::new(0.25, false);
+
+    let specs: [Option<&str>; 6] = [
+        None, // dense
+        Some("svd-llm@0.2"),
+        Some("compot@0.25"),
+        Some("rtn4"),
+        Some("svd-llm@0.2+rtn4"),
+        Some("compot@0.25+gptq4"),
+    ];
+    for (i, spec) in specs.iter().enumerate() {
+        let compressed = match spec {
+            Some(s) => {
+                let plan = CompressionPlan::parse(s, &defaults).unwrap();
+                plan.run(&model, &calib).unwrap().0
+            }
+            None => model.clone(),
+        };
+        let path = dir.join(format!("case{i}.cpt2"));
+        compressed.save_compressed(&path, spec.as_deref()).unwrap();
+        let (reloaded, info) = Model::load_checkpoint(&path).unwrap();
+        let label = spec.unwrap_or("dense");
+        assert_eq!(info.format, "cpt2", "{label}");
+        assert_eq!(info.plan.as_deref(), spec.as_deref(), "{label}");
+        // bit-identical buffers, variant tags included
+        assert_eq!(reloaded.stages.len(), compressed.stages.len(), "{label}");
+        for (sa, sb) in compressed.stages.iter().zip(reloaded.stages.iter()) {
+            let (Stage::Block(ba), Stage::Block(bb)) = (sa, sb) else {
+                panic!("{label}: stage kind changed");
+            };
+            for p in ProjKind::DECODER_SET {
+                assert_eq!(ba.proj(p), bb.proj(p), "{label}: {p:?} buffers differ");
+            }
+        }
+        // equal measured footprint, token-identical KV-cached greedy decode
+        assert_eq!(
+            reloaded.resident_weight_bytes(),
+            compressed.resident_weight_bytes(),
+            "{label}"
+        );
+        assert_eq!(
+            reloaded.greedy_decode(&prompt, 10),
+            compressed.greedy_decode(&prompt, 10),
+            "{label}: reloaded checkpoint decode diverged"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
 fn kv_cached_decode_is_bit_identical_for_compressed_plans() {
     // NOT artifact-gated: a random tiny model stands in for trained weights —
     // decode parity is about the execution paths, not model quality. Covers

@@ -1,0 +1,109 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: diff freshly generated BENCH_*.json against the
+committed baselines and fail on meaningful regressions.
+
+Usage: bench_gate.py <baseline_dir> <fresh_dir>
+
+Rules (applied per matching JSON key, only when the baseline value is a
+positive number — "pending" placeholder baselines with zeros gate nothing):
+
+- throughput keys (``prefill_tok_s`` or any key starting with
+  ``decode_tok_s``): fresh must be >= (1 - TOLERANCE) * baseline;
+- size keys (any key containing ``resident_bytes`` or equal to
+  ``checkpoint_file_bytes``): fresh must not exceed the baseline — packed
+  bytes growing is a regression regardless of speed;
+- boolean gate keys (parity / round-trip flags): a baseline of true must
+  stay true.
+
+A fresh file that is missing while its baseline exists is an error: the CI
+bench step was supposed to produce it.
+"""
+
+import json
+import os
+import sys
+
+TOLERANCE = 0.30
+BENCHES = ["BENCH_decode.json", "BENCH_quant.json", "BENCH_checkpoint.json"]
+
+
+def is_throughput(key):
+    return key == "prefill_tok_s" or key.startswith("decode_tok_s")
+
+
+def is_size(key):
+    return "resident_bytes" in key or key == "checkpoint_file_bytes"
+
+
+def compare(name, base, fresh):
+    failures = []
+    checked = 0
+    for key, bval in base.items():
+        if key not in fresh:
+            continue
+        fval = fresh[key]
+        if isinstance(bval, bool):
+            if bval and not fval:
+                failures.append(f"{name}: gate '{key}' flipped true -> false")
+                checked += 1
+            continue
+        if not isinstance(bval, (int, float)) or bval <= 0:
+            continue  # pending placeholder or non-numeric: nothing to gate
+        if is_throughput(key):
+            checked += 1
+            floor = bval * (1.0 - TOLERANCE)
+            if fval < floor:
+                failures.append(
+                    f"{name}: '{key}' regressed {bval:.1f} -> {fval:.1f} tok/s "
+                    f"(> {TOLERANCE:.0%} drop)"
+                )
+        elif is_size(key):
+            checked += 1
+            if fval > bval:
+                failures.append(f"{name}: '{key}' grew {bval} -> {fval} bytes")
+    return checked, failures
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(__doc__)
+    baseline_dir, fresh_dir = sys.argv[1], sys.argv[2]
+    all_failures = []
+    for bench in BENCHES:
+        base_path = os.path.join(baseline_dir, bench)
+        fresh_path = os.path.join(fresh_dir, bench)
+        if not os.path.exists(base_path):
+            print(f"{bench}: no committed baseline, skipping")
+            continue
+        if not os.path.exists(fresh_path):
+            all_failures.append(f"{bench}: fresh result missing from {fresh_dir}")
+            continue
+        with open(base_path) as f:
+            base = json.load(f)
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+        bmodel, fmodel = base.get("model"), fresh.get("model")
+        if bmodel not in (None, "pending") and bmodel != fmodel:
+            # Comparing different model configs would make the byte gates
+            # vacuous and the tok/s gates meaningless — demand a matching
+            # baseline instead of pretending to gate.
+            print(
+                f"{bench}: baseline model '{bmodel}' != fresh model '{fmodel}' — "
+                "incomparable, skipping (commit a baseline generated at the CI "
+                "bench settings to enable this gate)"
+            )
+            continue
+        checked, failures = compare(bench, base, fresh)
+        status = "FAIL" if failures else "ok"
+        print(f"{bench}: {checked} gated keys, {len(failures)} failures [{status}]")
+        all_failures.extend(failures)
+    if all_failures:
+        print("\nbench regression gate FAILED:")
+        for f in all_failures:
+            print(f"  - {f}")
+        sys.exit(1)
+    print("bench regression gate passed")
+
+
+if __name__ == "__main__":
+    main()
