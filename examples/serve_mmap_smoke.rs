@@ -1,0 +1,103 @@
+//! Serve smoke for the zero-copy checkpoint path — what CI runs to prove
+//! `compot serve --load-compressed <ckpt> --mmap` end to end without
+//! needing `make artifacts`: it builds a tiny model in-process, compresses
+//! it with the Table-7 plan, saves a CPT2 checkpoint, then serves the
+//! **mmap-loaded** model and asserts every served continuation is
+//! token-identical to the owned-load path (exit code is the assertion).
+//!
+//! Run: cargo run --release --example serve_mmap_smoke
+
+use compot::compress::StageConfig;
+use compot::coordinator::plan::CompressionPlan;
+use compot::data::SynthLang;
+use compot::model::config::ModelConfig;
+use compot::model::Model;
+use compot::serve::server::Client;
+use compot::serve::{serve_blocking, BatchPolicy};
+use compot::util::json::Json;
+use compot::util::Rng;
+use std::sync::{mpsc, Arc};
+
+const PLAN: &str = "compot@0.25+gptq4";
+
+fn main() -> anyhow::Result<()> {
+    // --- build + compress + checkpoint a tiny model ---
+    let model = Model::random(&ModelConfig::test_tiny(), &mut Rng::new(31));
+    let lang = SynthLang::wiki(model.cfg.vocab);
+    let calib = lang.gen_batch(6, 48, &mut Rng::new(32));
+    let plan = CompressionPlan::parse(PLAN, &StageConfig::new(0.25, false))?;
+    let (compressed, _) = plan.run(&model, &calib)?;
+    let path = std::env::temp_dir().join("compot_serve_mmap_smoke.cpt2");
+    compressed.save_compressed(&path, Some(PLAN))?;
+
+    // --- owned-load reference vs zero-copy load ---
+    let (owned, oinfo) = Model::load_compressed(&path)?;
+    let (mapped, minfo) = Model::load_compressed_mmap(&path)?;
+    anyhow::ensure!(oinfo.source == "owned", "owned source tag wrong: {}", oinfo.source);
+    anyhow::ensure!(minfo.source.starts_with("mmap"), "mmap source tag wrong: {}", minfo.source);
+    // On a host whose filesystem cannot mmap, the loader takes its
+    // documented heap fallback — parity below must still hold, but the
+    // page-sharing assertions only apply to a true mapping.
+    let true_mmap = minfo.source == "mmap";
+    if true_mmap {
+        anyhow::ensure!(
+            mapped.mapped_weight_bytes() > 0
+                && mapped.resident_weight_bytes() < owned.resident_weight_bytes(),
+            "mmap load did not keep weight bytes in the mapping"
+        );
+    } else {
+        eprintln!("note: mmap fallback in effect — page-sharing checks skipped");
+    }
+    println!(
+        "loaded {PLAN} checkpoint twice: owned {} resident B | mmap {} resident + {} mapped B",
+        owned.resident_weight_bytes(),
+        mapped.resident_weight_bytes(),
+        mapped.mapped_weight_bytes()
+    );
+    let prompts: Vec<Vec<u16>> = {
+        let mut rng = Rng::new(33);
+        (0..6).map(|_| lang.gen(12, &mut rng)).collect()
+    };
+    let expected: Vec<Vec<u16>> = prompts.iter().map(|p| owned.greedy_decode(p, 8)).collect();
+
+    // --- serve the mmap-loaded model, assert token-identical responses ---
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let served = Arc::new(mapped);
+    let server = {
+        let served = served.clone();
+        std::thread::spawn(move || {
+            serve_blocking(served, "127.0.0.1:0", BatchPolicy::default(), Json::obj(), |a| {
+                addr_tx.send(a).unwrap();
+            })
+            .unwrap();
+        })
+    };
+    let addr = addr_rx.recv()?;
+    let mut client = Client::connect(addr)?;
+    let info = client.info()?;
+    if true_mmap {
+        anyhow::ensure!(
+            info.get("weights_source").and_then(Json::as_str) == Some("mmap"),
+            "server must report weights_source \"mmap\", got {info:?}"
+        );
+        anyhow::ensure!(
+            info.get("mapped_weight_bytes").and_then(Json::as_usize).unwrap_or(0) > 0,
+            "server must report a non-zero mapped_weight_bytes"
+        );
+    }
+    for (p, want) in prompts.iter().zip(expected.iter()) {
+        let got = client.request(p, 8)?.tokens;
+        anyhow::ensure!(
+            &got == want,
+            "mmap-served continuation diverged from the owned-load path for {p:?}"
+        );
+    }
+    client.shutdown()?;
+    server.join().unwrap();
+    std::fs::remove_file(&path).ok();
+    println!(
+        "serve smoke ok: {} prompts served token-identically from the mmap-loaded checkpoint",
+        prompts.len()
+    );
+    Ok(())
+}

@@ -1,11 +1,16 @@
-//! Checkpoint benchmark: cold-loading a CPT2 compressed checkpoint vs
-//! recompressing from the dense model at startup — the number that decides
-//! whether serve restarts scale with compressed size or with model size.
+//! Checkpoint benchmark: cold-loading a CPT2 compressed checkpoint — via
+//! the copying loader *and* the zero-copy mmap loader — vs recompressing
+//! from the dense model at startup. These are the numbers that decide
+//! whether serve restarts scale with compressed size or with model size,
+//! and whether `--mmap` is pulling its weight.
 //!
 //! Gates (the process exits non-zero if any fails):
 //! - round trip is lossless: the reloaded model greedy-decodes
 //!   **token-identically** to the in-memory compressed model and reports
 //!   **equal** `resident_weight_bytes()`;
+//! - the mmap load is **token-identical** too, keeps its weight bytes in
+//!   the mapping (resident < copying load), and is **strictly faster**
+//!   than the copying cold load;
 //! - cold load is **strictly faster** than the recompress path
 //!   (calibration + plan run) on the bench model.
 //!
@@ -71,6 +76,34 @@ fn main() {
         humanize(st_recompress.median_s)
     );
 
+    // --- zero-copy mmap cold load ---
+    let st_mmap = bench(
+        || {
+            std::hint::black_box(
+                Model::load_compressed_mmap(&path).expect("load_compressed_mmap"),
+            );
+        },
+        budget,
+        200,
+    );
+    println!("{}", st_mmap.format("mmap cold-load CPT2 checkpoint"));
+    let mmap_vs_copy = st_load.median_s / st_mmap.median_s;
+    println!(
+        "mmap load {} vs copying load {} — {mmap_vs_copy:.1}x",
+        humanize(st_mmap.median_s),
+        humanize(st_load.median_s)
+    );
+    let (mmapped, mmap_info) = Model::load_compressed_mmap(&path).expect("load_compressed_mmap");
+    let mmap_tokens_match =
+        mmapped.greedy_decode(&prompt, gen_len) == compressed.greedy_decode(&prompt, gen_len);
+    println!(
+        "mmap round trip: source '{}' | greedy decode {} | {} resident + {} mapped bytes",
+        mmap_info.source,
+        if mmap_tokens_match { "token-identical" } else { "DIVERGED" },
+        mmapped.resident_weight_bytes(),
+        mmapped.mapped_weight_bytes()
+    );
+
     // --- round-trip losslessness ---
     let (reloaded, info) = Model::load_compressed(&path).expect("load_compressed");
     let bytes_match = reloaded.resident_weight_bytes() == compressed.resident_weight_bytes();
@@ -108,9 +141,14 @@ fn main() {
         .set("cold_load_s", st_load.median_s.into())
         .set("recompress_s", st_recompress.median_s.into())
         .set("cold_load_speedup", speedup.into())
+        .set("mmap_load_s", st_mmap.median_s.into())
+        .set("mmap_vs_copy_speedup", mmap_vs_copy.into())
+        .set("mmap_resident_bytes", mmapped.resident_weight_bytes().into())
+        .set("mmap_mapped_bytes", mmapped.mapped_weight_bytes().into())
         .set("decode_tok_s_loaded", loaded_tok_s.into())
         .set("roundtrip_tokens_identical", Json::Bool(tokens_match))
-        .set("roundtrip_bytes_equal", Json::Bool(bytes_match));
+        .set("roundtrip_bytes_equal", Json::Bool(bytes_match))
+        .set("mmap_tokens_identical", Json::Bool(mmap_tokens_match));
     let out =
         std::env::var("BENCH_CHECKPOINT_OUT").unwrap_or_else(|_| "BENCH_checkpoint.json".into());
     match std::fs::write(&out, j.to_string() + "\n") {
@@ -126,5 +164,24 @@ fn main() {
         "cold load ({}) must beat recompression ({})",
         humanize(st_load.median_s),
         humanize(st_recompress.median_s)
+    );
+    assert!(mmap_tokens_match, "mmap-loaded checkpoint decode diverged from the in-memory model");
+    // Page-sharing accounting only applies to a true mapping — on a host
+    // whose filesystem cannot mmap, the loader's documented heap fallback
+    // ("mmap-fallback") correctly reports the bytes as resident instead.
+    if mmap_info.source == "mmap" {
+        assert!(
+            mmapped.mapped_weight_bytes() > 0
+                && mmapped.resident_weight_bytes() < reloaded.resident_weight_bytes(),
+            "mmap load must keep weight bytes in the mapping, not the heap"
+        );
+    } else {
+        eprintln!("note: mmap fallback in effect — page-sharing gate skipped");
+    }
+    assert!(
+        st_mmap.median_s < st_load.median_s,
+        "mmap cold load ({}) must beat the copying load ({})",
+        humanize(st_mmap.median_s),
+        humanize(st_load.median_s)
     );
 }

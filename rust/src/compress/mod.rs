@@ -191,15 +191,30 @@ impl LinearWeight {
 
     /// Actual resident heap bytes of the stored buffers: f32 values at 4 B,
     /// packed codes/scales and u32 sparse indices at their real sizes — the
-    /// quantity the `quant_decode` benchmark reports.
+    /// quantity the `quant_decode` benchmark reports. Mapping-aware: a
+    /// buffer that is a zero-copy view into a checkpoint mapping counts 0
+    /// here (its pages are file-backed and shared) and shows up in
+    /// [`mapped_bytes`](Self::mapped_bytes) instead.
     pub fn resident_bytes(&self) -> usize {
         match self {
-            LinearWeight::Dense(w) => 4 * w.rows() * w.cols(),
-            LinearWeight::LowRank { b, c } => 4 * (b.rows() * b.cols() + c.rows() * c.cols()),
-            LinearWeight::Factorized { a, s } => 4 * a.rows() * a.cols() + s.resident_bytes(),
-            LinearWeight::QuantDense(w) => w.packed_bytes(),
-            LinearWeight::QuantLowRank { b, c } => b.packed_bytes() + c.packed_bytes(),
-            LinearWeight::QuantFactorized { a, s } => a.packed_bytes() + s.resident_bytes(),
+            LinearWeight::Dense(w) => w.resident_bytes(),
+            LinearWeight::LowRank { b, c } => b.resident_bytes() + c.resident_bytes(),
+            LinearWeight::Factorized { a, s } => a.resident_bytes() + s.resident_bytes(),
+            LinearWeight::QuantDense(w) => w.resident_bytes(),
+            LinearWeight::QuantLowRank { b, c } => b.resident_bytes() + c.resident_bytes(),
+            LinearWeight::QuantFactorized { a, s } => a.resident_bytes() + s.resident_bytes(),
+        }
+    }
+
+    /// Bytes this weight borrows from a checkpoint mapping (0 when owned).
+    pub fn mapped_bytes(&self) -> usize {
+        match self {
+            LinearWeight::Dense(w) => w.mapped_bytes(),
+            LinearWeight::LowRank { b, c } => b.mapped_bytes() + c.mapped_bytes(),
+            LinearWeight::Factorized { a, s } => a.mapped_bytes() + s.mapped_bytes(),
+            LinearWeight::QuantDense(w) => w.mapped_bytes(),
+            LinearWeight::QuantLowRank { b, c } => b.mapped_bytes() + c.mapped_bytes(),
+            LinearWeight::QuantFactorized { a, s } => a.mapped_bytes() + s.mapped_bytes(),
         }
     }
 }

@@ -33,7 +33,7 @@ use crate::linalg::{cholesky, gemm, solve, Mat};
 use crate::model::config::ProjKind;
 use crate::model::transformer::{Model, Stage};
 
-pub use crate::linalg::qmat::GROUP;
+pub use crate::linalg::qmat::{supported_group, GROUP};
 
 /// Per-group symmetric quantization of a value slice (fake-quant form).
 /// Shares the packed path's arithmetic core — see `linalg::qmat`.
@@ -42,20 +42,31 @@ fn quantize_group(vals: &mut [f32], bits: u32) {
 }
 
 /// Eq.-25-style formula bits for `count` values at b bits + one 16-bit
-/// scale per flat group of 128. For packed storage this is a *floor*: the
-/// measured size adds word padding and per-row/column group alignment.
+/// scale per flat group of the default [`GROUP`]. For packed storage this
+/// is a *floor*: the measured size adds word padding and per-row/column
+/// group alignment.
 pub fn quant_bits(count: usize, bits: u32) -> u64 {
-    (count as u64) * bits as u64 + (count.div_ceil(GROUP) as u64) * 16
+    quant_bits_grouped(count, bits, GROUP)
 }
 
-/// RTN: per-row groups of 128 along the output dimension (fake-quant f32).
+/// [`quant_bits`] at an explicit group size.
+pub fn quant_bits_grouped(count: usize, bits: u32, group: usize) -> u64 {
+    (count as u64) * bits as u64 + (count.div_ceil(group) as u64) * 16
+}
+
+/// RTN: per-row groups of [`GROUP`] along the output dim (fake-quant f32).
 pub fn rtn_quantize(w: &Mat, bits: u32) -> Mat {
+    rtn_quantize_grouped(w, bits, GROUP)
+}
+
+/// RTN with an explicit group size (the 64/128/256 sweep).
+pub fn rtn_quantize_grouped(w: &Mat, bits: u32, group: usize) -> Mat {
     let mut q = w.clone();
     for i in 0..q.rows() {
         let row = q.row_mut(i);
         let cols = row.len();
-        for g in (0..cols).step_by(GROUP) {
-            let end = (g + GROUP).min(cols);
+        for g in (0..cols).step_by(group) {
+            let end = (g + group).min(cols);
             quantize_group(&mut row[g..end], bits);
         }
     }
@@ -73,7 +84,7 @@ pub fn rtn_quantize_packed(w: &Mat, bits: u32) -> QuantMat {
 /// after quantizing row i, the remaining rows absorb `−e·H⁻¹[i, j]/H⁻¹[i,i]`.
 /// Returns the fake-quantized matrix plus, for packable widths, the same
 /// values in packed storage (bit-identical on dequantization).
-fn gptq_core(w: &Mat, stats: &CalibStats, bits: u32) -> (Mat, Option<QuantMat>) {
+fn gptq_core(w: &Mat, stats: &CalibStats, bits: u32, group: usize) -> (Mat, Option<QuantMat>) {
     let m = w.rows();
     assert_eq!(stats.dim(), m, "gptq: Hessian dim must match input dim");
     // H = 2G + λI (damping 1% of mean diagonal, GPTQ's default style).
@@ -93,16 +104,16 @@ fn gptq_core(w: &Mat, stats: &CalibStats, bits: u32) -> (Mat, Option<QuantMat>) 
     let n = w.cols();
     let pack = QuantMat::supported_bits(bits);
     let mut codes: Vec<u16> = if pack { vec![0; m * n] } else { Vec::new() };
-    let mut scales: Vec<u16> = Vec::with_capacity(if pack { m * n.div_ceil(GROUP) } else { 0 });
-    let mut gcodes = [0u16; GROUP];
+    let mut scales: Vec<u16> = Vec::with_capacity(if pack { m * n.div_ceil(group) } else { 0 });
+    let mut gcodes = vec![0u16; group];
 
     // Per-(row-slice) group scales, computed on the *current* (compensated)
     // values as in the reference implementation.
     for i in 0..m {
         // Quantize row i in groups through the shared packed/fake core.
         let mut qrow = work.row(i).to_vec();
-        for g in (0..n).step_by(GROUP) {
-            let end = (g + GROUP).min(n);
+        for g in (0..n).step_by(group) {
+            let end = (g + group).min(n);
             let sbits =
                 qmat::quantize_group_inplace(&mut qrow[g..end], bits, &mut gcodes[..end - g]);
             if pack {
@@ -131,19 +142,19 @@ fn gptq_core(w: &Mat, stats: &CalibStats, bits: u32) -> (Mat, Option<QuantMat>) 
             }
         }
     }
-    let packed = pack.then(|| QuantMat::from_codes(m, n, bits, &codes, scales));
+    let packed = pack.then(|| QuantMat::from_codes_grouped(m, n, bits, group, &codes, scales));
     (out, packed)
 }
 
 /// GPTQ returning the fake-quantized (dense f32) matrix.
 pub fn gptq_quantize(w: &Mat, stats: &CalibStats, bits: u32) -> Mat {
-    gptq_core(w, stats, bits).0
+    gptq_core(w, stats, bits, GROUP).0
 }
 
 /// GPTQ straight into packed storage (2..=8 bits); `dequantize()` of the
 /// result is bit-identical to [`gptq_quantize`].
 pub fn gptq_quantize_packed(w: &Mat, stats: &CalibStats, bits: u32) -> QuantMat {
-    gptq_core(w, stats, bits).1.expect("gptq_quantize_packed: bits must be in 2..=8")
+    gptq_core(w, stats, bits, GROUP).1.expect("gptq_quantize_packed: bits must be in 2..=8")
 }
 
 /// Quantize a dense layer: returns the packed layer (fake-quantized above
@@ -172,6 +183,20 @@ pub fn quantize_weight(
     bits: u32,
     use_gptq: bool,
 ) -> CompressedLayer {
+    quantize_weight_grouped(current, original, stats, bits, use_gptq, GROUP)
+}
+
+/// [`quantize_weight`] with an explicit quantization group size (the
+/// `--set group_size=64|128|256` sweep; 128 is the default).
+pub fn quantize_weight_grouped(
+    current: &LinearWeight,
+    original: &Mat,
+    stats: Option<&CalibStats>,
+    bits: u32,
+    use_gptq: bool,
+    group: usize,
+) -> CompressedLayer {
+    assert!(supported_group(group), "unsupported quantization group size {group}");
     let gptq_fits = |rows: usize| use_gptq && stats.map(|s| s.dim() == rows).unwrap_or(false);
     // Re-quantizing an already-packed weight re-runs on its (bit-identical)
     // fake-quant values.
@@ -190,10 +215,12 @@ pub fn quantize_weight(
     let quantize_mat = |w: &Mat, input_side: bool| -> QFactor {
         let gptq = input_side && gptq_fits(w.rows());
         match (pack, gptq) {
-            (true, true) => QFactor::Packed(gptq_quantize_packed(w, stats.unwrap(), bits)),
-            (true, false) => QFactor::Packed(rtn_quantize_packed(w, bits)),
-            (false, true) => QFactor::Fake(gptq_quantize(w, stats.unwrap(), bits)),
-            (false, false) => QFactor::Fake(rtn_quantize(w, bits)),
+            (true, true) => {
+                QFactor::Packed(gptq_core(w, stats.unwrap(), bits, group).1.expect("packable"))
+            }
+            (true, false) => QFactor::Packed(QuantMat::quantize_from_grouped(w, bits, group)),
+            (false, true) => QFactor::Fake(gptq_core(w, stats.unwrap(), bits, group).0),
+            (false, false) => QFactor::Fake(rtn_quantize_grouped(w, bits, group)),
         }
     };
 
@@ -236,7 +263,7 @@ pub fn quantize_weight(
                 QFactor::Packed(qa) => {
                     let weight = LinearWeight::QuantFactorized {
                         a: qa,
-                        s: QuantColumnSparse::quantize_from(s, bits),
+                        s: QuantColumnSparse::quantize_from_grouped(s, bits, group),
                     };
                     (weight, count, mask, slack, None)
                 }
@@ -246,19 +273,19 @@ pub fn quantize_weight(
                     if qs.s() > 0 {
                         for col in vals.chunks_mut(qs.s()) {
                             let len = col.len();
-                            for g in (0..len).step_by(GROUP) {
-                                quantize_group(&mut col[g..(g + GROUP).min(len)], bits);
+                            for g in (0..len).step_by(group) {
+                                quantize_group(&mut col[g..(g + group).min(len)], bits);
                             }
                         }
                     }
                     qs.set_values(&vals);
                     // Column-aligned groups cost one scale per column group
-                    // (n·⌈s/128⌉) — account them exactly; the flat formula
+                    // (n·⌈s/group⌉) — account them exactly; the flat formula
                     // would under-count them.
                     let sparse_vals = (s.s() * s.n()) as u64;
-                    let exact = quant_bits(a.rows() * a.cols(), bits)
+                    let exact = quant_bits_grouped(a.rows() * a.cols(), bits, group)
                         + sparse_vals * bits as u64
-                        + (s.n() * s.s().div_ceil(GROUP)) as u64 * 16
+                        + (s.n() * s.s().div_ceil(group)) as u64 * 16
                         + mask;
                     (LinearWeight::Factorized { a: qa, s: qs }, count, mask, slack, Some(exact))
                 }
@@ -272,7 +299,7 @@ pub fn quantize_weight(
         weight,
         stats,
     );
-    let formula = quant_bits(stored_values, bits) + mask_bits;
+    let formula = quant_bits_grouped(stored_values, bits, group) + mask_bits;
     if pack {
         // `CompressedLayer::new` measured the bits from the packed buffers;
         // the Eq.-25 formula is kept as a cross-check envelope.
@@ -309,10 +336,19 @@ pub fn quantize_factors(
 /// model it quantizes the stored factors, so `[factorize, quantize]` plans
 /// reproduce the paper's Eq. 25 composed-CR accounting from actual bits —
 /// and, at 2..=8 bits, from actually-packed buffers the decode runtime
-/// executes on natively.
+/// executes on natively. `group` is the quantization group size
+/// (`--set group_size=64|128|256`, default [`GROUP`] = 128), recorded in
+/// CPT2 headers so checkpoints round-trip non-default groups.
 pub struct Quantize {
     pub bits: u32,
     pub gptq: bool,
+    pub group: usize,
+}
+
+impl Default for Quantize {
+    fn default() -> Self {
+        Quantize { bits: 4, gptq: false, group: GROUP }
+    }
 }
 
 impl ModelCompressor for Quantize {
@@ -353,7 +389,14 @@ impl ModelCompressor for Quantize {
                 } else {
                     current.to_dense()
                 };
-                let q = quantize_weight(current, &orig_w, stats, self.bits, self.gptq);
+                let q = quantize_weight_grouped(
+                    current,
+                    &orig_w,
+                    stats,
+                    self.bits,
+                    self.gptq,
+                    self.group,
+                );
                 used_bits += q.bits;
                 total_bits += 16 * (orig_w.rows() * orig_w.cols()) as u64;
                 reports.push(LayerReport::measured(
@@ -391,27 +434,34 @@ impl ModelCompressor for Quantize {
 fn build_quantize(o: &super::registry::MethodOptions, gptq: bool) -> anyhow::Result<Box<dyn ModelCompressor>> {
     let bits = o.get_u32("bits")?.unwrap_or(4);
     anyhow::ensure!((2..=16).contains(&bits), "bits must be in 2..=16, got {bits}");
-    Ok(Box::new(Quantize { bits, gptq }))
+    let group = o.get_usize("group_size")?.unwrap_or(GROUP);
+    anyhow::ensure!(
+        [64, 128, 256].contains(&group),
+        "group_size must be 64, 128, or 256 (the sweep points), got {group}"
+    );
+    Ok(Box::new(Quantize { bits, gptq, group }))
 }
 
-/// Registry entry: `rtn4` (alias `rtn`) with option `bits` (default 4).
+/// Registry entry: `rtn4` (alias `rtn`) with options `bits` (default 4) and
+/// `group_size` (default 128).
 pub fn rtn_entry() -> crate::compress::registry::MethodEntry {
     crate::compress::registry::MethodEntry {
         name: "rtn4",
         aliases: &["rtn"],
-        about: "round-to-nearest b-bit quantization, packed storage (bits=4 default)",
-        defaults: &[("bits", "4")],
+        about: "round-to-nearest b-bit quantization, packed storage (bits=4, group_size=128)",
+        defaults: &[("bits", "4"), ("group_size", "128")],
         build: |o| build_quantize(o, false),
     }
 }
 
-/// Registry entry: `gptq4` (alias `gptq`) with option `bits` (default 4).
+/// Registry entry: `gptq4` (alias `gptq`) with options `bits` (default 4)
+/// and `group_size` (default 128).
 pub fn gptq_entry() -> crate::compress::registry::MethodEntry {
     crate::compress::registry::MethodEntry {
         name: "gptq4",
         aliases: &["gptq"],
-        about: "GPTQ b-bit quantization, Hessian-compensated, packed storage (bits=4 default)",
-        defaults: &[("bits", "4")],
+        about: "GPTQ b-bit quantization, Hessian-compensated, packed storage (bits=4, group_size=128)",
+        defaults: &[("bits", "4"), ("group_size", "128")],
         build: |o| build_quantize(o, true),
     }
 }
@@ -422,7 +472,7 @@ pub fn gptq3_entry() -> crate::compress::registry::MethodEntry {
         name: "gptq3",
         aliases: &[],
         about: "GPTQ 3-bit quantization (Table 7 matched-memory baseline)",
-        defaults: &[("bits", "3")],
+        defaults: &[("bits", "3"), ("group_size", "128")],
         build: |o| build_quantize(o, true),
     }
 }
@@ -618,6 +668,48 @@ mod tests {
         // And error should grow only modestly.
         assert!(q.func_err.unwrap() >= fact.func_err.unwrap() * 0.99);
         assert!(q.func_err.unwrap() < fact.func_err.unwrap() * 3.0 + 1e-6);
+    }
+
+    #[test]
+    fn grouped_quantization_is_consistent_and_validated() {
+        // group_size threads through RTN/GPTQ and every stored variant;
+        // smaller groups spend more scale bits and cannot hurt the error.
+        let (w, stats) = problem(161, 24, 300);
+        let mut layers = Vec::new();
+        for group in [64usize, 128, 256] {
+            let layer = quantize_weight_grouped(
+                &LinearWeight::Dense(w.clone()),
+                &w,
+                Some(&stats),
+                4,
+                true,
+                group,
+            );
+            let LinearWeight::QuantDense(ref qm) = layer.weight else {
+                panic!("expected packed storage")
+            };
+            assert_eq!(qm.group(), group);
+            assert_eq!(layer.bits, layer.weight.storage_bits());
+            layers.push(layer);
+        }
+        // more scales at 64 than at 256
+        assert!(layers[0].bits > layers[2].bits);
+        // finer groups track the weights at least as well (loose bound)
+        assert!(layers[0].weight_err <= layers[2].weight_err * 1.25);
+        // the registry rejects off-sweep group sizes and accepts the sweep
+        let reg = crate::compress::MethodRegistry::global();
+        for g in ["64", "128", "256"] {
+            assert!(
+                reg.build(&crate::compress::MethodCall::new("rtn4").with("group_size", g))
+                    .is_ok(),
+                "group_size={g}"
+            );
+        }
+        let err = reg
+            .build(&crate::compress::MethodCall::new("gptq4").with("group_size", 100))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("group_size"), "{err}");
     }
 
     #[test]

@@ -307,7 +307,7 @@ mod tests {
             defaults: &[("bits", "8")],
             build: |o| {
                 let bits = o.get_u32("bits")?.unwrap_or(8);
-                Ok(Box::new(Quantize { bits, gptq: false }))
+                Ok(Box::new(Quantize { bits, gptq: false, ..Default::default() }))
             },
         })
         .unwrap();

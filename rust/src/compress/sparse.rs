@@ -6,8 +6,8 @@
 //! concatenation, indices sorted ascending within a column. The regular
 //! structure keeps [`apply_after`] branch-free in the hot loop.
 
-use crate::linalg::qmat::QuantMat;
-use crate::linalg::Mat;
+use crate::linalg::qmat::{self, QuantMat};
+use crate::linalg::{Mat, WeightBuf};
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct ColumnSparse {
@@ -15,9 +15,10 @@ pub struct ColumnSparse {
     n: usize,
     s: usize,
     /// len = n·s; idx[j·s + t] = row index of the t-th nonzero of column j.
-    idx: Vec<u32>,
+    /// Owned, or a zero-copy view into a checkpoint mapping.
+    idx: WeightBuf<u32>,
     /// len = n·s; matching values.
-    val: Vec<f32>,
+    val: WeightBuf<f32>,
 }
 
 impl ColumnSparse {
@@ -41,7 +42,7 @@ impl ColumnSparse {
         // extreme CRs.
         let s = s.min(k);
         if s == 0 || n == 0 {
-            return ColumnSparse { k, n, s, idx: Vec::new(), val: Vec::new() };
+            return ColumnSparse { k, n, s, idx: WeightBuf::default(), val: WeightBuf::default() };
         }
         let mut idx = vec![0u32; n * s];
         let mut val = vec![0f32; n * s];
@@ -67,7 +68,7 @@ impl ColumnSparse {
                 val[j * s + t] = row[i as usize];
             }
         }
-        ColumnSparse { k, n, s, idx, val }
+        ColumnSparse { k, n, s, idx: idx.into(), val: val.into() }
     }
 
     /// Build from explicit per-column (index, value) lists (CoSpaDi/OMP).
@@ -86,7 +87,7 @@ impl ColumnSparse {
             }
             // remaining slots stay (0, 0.0) — harmless padding
         }
-        ColumnSparse { k, n, s, idx, val }
+        ColumnSparse { k, n, s, idx: idx.into(), val: val.into() }
     }
 
     pub fn k(&self) -> usize {
@@ -131,6 +132,7 @@ impl ColumnSparse {
         assert_eq!(t.cols(), self.k, "apply_after: inner dim");
         let rows = t.rows();
         let s = self.s;
+        let (idx, val) = (self.idx.as_slice(), self.val.as_slice());
         if rows >= 4 {
             let tt = t.transpose(); // k×rows, row i = feature i over batch
             let mut out_t = Mat::zeros(self.n, rows);
@@ -138,11 +140,11 @@ impl ColumnSparse {
                 let base = j * s;
                 let orow = out_t.row_mut(j);
                 for tti in 0..s {
-                    let v = self.val[base + tti];
+                    let v = val[base + tti];
                     if v == 0.0 {
                         continue;
                     }
-                    let trow = tt.row(self.idx[base + tti] as usize);
+                    let trow = tt.row(idx[base + tti] as usize);
                     for (o, x) in orow.iter_mut().zip(trow.iter()) {
                         *o += v * *x;
                     }
@@ -172,11 +174,12 @@ impl ColumnSparse {
         assert_eq!(t.len(), self.k, "apply_after_row: inner dim");
         debug_assert_eq!(out.len(), self.n);
         let s = self.s;
+        let (idx, val) = (self.idx.as_slice(), self.val.as_slice());
         for (j, o) in out.iter_mut().enumerate() {
             let base = j * s;
             let mut acc = 0f32;
             for tti in 0..s {
-                acc += t[self.idx[base + tti] as usize] * self.val[base + tti];
+                acc += t[idx[base + tti] as usize] * val[base + tti];
             }
             *o = acc;
         }
@@ -194,12 +197,13 @@ impl ColumnSparse {
     pub fn mt_product(&self, wt_t: &Mat) -> Mat {
         assert_eq!(wt_t.rows(), self.n, "mt_product: W̃ᵀ rows");
         let m = wt_t.cols();
+        let (idx, val) = (self.idx.as_slice(), self.val.as_slice());
         let mut mt = Mat::zeros(self.k, m);
         for j in 0..self.n {
             let wrow = wt_t.row(j);
             for t in 0..self.s {
-                let i = self.idx[j * self.s + t] as usize;
-                let v = self.val[j * self.s + t];
+                let i = idx[j * self.s + t] as usize;
+                let v = val[j * self.s + t];
                 if v == 0.0 {
                     continue;
                 }
@@ -222,8 +226,9 @@ impl ColumnSparse {
     }
 
     /// Map stored values in place (used by quantization composition).
+    /// Copy-on-write: a mapped buffer materializes first.
     pub fn map_values(&mut self, mut f: impl FnMut(f32) -> f32) {
-        for v in self.val.iter_mut() {
+        for v in self.val.make_mut().iter_mut() {
             *v = f(*v);
         }
     }
@@ -231,29 +236,30 @@ impl ColumnSparse {
     /// Overwrite stored values wholesale (quantization composition).
     pub fn set_values(&mut self, vals: &[f32]) {
         assert_eq!(vals.len(), self.val.len());
-        self.val.copy_from_slice(vals);
+        self.val.make_mut().copy_from_slice(vals);
     }
 
     pub fn values(&self) -> &[f32] {
-        &self.val
+        self.val.as_slice()
     }
 
     /// Raw row indices (len n·s, column-major, ascending within a column) —
     /// what a CPT2 checkpoint writes and reads back verbatim.
     pub fn indices(&self) -> &[u32] {
-        &self.idx
+        self.idx.as_slice()
     }
 
-    /// Reassemble from raw checkpoint buffers, validating the layout
-    /// invariants (lengths, s ≤ k, every index < k) — the buffers come from
-    /// disk, so violations are errors, not panics.
+    /// Reassemble from raw checkpoint buffers — owned or zero-copy mapped —
+    /// validating the layout invariants (lengths, s ≤ k, every index < k):
+    /// the buffers come from disk, so violations are errors, not panics.
     pub fn from_raw_parts(
         k: usize,
         n: usize,
         s: usize,
-        idx: Vec<u32>,
-        val: Vec<f32>,
+        idx: impl Into<WeightBuf<u32>>,
+        val: impl Into<WeightBuf<f32>>,
     ) -> anyhow::Result<ColumnSparse> {
+        let (idx, val) = (idx.into(), val.into());
         anyhow::ensure!(s <= k, "sparse map s={s} exceeds k={k}");
         let want = n
             .checked_mul(s)
@@ -265,15 +271,20 @@ impl ColumnSparse {
             val.len()
         );
         anyhow::ensure!(
-            idx.iter().all(|&i| (i as usize) < k),
+            idx.as_slice().iter().all(|&i| (i as usize) < k),
             "sparse map index out of range (k={k})"
         );
         Ok(ColumnSparse { k, n, s, idx, val })
     }
 
-    /// Actual resident heap bytes: f32 values + u32 indices.
+    /// Heap bytes actually resident (mapped buffers count 0).
     pub fn resident_bytes(&self) -> usize {
-        4 * self.val.len() + 4 * self.idx.len()
+        self.val.resident_bytes() + self.idx.resident_bytes()
+    }
+
+    /// Bytes borrowed from a checkpoint mapping.
+    pub fn mapped_bytes(&self) -> usize {
+        self.val.mapped_bytes() + self.idx.mapped_bytes()
     }
 }
 
@@ -287,19 +298,27 @@ impl ColumnSparse {
 pub struct QuantColumnSparse {
     k: usize,
     /// len = n·s, same layout as [`ColumnSparse::idx`].
-    idx: Vec<u32>,
+    idx: WeightBuf<u32>,
     /// n×s: row j = quantized values of column j (column-aligned groups).
     val: QuantMat,
 }
 
 impl QuantColumnSparse {
-    /// Quantize a sparse map's values to `bits`, column-aligned.
+    /// Quantize a sparse map's values to `bits` at the default group size,
+    /// column-aligned.
     pub fn quantize_from(cs: &ColumnSparse, bits: u32) -> QuantColumnSparse {
-        let vmat = Mat::from_vec(cs.n, cs.s, cs.val.clone());
+        Self::quantize_from_grouped(cs, bits, qmat::GROUP)
+    }
+
+    /// Quantize with an explicit group size. Groups still never straddle
+    /// column boundaries — the value matrix is n×s with per-row groups, and
+    /// each row is one column of the sparse map.
+    pub fn quantize_from_grouped(cs: &ColumnSparse, bits: u32, group: usize) -> QuantColumnSparse {
+        let vmat = Mat::from_vec(cs.n, cs.s, cs.val.as_slice().to_vec());
         QuantColumnSparse {
             k: cs.k,
             idx: cs.idx.clone(),
-            val: QuantMat::quantize_from(&vmat, bits),
+            val: QuantMat::quantize_from_grouped(&vmat, bits, group),
         }
     }
 
@@ -311,7 +330,7 @@ impl QuantColumnSparse {
             n: self.n(),
             s: self.s(),
             idx: self.idx.clone(),
-            val: self.val.dequantize().into_data(),
+            val: self.val.dequantize().into_data().into(),
         }
     }
 
@@ -338,6 +357,7 @@ impl QuantColumnSparse {
         assert_eq!(t.cols(), self.k, "apply_after: inner dim");
         let rows = t.rows();
         let (n, s) = (self.n(), self.s());
+        let idx = self.idx.as_slice();
         if rows >= 4 {
             let tt = t.transpose();
             let mut out_t = Mat::zeros(n, rows);
@@ -350,7 +370,7 @@ impl QuantColumnSparse {
                     if v == 0.0 {
                         continue;
                     }
-                    let trow = tt.row(self.idx[base + tti] as usize);
+                    let trow = tt.row(idx[base + tti] as usize);
                     for (o, x) in orow.iter_mut().zip(trow.iter()) {
                         *o += v * *x;
                     }
@@ -379,13 +399,14 @@ impl QuantColumnSparse {
         assert_eq!(t.len(), self.k, "apply_after_row: inner dim");
         debug_assert_eq!(out.len(), self.n());
         let s = self.s();
+        let idx = self.idx.as_slice();
         let mut vbuf = vec![0f32; s];
         for (j, o) in out.iter_mut().enumerate() {
             self.val.dequant_row_into(j, &mut vbuf);
             let base = j * s;
             let mut acc = 0f32;
             for (tti, &v) in vbuf.iter().enumerate() {
-                acc += t[self.idx[base + tti] as usize] * v;
+                acc += t[idx[base + tti] as usize] * v;
             }
             *o = acc;
         }
@@ -400,7 +421,7 @@ impl QuantColumnSparse {
 
     /// Raw row indices (len n·s, same layout as [`ColumnSparse::indices`]).
     pub fn indices(&self) -> &[u32] {
-        &self.idx
+        self.idx.as_slice()
     }
 
     /// The packed n×s value matrix (row j = column j's quantized values).
@@ -408,14 +429,15 @@ impl QuantColumnSparse {
         &self.val
     }
 
-    /// Reassemble from raw checkpoint buffers: `val` row count is n, its
-    /// column count is s. Validates the same invariants as
+    /// Reassemble from raw checkpoint buffers (owned or mapped): `val` row
+    /// count is n, its column count is s. Validates the same invariants as
     /// [`ColumnSparse::from_raw_parts`].
     pub fn from_raw_parts(
         k: usize,
-        idx: Vec<u32>,
+        idx: impl Into<WeightBuf<u32>>,
         val: QuantMat,
     ) -> anyhow::Result<QuantColumnSparse> {
+        let idx = idx.into();
         let (n, s) = val.shape();
         anyhow::ensure!(s <= k, "quantized sparse map s={s} exceeds k={k}");
         let want = n
@@ -427,15 +449,20 @@ impl QuantColumnSparse {
             idx.len()
         );
         anyhow::ensure!(
-            idx.iter().all(|&i| (i as usize) < k),
+            idx.as_slice().iter().all(|&i| (i as usize) < k),
             "quantized sparse map index out of range (k={k})"
         );
         Ok(QuantColumnSparse { k, idx, val })
     }
 
-    /// Actual resident heap bytes (packed values + scales + u32 indices).
+    /// Heap bytes actually resident (mapped buffers count 0).
     pub fn resident_bytes(&self) -> usize {
-        self.val.packed_bytes() + 4 * self.idx.len()
+        self.val.resident_bytes() + self.idx.resident_bytes()
+    }
+
+    /// Bytes borrowed from a checkpoint mapping.
+    pub fn mapped_bytes(&self) -> usize {
+        self.val.mapped_bytes() + self.idx.mapped_bytes()
     }
 }
 

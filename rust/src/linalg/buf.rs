@@ -1,0 +1,521 @@
+//! Zero-copy weight buffers.
+//!
+//! [`WeightBuf<T>`] is the one storage type every weight-holding structure
+//! ([`Mat`](super::Mat), [`QuantMat`](super::QuantMat) codes/scales, the
+//! sparse-map index/value arrays) builds on: either an owned `Vec<T>` (the
+//! compression path — unchanged semantics) or a borrowed, aligned view into
+//! a shared file [`Mapping`] (the serve path — a CPT2 checkpoint's section
+//! payloads used in place, no copy, page cache shared across processes).
+//!
+//! [`Mapping`] is the in-tree `memmap2` stand-in this offline environment
+//! needs: on unix it is a real read-only `mmap(2)` (`MAP_SHARED`, so N
+//! serve workers loading the same checkpoint share one set of physical
+//! pages); elsewhere — or when the syscall fails — it degrades to one
+//! 64-byte-aligned heap buffer filled by an ordinary read, which keeps the
+//! "single allocation, many views" structure without the page-cache win.
+//!
+//! Safety model: views are only constructible for [`Pod`] element types
+//! (`f32`/`u32`/`u16` — every bit pattern valid), only over in-bounds
+//! byte ranges whose start is aligned for the element type, and only on
+//! little-endian hosts (CPT2 payloads are LE; a zero-copy reinterpret on a
+//! BE host would silently byte-swap every weight). The mapping is never
+//! exposed mutably. Mutating a `Mapped` buffer goes through
+//! [`WeightBuf::make_mut`], which copies it out into an owned `Vec` first
+//! (copy-on-write), so compression-side code keeps working verbatim on
+//! loaded models.
+
+use std::path::Path;
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------------
+// Pod: element types a byte range may be reinterpreted as.
+// ---------------------------------------------------------------------------
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for u32 {}
+    impl Sealed for u16 {}
+}
+
+/// Plain-old-data element types: `Copy`, every bit pattern valid, stored
+/// little-endian in CPT2 sections. Sealed — the safety of the mapped
+/// reinterpret rests on this list staying exactly `f32`/`u32`/`u16`.
+pub trait Pod: sealed::Sealed + Copy + Default + PartialEq + std::fmt::Debug + 'static {
+    /// Section dtype tag this element type serializes under.
+    const DTYPE: &'static str;
+    /// Decode one element from its little-endian bytes (the copying loader
+    /// and big-endian-safe paths).
+    fn from_le_bytes(b: &[u8]) -> Self;
+}
+
+impl Pod for f32 {
+    const DTYPE: &'static str = "f32";
+    fn from_le_bytes(b: &[u8]) -> f32 {
+        f32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl Pod for u32 {
+    const DTYPE: &'static str = "u32";
+    fn from_le_bytes(b: &[u8]) -> u32 {
+        u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    }
+}
+
+impl Pod for u16 {
+    const DTYPE: &'static str = "u16";
+    fn from_le_bytes(b: &[u8]) -> u16 {
+        u16::from_le_bytes([b[0], b[1]])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mapping: one shared read-only byte buffer backing all of a file's views.
+// ---------------------------------------------------------------------------
+
+#[cfg(unix)]
+mod sys {
+    // Raw libc mmap bindings — std already links libc on unix, so no crate
+    // dependency is needed in this offline environment. Read-only SHARED
+    // mapping: serve workers mapping the same checkpoint share pages.
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_SHARED: i32 = 1;
+    extern "C" {
+        pub fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        pub fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+}
+
+enum MapKind {
+    /// Real `mmap(2)` pages; `Drop` unmaps.
+    #[cfg(unix)]
+    Mmap,
+    /// 64-byte-aligned heap buffer (non-unix, empty files, or mmap failure);
+    /// `Drop` deallocates with the recorded layout.
+    Heap(std::alloc::Layout),
+}
+
+/// A shared, immutable, 64-byte-aligned byte buffer holding an entire
+/// checkpoint file — the backing store [`WeightBuf`] views point into.
+pub struct Mapping {
+    ptr: *mut u8,
+    len: usize,
+    kind: MapKind,
+}
+
+// The pointed-to bytes are never mutated after construction and the pointer
+// is owned exclusively by this Mapping, so sharing across threads is sound.
+unsafe impl Send for Mapping {}
+unsafe impl Sync for Mapping {}
+
+impl Mapping {
+    /// Map (or, as a fallback, read) the whole file at `path`.
+    pub fn open(path: &Path) -> anyhow::Result<Arc<Mapping>> {
+        let file = std::fs::File::open(path)?;
+        let len = file.metadata()?.len();
+        let len = usize::try_from(len)
+            .map_err(|_| anyhow::anyhow!("{path:?}: file too large to map on this host"))?;
+        #[cfg(unix)]
+        {
+            if len > 0 {
+                use std::os::unix::io::AsRawFd;
+                let ptr = unsafe {
+                    sys::mmap(
+                        std::ptr::null_mut(),
+                        len,
+                        sys::PROT_READ,
+                        sys::MAP_SHARED,
+                        file.as_raw_fd(),
+                        0,
+                    )
+                };
+                if ptr as isize != -1 && !ptr.is_null() {
+                    return Ok(Arc::new(Mapping { ptr, len, kind: MapKind::Mmap }));
+                }
+                // fall through to the heap read — a filesystem without mmap
+                // support must not make checkpoints unloadable
+            }
+        }
+        Self::read_into_heap(file, len)
+    }
+
+    /// Fallback: one 64-byte-aligned heap allocation filled by a plain read.
+    /// Section offsets are multiples of 64 relative to the buffer start, so
+    /// view alignment guarantees hold exactly as they do for mmap pages.
+    fn read_into_heap(mut file: std::fs::File, len: usize) -> anyhow::Result<Arc<Mapping>> {
+        use std::io::Read;
+        let layout = std::alloc::Layout::from_size_align(len.max(1), 64)
+            .map_err(|e| anyhow::anyhow!("mapping layout: {e}"))?;
+        let ptr = unsafe { std::alloc::alloc(layout) };
+        anyhow::ensure!(!ptr.is_null(), "mapping fallback allocation of {len} bytes failed");
+        let buf = unsafe { std::slice::from_raw_parts_mut(ptr, len) };
+        if let Err(e) = file.read_exact(buf) {
+            unsafe { std::alloc::dealloc(ptr, layout) };
+            return Err(e.into());
+        }
+        Ok(Arc::new(Mapping { ptr, len, kind: MapKind::Heap(layout) }))
+    }
+
+    #[inline]
+    pub fn bytes(&self) -> &[u8] {
+        // SAFETY: ptr/len describe a live allocation owned by self; the
+        // contents are never mutated after construction.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Whether this is a true file mapping (pages shared through the page
+    /// cache) rather than the heap-read fallback.
+    pub fn is_mmap(&self) -> bool {
+        match self.kind {
+            #[cfg(unix)]
+            MapKind::Mmap => true,
+            MapKind::Heap(_) => false,
+        }
+    }
+}
+
+impl Drop for Mapping {
+    fn drop(&mut self) {
+        match self.kind {
+            #[cfg(unix)]
+            MapKind::Mmap => unsafe {
+                sys::munmap(self.ptr, self.len);
+            },
+            MapKind::Heap(layout) => unsafe { std::alloc::dealloc(self.ptr, layout) },
+        }
+    }
+}
+
+impl std::fmt::Debug for Mapping {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Mapping({} B, {})", self.len, if self.is_mmap() { "mmap" } else { "heap" })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// WeightBuf: owned vector or mapped view, one API.
+// ---------------------------------------------------------------------------
+
+/// A weight buffer: an owned `Vec<T>` or an aligned element view into a
+/// shared [`Mapping`]. Reads go through `Deref<Target = [T]>` either way;
+/// writes go through [`make_mut`](Self::make_mut) (copy-on-write).
+#[derive(Clone)]
+pub enum WeightBuf<T: Pod> {
+    Owned(Vec<T>),
+    Mapped {
+        map: Arc<Mapping>,
+        /// Byte offset of the first element from the mapping base.
+        byte_offset: usize,
+        /// Element count.
+        len: usize,
+    },
+}
+
+impl<T: Pod> WeightBuf<T> {
+    /// An aligned, bounds-checked element view into `map`. Errors (never
+    /// panics) on out-of-range or misaligned offsets and on big-endian
+    /// hosts — the inputs come from an untrusted checkpoint header.
+    pub fn view(map: &Arc<Mapping>, byte_offset: usize, len: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            cfg!(target_endian = "little"),
+            "zero-copy checkpoint views need a little-endian host (CPT2 payloads are LE); \
+             use the copying loader instead"
+        );
+        let byte_len = len
+            .checked_mul(std::mem::size_of::<T>())
+            .ok_or_else(|| anyhow::anyhow!("mapped view of {len} elements overflows"))?;
+        let end = byte_offset
+            .checked_add(byte_len)
+            .ok_or_else(|| anyhow::anyhow!("mapped view offset {byte_offset} overflows"))?;
+        anyhow::ensure!(
+            end <= map.len(),
+            "mapped view [{byte_offset}, {end}) runs past the mapping ({} B)",
+            map.len()
+        );
+        let addr = map.bytes().as_ptr() as usize + byte_offset;
+        anyhow::ensure!(
+            addr % std::mem::align_of::<T>() == 0,
+            "mapped {} view at byte offset {byte_offset} is misaligned \
+             (need {}-byte alignment)",
+            T::DTYPE,
+            std::mem::align_of::<T>()
+        );
+        Ok(WeightBuf::Mapped { map: map.clone(), byte_offset, len })
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[T] {
+        match self {
+            WeightBuf::Owned(v) => v.as_slice(),
+            WeightBuf::Mapped { map, byte_offset, len } => {
+                // SAFETY: construction checked bounds and alignment, T is
+                // Pod (every bit pattern valid), the mapping is immutable
+                // and kept alive by the Arc.
+                unsafe {
+                    std::slice::from_raw_parts(
+                        map.bytes().as_ptr().add(*byte_offset) as *const T,
+                        *len,
+                    )
+                }
+            }
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            WeightBuf::Owned(v) => v.len(),
+            WeightBuf::Mapped { len, .. } => *len,
+        }
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether this buffer borrows a file mapping.
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, WeightBuf::Mapped { .. })
+    }
+
+    /// Copy-on-write mutable access: a mapped buffer is first materialized
+    /// into an owned `Vec` (the mapping itself is never written).
+    pub fn make_mut(&mut self) -> &mut Vec<T> {
+        if self.is_mapped() {
+            let owned = self.as_slice().to_vec();
+            *self = WeightBuf::Owned(owned);
+        }
+        match self {
+            WeightBuf::Owned(v) => v,
+            WeightBuf::Mapped { .. } => unreachable!("just materialized"),
+        }
+    }
+
+    /// Extract an owned `Vec` (copies if mapped).
+    pub fn into_vec(self) -> Vec<T> {
+        match self {
+            WeightBuf::Owned(v) => v,
+            WeightBuf::Mapped { .. } => self.as_slice().to_vec(),
+        }
+    }
+
+    /// Heap bytes this buffer keeps resident. Views into a *true* mmap are
+    /// file-backed pages shared with every other process mapping the
+    /// checkpoint, so they count 0 here and in
+    /// [`mapped_bytes`](Self::mapped_bytes) instead — but views into the
+    /// heap-read fallback are private process memory and must count as
+    /// resident, or capacity planning across serve workers would undercount
+    /// by a full model copy per worker.
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            WeightBuf::Owned(v) => std::mem::size_of::<T>() * v.len(),
+            WeightBuf::Mapped { map, len, .. } => {
+                if map.is_mmap() {
+                    0
+                } else {
+                    std::mem::size_of::<T>() * len
+                }
+            }
+        }
+    }
+
+    /// Bytes this buffer borrows from a shared (page-cache-backed) file
+    /// mapping — 0 when owned *or* when the backing store is the private
+    /// heap-read fallback.
+    pub fn mapped_bytes(&self) -> usize {
+        match self {
+            WeightBuf::Owned(_) => 0,
+            WeightBuf::Mapped { map, len, .. } => {
+                if map.is_mmap() {
+                    std::mem::size_of::<T>() * len
+                } else {
+                    0
+                }
+            }
+        }
+    }
+}
+
+impl<T: Pod> std::ops::Deref for WeightBuf<T> {
+    type Target = [T];
+    #[inline]
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Pod> From<Vec<T>> for WeightBuf<T> {
+    fn from(v: Vec<T>) -> Self {
+        WeightBuf::Owned(v)
+    }
+}
+
+impl<T: Pod> Default for WeightBuf<T> {
+    fn default() -> Self {
+        WeightBuf::Owned(Vec::new())
+    }
+}
+
+/// Content equality — an owned buffer and a mapped view over the same
+/// values compare equal, which is what bit-identity assertions across the
+/// two load paths rely on.
+impl<T: Pod> PartialEq for WeightBuf<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Pod> std::fmt::Debug for WeightBuf<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WeightBuf::Owned(v) => write!(f, "WeightBuf::Owned({} elems)", v.len()),
+            WeightBuf::Mapped { len, byte_offset, .. } => {
+                write!(f, "WeightBuf::Mapped({len} elems at +{byte_offset})")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("compot_buf_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn mapping_reads_file_bytes() {
+        let path = tmp("map_bytes.bin");
+        let payload: Vec<u8> = (0..=255u8).cycle().take(1000).collect();
+        std::fs::write(&path, &payload).unwrap();
+        let map = Mapping::open(&path).unwrap();
+        assert_eq!(map.len(), 1000);
+        assert_eq!(map.bytes(), &payload[..]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_file_maps_without_panic() {
+        let path = tmp("empty.bin");
+        std::fs::write(&path, b"").unwrap();
+        let map = Mapping::open(&path).unwrap();
+        assert_eq!(map.len(), 0);
+        assert!(map.is_empty());
+        // a zero-length view at offset 0 is fine
+        let v: WeightBuf<u32> = WeightBuf::view(&map, 0, 0).unwrap();
+        assert!(v.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn views_reinterpret_le_payloads() {
+        let path = tmp("views.bin");
+        let mut bytes = Vec::new();
+        for v in [1.5f32, -2.0, 0.25, 1e-3] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in [7u32, 0xdead_beef] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in [0x3c00u16, 0x8000] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let map = Mapping::open(&path).unwrap();
+        let f: WeightBuf<f32> = WeightBuf::view(&map, 0, 4).unwrap();
+        assert_eq!(f.as_slice(), &[1.5, -2.0, 0.25, 1e-3]);
+        let u: WeightBuf<u32> = WeightBuf::view(&map, 16, 2).unwrap();
+        assert_eq!(u.as_slice(), &[7, 0xdead_beef]);
+        let h: WeightBuf<u16> = WeightBuf::view(&map, 24, 2).unwrap();
+        assert_eq!(h.as_slice(), &[0x3c00, 0x8000]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn out_of_range_and_misaligned_views_are_errors() {
+        let path = tmp("badviews.bin");
+        std::fs::write(&path, vec![0u8; 64]).unwrap();
+        let map = Mapping::open(&path).unwrap();
+        // runs past the mapping
+        assert!(WeightBuf::<f32>::view(&map, 0, 17).is_err());
+        assert!(WeightBuf::<u16>::view(&map, 64, 1).is_err());
+        // misaligned starts
+        let err = WeightBuf::<f32>::view(&map, 2, 1).unwrap_err().to_string();
+        assert!(err.contains("misaligned"), "{err}");
+        assert!(WeightBuf::<u16>::view(&map, 1, 1).is_err());
+        // overflow in the requested length
+        assert!(WeightBuf::<u32>::view(&map, 0, usize::MAX).is_err());
+        // zero-length views may sit exactly at the end
+        assert!(WeightBuf::<u32>::view(&map, 64, 0).is_ok());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn make_mut_copies_out_of_the_mapping() {
+        let path = tmp("cow.bin");
+        let mut bytes = Vec::new();
+        for v in [1u32, 2, 3] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let map = Mapping::open(&path).unwrap();
+        let mut buf: WeightBuf<u32> = WeightBuf::view(&map, 0, 3).unwrap();
+        assert!(buf.is_mapped());
+        if map.is_mmap() {
+            // true mapping: pages are shared, nothing resident on the heap
+            assert_eq!(buf.resident_bytes(), 0);
+            assert_eq!(buf.mapped_bytes(), 12);
+        } else {
+            // heap-read fallback: private memory counts as resident
+            assert_eq!(buf.resident_bytes(), 12);
+            assert_eq!(buf.mapped_bytes(), 0);
+        }
+        buf.make_mut()[1] = 99;
+        assert!(!buf.is_mapped());
+        assert_eq!(buf.as_slice(), &[1, 99, 3]);
+        assert_eq!(buf.resident_bytes(), 12);
+        assert_eq!(buf.mapped_bytes(), 0);
+        // the mapping itself is untouched
+        let again: WeightBuf<u32> = WeightBuf::view(&map, 0, 3).unwrap();
+        assert_eq!(again.as_slice(), &[1, 2, 3]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn owned_and_mapped_compare_by_content() {
+        let path = tmp("eq.bin");
+        let mut bytes = Vec::new();
+        for v in [0.5f32, -1.0] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let map = Mapping::open(&path).unwrap();
+        let mapped: WeightBuf<f32> = WeightBuf::view(&map, 0, 2).unwrap();
+        let owned: WeightBuf<f32> = vec![0.5f32, -1.0].into();
+        assert_eq!(mapped, owned);
+        assert_eq!(mapped.into_vec(), vec![0.5, -1.0]);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,14 +1,20 @@
 //! Row-major `f32` matrix with the small API surface the rest of the crate
 //! uses. Deliberately not generic: one concrete type keeps the hot loops
 //! monomorphic and easy to profile.
+//!
+//! Storage is a [`WeightBuf`]: owned for everything the compression math
+//! builds, or a zero-copy view into a checkpoint [`Mapping`] on the serve
+//! path. All mutating methods are copy-on-write — a mapped matrix silently
+//! materializes an owned copy the first time it is written.
 
+use super::buf::WeightBuf;
 use crate::util::Rng;
 
 #[derive(Clone, PartialEq)]
 pub struct Mat {
     rows: usize,
     cols: usize,
-    data: Vec<f32>,
+    data: WeightBuf<f32>,
 }
 
 impl std::fmt::Debug for Mat {
@@ -25,7 +31,7 @@ impl std::fmt::Debug for Mat {
 
 impl Mat {
     pub fn zeros(rows: usize, cols: usize) -> Mat {
-        Mat { rows, cols, data: vec![0.0; rows * cols] }
+        Mat { rows, cols, data: vec![0.0; rows * cols].into() }
     }
 
     pub fn eye(n: usize) -> Mat {
@@ -38,6 +44,13 @@ impl Mat {
 
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
         assert_eq!(data.len(), rows * cols, "from_vec: shape/data mismatch");
+        Mat { rows, cols, data: data.into() }
+    }
+
+    /// Wrap an existing buffer — the zero-copy checkpoint loader hands a
+    /// mapped [`WeightBuf`] straight in; owned buffers work identically.
+    pub fn from_buf(rows: usize, cols: usize, data: WeightBuf<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "from_buf: shape/data mismatch");
         Mat { rows, cols, data }
     }
 
@@ -48,7 +61,7 @@ impl Mat {
                 data.push(f(i, j));
             }
         }
-        Mat { rows, cols, data }
+        Mat { rows, cols, data: data.into() }
     }
 
     /// i.i.d. N(0, std²) entries.
@@ -57,7 +70,7 @@ impl Mat {
         for _ in 0..rows * cols {
             data.push(rng.gauss32() * std);
         }
-        Mat { rows, cols, data }
+        Mat { rows, cols, data: data.into() }
     }
 
     #[inline]
@@ -76,12 +89,13 @@ impl Mat {
 
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
-        &self.data[i * self.cols..(i + 1) * self.cols]
+        &self.data.as_slice()[i * self.cols..(i + 1) * self.cols]
     }
 
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
-        &mut self.data[i * self.cols..(i + 1) * self.cols]
+        let cols = self.cols;
+        &mut self.data.make_mut()[i * cols..(i + 1) * cols]
     }
 
     pub fn col(&self, j: usize) -> Vec<f32> {
@@ -97,16 +111,37 @@ impl Mat {
 
     #[inline]
     pub fn data(&self) -> &[f32] {
-        &self.data
+        self.data.as_slice()
     }
 
     #[inline]
     pub fn data_mut(&mut self) -> &mut [f32] {
-        &mut self.data
+        self.data.make_mut().as_mut_slice()
     }
 
     pub fn into_data(self) -> Vec<f32> {
-        self.data
+        self.data.into_vec()
+    }
+
+    /// The underlying buffer (owned or mapped).
+    pub fn buf(&self) -> &WeightBuf<f32> {
+        &self.data
+    }
+
+    /// Whether the storage borrows a checkpoint mapping.
+    pub fn is_mapped(&self) -> bool {
+        self.data.is_mapped()
+    }
+
+    /// Heap bytes actually resident (0 for a mapped matrix — its pages are
+    /// file-backed and shared).
+    pub fn resident_bytes(&self) -> usize {
+        self.data.resident_bytes()
+    }
+
+    /// Bytes borrowed from a checkpoint mapping (0 when owned).
+    pub fn mapped_bytes(&self) -> usize {
+        self.data.mapped_bytes()
     }
 
     pub fn transpose(&self) -> Mat {
@@ -127,7 +162,7 @@ impl Mat {
 
     pub fn scale(&self, a: f32) -> Mat {
         let mut out = self.clone();
-        for x in out.data.iter_mut() {
+        for x in out.data.make_mut().iter_mut() {
             *x *= a;
         }
         out
@@ -136,7 +171,7 @@ impl Mat {
     pub fn add(&self, other: &Mat) -> Mat {
         assert_eq!(self.shape(), other.shape());
         let mut out = self.clone();
-        for (x, y) in out.data.iter_mut().zip(other.data.iter()) {
+        for (x, y) in out.data.make_mut().iter_mut().zip(other.data.as_slice().iter()) {
             *x += y;
         }
         out
@@ -145,7 +180,7 @@ impl Mat {
     pub fn sub(&self, other: &Mat) -> Mat {
         assert_eq!(self.shape(), other.shape());
         let mut out = self.clone();
-        for (x, y) in out.data.iter_mut().zip(other.data.iter()) {
+        for (x, y) in out.data.make_mut().iter_mut().zip(other.data.as_slice().iter()) {
             *x -= y;
         }
         out
@@ -153,11 +188,11 @@ impl Mat {
 
     /// Frobenius norm (f64 accumulation).
     pub fn fro_norm(&self) -> f64 {
-        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+        self.data.as_slice().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
     }
 
     pub fn max_abs(&self) -> f32 {
-        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+        self.data.as_slice().iter().fold(0.0f32, |m, &x| m.max(x.abs()))
     }
 
     /// ‖self − other‖_F / max(‖other‖_F, tiny) — relative error helper used
@@ -182,7 +217,7 @@ impl Mat {
         Mat::from_vec(
             i1 - i0,
             self.cols,
-            self.data[i0 * self.cols..i1 * self.cols].to_vec(),
+            self.data.as_slice()[i0 * self.cols..i1 * self.cols].to_vec(),
         )
     }
 
@@ -206,7 +241,7 @@ impl std::ops::Index<(usize, usize)> for Mat {
     #[inline]
     fn index(&self, (i, j): (usize, usize)) -> &f32 {
         debug_assert!(i < self.rows && j < self.cols);
-        &self.data[i * self.cols + j]
+        &self.data.as_slice()[i * self.cols + j]
     }
 }
 
@@ -214,7 +249,8 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
     #[inline]
     fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
         debug_assert!(i < self.rows && j < self.cols);
-        &mut self.data[i * self.cols + j]
+        let idx = i * self.cols + j;
+        &mut self.data.make_mut()[idx]
     }
 }
 
@@ -269,6 +305,17 @@ mod tests {
     #[test]
     fn eye_is_orthonormal() {
         assert!(Mat::eye(8).ortho_defect() < 1e-12);
+    }
+
+    #[test]
+    fn from_buf_matches_from_vec_and_reports_residency() {
+        let v = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let a = Mat::from_vec(2, 3, v.clone());
+        let b = Mat::from_buf(2, 3, v.into());
+        assert_eq!(a, b);
+        assert!(!b.is_mapped());
+        assert_eq!(b.resident_bytes(), 24);
+        assert_eq!(b.mapped_bytes(), 0);
     }
 
     #[test]

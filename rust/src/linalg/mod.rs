@@ -10,7 +10,11 @@
 //! (dots inside Cholesky/SVD/eigh) accumulate in `f64`. Quantized weights
 //! live in [`qmat::QuantMat`] — b-bit packed codes with f16 group scales and
 //! fused-dequant kernels that stay bit-identical to the f32 reference.
+//! Every weight-holding buffer is a [`buf::WeightBuf`]: owned on the
+//! compression path, or a zero-copy view into a shared checkpoint
+//! [`buf::Mapping`] on the serve path.
 
+pub mod buf;
 pub mod cholesky;
 pub mod eigh;
 pub mod gemm;
@@ -20,6 +24,7 @@ pub mod qr;
 pub mod solve;
 pub mod svd;
 
+pub use buf::{Mapping, Pod, WeightBuf};
 pub use cholesky::cholesky;
 pub use eigh::eigh;
 pub use gemm::{matmul, matmul_nt, matmul_tn};

@@ -2,10 +2,16 @@
 //!
 //! [`QuantMat`] stores a row-major matrix as b-bit (2..=8) integer codes
 //! bit-packed into `u32` words, plus one f16-encoded scale per group of
-//! [`GROUP`] values along each row (groups never straddle rows). This is the
-//! storage the `compress::quant` stage emits: the bit *accounting* the
-//! pipeline always did (b bits per value + 16-bit scale per group, Eq. 25)
-//! becomes bits that are actually resident in memory.
+//! `group` values along each row (groups never straddle rows; the group
+//! size is configurable — 64/128/256 are the supported sweep points, with
+//! [`GROUP`] = 128 the default). This is the storage the `compress::quant`
+//! stage emits: the bit *accounting* the pipeline always did (b bits per
+//! value + 16-bit scale per group, Eq. 25) becomes bits that are actually
+//! resident in memory.
+//!
+//! Both buffers are [`WeightBuf`]s: owned when the quantizer produced them,
+//! or zero-copy views into a CPT2 checkpoint mapping on the serve path —
+//! the fused kernels read through the same slices either way.
 //!
 //! **Bit-exactness contract.** Quantization and dequantization share one
 //! arithmetic core ([`quantize_group_to_codes`] / [`dequant_codes_into`]):
@@ -25,12 +31,20 @@
 //! over packed weights stays bit-identical to the batched forward over the
 //! dequantized weights.
 
+use super::buf::WeightBuf;
 use super::gemm::axpy;
 use super::matrix::Mat;
 use crate::util::parallel::parallel_chunks_mut;
 
-/// Values per quantization group (one f16 scale each).
+/// Default values per quantization group (one f16 scale each).
 pub const GROUP: usize = 128;
+
+/// Whether `group` is a group size this storage supports: a power of two in
+/// 16..=4096 (the ROADMAP sweep points 64/128/256 all qualify). Bounded so
+/// an untrusted checkpoint header cannot pick a degenerate layout.
+pub fn supported_group(group: usize) -> bool {
+    group.is_power_of_two() && (16..=4096).contains(&group)
+}
 
 /// Largest positive quantization level for b-bit symmetric quantization.
 #[inline]
@@ -175,12 +189,18 @@ pub fn quantize_group_inplace(vals: &mut [f32], bits: u32, codes: &mut [u16]) ->
     sbits
 }
 
-/// Fake-quantize one group (≤ [`GROUP`] values) in place — bit-identical to
-/// packing with [`quantize_group_to_codes`] and dequantizing.
+/// Fake-quantize one group in place — bit-identical to packing with
+/// [`quantize_group_to_codes`] and dequantizing. Group sizes up to
+/// [`GROUP`] stay on the stack; larger configured groups take one small
+/// heap buffer (compression path only, never the decode hot loop).
 pub fn fake_quantize_group(vals: &mut [f32], bits: u32) {
-    assert!(vals.len() <= GROUP, "group larger than {GROUP}");
-    let mut codes = [0u16; GROUP];
-    quantize_group_inplace(vals, bits, &mut codes[..vals.len()]);
+    if vals.len() <= GROUP {
+        let mut codes = [0u16; GROUP];
+        quantize_group_inplace(vals, bits, &mut codes[..vals.len()]);
+    } else {
+        let mut codes = vec![0u16; vals.len()];
+        quantize_group_inplace(vals, bits, &mut codes);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -189,19 +209,25 @@ pub fn fake_quantize_group(vals: &mut [f32], bits: u32) {
 
 /// A b-bit (2..=8) packed quantized matrix: offset-binary codes bit-packed
 /// into `u32` words (value `t` of the row-major stream occupies bits
-/// `[t·b, (t+1)·b)`), plus one f16 scale per per-row group of [`GROUP`].
+/// `[t·b, (t+1)·b)`), plus one f16 scale per per-row group of `group`
+/// values (default [`GROUP`]).
 #[derive(Clone, PartialEq)]
 pub struct QuantMat {
     rows: usize,
     cols: usize,
     bits: u32,
-    packed: Vec<u32>,
-    scales: Vec<u16>,
+    group: usize,
+    packed: WeightBuf<u32>,
+    scales: WeightBuf<u16>,
 }
 
 impl std::fmt::Debug for QuantMat {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "QuantMat({}x{} @ {} bits)", self.rows, self.cols, self.bits)
+        write!(
+            f,
+            "QuantMat({}x{} @ {} bits, g{})",
+            self.rows, self.cols, self.bits, self.group
+        )
     }
 }
 
@@ -228,30 +254,38 @@ impl QuantMat {
         (2..=8).contains(&bits)
     }
 
-    /// RTN-quantize a dense matrix into packed storage. `dequantize()` of
-    /// the result is bit-identical to fake-quantizing `w` with
-    /// [`fake_quantize_group`] over per-row groups of [`GROUP`].
+    /// RTN-quantize a dense matrix into packed storage at the default
+    /// [`GROUP`] size. `dequantize()` of the result is bit-identical to
+    /// fake-quantizing `w` with [`fake_quantize_group`] over per-row groups.
     pub fn quantize_from(w: &Mat, bits: u32) -> QuantMat {
+        Self::quantize_from_grouped(w, bits, GROUP)
+    }
+
+    /// RTN-quantize with an explicit group size (the ROADMAP 64/128/256
+    /// sweep). Same bit-exactness contract as [`quantize_from`], per-row
+    /// groups of `group`.
+    pub fn quantize_from_grouped(w: &Mat, bits: u32, group: usize) -> QuantMat {
         assert!(Self::supported_bits(bits), "QuantMat packs 2..=8 bits, got {bits}");
+        assert!(supported_group(group), "unsupported quantization group size {group}");
         let (rows, cols) = w.shape();
-        let gpr = cols.div_ceil(GROUP);
+        let gpr = cols.div_ceil(group);
         let mut scales = Vec::with_capacity(rows * gpr);
         let mut codes: Vec<u16> = vec![0; rows * cols];
-        let mut group = [0u16; GROUP];
+        let mut gbuf = vec![0u16; group];
         for i in 0..rows {
             let row = w.row(i);
-            for g in (0..cols).step_by(GROUP) {
-                let end = (g + GROUP).min(cols);
-                let sbits = quantize_group_to_codes(&row[g..end], bits, &mut group[..end - g]);
+            for g in (0..cols).step_by(group) {
+                let end = (g + group).min(cols);
+                let sbits = quantize_group_to_codes(&row[g..end], bits, &mut gbuf[..end - g]);
                 scales.push(sbits);
-                codes[i * cols + g..i * cols + end].copy_from_slice(&group[..end - g]);
+                codes[i * cols + g..i * cols + end].copy_from_slice(&gbuf[..end - g]);
             }
         }
-        Self::from_codes(rows, cols, bits, &codes, scales)
+        Self::from_codes_grouped(rows, cols, bits, group, &codes, scales)
     }
 
     /// Assemble from explicit codes (row-major, offset-binary) and per-row
-    /// group scales — the GPTQ loop builds these incrementally.
+    /// group scales at the default [`GROUP`] size.
     pub fn from_codes(
         rows: usize,
         cols: usize,
@@ -259,12 +293,33 @@ impl QuantMat {
         codes: &[u16],
         scales: Vec<u16>,
     ) -> QuantMat {
+        Self::from_codes_grouped(rows, cols, bits, GROUP, codes, scales)
+    }
+
+    /// Assemble from explicit codes and scales with an explicit group size
+    /// — the GPTQ loop builds these incrementally.
+    pub fn from_codes_grouped(
+        rows: usize,
+        cols: usize,
+        bits: u32,
+        group: usize,
+        codes: &[u16],
+        scales: Vec<u16>,
+    ) -> QuantMat {
         assert!(Self::supported_bits(bits), "QuantMat packs 2..=8 bits, got {bits}");
+        assert!(supported_group(group), "unsupported quantization group size {group}");
         assert_eq!(codes.len(), rows * cols, "from_codes: code count");
-        assert_eq!(scales.len(), rows * cols.div_ceil(GROUP), "from_codes: scale count");
+        assert_eq!(scales.len(), rows * cols.div_ceil(group), "from_codes: scale count");
         let max_code = (1u32 << bits) - 1;
         debug_assert!(codes.iter().all(|&c| (c as u32) < max_code), "code out of b-bit range");
-        QuantMat { rows, cols, bits, packed: pack_codes(codes, bits), scales }
+        QuantMat {
+            rows,
+            cols,
+            bits,
+            group,
+            packed: pack_codes(codes, bits).into(),
+            scales: scales.into(),
+        }
     }
 
     #[inline]
@@ -285,30 +340,52 @@ impl QuantMat {
         self.bits
     }
 
-    #[inline]
+    /// Values per quantization group (one f16 scale each).
+    pub fn group(&self) -> usize {
+        self.group
+    }
+
+    /// Unpack one code (tests; the kernels inline the unpacking with the
+    /// buffer slices hoisted out of the loop).
+    #[cfg(test)]
     fn code_at(&self, t: usize) -> u32 {
+        let packed = self.packed.as_slice();
         let bits = self.bits as usize;
         let bit = t * bits;
         let w = bit >> 5;
         let off = bit & 31;
         let mask = (1u32 << bits) - 1;
-        let mut v = self.packed[w] >> off;
+        let mut v = packed[w] >> off;
         if off + bits > 32 {
-            v |= self.packed[w + 1] << (32 - off);
+            v |= packed[w + 1] << (32 - off);
         }
         v & mask
     }
 
-    /// Dequantize row `i` into `out` (len == cols).
+    /// Dequantize row `i` into `out` (len == cols). The buffer slices are
+    /// hoisted once per call so the inner loop is identical for owned and
+    /// mapped storage.
     pub fn dequant_row_into(&self, i: usize, out: &mut [f32]) {
         assert_eq!(out.len(), self.cols, "dequant_row_into: width");
-        let gpr = self.cols.div_ceil(GROUP);
+        let packed = self.packed.as_slice();
+        let scales = self.scales.as_slice();
+        let group = self.group;
+        let gpr = self.cols.div_ceil(group);
+        let bits = self.bits as usize;
+        let mask = (1u32 << bits) - 1;
         let iqmax = qmax(self.bits) as i32;
-        for (g, chunk) in out.chunks_mut(GROUP).enumerate() {
-            let scale = f16_decode(self.scales[i * gpr + g]);
-            let base = i * self.cols + g * GROUP;
+        for (g, chunk) in out.chunks_mut(group).enumerate() {
+            let scale = f16_decode(scales[i * gpr + g]);
+            let base = i * self.cols + g * group;
             for (t, o) in chunk.iter_mut().enumerate() {
-                *o = (self.code_at(base + t) as i32 - iqmax) as f32 * scale;
+                let bit = (base + t) * bits;
+                let w = bit >> 5;
+                let off = bit & 31;
+                let mut v = packed[w] >> off;
+                if off + bits > 32 {
+                    v |= packed[w + 1] << (32 - off);
+                }
+                *o = ((v & mask) as i32 - iqmax) as f32 * scale;
             }
         }
     }
@@ -400,7 +477,7 @@ impl QuantMat {
 
     /// Storage bits *measured from the actual packed buffers*: packed words
     /// at 32 bits each plus f16 scales. Always ≥ the Eq.-25 formula
-    /// (`count·b + ⌈count/128⌉·16`) — word padding and per-row group
+    /// (`count·b + ⌈count/group⌉·16`) — word padding and per-row group
     /// alignment only add.
     pub fn storage_bits(&self) -> u64 {
         32 * self.packed.len() as u64 + 16 * self.scales.len() as u64
@@ -411,12 +488,12 @@ impl QuantMat {
     /// The raw bit-packed code words, exactly as resident in memory — what a
     /// checkpoint writes and a loader reads back verbatim.
     pub fn packed_words(&self) -> &[u32] {
-        &self.packed
+        self.packed.as_slice()
     }
 
-    /// The raw f16 scale bit patterns (one per per-row group of [`GROUP`]).
+    /// The raw f16 scale bit patterns (one per per-row group of `group`).
     pub fn scale_bits(&self) -> &[u16] {
-        &self.scales
+        self.scales.as_slice()
     }
 
     /// Packed-word count a `rows×cols` matrix at `bits` occupies, or `None`
@@ -428,25 +505,41 @@ impl QuantMat {
         usize::try_from(total_bits.div_ceil(32)).ok()
     }
 
-    /// Scale count of a `rows×cols` matrix (per-row groups of [`GROUP`]), or
+    /// Scale count of a `rows×cols` matrix at the default [`GROUP`], or
     /// `None` on overflow.
     pub fn scales_len(rows: usize, cols: usize) -> Option<usize> {
-        rows.checked_mul(cols.div_ceil(GROUP))
+        Self::scales_len_grouped(rows, cols, GROUP)
     }
 
-    /// Reassemble from raw checkpoint buffers. Unlike the panicking
-    /// constructors this validates everything and returns errors — the
-    /// buffers come from disk, not from our own quantizer.
+    /// Scale count of a `rows×cols` matrix with per-row groups of `group`,
+    /// or `None` on overflow.
+    pub fn scales_len_grouped(rows: usize, cols: usize, group: usize) -> Option<usize> {
+        if group == 0 {
+            return None;
+        }
+        rows.checked_mul(cols.div_ceil(group))
+    }
+
+    /// Reassemble from raw checkpoint buffers — owned vectors or zero-copy
+    /// mapped views alike. Unlike the panicking constructors this validates
+    /// everything and returns errors: the buffers come from disk, not from
+    /// our own quantizer.
     pub fn from_raw_parts(
         rows: usize,
         cols: usize,
         bits: u32,
-        packed: Vec<u32>,
-        scales: Vec<u16>,
+        group: usize,
+        packed: impl Into<WeightBuf<u32>>,
+        scales: impl Into<WeightBuf<u16>>,
     ) -> anyhow::Result<QuantMat> {
+        let (packed, scales) = (packed.into(), scales.into());
         anyhow::ensure!(
             Self::supported_bits(bits),
             "quantized tensor bits must be in 2..=8, got {bits}"
+        );
+        anyhow::ensure!(
+            supported_group(group),
+            "quantized tensor group size {group} unsupported (power of two in 16..=4096)"
         );
         let want_packed = Self::packed_len(rows, cols, bits)
             .ok_or_else(|| anyhow::anyhow!("quantized tensor {rows}x{cols} overflows"))?;
@@ -455,19 +548,34 @@ impl QuantMat {
             "packed word count {} does not match {rows}x{cols} @ {bits} bits (want {want_packed})",
             packed.len()
         );
-        let want_scales = Self::scales_len(rows, cols)
+        let want_scales = Self::scales_len_grouped(rows, cols, group)
             .ok_or_else(|| anyhow::anyhow!("quantized tensor {rows}x{cols} overflows"))?;
         anyhow::ensure!(
             scales.len() == want_scales,
-            "scale count {} does not match {rows}x{cols} (want {want_scales})",
+            "scale count {} does not match {rows}x{cols} at group {group} (want {want_scales})",
             scales.len()
         );
-        Ok(QuantMat { rows, cols, bits, packed, scales })
+        Ok(QuantMat { rows, cols, bits, group, packed, scales })
     }
 
-    /// Resident heap bytes of the packed buffers.
+    /// Total byte footprint of the packed buffers (owned or mapped).
     pub fn packed_bytes(&self) -> usize {
         4 * self.packed.len() + 2 * self.scales.len()
+    }
+
+    /// Heap bytes actually resident (0 when both buffers are mapped views).
+    pub fn resident_bytes(&self) -> usize {
+        self.packed.resident_bytes() + self.scales.resident_bytes()
+    }
+
+    /// Bytes borrowed from a checkpoint mapping.
+    pub fn mapped_bytes(&self) -> usize {
+        self.packed.mapped_bytes() + self.scales.mapped_bytes()
+    }
+
+    /// Whether the storage borrows a checkpoint mapping.
+    pub fn is_mapped(&self) -> bool {
+        self.packed.is_mapped() || self.scales.is_mapped()
     }
 }
 
@@ -705,20 +813,65 @@ mod tests {
                 qm.rows(),
                 qm.cols(),
                 qm.bits(),
+                qm.group(),
                 qm.packed_words().to_vec(),
                 qm.scale_bits().to_vec(),
             )
             .unwrap();
             assert_eq!(back, qm, "bits {bits}");
         }
-        // validation: wrong widths / lengths are errors, not panics
+        // validation: wrong widths / lengths / groups are errors, not panics
         let qm = QuantMat::quantize_from(&Mat::zeros(2, 3), 4);
         let (p, s) = (qm.packed_words().to_vec(), qm.scale_bits().to_vec());
-        assert!(QuantMat::from_raw_parts(2, 3, 1, p.clone(), s.clone()).is_err());
-        assert!(QuantMat::from_raw_parts(2, 3, 9, p.clone(), s.clone()).is_err());
-        assert!(QuantMat::from_raw_parts(2, 3, 4, vec![], s.clone()).is_err());
-        assert!(QuantMat::from_raw_parts(2, 3, 4, p.clone(), vec![0; 5]).is_err());
-        assert!(QuantMat::from_raw_parts(usize::MAX, usize::MAX, 8, p, s).is_err());
+        assert!(QuantMat::from_raw_parts(2, 3, 1, GROUP, p.clone(), s.clone()).is_err());
+        assert!(QuantMat::from_raw_parts(2, 3, 9, GROUP, p.clone(), s.clone()).is_err());
+        assert!(QuantMat::from_raw_parts(2, 3, 4, 0, p.clone(), s.clone()).is_err());
+        assert!(QuantMat::from_raw_parts(2, 3, 4, 100, p.clone(), s.clone()).is_err());
+        assert!(QuantMat::from_raw_parts(2, 3, 4, GROUP, vec![], s.clone()).is_err());
+        assert!(QuantMat::from_raw_parts(2, 3, 4, GROUP, p.clone(), vec![0; 5]).is_err());
+        assert!(QuantMat::from_raw_parts(usize::MAX, usize::MAX, 8, GROUP, p, s).is_err());
+    }
+
+    #[test]
+    fn grouped_quantization_matches_grouped_fake_quant() {
+        // The configurable group sizes keep the bit-exactness contract:
+        // packed dequantization reproduces per-row fake-quant groups of the
+        // same size exactly, and smaller groups mean more scales.
+        let mut rng = Rng::new(97);
+        let w = Mat::randn(&mut rng, 4, 300, 0.4);
+        for group in [64usize, 128, 256] {
+            let qm = QuantMat::quantize_from_grouped(&w, 4, group);
+            assert_eq!(qm.group(), group);
+            let deq = qm.dequantize();
+            let mut fake = w.clone();
+            for i in 0..fake.rows() {
+                let row = fake.row_mut(i);
+                for g in (0..300).step_by(group) {
+                    let end = (g + group).min(300);
+                    fake_quantize_group(&mut row[g..end], 4);
+                }
+            }
+            for i in 0..4 {
+                for j in 0..300 {
+                    assert!(
+                        (deq[(i, j)] - fake[(i, j)]).abs() == 0.0,
+                        "group {group} ({i},{j})"
+                    );
+                }
+            }
+            assert_eq!(qm.scale_bits().len(), 4 * 300usize.div_ceil(group));
+        }
+        // finer groups track outliers at least as well (loose bound — the
+        // aggregate error is dominated by, not strictly bounded by, the
+        // smaller per-group scales)
+        let e64 = QuantMat::quantize_from_grouped(&w, 4, 64).dequantize().rel_err(&w);
+        let e256 = QuantMat::quantize_from_grouped(&w, 4, 256).dequantize().rel_err(&w);
+        assert!(e64 <= e256 * 1.25, "64-group err {e64} vs 256-group err {e256}");
+        // different group layouts are different storage, not equal values
+        assert_ne!(
+            QuantMat::quantize_from_grouped(&w, 4, 64),
+            QuantMat::quantize_from_grouped(&w, 4, 128)
+        );
     }
 
     #[test]

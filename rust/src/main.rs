@@ -10,10 +10,12 @@
 //! compot eval --model <preset> | --load-compressed <file>  baseline evaluation
 //! compot serve --model <preset> [--addr host:port] [--max-batch n]
 //!              [--max-wait-ms ms] [--cr x --method m | --plan p]
-//! compot serve --load-compressed <file>                  serve a CPT2 checkpoint as-is
-//!                                                        (no compression stage runs)
+//! compot serve --load-compressed <file> [--mmap]         serve a CPT2 checkpoint as-is
+//!                                                        (no compression stage runs;
+//!                                                        --mmap = zero-copy weights)
 //! compot allocate --model <preset>                       print Algorithm-2 allocation
-//! compot info                                            artifacts / presets
+//! compot info [<file>.cpt2]                              artifacts / presets, or the
+//!                                                        header-only checkpoint fast path
 //! compot help                                            usage + registered methods
 //! ```
 //!
@@ -127,15 +129,19 @@ fn load(preset: &str) -> anyhow::Result<Model> {
 
 /// Load a checkpoint named by `--load-compressed` through the versioned
 /// entry point (CPT1 or CPT2) and print what was loaded. No compression
-/// stage runs.
-fn load_checkpoint_verbose(path: &str) -> anyhow::Result<(Model, CheckpointInfo)> {
-    let (model, ck) = Model::load_checkpoint(Path::new(path))?;
+/// stage runs. With `mmap`, CPT2 weight buffers are zero-copy views into a
+/// shared file mapping instead of heap copies.
+fn load_checkpoint_verbose(path: &str, mmap: bool) -> anyhow::Result<(Model, CheckpointInfo)> {
+    let (model, ck) = Model::load_checkpoint_with(Path::new(path), mmap)?;
     println!(
-        "loaded {} checkpoint {path} ({}; plan {}; {} resident weight bytes)",
+        "loaded {} checkpoint {path} ({}; plan {}; source {}; {} resident + {} mapped weight \
+         bytes)",
         ck.format,
         model.cfg.name,
         ck.plan.as_deref().unwrap_or("none recorded"),
-        model.resident_weight_bytes()
+        ck.source,
+        model.resident_weight_bytes(),
+        model.mapped_weight_bytes()
     );
     Ok((model, ck))
 }
@@ -177,12 +183,13 @@ fn print_help() {
          compot figure <3|4..12|alloc:PRESET>\n  \
          compot compress --model PRESET [--method M [--set k=v]... | --plan SPEC] --cr X [--dynamic]\n           \
          [--save-compressed FILE.cpt2]\n  \
-         compot eval [--model PRESET | --load-compressed FILE]\n  \
+         compot eval [--model PRESET | --load-compressed FILE [--mmap]]\n  \
          compot allocate --model PRESET\n  \
          compot serve --model PRESET [--addr HOST:PORT] [--max-batch N] [--max-wait-ms MS]\n              \
          [--cr X [--method M | --plan SPEC]]\n  \
-         compot serve --load-compressed FILE.cpt2 [--addr HOST:PORT]   (no compression stage runs)\n  \
-         compot info\n\n\
+         compot serve --load-compressed FILE.cpt2 [--mmap] [--addr HOST:PORT]\n              \
+         (no compression stage runs; --mmap maps weights zero-copy, page cache shared)\n  \
+         compot info [FILE.cpt2]   (with a file: header-only fast path, no payload reads)\n\n\
          plans: stages joined by '+', each 'name[@cr][,key=value]*'\n       \
          e.g. --plan \"compot@0.25,iters=20+gptq4\"  (Table 7 composition)\n\n\
          methods (MethodRegistry):"
@@ -329,7 +336,7 @@ fn main() -> anyhow::Result<()> {
         "eval" => {
             flags.expect_known(
                 "eval",
-                &["model", "items", "calib", "seed", "load-compressed"],
+                &["model", "items", "calib", "seed", "load-compressed", "mmap"],
             )?;
             let sc = scale_from(&flags)?;
             let (model, label) = if let Some(ckpt) = flags.get("load-compressed") {
@@ -337,9 +344,13 @@ fn main() -> anyhow::Result<()> {
                     !flags.has("model"),
                     "--load-compressed evaluates the checkpoint; drop --model"
                 );
-                let (m, _) = load_checkpoint_verbose(ckpt)?;
+                let (m, _) = load_checkpoint_verbose(ckpt, flags.has("mmap"))?;
                 (m, ckpt.to_string())
             } else {
+                anyhow::ensure!(
+                    !flags.has("mmap"),
+                    "--mmap only applies to --load-compressed checkpoints"
+                );
                 let preset = flags.get("model").unwrap_or("llama-micro");
                 (load(preset)?, preset.to_string())
             };
@@ -377,6 +388,7 @@ fn main() -> anyhow::Result<()> {
                     "max-batch",
                     "max-wait-ms",
                     "load-compressed",
+                    "mmap",
                 ],
             )?;
             let addr = flags.get("addr").unwrap_or("127.0.0.1:7199");
@@ -401,15 +413,27 @@ fn main() -> anyhow::Result<()> {
                         "--load-compressed serves the checkpoint as-is; drop --{f}"
                     );
                 }
-                let (m, ck) = load_checkpoint_verbose(ckpt)?;
+                let (m, ck) = load_checkpoint_verbose(ckpt, flags.has("mmap"))?;
                 info.set("model", m.cfg.name.as_str().into());
                 info.set("checkpoint", ckpt.into());
                 info.set("checkpoint_format", ck.format.into());
+                // "mmap" = zero-copy views into the shared checkpoint
+                // mapping; "mmap-fallback" = --mmap on a host without mmap
+                // (private heap, no page sharing); "checkpoint" = owned
+                // buffers copied out of the file.
+                info.set(
+                    "weights_source",
+                    if ck.source == "owned" { "checkpoint" } else { ck.source }.into(),
+                );
                 if let Some(p) = ck.plan {
                     info.set("plan", p.into());
                 }
                 m
             } else {
+                anyhow::ensure!(
+                    !flags.has("mmap"),
+                    "--mmap only applies to --load-compressed checkpoints"
+                );
                 let preset = flags.get("model").unwrap_or("llama-micro");
                 let model = load(preset)?;
                 info.set("model", preset.into());
@@ -441,6 +465,22 @@ fn main() -> anyhow::Result<()> {
         }
         "info" => {
             flags.expect_known("info", &[])?;
+            if let Some(ckpt) = pos.get(1) {
+                // Fast path: everything printed here comes from the CPT2
+                // JSON header — variant tags, shapes, bit widths, group
+                // sizes — with zero section-payload reads.
+                let path = Path::new(ckpt.as_str());
+                let file_bytes = std::fs::metadata(path)?.len();
+                let ck = compot::model::MappedCheckpoint::open(path).map_err(|e| {
+                    anyhow::anyhow!(
+                        "{ckpt}: {e} (the info fast path reads CPT2 headers; CPT1 files \
+                         carry dense tensors only)"
+                    )
+                })?;
+                println!("{ckpt}: CPT2 checkpoint, {file_bytes} bytes on disk");
+                print!("{}", compot::model::cpt2::header_summary(ck.header()));
+                return Ok(());
+            }
             println!("artifacts dir: {:?}", artifacts_dir());
             match compot::runtime::Manifest::load(&artifacts_dir()) {
                 Ok(man) => {

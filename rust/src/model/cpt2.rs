@@ -21,10 +21,18 @@
 //! sections that are byte-for-byte the in-memory [`QuantMat`] buffers.
 //!
 //! Every field read from disk is validated against the actual file size
-//! before any allocation, every section payload is CRC32-checked, and every
-//! reconstruction goes through the fallible `from_raw_parts` constructors —
-//! a corrupt or adversarial checkpoint yields an error, never a panic or a
-//! huge allocation.
+//! before any allocation, every section payload is CRC32-checked (lazily,
+//! per section, as each buffer is materialized), and every reconstruction
+//! goes through the fallible `from_raw_parts` constructors — a corrupt or
+//! adversarial checkpoint yields an error, never a panic or a huge
+//! allocation.
+//!
+//! Two load paths share one stage-walking body: the copying loader
+//! ([`Model::load_compressed`], owned buffers) and the zero-copy loader
+//! ([`MappedCheckpoint`] / [`Model::load_compressed_mmap`]), which maps
+//! the file once and hands every weight a [`WeightBuf`] view into the
+//! 64-B-aligned section payloads — no decode, no copy, page cache shared
+//! across serve workers.
 //!
 //! [`Model::load_checkpoint`] is the versioned entry point: it sniffs the
 //! magic and accepts both the dense `CPT1` tensor format
@@ -35,17 +43,21 @@ use super::transformer::{Block, Model, Stage};
 use super::weights::TensorFile;
 use crate::compress::sparse::{ColumnSparse, QuantColumnSparse};
 use crate::compress::LinearWeight;
+use crate::linalg::buf::{Mapping, Pod, WeightBuf};
+use crate::linalg::qmat::{supported_group, GROUP};
 use crate::linalg::{Mat, QuantMat};
 use crate::model::config::ModelConfig;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::io::{Read, Seek, Write};
 use std::path::Path;
+use std::sync::Arc;
 
 pub const MAGIC: &[u8; 4] = b"CPT2";
 pub const VERSION: usize = 2;
-/// Section payload alignment (bytes) — sized for cache lines / mmap-friendly
-/// direct reads into the resident buffers.
+/// Section payload alignment (bytes) — sized for cache lines and for the
+/// zero-copy loader: every section's absolute file offset is a multiple of
+/// ALIGN, so a page-aligned mapping yields views aligned for f32/u32/u16.
 pub const ALIGN: usize = 64;
 
 /// What a checkpoint said about itself — surfaced by `serve`'s info
@@ -57,6 +69,12 @@ pub struct CheckpointInfo {
     pub format: &'static str,
     /// Compression-plan provenance recorded at save time (CPT2 only).
     pub plan: Option<String>,
+    /// Where the weight buffers live: `"owned"` (copied into heap
+    /// allocations), `"mmap"` (zero-copy views into a shared file
+    /// mapping), or `"mmap-fallback"` (an mmap load on a host/filesystem
+    /// without mmap support — views into one private aligned heap read, so
+    /// no page sharing across workers).
+    pub source: &'static str,
 }
 
 /// Byte-at-a-time CRC32 lookup table, built at compile time. The table
@@ -158,7 +176,7 @@ impl SectionWriter {
 }
 
 // ---------------------------------------------------------------------------
-// Section reader.
+// Section reader — one record table, two payload sources.
 // ---------------------------------------------------------------------------
 
 #[derive(Clone, Copy)]
@@ -166,15 +184,33 @@ struct SectionDesc {
     dtype_size: usize,
     len: usize,
     offset: usize,
+    crc32: u32,
 }
 
-struct SectionReader<'a> {
-    data: &'a [u8],
+/// Where section bytes come from: the copying loader's in-memory data
+/// region, or a shared file [`Mapping`] whose data region starts at `start`
+/// (zero-copy — accessors hand out [`WeightBuf`] views into it).
+enum Payload {
+    Copied(Vec<u8>),
+    Mapped { map: Arc<Mapping>, start: usize },
+}
+
+struct SectionReader {
+    payload: Payload,
     by_name: BTreeMap<String, (SectionDesc, &'static str)>,
 }
 
-impl<'a> SectionReader<'a> {
-    fn new(header: &Json, data: &'a [u8]) -> anyhow::Result<SectionReader<'a>> {
+impl SectionReader {
+    /// Parse and bounds-check the section table against the real data-region
+    /// size. CRCs are **not** checked here — each section is checksummed
+    /// lazily, the first (and only) time an accessor materializes it. That
+    /// keeps header-only opens ([`MappedCheckpoint::open`], `compot info`)
+    /// free of any payload I/O.
+    fn new(header: &Json, payload: Payload) -> anyhow::Result<SectionReader> {
+        let region_len = match &payload {
+            Payload::Copied(data) => data.len(),
+            Payload::Mapped { map, start } => map.len().saturating_sub(*start),
+        };
         let mut by_name = BTreeMap::new();
         for rec in header
             .get("sections")
@@ -207,26 +243,20 @@ impl<'a> SectionReader<'a> {
                 .checked_add(byte_len)
                 .ok_or_else(|| anyhow::anyhow!("section '{name}': offset overflows"))?;
             anyhow::ensure!(
-                end <= data.len(),
+                end <= region_len,
                 "section '{name}' ({len}×{size} B at offset {offset}) runs past the data \
-                 region ({} B) — truncated or corrupt checkpoint",
-                data.len()
+                 region ({region_len} B) — truncated or corrupt checkpoint"
             );
             let want_crc = rec
                 .get("crc32")
                 .and_then(Json::as_usize)
                 .ok_or_else(|| anyhow::anyhow!("section '{name}': missing crc32"))?;
-            let got = crc32(&data[offset..end]) as usize;
-            anyhow::ensure!(
-                got == want_crc,
-                "section '{name}': crc mismatch (header {want_crc:#x}, payload {got:#x})"
-            );
             by_name.insert(
                 name.to_string(),
-                (SectionDesc { dtype_size: size, len, offset }, dtype),
+                (SectionDesc { dtype_size: size, len, offset, crc32: want_crc as u32 }, dtype),
             );
         }
-        Ok(SectionReader { data, by_name })
+        Ok(SectionReader { payload, by_name })
     }
 
     fn desc(&self, name: &str, dtype: &str, expect_len: usize) -> anyhow::Result<SectionDesc> {
@@ -246,48 +276,77 @@ impl<'a> SectionReader<'a> {
         Ok(*desc)
     }
 
-    fn f32s(&self, name: &str, expect_len: usize) -> anyhow::Result<Vec<f32>> {
-        let d = self.desc(name, "f32", expect_len)?;
-        let raw = &self.data[d.offset..d.offset + d.len * d.dtype_size];
-        Ok(raw
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
+    fn region(&self) -> &[u8] {
+        match &self.payload {
+            Payload::Copied(data) => data,
+            Payload::Mapped { map, start } => &map.bytes()[*start..],
+        }
     }
 
-    fn u32s(&self, name: &str, expect_len: usize) -> anyhow::Result<Vec<u32>> {
-        let d = self.desc(name, "u32", expect_len)?;
-        let raw = &self.data[d.offset..d.offset + d.len * d.dtype_size];
-        Ok(raw
-            .chunks_exact(4)
-            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
+    /// Materialize one section as a [`WeightBuf`]: CRC-check its bytes
+    /// (lazy — this is the first time anything reads the payload), then
+    /// either decode into an owned vector (copy source) or hand out an
+    /// aligned zero-copy view (mapped source).
+    fn buf<T: Pod>(&self, name: &str, expect_len: usize) -> anyhow::Result<WeightBuf<T>> {
+        let d = self.desc(name, T::DTYPE, expect_len)?;
+        // Build the view first so a misaligned offset reports as the
+        // structural error it is, not as the checksum mismatch the shifted
+        // bytes would also produce.
+        let buf = match &self.payload {
+            Payload::Copied(_) => None,
+            Payload::Mapped { map, start } => Some(
+                WeightBuf::view(map, start + d.offset, d.len)
+                    .map_err(|e| anyhow::anyhow!("section '{name}': {e}"))?,
+            ),
+        };
+        let raw = &self.region()[d.offset..d.offset + d.len * d.dtype_size];
+        let got = crc32(raw);
+        anyhow::ensure!(
+            got == d.crc32,
+            "section '{name}': crc mismatch (header {:#x}, payload {got:#x})",
+            d.crc32
+        );
+        match buf {
+            Some(view) => Ok(view),
+            None => Ok(raw
+                .chunks_exact(std::mem::size_of::<T>())
+                .map(T::from_le_bytes)
+                .collect::<Vec<T>>()
+                .into()),
+        }
     }
 
-    fn u16s(&self, name: &str, expect_len: usize) -> anyhow::Result<Vec<u16>> {
-        let d = self.desc(name, "u16", expect_len)?;
-        let raw = &self.data[d.offset..d.offset + d.len * d.dtype_size];
-        Ok(raw.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect())
+    /// Small vectors (norm gains) always materialize owned — they are a few
+    /// hundred bytes and the forward pass stores them as `Vec<f32>`.
+    fn vec_f32(&self, name: &str, expect_len: usize) -> anyhow::Result<Vec<f32>> {
+        Ok(self.buf::<f32>(name, expect_len)?.into_vec())
     }
 
     fn mat(&self, name: &str, rows: usize, cols: usize) -> anyhow::Result<Mat> {
         let len = rows
             .checked_mul(cols)
             .ok_or_else(|| anyhow::anyhow!("section '{name}': {rows}x{cols} overflows"))?;
-        Ok(Mat::from_vec(rows, cols, self.f32s(name, len)?))
+        Ok(Mat::from_buf(rows, cols, self.buf::<f32>(name, len)?))
     }
 
-    /// `bits` is pre-validated by `meta_bits` (projection-named error);
-    /// `QuantMat::from_raw_parts` re-checks it as the fallible constructor
-    /// every path funnels through — no third check here.
-    fn qmat(&self, base: &str, rows: usize, cols: usize, bits: u32) -> anyhow::Result<QuantMat> {
+    /// `bits`/`group` are pre-validated by `meta_bits`/`meta_group`
+    /// (projection-named errors); `QuantMat::from_raw_parts` re-checks them
+    /// as the fallible constructor every path funnels through.
+    fn qmat(
+        &self,
+        base: &str,
+        rows: usize,
+        cols: usize,
+        bits: u32,
+        group: usize,
+    ) -> anyhow::Result<QuantMat> {
         let np = QuantMat::packed_len(rows, cols, bits)
             .ok_or_else(|| anyhow::anyhow!("'{base}': {rows}x{cols} overflows"))?;
-        let ns = QuantMat::scales_len(rows, cols)
+        let ns = QuantMat::scales_len_grouped(rows, cols, group)
             .ok_or_else(|| anyhow::anyhow!("'{base}': {rows}x{cols} overflows"))?;
-        let packed = self.u32s(&format!("{base}.codes"), np)?;
-        let scales = self.u16s(&format!("{base}.scales"), ns)?;
-        QuantMat::from_raw_parts(rows, cols, bits, packed, scales)
+        let packed = self.buf::<u32>(&format!("{base}.codes"), np)?;
+        let scales = self.buf::<u16>(&format!("{base}.scales"), ns)?;
+        QuantMat::from_raw_parts(rows, cols, bits, group, packed, scales)
     }
 }
 
@@ -332,7 +391,8 @@ fn write_weight(sw: &mut SectionWriter, base: &str, w: &LinearWeight) -> Json {
             meta.set("variant", "quant_dense".into())
                 .set("rows", q.rows().into())
                 .set("cols", q.cols().into())
-                .set("bits", (q.bits() as usize).into());
+                .set("bits", (q.bits() as usize).into())
+                .set("group", q.group().into());
             write_qmat(sw, &format!("{base}.w"), q);
         }
         LinearWeight::QuantLowRank { b, c } => {
@@ -341,7 +401,9 @@ fn write_weight(sw: &mut SectionWriter, base: &str, w: &LinearWeight) -> Json {
                 .set("r", b.cols().into())
                 .set("n", c.cols().into())
                 .set("bits_b", (b.bits() as usize).into())
-                .set("bits_c", (c.bits() as usize).into());
+                .set("bits_c", (c.bits() as usize).into())
+                .set("group_b", b.group().into())
+                .set("group_c", c.group().into());
             write_qmat(sw, &format!("{base}.b"), b);
             write_qmat(sw, &format!("{base}.c"), c);
         }
@@ -353,7 +415,9 @@ fn write_weight(sw: &mut SectionWriter, base: &str, w: &LinearWeight) -> Json {
                 .set("n", s.n().into())
                 .set("s", s.s().into())
                 .set("bits_a", (a.bits() as usize).into())
-                .set("bits_val", (v.bits() as usize).into());
+                .set("bits_val", (v.bits() as usize).into())
+                .set("group_a", a.group().into())
+                .set("group_val", v.group().into());
             write_qmat(sw, &format!("{base}.a"), a);
             sw.add_u32(&format!("{base}.s.idx"), s.indices());
             write_qmat(sw, &format!("{base}.s.val"), v);
@@ -375,6 +439,23 @@ fn meta_bits(meta: &Json, base: &str, key: &str) -> anyhow::Result<u32> {
         "projection '{base}': {key}={b} outside the packable 2..=8 range"
     );
     Ok(b as u32)
+}
+
+/// Quantization group size for one packed tensor. Absent (pre-group-sweep
+/// checkpoints) defaults to [`GROUP`]; present values are validated here so
+/// the error names the projection.
+fn meta_group(meta: &Json, base: &str, key: &str) -> anyhow::Result<usize> {
+    let g = match meta.get(key) {
+        None => return Ok(GROUP),
+        Some(v) => v
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("projection '{base}': bad field '{key}'"))?,
+    };
+    anyhow::ensure!(
+        supported_group(g),
+        "projection '{base}': {key}={g} is not a supported quantization group size"
+    );
+    Ok(g)
 }
 
 /// Reconstruct one projection from its header metadata + sections.
@@ -406,8 +487,8 @@ fn read_weight(sr: &SectionReader, base: &str, meta: &Json) -> anyhow::Result<Li
             let ns = n
                 .checked_mul(s)
                 .ok_or_else(|| anyhow::anyhow!("projection '{base}': n·s overflows"))?;
-            let idx = sr.u32s(&format!("{base}.s.idx"), ns)?;
-            let val = sr.f32s(&format!("{base}.s.val"), ns)?;
+            let idx = sr.buf::<u32>(&format!("{base}.s.idx"), ns)?;
+            let val = sr.buf::<f32>(&format!("{base}.s.val"), ns)?;
             Ok(LinearWeight::Factorized {
                 a: sr.mat(&format!("{base}.a"), m, k)?,
                 s: ColumnSparse::from_raw_parts(k, n, s, idx, val)?,
@@ -417,15 +498,28 @@ fn read_weight(sr: &SectionReader, base: &str, meta: &Json) -> anyhow::Result<Li
             let rows = meta_usize(meta, base, "rows")?;
             let cols = meta_usize(meta, base, "cols")?;
             let bits = meta_bits(meta, base, "bits")?;
-            Ok(LinearWeight::QuantDense(sr.qmat(&format!("{base}.w"), rows, cols, bits)?))
+            let group = meta_group(meta, base, "group")?;
+            Ok(LinearWeight::QuantDense(sr.qmat(&format!("{base}.w"), rows, cols, bits, group)?))
         }
         "quant_low_rank" => {
             let m = meta_usize(meta, base, "m")?;
             let r = meta_usize(meta, base, "r")?;
             let n = meta_usize(meta, base, "n")?;
             Ok(LinearWeight::QuantLowRank {
-                b: sr.qmat(&format!("{base}.b"), m, r, meta_bits(meta, base, "bits_b")?)?,
-                c: sr.qmat(&format!("{base}.c"), r, n, meta_bits(meta, base, "bits_c")?)?,
+                b: sr.qmat(
+                    &format!("{base}.b"),
+                    m,
+                    r,
+                    meta_bits(meta, base, "bits_b")?,
+                    meta_group(meta, base, "group_b")?,
+                )?,
+                c: sr.qmat(
+                    &format!("{base}.c"),
+                    r,
+                    n,
+                    meta_bits(meta, base, "bits_c")?,
+                    meta_group(meta, base, "group_c")?,
+                )?,
             })
         }
         "quant_factorized" => {
@@ -436,10 +530,22 @@ fn read_weight(sr: &SectionReader, base: &str, meta: &Json) -> anyhow::Result<Li
             let ns = n
                 .checked_mul(s)
                 .ok_or_else(|| anyhow::anyhow!("projection '{base}': n·s overflows"))?;
-            let idx = sr.u32s(&format!("{base}.s.idx"), ns)?;
-            let val = sr.qmat(&format!("{base}.s.val"), n, s, meta_bits(meta, base, "bits_val")?)?;
+            let idx = sr.buf::<u32>(&format!("{base}.s.idx"), ns)?;
+            let val = sr.qmat(
+                &format!("{base}.s.val"),
+                n,
+                s,
+                meta_bits(meta, base, "bits_val")?,
+                meta_group(meta, base, "group_val")?,
+            )?;
             Ok(LinearWeight::QuantFactorized {
-                a: sr.qmat(&format!("{base}.a"), m, k, meta_bits(meta, base, "bits_a")?)?,
+                a: sr.qmat(
+                    &format!("{base}.a"),
+                    m,
+                    k,
+                    meta_bits(meta, base, "bits_a")?,
+                    meta_group(meta, base, "group_a")?,
+                )?,
                 s: QuantColumnSparse::from_raw_parts(k, idx, val)?,
             })
         }
@@ -553,148 +659,391 @@ impl Model {
         Ok(())
     }
 
-    /// Load a CPT2 checkpoint. Returns the model plus what the checkpoint
-    /// recorded about its origin. No compression stage runs; packed
-    /// quantized buffers are read back verbatim.
+    /// Load a CPT2 checkpoint through the **copying** path: every section
+    /// is decoded into freshly allocated owned buffers. Returns the model
+    /// plus what the checkpoint recorded about its origin. No compression
+    /// stage runs; packed quantized buffers are read back verbatim.
     pub fn load_compressed(path: &Path) -> anyhow::Result<(Model, CheckpointInfo)> {
         let mut f = std::fs::File::open(path)?;
-        let file_len = f.metadata()?.len();
-        let mut magic = [0u8; 4];
-        f.read_exact(&mut magic)?;
-        anyhow::ensure!(&magic == MAGIC, "bad magic in {path:?} (not a CPT2 checkpoint)");
-        let mut len4 = [0u8; 4];
-        f.read_exact(&mut len4)?;
-        let hlen = u32::from_le_bytes(len4) as u64;
-        // Validate the header length against the actual file size *before*
-        // allocating — a corrupt length must not drive a huge allocation.
-        anyhow::ensure!(
-            8 + hlen <= file_len,
-            "header length {hlen} exceeds file size {file_len} — truncated checkpoint"
-        );
-        let mut hbytes = vec![0u8; hlen as usize];
-        f.read_exact(&mut hbytes)?;
-        let header = Json::parse(std::str::from_utf8(&hbytes)?)
-            .map_err(|e| anyhow::anyhow!("bad checkpoint header json: {e}"))?;
-        let version = header.get("version").and_then(Json::as_usize).unwrap_or(0);
-        anyhow::ensure!(
-            version == VERSION,
-            "unsupported CPT2 version {version} (this build reads version {VERSION})"
-        );
-        let cfg = ModelConfig::from_json(
-            header.get("config").ok_or_else(|| anyhow::anyhow!("checkpoint has no config"))?,
-        )?;
-        // head_dim() divides by n_heads — reject a config that would panic.
-        anyhow::ensure!(
-            cfg.n_heads >= 1 && cfg.d_model >= 1 && cfg.d_model % cfg.n_heads == 0,
-            "checkpoint config has invalid head geometry (d_model {}, n_heads {})",
-            cfg.d_model,
-            cfg.n_heads
-        );
-        let plan = header.get("plan").and_then(Json::as_str).map(String::from);
-
-        let data_start = align_up(8 + hlen as usize, ALIGN) as u64;
-        anyhow::ensure!(data_start <= file_len, "truncated checkpoint (no data region)");
+        let (header, data_start, file_len) = read_header(&mut f, path)?;
+        let (cfg, plan) = validate_header(&header)?;
         // Seek past the alignment pad, then pull the data region. The region
         // is bounded by the real file size, so section bounds checked
-        // against `data.len()` are checked against reality.
+        // against its length are checked against reality.
         f.seek(std::io::SeekFrom::Start(data_start))?;
         let mut data = Vec::with_capacity((file_len - data_start) as usize);
         f.read_to_end(&mut data)?;
-        let sr = SectionReader::new(&header, &data)?;
+        let sr = SectionReader::new(&header, Payload::Copied(data))?;
+        let model = read_model(cfg, &header, &sr)?;
+        Ok((model, CheckpointInfo { format: "cpt2", plan, source: "owned" }))
+    }
 
-        let d = cfg.d_model;
-        let embed = sr.mat("embed", cfg.vocab, d)?;
-        let lm_head = sr.mat("lm_head", d, cfg.vocab)?;
-        let final_norm = sr.f32s("final_norm", d)?;
-        let mut stages = Vec::new();
-        for (i, sj) in header
-            .get("stages")
-            .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow::anyhow!("checkpoint header has no 'stages' array"))?
-            .iter()
-            .enumerate()
-        {
-            match sj.get("kind").and_then(Json::as_str) {
-                Some("block") => {
-                    let n_heads = sj
-                        .get("n_heads")
-                        .and_then(Json::as_usize)
-                        .ok_or_else(|| anyhow::anyhow!("stage {i}: missing n_heads"))?;
-                    let n_kv_heads = sj
-                        .get("n_kv_heads")
-                        .and_then(Json::as_usize)
-                        .ok_or_else(|| anyhow::anyhow!("stage {i}: missing n_kv_heads"))?;
-                    anyhow::ensure!(
-                        n_kv_heads >= 1 && n_heads >= n_kv_heads && n_heads % n_kv_heads == 0,
-                        "stage {i}: invalid head counts {n_heads}/{n_kv_heads}"
-                    );
-                    let projs = sj
-                        .get("projections")
-                        .ok_or_else(|| anyhow::anyhow!("stage {i}: missing projections"))?;
-                    let get = |p: ProjKind| -> anyhow::Result<LinearWeight> {
-                        let base = format!("stages.{i}.{}", p.group());
-                        let meta = projs.get(p.group()).ok_or_else(|| {
-                            anyhow::anyhow!("stage {i}: missing projection '{}'", p.group())
-                        })?;
-                        read_weight(&sr, &base, meta)
-                    };
-                    let block = Block {
-                        attn_norm: sr.f32s(&format!("stages.{i}.attn_norm"), d)?,
-                        q: get(ProjKind::Q)?,
-                        k: get(ProjKind::K)?,
-                        v: get(ProjKind::V)?,
-                        o: get(ProjKind::O)?,
-                        mlp_norm: sr.f32s(&format!("stages.{i}.mlp_norm"), d)?,
-                        gate: get(ProjKind::Gate)?,
-                        up: get(ProjKind::Up)?,
-                        down: get(ProjKind::Down)?,
-                        n_heads,
-                        n_kv_heads,
-                    };
-                    validate_block_shapes(i, &block, d, cfg.head_dim())?;
-                    stages.push(Stage::Block(block));
-                }
-                Some("linear") => {
-                    let rows = sj
-                        .get("rows")
-                        .and_then(Json::as_usize)
-                        .ok_or_else(|| anyhow::anyhow!("stage {i}: missing rows"))?;
-                    let cols = sj
-                        .get("cols")
-                        .and_then(Json::as_usize)
-                        .ok_or_else(|| anyhow::anyhow!("stage {i}: missing cols"))?;
-                    anyhow::ensure!(
-                        rows == d && cols == d,
-                        "stage {i}: linear shape {rows}x{cols} does not preserve the \
-                         d={d} residual stream"
-                    );
-                    stages.push(Stage::Linear(sr.mat(&format!("stages.{i}.linear"), rows, cols)?));
-                }
-                other => anyhow::bail!("stage {i}: unknown stage kind {other:?}"),
-            }
-        }
-        let model = Model { cfg, embed, stages, final_norm, lm_head };
-        Ok((model, CheckpointInfo { format: "cpt2", plan }))
+    /// Load a CPT2 checkpoint through the **zero-copy** path: open and
+    /// validate the header once, map the file, and point every weight
+    /// buffer straight into the mapping (CRCs checked lazily per section).
+    /// Equivalent to [`MappedCheckpoint::open`] + `load_model`.
+    pub fn load_compressed_mmap(path: &Path) -> anyhow::Result<(Model, CheckpointInfo)> {
+        MappedCheckpoint::open(path)?.load_model()
     }
 
     /// Versioned checkpoint entry point: sniffs the magic and loads either
     /// the dense `CPT1` tensor format or a `CPT2` compressed checkpoint.
     pub fn load_checkpoint(path: &Path) -> anyhow::Result<(Model, CheckpointInfo)> {
+        Self::load_checkpoint_with(path, false)
+    }
+
+    /// [`load_checkpoint`](Self::load_checkpoint) with an explicit storage
+    /// mode: `mmap = true` loads CPT2 weights as zero-copy views into a
+    /// shared file mapping (the serve `--mmap` flag). CPT1 files carry
+    /// unaligned dense tensors and do not support mapping.
+    pub fn load_checkpoint_with(
+        path: &Path,
+        mmap: bool,
+    ) -> anyhow::Result<(Model, CheckpointInfo)> {
         let mut f = std::fs::File::open(path)?;
         let mut magic = [0u8; 4];
         f.read_exact(&mut magic)?;
         drop(f);
         if &magic == MAGIC {
-            Self::load_compressed(path)
+            if mmap {
+                Self::load_compressed_mmap(path)
+            } else {
+                Self::load_compressed(path)
+            }
         } else if &magic == super::weights::MAGIC {
+            anyhow::ensure!(
+                !mmap,
+                "{path:?} is a CPT1 checkpoint; --mmap needs the aligned CPT2 format \
+                 (re-save with --save-compressed)"
+            );
             let model = Self::from_tensor_file(&TensorFile::load(path)?)?;
-            Ok((model, CheckpointInfo { format: "cpt1", plan: None }))
+            Ok((model, CheckpointInfo { format: "cpt1", plan: None, source: "owned" }))
         } else {
             anyhow::bail!(
                 "{path:?}: unknown checkpoint magic {magic:?} (expected CPT1 or CPT2)"
             )
         }
     }
+
+    /// Total bytes the model's weight buffers borrow from checkpoint
+    /// mappings (0 for an owned model) — the complement of
+    /// [`resident_weight_bytes`](Model::resident_weight_bytes).
+    pub fn mapped_weight_bytes(&self) -> usize {
+        let mut bytes = self.embed.mapped_bytes() + self.lm_head.mapped_bytes();
+        for stage in &self.stages {
+            match stage {
+                Stage::Block(b) => {
+                    for p in ProjKind::DECODER_SET {
+                        bytes += b.proj(p).mapped_bytes();
+                    }
+                }
+                Stage::Linear(t) => bytes += t.mapped_bytes(),
+            }
+        }
+        bytes
+    }
+
+    /// Whether any weight buffer is a zero-copy view into a checkpoint
+    /// mapping.
+    pub fn weights_mapped(&self) -> bool {
+        self.mapped_weight_bytes() > 0
+    }
+}
+
+/// Read and bound the `CPT2` preamble: magic, header JSON, aligned
+/// data-region start. Touches only the header bytes — the payload stays
+/// unread (and, for mapped opens, unpaged).
+fn read_header(f: &mut std::fs::File, path: &Path) -> anyhow::Result<(Json, u64, u64)> {
+    let file_len = f.metadata()?.len();
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "bad magic in {path:?} (not a CPT2 checkpoint)");
+    let mut len4 = [0u8; 4];
+    f.read_exact(&mut len4)?;
+    let hlen = u32::from_le_bytes(len4) as u64;
+    // Validate the header length against the actual file size *before*
+    // allocating — a corrupt length must not drive a huge allocation.
+    anyhow::ensure!(
+        8 + hlen <= file_len,
+        "header length {hlen} exceeds file size {file_len} — truncated checkpoint"
+    );
+    let mut hbytes = vec![0u8; hlen as usize];
+    f.read_exact(&mut hbytes)?;
+    let header = Json::parse(std::str::from_utf8(&hbytes)?)
+        .map_err(|e| anyhow::anyhow!("bad checkpoint header json: {e}"))?;
+    let data_start = align_up(8 + hlen as usize, ALIGN) as u64;
+    anyhow::ensure!(data_start <= file_len, "truncated checkpoint (no data region)");
+    Ok((header, data_start, file_len))
+}
+
+/// Version/config/geometry checks shared by both load paths.
+fn validate_header(header: &Json) -> anyhow::Result<(ModelConfig, Option<String>)> {
+    let version = header.get("version").and_then(Json::as_usize).unwrap_or(0);
+    anyhow::ensure!(
+        version == VERSION,
+        "unsupported CPT2 version {version} (this build reads version {VERSION})"
+    );
+    let cfg = ModelConfig::from_json(
+        header.get("config").ok_or_else(|| anyhow::anyhow!("checkpoint has no config"))?,
+    )?;
+    // head_dim() divides by n_heads — reject a config that would panic.
+    anyhow::ensure!(
+        cfg.n_heads >= 1 && cfg.d_model >= 1 && cfg.d_model % cfg.n_heads == 0,
+        "checkpoint config has invalid head geometry (d_model {}, n_heads {})",
+        cfg.d_model,
+        cfg.n_heads
+    );
+    let plan = header.get("plan").and_then(Json::as_str).map(String::from);
+    Ok((cfg, plan))
+}
+
+/// Construct the model from a validated header plus a section reader —
+/// the one stage-walking body both the copying and the zero-copy loader
+/// run, so the two paths cannot drift.
+fn read_model(cfg: ModelConfig, header: &Json, sr: &SectionReader) -> anyhow::Result<Model> {
+    let d = cfg.d_model;
+    let embed = sr.mat("embed", cfg.vocab, d)?;
+    let lm_head = sr.mat("lm_head", d, cfg.vocab)?;
+    let final_norm = sr.vec_f32("final_norm", d)?;
+    let mut stages = Vec::new();
+    for (i, sj) in header
+        .get("stages")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("checkpoint header has no 'stages' array"))?
+        .iter()
+        .enumerate()
+    {
+        match sj.get("kind").and_then(Json::as_str) {
+            Some("block") => {
+                let n_heads = sj
+                    .get("n_heads")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("stage {i}: missing n_heads"))?;
+                let n_kv_heads = sj
+                    .get("n_kv_heads")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("stage {i}: missing n_kv_heads"))?;
+                anyhow::ensure!(
+                    n_kv_heads >= 1 && n_heads >= n_kv_heads && n_heads % n_kv_heads == 0,
+                    "stage {i}: invalid head counts {n_heads}/{n_kv_heads}"
+                );
+                let projs = sj
+                    .get("projections")
+                    .ok_or_else(|| anyhow::anyhow!("stage {i}: missing projections"))?;
+                let get = |p: ProjKind| -> anyhow::Result<LinearWeight> {
+                    let base = format!("stages.{i}.{}", p.group());
+                    let meta = projs.get(p.group()).ok_or_else(|| {
+                        anyhow::anyhow!("stage {i}: missing projection '{}'", p.group())
+                    })?;
+                    read_weight(sr, &base, meta)
+                };
+                let block = Block {
+                    attn_norm: sr.vec_f32(&format!("stages.{i}.attn_norm"), d)?,
+                    q: get(ProjKind::Q)?,
+                    k: get(ProjKind::K)?,
+                    v: get(ProjKind::V)?,
+                    o: get(ProjKind::O)?,
+                    mlp_norm: sr.vec_f32(&format!("stages.{i}.mlp_norm"), d)?,
+                    gate: get(ProjKind::Gate)?,
+                    up: get(ProjKind::Up)?,
+                    down: get(ProjKind::Down)?,
+                    n_heads,
+                    n_kv_heads,
+                };
+                validate_block_shapes(i, &block, d, cfg.head_dim())?;
+                stages.push(Stage::Block(block));
+            }
+            Some("linear") => {
+                let rows = sj
+                    .get("rows")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("stage {i}: missing rows"))?;
+                let cols = sj
+                    .get("cols")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("stage {i}: missing cols"))?;
+                anyhow::ensure!(
+                    rows == d && cols == d,
+                    "stage {i}: linear shape {rows}x{cols} does not preserve the \
+                     d={d} residual stream"
+                );
+                stages.push(Stage::Linear(sr.mat(&format!("stages.{i}.linear"), rows, cols)?));
+            }
+            other => anyhow::bail!("stage {i}: unknown stage kind {other:?}"),
+        }
+    }
+    Ok(Model { cfg, embed, stages, final_norm, lm_head })
+}
+
+// ---------------------------------------------------------------------------
+// MappedCheckpoint: open/validate once, serve zero-copy models.
+// ---------------------------------------------------------------------------
+
+/// A CPT2 checkpoint opened for zero-copy serving: the file is mapped once,
+/// the header is parsed and validated once, and
+/// [`load_model`](MappedCheckpoint::load_model) builds a [`Model`] whose
+/// weight buffers point straight into the mapping. Section CRCs are checked
+/// lazily — a corrupt payload surfaces as an error from `load_model`, while
+/// `open` itself touches only header bytes (this is also what makes the
+/// `compot info <ckpt>` fast path free).
+pub struct MappedCheckpoint {
+    map: Arc<Mapping>,
+    header: Json,
+    data_start: usize,
+    cfg: ModelConfig,
+    plan: Option<String>,
+}
+
+impl MappedCheckpoint {
+    /// Map the file and validate the header (magic, version, config
+    /// geometry, data-region bounds). No section payload is read or
+    /// CRC-checked here.
+    pub fn open(path: &Path) -> anyhow::Result<MappedCheckpoint> {
+        let mut f = std::fs::File::open(path)?;
+        let (header, data_start, _) = read_header(&mut f, path)?;
+        drop(f);
+        let (cfg, plan) = validate_header(&header)?;
+        let map = Mapping::open(path)?;
+        // The mapping is taken after the header read; guard against the file
+        // shrinking in between (the section table is bounds-checked against
+        // the mapping again in SectionReader::new).
+        anyhow::ensure!(
+            data_start as usize <= map.len(),
+            "checkpoint truncated while opening (data region past mapped {} B)",
+            map.len()
+        );
+        Ok(MappedCheckpoint { map, header, data_start: data_start as usize, cfg, plan })
+    }
+
+    /// Model config recorded in the header.
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    /// Compression-plan provenance recorded at save time.
+    pub fn plan(&self) -> Option<&str> {
+        self.plan.as_deref()
+    }
+
+    /// The raw parsed header (config, stages, sections) — what the
+    /// `compot info` fast path formats without loading any payload.
+    pub fn header(&self) -> &Json {
+        &self.header
+    }
+
+    /// Whether the backing store is a true `mmap` (page-cache shared)
+    /// rather than the aligned heap-read fallback.
+    pub fn is_mmap(&self) -> bool {
+        self.map.is_mmap()
+    }
+
+    /// Construct the model with every weight buffer pointing into the
+    /// mapping. Each section's CRC is verified (lazily, here) before its
+    /// view is handed out; reconstruction goes through the same fallible
+    /// constructors as the copying loader.
+    pub fn load_model(&self) -> anyhow::Result<(Model, CheckpointInfo)> {
+        let sr = SectionReader::new(
+            &self.header,
+            Payload::Mapped { map: self.map.clone(), start: self.data_start },
+        )?;
+        let model = read_model(self.cfg.clone(), &self.header, &sr)?;
+        // Report the fallback honestly: an operator sizing N serve workers
+        // must know whether the model is page-cache-shared or a private
+        // heap copy per process.
+        let source = if self.map.is_mmap() { "mmap" } else { "mmap-fallback" };
+        Ok((model, CheckpointInfo { format: "cpt2", plan: self.plan.clone(), source }))
+    }
+}
+
+/// One-line-per-stage summary of a CPT2 header — variant tags, shapes, and
+/// bit widths straight from the JSON, no section payload touched. The
+/// `compot info <checkpoint>` fast path prints this.
+pub fn header_summary(header: &Json) -> String {
+    let mut out = String::new();
+    let cfg_name = header
+        .get("config")
+        .and_then(|c| c.get("name"))
+        .and_then(Json::as_str)
+        .unwrap_or("?");
+    out.push_str(&format!(
+        "config: {cfg_name} | version {} | plan {}\n",
+        header.get("version").and_then(Json::as_usize).unwrap_or(0),
+        header.get("plan").and_then(Json::as_str).unwrap_or("none recorded"),
+    ));
+    let Some(stages) = header.get("stages").and_then(Json::as_arr) else {
+        out.push_str("(no stages array)\n");
+        return out;
+    };
+    for (i, sj) in stages.iter().enumerate() {
+        match sj.get("kind").and_then(Json::as_str) {
+            Some("block") => {
+                out.push_str(&format!(
+                    "stage {i:>3} block ({}h/{}kv):",
+                    sj.get("n_heads").and_then(Json::as_usize).unwrap_or(0),
+                    sj.get("n_kv_heads").and_then(Json::as_usize).unwrap_or(0)
+                ));
+                if let Some(projs) = sj.get("projections") {
+                    for p in ProjKind::DECODER_SET {
+                        let Some(meta) = projs.get(p.group()) else { continue };
+                        let variant = meta.get("variant").and_then(Json::as_str).unwrap_or("?");
+                        let dim = |k: &str| meta.get(k).and_then(Json::as_usize);
+                        let shape = match variant {
+                            "dense" | "quant_dense" => format!(
+                                "{}x{}",
+                                dim("rows").unwrap_or(0),
+                                dim("cols").unwrap_or(0)
+                            ),
+                            "low_rank" | "quant_low_rank" => format!(
+                                "{}x{}x{}",
+                                dim("m").unwrap_or(0),
+                                dim("r").unwrap_or(0),
+                                dim("n").unwrap_or(0)
+                            ),
+                            _ => format!(
+                                "{}x{}x{} s{}",
+                                dim("m").unwrap_or(0),
+                                dim("k").unwrap_or(0),
+                                dim("n").unwrap_or(0),
+                                dim("s").unwrap_or(0)
+                            ),
+                        };
+                        let mut bits = String::new();
+                        for key in ["bits", "bits_b", "bits_c", "bits_a", "bits_val"] {
+                            if let Some(b) = dim(key) {
+                                if !bits.is_empty() {
+                                    bits.push('/');
+                                }
+                                bits.push_str(&b.to_string());
+                            }
+                        }
+                        let group = ["group", "group_b", "group_a"]
+                            .iter()
+                            .find_map(|k| dim(k))
+                            .map(|g| format!(" g{g}"))
+                            .unwrap_or_default();
+                        if bits.is_empty() {
+                            out.push_str(&format!(" {}={variant}[{shape}]", p.group()));
+                        } else {
+                            out.push_str(&format!(
+                                " {}={variant}[{shape} @{bits}b{group}]",
+                                p.group()
+                            ));
+                        }
+                    }
+                }
+                out.push('\n');
+            }
+            Some("linear") => {
+                out.push_str(&format!(
+                    "stage {i:>3} linear {}x{}\n",
+                    sj.get("rows").and_then(Json::as_usize).unwrap_or(0),
+                    sj.get("cols").and_then(Json::as_usize).unwrap_or(0)
+                ));
+            }
+            other => out.push_str(&format!("stage {i:>3} unknown kind {other:?}\n")),
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -777,6 +1126,211 @@ mod tests {
             assert_identical(&m, &back);
             std::fs::remove_file(&path).ok();
         }
+    }
+
+    /// Bit-identity without the resident-bytes check — a mapped model keeps
+    /// its weights in the file mapping, so residency *should* differ.
+    fn assert_same_weights(a: &Model, b: &Model) {
+        assert_eq!(a.cfg, b.cfg);
+        assert_eq!(a.storage_bits(), b.storage_bits());
+        assert_eq!(a.stages.len(), b.stages.len());
+        for (sa, sb) in a.stages.iter().zip(b.stages.iter()) {
+            match (sa, sb) {
+                (Stage::Block(ba), Stage::Block(bb)) => {
+                    assert_eq!(ba.attn_norm, bb.attn_norm);
+                    assert_eq!(ba.mlp_norm, bb.mlp_norm);
+                    for p in ProjKind::DECODER_SET {
+                        assert_eq!(ba.proj(p), bb.proj(p), "{p:?}");
+                    }
+                }
+                (Stage::Linear(ta), Stage::Linear(tb)) => assert_eq!(ta, tb),
+                _ => panic!("stage kind changed across the round trip"),
+            }
+        }
+        let prompt = [1u16, 2, 3, 4];
+        assert_eq!(a.greedy_decode(&prompt, 8), b.greedy_decode(&prompt, 8));
+    }
+
+    #[test]
+    fn mmap_load_is_bit_identical_across_all_variants() {
+        // The tentpole acceptance matrix: for every LinearWeight variant,
+        // the zero-copy loader reproduces the copying loader bit for bit
+        // (WeightBuf equality is content equality across owned/mapped) and
+        // decodes token-identically, while keeping the big buffers in the
+        // mapping instead of on the heap.
+        for (spec, name) in [
+            ("svd-llm@0.2", "m_lowrank"),
+            ("compot@0.25", "m_factorized"),
+            ("rtn4", "m_quant_dense"),
+            ("svd-llm@0.2+rtn4", "m_quant_lowrank"),
+            ("compot@0.25+gptq4", "m_quant_factorized"),
+        ] {
+            let m = compressed(spec);
+            let path = tmp(&format!("{name}.cpt2"));
+            m.save_compressed(&path, Some(spec)).unwrap();
+            let (owned, oinfo) = Model::load_compressed(&path).unwrap();
+            let (mapped, minfo) = Model::load_compressed_mmap(&path).unwrap();
+            assert_eq!(oinfo.source, "owned", "{spec}");
+            assert!(minfo.source.starts_with("mmap"), "{spec}: {}", minfo.source);
+            assert_eq!(minfo.plan.as_deref(), Some(spec), "{spec}");
+            assert_same_weights(&m, &owned);
+            assert_same_weights(&owned, &mapped);
+            // mapping-aware accounting. On a true mmap the mapped model's
+            // projections live in shared file-backed pages, not the heap;
+            // on the heap-read fallback ("mmap-fallback") they are private
+            // memory and must be reported as resident. Either way the two
+            // numbers add up to the owned footprint.
+            assert!(!owned.weights_mapped(), "{spec}");
+            if minfo.source == "mmap" {
+                assert!(mapped.weights_mapped(), "{spec}");
+                assert!(mapped.mapped_weight_bytes() > 0, "{spec}");
+                assert!(
+                    mapped.resident_weight_bytes() < owned.resident_weight_bytes(),
+                    "{spec}: mapped model should keep weight bytes off the heap"
+                );
+            } else {
+                assert_eq!(mapped.mapped_weight_bytes(), 0, "{spec}");
+            }
+            assert_eq!(
+                mapped.resident_weight_bytes() + mapped.mapped_weight_bytes(),
+                owned.resident_weight_bytes(),
+                "{spec}: resident + mapped must add up to the owned footprint"
+            );
+            std::fs::remove_file(&path).ok();
+        }
+        // the dense (uncompressed) variant round-trips through the zero-copy
+        // loader too
+        let m = tiny();
+        let path = tmp("m_dense.cpt2");
+        m.save_compressed(&path, None).unwrap();
+        let (mapped, minfo) = Model::load_compressed_mmap(&path).unwrap();
+        assert_same_weights(&m, &mapped);
+        assert!(minfo.source.starts_with("mmap"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn mapped_open_defers_crc_to_load() {
+        // Lazy per-section CRC: a corrupt payload does not stop the
+        // header-only open (that is the `compot info` fast path), but the
+        // first load that touches the section must fail its checksum.
+        let m = compressed("rtn4");
+        let path = tmp("lazycrc.cpt2");
+        m.save_compressed(&path, None).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let ck = MappedCheckpoint::open(&path).expect("open is header-only, must succeed");
+        let err = ck.load_model().unwrap_err().to_string();
+        assert!(err.contains("crc mismatch"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn misaligned_section_offset_is_a_structural_error() {
+        // A header claiming a non-ALIGN-multiple offset would hand out a
+        // misaligned f32 view — the mmap path must reject it as such (not
+        // panic, not reinterpret).
+        let m = tiny();
+        let path = tmp("misaligned.cpt2");
+        m.save_compressed(&path, None).unwrap();
+        mangle_header(&path, "\"name\":\"embed\",\"offset\":0", "\"name\":\"embed\",\"offset\":2");
+        let err = Model::load_compressed_mmap(&path).unwrap_err().to_string();
+        assert!(err.contains("misaligned"), "{err}");
+        // the copying loader flags the same corruption as a checksum error
+        let err = Model::load_compressed(&path).unwrap_err().to_string();
+        assert!(err.contains("crc mismatch"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_mapping_is_an_error() {
+        let m = compressed("rtn4");
+        let path = tmp("mtrunc.cpt2");
+        m.save_compressed(&path, None).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 97]).unwrap();
+        let err = Model::load_compressed_mmap(&path).unwrap_err().to_string();
+        assert!(
+            err.contains("runs past the data region") || err.contains("crc mismatch"),
+            "{err}"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn cpt1_rejects_mmap_cleanly() {
+        let m = tiny();
+        let path = tmp("old_mmap.cpt1");
+        m.save(&path).unwrap();
+        let err = Model::load_checkpoint_with(&path, true).unwrap_err().to_string();
+        assert!(err.contains("CPT1"), "{err}");
+        // without --mmap the CPT1 path still loads
+        assert!(Model::load_checkpoint_with(&path, false).is_ok());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn group_size_roundtrips_through_the_header() {
+        // Non-default quantization groups must survive save → load on both
+        // paths: the header records each packed tensor's group, the loader
+        // reconstructs the exact layout, decode stays token-identical.
+        for (spec, want_group) in
+            [("rtn4,group_size=64", 64usize), ("compot@0.25+gptq4,group_size=256", 256)]
+        {
+            let m = compressed(spec);
+            let path = tmp(&format!("group{want_group}.cpt2"));
+            m.save_compressed(&path, Some(spec)).unwrap();
+            for mmap in [false, true] {
+                let (back, _) = Model::load_checkpoint_with(&path, mmap).unwrap();
+                assert_same_weights(&m, &back);
+                let Stage::Block(b) = &back.stages[0] else { panic!("no block") };
+                match &b.q {
+                    LinearWeight::QuantDense(q) => assert_eq!(q.group(), want_group, "{spec}"),
+                    LinearWeight::QuantFactorized { a, s } => {
+                        assert_eq!(a.group(), want_group, "{spec}");
+                        assert_eq!(s.values_qmat().group(), want_group, "{spec}");
+                    }
+                    other => panic!("{spec}: unexpected variant {other:?}"),
+                }
+            }
+            std::fs::remove_file(&path).ok();
+        }
+        // an unsupported group size in the header is an error, not a panic
+        let m = compressed("rtn4");
+        let path = tmp("badgroup.cpt2");
+        m.save_compressed(&path, None).unwrap();
+        mangle_header(&path, "\"group\":128", "\"group\":100");
+        let err = Model::load_compressed(&path).unwrap_err().to_string();
+        assert!(err.contains("group"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn header_summary_reads_no_payload() {
+        let m = compressed("compot@0.25+gptq4");
+        let path = tmp("summary.cpt2");
+        m.save_compressed(&path, Some("compot@0.25+gptq4")).unwrap();
+        let ck = MappedCheckpoint::open(&path).unwrap();
+        assert_eq!(ck.plan(), Some("compot@0.25+gptq4"));
+        assert_eq!(ck.config().name, "test-tiny");
+        let summary = header_summary(ck.header());
+        assert!(summary.contains("quant_factorized"), "{summary}");
+        assert!(summary.contains("test-tiny"), "{summary}");
+        assert!(summary.contains("g128"), "{summary}");
+        // the fast path works even when every payload byte is corrupt
+        let mut bytes = std::fs::read(&path).unwrap();
+        let hlen = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
+        let data_start = (8 + hlen).div_ceil(ALIGN) * ALIGN;
+        for b in bytes[data_start..].iter_mut() {
+            *b = 0xaa;
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let ck = MappedCheckpoint::open(&path).unwrap();
+        assert!(header_summary(ck.header()).contains("quant_factorized"));
+        assert!(ck.load_model().is_err(), "corrupt payload must still fail the real load");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

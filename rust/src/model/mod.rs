@@ -21,6 +21,6 @@ pub mod transformer;
 pub mod weights;
 
 pub use config::{ModelConfig, ProjKind};
-pub use cpt2::CheckpointInfo;
+pub use cpt2::{CheckpointInfo, MappedCheckpoint};
 pub use decode::{DecodeSession, KvCache, Sampler, SamplerCfg};
 pub use transformer::{Block, Model};

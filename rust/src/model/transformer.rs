@@ -429,16 +429,20 @@ impl Model {
         bits
     }
 
-    /// Actual resident bytes of every weight buffer: embed, LM head, and
-    /// norms at 4 B/f32, and each projection in its *stored* representation
-    /// — packed-quantized projections count their real packed size (codes +
-    /// f16 scales + sparse indices). This is the memory-bandwidth quantity
-    /// the `quant_decode` benchmark gates on, as opposed to the paper's
-    /// [`storage_bits`](Self::storage_bits) accounting protocol.
+    /// Actual resident *heap* bytes of every weight buffer: embed, LM head,
+    /// and norms at 4 B/f32, and each projection in its *stored*
+    /// representation — packed-quantized projections count their real
+    /// packed size (codes + f16 scales + sparse indices). Mapping-aware: a
+    /// checkpoint-mapped buffer occupies shared file-backed pages, not
+    /// process heap, so it counts toward
+    /// [`mapped_weight_bytes`](Self::mapped_weight_bytes) instead. This is
+    /// the memory-bandwidth quantity the `quant_decode` benchmark gates on,
+    /// as opposed to the paper's [`storage_bits`](Self::storage_bits)
+    /// accounting protocol.
     pub fn resident_weight_bytes(&self) -> usize {
-        let mut bytes = 4 * (self.embed.rows() * self.embed.cols()
-            + self.lm_head.rows() * self.lm_head.cols()
-            + self.final_norm.len());
+        let mut bytes = self.embed.resident_bytes()
+            + self.lm_head.resident_bytes()
+            + 4 * self.final_norm.len();
         for stage in &self.stages {
             match stage {
                 Stage::Block(b) => {
@@ -447,7 +451,7 @@ impl Model {
                         bytes += b.proj(p).resident_bytes();
                     }
                 }
-                Stage::Linear(t) => bytes += 4 * t.rows() * t.cols(),
+                Stage::Linear(t) => bytes += t.resident_bytes(),
             }
         }
         bytes

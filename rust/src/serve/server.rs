@@ -115,14 +115,24 @@ pub fn serve_blocking(
     on_ready(listener.local_addr()?);
 
     // The server always knows its real memory footprint: packed-quantized
-    // models report the bytes actually resident, not the fp16 accounting.
+    // models report the bytes actually resident, and mmap-loaded models
+    // split that into heap-resident vs mapping-borrowed (page-cache-shared)
+    // bytes — the numbers capacity planning across serve workers needs.
     let mut info = info;
     info.set("resident_weight_bytes", model.resident_weight_bytes().into());
-    // Where the weights came from: a cold-loaded compressed checkpoint
-    // (launcher set "checkpoint") or an in-process model — so operators can
-    // tell a CPT2-restored server from one that recompressed at startup.
+    info.set("mapped_weight_bytes", model.mapped_weight_bytes().into());
+    // Where the weights came from: zero-copy checkpoint mapping ("mmap"),
+    // a cold-loaded compressed checkpoint (launcher set "checkpoint"), or
+    // an in-process model — so operators can tell a CPT2-restored server
+    // from one that recompressed at startup.
     if info.get("weights_source").is_none() {
-        let src = if info.get("checkpoint").is_some() { "checkpoint" } else { "in-memory" };
+        let src = if model.weights_mapped() {
+            "mmap"
+        } else if info.get("checkpoint").is_some() {
+            "checkpoint"
+        } else {
+            "in-memory"
+        };
         info.set("weights_source", src.into());
     }
     let info = Arc::new(info);
@@ -435,6 +445,66 @@ mod tests {
         assert_eq!(got.get("weights_source").and_then(Json::as_str), Some("in-memory"));
         client.shutdown().unwrap();
         server.join().unwrap();
+    }
+
+    #[test]
+    fn mmap_loaded_server_is_token_identical_to_owned() {
+        // The serve-smoke contract behind `--load-compressed --mmap`: a
+        // server whose weights are zero-copy views into the checkpoint
+        // mapping answers every request with exactly the tokens the
+        // owned-load server produces, and reports weights_source "mmap"
+        // with a real mapped-bytes figure.
+        use crate::compress::StageConfig;
+        use crate::coordinator::plan::CompressionPlan;
+        use crate::data::SynthLang;
+
+        let base = Model::random(&ModelConfig::test_tiny(), &mut Rng::new(21));
+        let lang = SynthLang::wiki(base.cfg.vocab);
+        let calib = lang.gen_batch(6, 48, &mut Rng::new(22));
+        let plan = CompressionPlan::parse("compot@0.25+gptq4", &StageConfig::new(0.25, false))
+            .unwrap();
+        let compressed = plan.run(&base, &calib).unwrap().0;
+        let dir = std::env::temp_dir().join("compot_serve_mmap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("serve.cpt2");
+        compressed.save_compressed(&path, Some("compot@0.25+gptq4")).unwrap();
+
+        let (owned, _) = Model::load_compressed(&path).unwrap();
+        let (mapped, ck) = Model::load_compressed_mmap(&path).unwrap();
+        // on hosts without working mmap the loader takes its documented
+        // heap fallback; parity must hold either way, the info assertions
+        // below only apply to a true mapping
+        assert!(ck.source.starts_with("mmap"), "{}", ck.source);
+        let true_mmap = ck.source == "mmap";
+        let prompts: [&[u16]; 3] = [&[1, 2, 3], &[7, 8, 9, 10], &[5]];
+        let expected: Vec<Vec<u16>> =
+            prompts.iter().map(|p| owned.greedy_decode(p, 6)).collect();
+
+        let (addr_tx, addr_rx) = mpsc::channel();
+        let mapped = Arc::new(mapped);
+        let server = {
+            let mapped = mapped.clone();
+            std::thread::spawn(move || {
+                serve_blocking(mapped, "127.0.0.1:0", BatchPolicy::default(), Json::obj(), |a| {
+                    addr_tx.send(a).unwrap();
+                })
+                .unwrap();
+            })
+        };
+        let addr = addr_rx.recv().unwrap();
+        let mut client = Client::connect(addr).unwrap();
+        let info = client.info().unwrap();
+        if true_mmap {
+            assert_eq!(info.get("weights_source").and_then(Json::as_str), Some("mmap"));
+            assert!(info.get("mapped_weight_bytes").and_then(Json::as_usize).unwrap() > 0);
+        }
+        for (p, want) in prompts.iter().zip(expected.iter()) {
+            let got = client.request(p, 6).unwrap().tokens;
+            assert_eq!(&got, want, "mmap-served continuation diverged for {p:?}");
+        }
+        client.shutdown().unwrap();
+        server.join().unwrap();
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -249,15 +249,24 @@ fn cpt2_roundtrip_preserves_every_variant_and_decode() {
         let (reloaded, info) = Model::load_checkpoint(&path).unwrap();
         let label = spec.unwrap_or("dense");
         assert_eq!(info.format, "cpt2", "{label}");
+        assert_eq!(info.source, "owned", "{label}");
         assert_eq!(info.plan.as_deref(), spec.as_deref(), "{label}");
+        // ... and through the zero-copy loader: WeightBuf equality is
+        // content equality, so the same assertions hold with the weights
+        // living in the file mapping instead of the heap.
+        let (mapped, minfo) = Model::load_compressed_mmap(&path).unwrap();
+        assert!(minfo.source.starts_with("mmap"), "{label}: {}", minfo.source);
         // bit-identical buffers, variant tags included
         assert_eq!(reloaded.stages.len(), compressed.stages.len(), "{label}");
-        for (sa, sb) in compressed.stages.iter().zip(reloaded.stages.iter()) {
-            let (Stage::Block(ba), Stage::Block(bb)) = (sa, sb) else {
+        for ((sa, sb), sm) in
+            compressed.stages.iter().zip(reloaded.stages.iter()).zip(mapped.stages.iter())
+        {
+            let (Stage::Block(ba), Stage::Block(bb), Stage::Block(bm)) = (sa, sb, sm) else {
                 panic!("{label}: stage kind changed");
             };
             for p in ProjKind::DECODER_SET {
                 assert_eq!(ba.proj(p), bb.proj(p), "{label}: {p:?} buffers differ");
+                assert_eq!(ba.proj(p), bm.proj(p), "{label}: {p:?} mmap buffers differ");
             }
         }
         // equal measured footprint, token-identical KV-cached greedy decode
@@ -270,6 +279,24 @@ fn cpt2_roundtrip_preserves_every_variant_and_decode() {
             reloaded.greedy_decode(&prompt, 10),
             compressed.greedy_decode(&prompt, 10),
             "{label}: reloaded checkpoint decode diverged"
+        );
+        // the mapped model decodes identically while keeping its weight
+        // bytes in the (page-cache-shared) mapping, not the heap
+        assert_eq!(
+            mapped.greedy_decode(&prompt, 10),
+            compressed.greedy_decode(&prompt, 10),
+            "{label}: mmap-loaded checkpoint decode diverged"
+        );
+        // true mmap keeps the weights in shared file-backed pages; the
+        // heap-read fallback ("mmap-fallback") honestly reports them as
+        // resident private memory instead
+        if minfo.source == "mmap" {
+            assert!(mapped.weights_mapped(), "{label}");
+        }
+        assert_eq!(
+            mapped.resident_weight_bytes() + mapped.mapped_weight_bytes(),
+            reloaded.resident_weight_bytes(),
+            "{label}: mapped + resident must add up to the owned footprint"
         );
         std::fs::remove_file(&path).ok();
     }

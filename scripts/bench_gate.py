@@ -12,6 +12,14 @@ positive number — "pending" placeholder baselines with zeros gate nothing):
 - size keys (any key containing ``resident_bytes`` or equal to
   ``checkpoint_file_bytes``): fresh must not exceed the baseline — packed
   bytes growing is a regression regardless of speed;
+- speedup-floor keys (any key ending in ``_speedup``): fresh must be >=
+  the baseline. These are machine-independent invariants (cached decode
+  beats uncached, cold load beats recompress, mmap load beats the copying
+  load), so a committed floor of 1.0 gates on every machine;
+- ratio-ceiling keys (any key containing ``_ratio``): fresh must be <=
+  the baseline (packed bytes vs dense, per-step cost scaling) — again
+  machine-independent, so a real ceiling can be committed without running
+  the bench on CI hardware first;
 - boolean gate keys (parity / round-trip flags): a baseline of true must
   stay true.
 
@@ -35,6 +43,14 @@ def is_size(key):
     return "resident_bytes" in key or key == "checkpoint_file_bytes"
 
 
+def is_speedup_floor(key):
+    return key.endswith("_speedup")
+
+
+def is_ratio_ceiling(key):
+    return "_ratio" in key
+
+
 def compare(name, base, fresh):
     failures = []
     checked = 0
@@ -43,9 +59,10 @@ def compare(name, base, fresh):
             continue
         fval = fresh[key]
         if isinstance(bval, bool):
-            if bval and not fval:
-                failures.append(f"{name}: gate '{key}' flipped true -> false")
+            if bval:  # a false baseline is a pending placeholder
                 checked += 1
+                if not fval:
+                    failures.append(f"{name}: gate '{key}' flipped true -> false")
             continue
         if not isinstance(bval, (int, float)) or bval <= 0:
             continue  # pending placeholder or non-numeric: nothing to gate
@@ -56,6 +73,20 @@ def compare(name, base, fresh):
                 failures.append(
                     f"{name}: '{key}' regressed {bval:.1f} -> {fval:.1f} tok/s "
                     f"(> {TOLERANCE:.0%} drop)"
+                )
+        elif is_speedup_floor(key):
+            checked += 1
+            if fval < bval:
+                failures.append(
+                    f"{name}: '{key}' fell below its committed floor "
+                    f"({fval:.3f} < {bval:.3f})"
+                )
+        elif is_ratio_ceiling(key):
+            checked += 1
+            if fval > bval:
+                failures.append(
+                    f"{name}: '{key}' exceeded its committed ceiling "
+                    f"({fval:.3f} > {bval:.3f})"
                 )
         elif is_size(key):
             checked += 1
