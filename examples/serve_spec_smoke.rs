@@ -1,0 +1,105 @@
+//! Serve smoke for speculative decoding — what CI runs to prove
+//! `compot serve --load-compressed <target> --draft <draft>` end to end
+//! without needing `make artifacts`: it builds a tiny model in-process,
+//! saves it dense as the target and rtn4-compressed as the draft, serves
+//! both from one process, and asserts every spec-tier response is
+//! token-identical to the full-tier response from the same server (exit
+//! code is the assertion).
+//!
+//! Run: cargo run --release --example serve_spec_smoke
+
+use compot::compress::StageConfig;
+use compot::coordinator::plan::CompressionPlan;
+use compot::data::SynthLang;
+use compot::model::config::ModelConfig;
+use compot::model::Model;
+use compot::serve::server::Client;
+use compot::serve::{serve_blocking_tiers, BatchPolicy};
+use compot::util::json::Json;
+use compot::util::Rng;
+use std::sync::{mpsc, Arc};
+
+const DRAFT_PLAN: &str = "rtn4";
+const DRAFT_K: usize = 4;
+
+fn main() -> anyhow::Result<()> {
+    // --- one network, two fidelity points: dense target + rtn4 draft ---
+    let target = Model::random(&ModelConfig::test_tiny(), &mut Rng::new(41));
+    let lang = SynthLang::wiki(target.cfg.vocab);
+    let calib = lang.gen_batch(6, 48, &mut Rng::new(42));
+    let plan = CompressionPlan::parse(DRAFT_PLAN, &StageConfig::new(0.25, false))?;
+    let (draft, _) = plan.run(&target, &calib)?;
+    // Round-trip both through CPT2 the way a real `--draft` launch would.
+    let tdir = std::env::temp_dir();
+    let target_path = tdir.join("compot_spec_smoke_target.cpt2");
+    let draft_path = tdir.join("compot_spec_smoke_draft.cpt2");
+    target.save_compressed(&target_path, None)?;
+    draft.save_compressed(&draft_path, Some(DRAFT_PLAN))?;
+    let (target, _) = Model::load_compressed_mmap(&target_path)?;
+    let (draft, _) = Model::load_compressed_mmap(&draft_path)?;
+
+    // --- one process, three tiers ---
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let server = {
+        let target = Arc::new(target);
+        let draft = Arc::new(draft);
+        std::thread::spawn(move || {
+            serve_blocking_tiers(
+                target,
+                Some(draft),
+                DRAFT_K,
+                "127.0.0.1:0",
+                BatchPolicy::default(),
+                Json::obj(),
+                |a| {
+                    addr_tx.send(a).unwrap();
+                },
+            )
+            .unwrap();
+        })
+    };
+    let addr = addr_rx.recv()?;
+    let mut client = Client::connect(addr)?;
+    let info = client.info()?;
+    anyhow::ensure!(
+        info.get("tier_default").and_then(Json::as_str) == Some("spec"),
+        "a --draft server must default to the spec tier, got {info:?}"
+    );
+
+    // --- spec tier must be token-identical to full tier, per prompt ---
+    let prompts: Vec<Vec<u16>> = {
+        let mut rng = Rng::new(43);
+        (0..6).map(|_| lang.gen(12, &mut rng)).collect()
+    };
+    for p in &prompts {
+        let full = client.request_tier(p, 8, "full")?;
+        let spec = client.request_tier(p, 8, "spec")?;
+        anyhow::ensure!(full.tier == "full" && spec.tier == "spec", "tier tags wrong");
+        anyhow::ensure!(
+            spec.tokens == full.tokens,
+            "spec-tier continuation diverged from full tier for {p:?}: {:?} vs {:?}",
+            spec.tokens,
+            full.tokens
+        );
+        // the draft tier answers too (its own fidelity — no parity claim)
+        let draft_r = client.request_tier(p, 8, "draft")?;
+        anyhow::ensure!(draft_r.tokens.len() == 8, "draft tier truncated its response");
+    }
+
+    // --- acceptance metrics must be live in stats ---
+    let stats = client.stats()?;
+    let rounds = stats.get("spec_rounds").and_then(Json::as_usize).unwrap_or(0);
+    let rate = stats.get("acceptance_rate").and_then(Json::as_f64).unwrap_or(-1.0);
+    anyhow::ensure!(rounds >= prompts.len(), "expected spec rounds in stats, got {rounds}");
+    anyhow::ensure!((0.0..=1.0).contains(&rate), "acceptance_rate out of range: {rate}");
+    client.shutdown()?;
+    server.join().unwrap();
+    std::fs::remove_file(&target_path).ok();
+    std::fs::remove_file(&draft_path).ok();
+    println!(
+        "spec serve smoke ok: {} prompts spec==full from one server (acceptance {rate:.3}, \
+         {rounds} verify rounds)",
+        prompts.len()
+    );
+    Ok(())
+}

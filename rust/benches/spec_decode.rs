@@ -1,0 +1,142 @@
+//! Speculative-decoding benchmark: greedy parity (spec output vs the target
+//! alone — the correctness gate), acceptance rate for a 4-bit draft of the
+//! same network, and tok/s for the three serving tiers (draft-only,
+//! target-only, speculative).
+//!
+//! Run: `cargo bench --bench spec_decode` (add `-- --tiny` for the CI smoke
+//! run on the test-tiny config). Writes `BENCH_spec.json` (override the
+//! path with `BENCH_SPEC_OUT`).
+
+use compot::compress::LinearWeight;
+use compot::linalg::QuantMat;
+use compot::model::config::{ModelConfig, ProjKind};
+use compot::model::transformer::Stage;
+use compot::model::Model;
+use compot::serve::SpeculativeSession;
+use compot::util::json::Json;
+use compot::util::timer::bench;
+use compot::util::Rng;
+
+/// 4-bit-pack every dense projection: the cheap same-network draft the
+/// speculative tier is designed around (compare `rtn4` in the plan DSL).
+fn rtn4_draft(target: &Model) -> Model {
+    let mut d = target.clone();
+    for stage in d.stages.iter_mut() {
+        if let Stage::Block(b) = stage {
+            for p in ProjKind::DECODER_SET {
+                let packed = match b.proj(p) {
+                    LinearWeight::Dense(w) => Some(QuantMat::quantize_from(w, 4)),
+                    _ => None,
+                };
+                if let Some(q) = packed {
+                    *b.proj_mut(p) = LinearWeight::QuantDense(q);
+                }
+            }
+        }
+    }
+    d
+}
+
+fn spec_generate(target: &Model, draft: &Model, prompt: &[u16], gen: usize, k: usize) -> (Vec<u16>, u64, u64, u64) {
+    let mut s = SpeculativeSession::start(target, draft, prompt, gen, k);
+    while s.round(target, draft).is_some() {}
+    (s.generated().to_vec(), s.draft_proposed(), s.draft_accepted(), s.verify_rounds())
+}
+
+fn main() {
+    let tiny = std::env::args().any(|a| a == "--tiny");
+    let budget = std::env::var("BENCH_SECS").ok().and_then(|v| v.parse().ok()).unwrap_or(0.4);
+    let (cfg, prompt_len, gen_len) = if tiny {
+        (ModelConfig::test_tiny(), 12usize, 12usize)
+    } else {
+        (ModelConfig::llama_micro(), 32, 32)
+    };
+    let draft_k = 4usize;
+    let mut rng = Rng::new(77);
+    let target = Model::random(&cfg, &mut rng);
+    let draft = rtn4_draft(&target);
+    let prompt: Vec<u16> =
+        (0..prompt_len as u16).map(|i| (i * 7 + 1) % cfg.vocab as u16).collect();
+
+    // --- correctness gate: greedy spec output must be token-identical to
+    // the target alone, for the quantized draft AND a self-draft ---
+    let mut parity = true;
+    let mut proposed = 0u64;
+    let mut accepted = 0u64;
+    let mut rounds = 0u64;
+    for p0 in 0..4u16 {
+        let p: Vec<u16> = prompt.iter().map(|&t| (t + p0) % cfg.vocab as u16).collect();
+        let want = target.greedy_decode(&p, gen_len);
+        let (got, pr, ac, ro) = spec_generate(&target, &draft, &p, gen_len, draft_k);
+        parity &= got == want;
+        proposed += pr;
+        accepted += ac;
+        rounds += ro;
+    }
+    let acceptance = if proposed == 0 { 0.0 } else { accepted as f64 / proposed as f64 };
+    let tokens_per_forward = if rounds == 0 { 0.0 } else { accepted as f64 / rounds as f64 };
+    let (_, sp, sa, _) = spec_generate(&target, &target, &prompt, gen_len, draft_k);
+    let self_acceptance = if sp == 0 { 0.0 } else { sa as f64 / sp as f64 };
+    println!(
+        "parity {} | rtn4-draft acceptance {acceptance:.3} ({accepted}/{proposed}, \
+         {tokens_per_forward:.2} accepted tok/verify) | self-draft acceptance {self_acceptance:.3}",
+        if parity { "OK" } else { "FAILED" }
+    );
+
+    // --- tier throughputs ---
+    let st_target = bench(
+        || {
+            std::hint::black_box(target.greedy_decode(&prompt, gen_len));
+        },
+        budget,
+        500,
+    );
+    let st_draft = bench(
+        || {
+            std::hint::black_box(draft.greedy_decode(&prompt, gen_len));
+        },
+        budget,
+        500,
+    );
+    let st_spec = bench(
+        || {
+            std::hint::black_box(spec_generate(&target, &draft, &prompt, gen_len, draft_k));
+        },
+        budget,
+        500,
+    );
+    let target_tok_s = gen_len as f64 / st_target.median_s;
+    let draft_tok_s = gen_len as f64 / st_draft.median_s;
+    let spec_tok_s = gen_len as f64 / st_spec.median_s;
+    println!("{}", st_target.format(&format!("full tier: {gen_len} tokens ({})", cfg.name)));
+    println!("{}", st_draft.format(&format!("draft tier: {gen_len} tokens (rtn4)")));
+    println!("{}", st_spec.format(&format!("spec tier: {gen_len} tokens (k={draft_k})")));
+    println!(
+        "tier throughput: {target_tok_s:.0} full | {draft_tok_s:.0} draft | {spec_tok_s:.0} \
+         spec tok/s"
+    );
+
+    // --- record the trajectory point ---
+    let mut j = Json::obj();
+    j.set("bench", "spec_decode".into())
+        .set("model", cfg.name.as_str().into())
+        .set("prompt_len", prompt_len.into())
+        .set("gen_len", gen_len.into())
+        .set("draft_k", draft_k.into())
+        .set("spec_parity", Json::Bool(parity))
+        .set("acceptance_rate", acceptance.into())
+        .set("self_draft_acceptance_rate", self_acceptance.into())
+        .set("draft_tokens_per_target_forward", tokens_per_forward.into())
+        .set("decode_tok_s_target_only", target_tok_s.into())
+        .set("decode_tok_s_draft_only", draft_tok_s.into())
+        .set("decode_tok_s_spec", spec_tok_s.into());
+    let out = std::env::var("BENCH_SPEC_OUT").unwrap_or_else(|_| "BENCH_spec.json".into());
+    match std::fs::write(&out, j.to_string() + "\n") {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+    if !parity {
+        eprintln!("spec_parity FAILED: speculative output diverged from the target");
+        std::process::exit(1);
+    }
+}

@@ -81,6 +81,10 @@ mod sys {
     // mapping: serve workers mapping the same checkpoint share pages.
     pub const PROT_READ: i32 = 1;
     pub const MAP_SHARED: i32 = 1;
+    // madvise advice values — identical on Linux and macOS for these three.
+    pub const MADV_NORMAL: i32 = 0;
+    pub const MADV_SEQUENTIAL: i32 = 2;
+    pub const MADV_WILLNEED: i32 = 3;
     extern "C" {
         pub fn mmap(
             addr: *mut u8,
@@ -91,7 +95,25 @@ mod sys {
             offset: i64,
         ) -> *mut u8;
         pub fn munmap(addr: *mut u8, len: usize) -> i32;
+        pub fn madvise(addr: *mut u8, len: usize, advice: i32) -> i32;
+        pub fn getpagesize() -> i32;
     }
+}
+
+/// Paging hints for a byte range of a [`Mapping`] — a thin, always-safe
+/// wrapper over `madvise(2)`. Purely advisory: callers never depend on it
+/// for correctness, so on the heap fallback (and non-unix hosts) it is a
+/// no-op and errors from the syscall are ignored.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Advice {
+    /// Reset to the default readahead behavior.
+    Normal,
+    /// The range is about to be read front-to-back once (e.g. a CRC pass) —
+    /// aggressive readahead, early page reclaim.
+    Sequential,
+    /// The range will be needed soon (e.g. the embedding/LM-head sections a
+    /// serve worker touches on every request) — fault it in ahead of use.
+    WillNeed,
 }
 
 enum MapKind {
@@ -188,6 +210,42 @@ impl Mapping {
             #[cfg(unix)]
             MapKind::Mmap => true,
             MapKind::Heap(_) => false,
+        }
+    }
+
+    /// Apply a paging hint to `len` bytes starting `byte_offset` into the
+    /// mapping. Hint-only by design: the range is clamped to the mapping,
+    /// the start is rounded down to a page boundary (madvise requires it),
+    /// heap-fallback and non-unix mappings ignore the call entirely, and a
+    /// failing syscall is ignored — no load or serve path may *depend* on
+    /// readahead behavior.
+    pub fn advise(&self, byte_offset: usize, len: usize, advice: Advice) {
+        #[cfg(unix)]
+        {
+            if !matches!(self.kind, MapKind::Mmap) {
+                return;
+            }
+            let start = byte_offset.min(self.len);
+            let end = byte_offset.saturating_add(len).min(self.len);
+            if start >= end {
+                return;
+            }
+            let page = unsafe { sys::getpagesize() }.max(1) as usize;
+            let aligned = start - start % page;
+            let adv = match advice {
+                Advice::Normal => sys::MADV_NORMAL,
+                Advice::Sequential => sys::MADV_SEQUENTIAL,
+                Advice::WillNeed => sys::MADV_WILLNEED,
+            };
+            // SAFETY: [aligned, end) lies within this live mapping; madvise
+            // never writes through the pointer.
+            unsafe {
+                sys::madvise(self.ptr.add(aligned), end - aligned, adv);
+            }
+        }
+        #[cfg(not(unix))]
+        {
+            let _ = (byte_offset, len, advice);
         }
     }
 }
@@ -500,6 +558,26 @@ mod tests {
         // the mapping itself is untouched
         let again: WeightBuf<u32> = WeightBuf::view(&map, 0, 3).unwrap();
         assert_eq!(again.as_slice(), &[1, 2, 3]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn advise_is_safe_on_any_mapping_and_any_range() {
+        // madvise is advisory; the only contract is "never crash, never
+        // change visible bytes" — for true mappings, the heap fallback, and
+        // ranges that run past or start past the end.
+        let path = tmp("advise.bin");
+        let payload: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        std::fs::write(&path, &payload).unwrap();
+        let map = Mapping::open(&path).unwrap();
+        for advice in [Advice::WillNeed, Advice::Sequential, Advice::Normal] {
+            map.advise(0, map.len(), advice);
+            map.advise(5000, 100, advice); // unaligned interior range
+            map.advise(9999, 500, advice); // clamped at the end
+            map.advise(50_000, 10, advice); // entirely out of range
+            map.advise(0, 0, advice); // empty
+        }
+        assert_eq!(map.bytes(), &payload[..], "advise must never alter contents");
         std::fs::remove_file(&path).ok();
     }
 

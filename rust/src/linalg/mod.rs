@@ -24,7 +24,7 @@ pub mod qr;
 pub mod solve;
 pub mod svd;
 
-pub use buf::{Mapping, Pod, WeightBuf};
+pub use buf::{Advice, Mapping, Pod, WeightBuf};
 pub use cholesky::cholesky;
 pub use eigh::eigh;
 pub use gemm::{matmul, matmul_nt, matmul_tn};

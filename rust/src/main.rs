@@ -13,6 +13,9 @@
 //! compot serve --load-compressed <file> [--mmap]         serve a CPT2 checkpoint as-is
 //!                                                        (no compression stage runs;
 //!                                                        --mmap = zero-copy weights)
+//! compot serve ... --draft <file.cpt2> [--draft-k k]     speculative serving: draft
+//!                                                        proposes k tokens/round, target
+//!                                                        verifies (tiers draft|spec|full)
 //! compot allocate --model <preset>                       print Algorithm-2 allocation
 //! compot info [<file>.cpt2]                              artifacts / presets, or the
 //!                                                        header-only checkpoint fast path
@@ -189,6 +192,10 @@ fn print_help() {
          [--cr X [--method M | --plan SPEC]]\n  \
          compot serve --load-compressed FILE.cpt2 [--mmap] [--addr HOST:PORT]\n              \
          (no compression stage runs; --mmap maps weights zero-copy, page cache shared)\n  \
+         compot serve ... --draft FILE.cpt2 [--draft-k K]\n              \
+         (speculative serving: draft proposes K tokens per round, target verifies in one\n              \
+         multi-row forward; request tiers draft | spec | full, default spec; greedy spec\n              \
+         output is token-identical to full)\n  \
          compot info [FILE.cpt2]   (with a file: header-only fast path, no payload reads)\n\n\
          plans: stages joined by '+', each 'name[@cr][,key=value]*'\n       \
          e.g. --plan \"compot@0.25,iters=20+gptq4\"  (Table 7 composition)\n\n\
@@ -389,6 +396,8 @@ fn main() -> anyhow::Result<()> {
                     "max-wait-ms",
                     "load-compressed",
                     "mmap",
+                    "draft",
+                    "draft-k",
                 ],
             )?;
             let addr = flags.get("addr").unwrap_or("127.0.0.1:7199");
@@ -431,8 +440,8 @@ fn main() -> anyhow::Result<()> {
                 m
             } else {
                 anyhow::ensure!(
-                    !flags.has("mmap"),
-                    "--mmap only applies to --load-compressed checkpoints"
+                    !flags.has("mmap") || flags.has("draft"),
+                    "--mmap only applies to --load-compressed or --draft checkpoints"
                 );
                 let preset = flags.get("model").unwrap_or("llama-micro");
                 let model = load(preset)?;
@@ -458,10 +467,52 @@ fn main() -> anyhow::Result<()> {
                     model
                 }
             };
+            // Optional draft checkpoint for speculative serving: the same
+            // CPT2 load path (and the same --mmap switch) as the target, so
+            // a dense target + quantized draft of one network share the
+            // page cache twice over.
+            let mut draft_k = 4usize;
+            if let Some(v) = flags.get_parsed::<usize>("draft-k")? {
+                anyhow::ensure!(v >= 1, "--draft-k must be at least 1");
+                draft_k = v;
+            }
+            let draft = if let Some(dckpt) = flags.get("draft") {
+                let (d, dck) = load_checkpoint_verbose(dckpt, flags.has("mmap"))?;
+                anyhow::ensure!(
+                    d.cfg.vocab == model.cfg.vocab,
+                    "--draft vocab ({}) must match the target's ({})",
+                    d.cfg.vocab,
+                    model.cfg.vocab
+                );
+                info.set("draft_checkpoint", dckpt.into());
+                info.set("draft_weights_source", dck.source.into());
+                if let Some(p) = dck.plan {
+                    info.set("draft_plan", p.into());
+                }
+                Some(std::sync::Arc::new(d))
+            } else {
+                anyhow::ensure!(
+                    !flags.has("draft-k"),
+                    "--draft-k only applies when a --draft checkpoint is loaded"
+                );
+                None
+            };
+            if draft.is_some() {
+                println!(
+                    "speculative serving enabled (draft-k {draft_k}; tiers draft|spec|full, \
+                     default spec)"
+                );
+            }
             println!("listening on {addr} (json-lines; {{\"cmd\":\"shutdown\"}} to stop)");
-            compot::serve::serve_blocking(std::sync::Arc::new(model), addr, policy, info, |a| {
-                println!("ready on {a}")
-            })?;
+            compot::serve::serve_blocking_tiers(
+                std::sync::Arc::new(model),
+                draft,
+                draft_k,
+                addr,
+                policy,
+                info,
+                |a| println!("ready on {a}"),
+            )?;
         }
         "info" => {
             flags.expect_known("info", &[])?;

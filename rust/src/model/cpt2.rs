@@ -43,7 +43,7 @@ use super::transformer::{Block, Model, Stage};
 use super::weights::TensorFile;
 use crate::compress::sparse::{ColumnSparse, QuantColumnSparse};
 use crate::compress::LinearWeight;
-use crate::linalg::buf::{Mapping, Pod, WeightBuf};
+use crate::linalg::buf::{Advice, Mapping, Pod, WeightBuf};
 use crate::linalg::qmat::{supported_group, GROUP};
 use crate::linalg::{Mat, QuantMat};
 use crate::model::config::ModelConfig;
@@ -299,8 +299,17 @@ impl SectionReader {
                     .map_err(|e| anyhow::anyhow!("section '{name}': {e}"))?,
             ),
         };
+        // The CRC pass streams the section's pages front-to-back exactly
+        // once — tell the kernel so readahead runs ahead of the checksum
+        // loop, then drop back to normal (decode-time access is random).
+        if let Payload::Mapped { map, start } = &self.payload {
+            map.advise(start + d.offset, d.len * d.dtype_size, Advice::Sequential);
+        }
         let raw = &self.region()[d.offset..d.offset + d.len * d.dtype_size];
         let got = crc32(raw);
+        if let Payload::Mapped { map, start } = &self.payload {
+            map.advise(start + d.offset, d.len * d.dtype_size, Advice::Normal);
+        }
         anyhow::ensure!(
             got == d.crc32,
             "section '{name}': crc mismatch (header {:#x}, payload {got:#x})",
@@ -946,6 +955,18 @@ impl MappedCheckpoint {
             &self.header,
             Payload::Mapped { map: self.map.clone(), start: self.data_start },
         )?;
+        // Every request a serve worker handles starts in the embedding
+        // table and ends in the LM head — prefault those sections now so
+        // the first request doesn't eat their page-fault latency.
+        for name in ["embed", "lm_head"] {
+            if let Some((d, _)) = sr.by_name.get(name) {
+                self.map.advise(
+                    self.data_start + d.offset,
+                    d.len * d.dtype_size,
+                    Advice::WillNeed,
+                );
+            }
+        }
         let model = read_model(self.cfg.clone(), &self.header, &sr)?;
         // Report the fallback honestly: an operator sizing N serve workers
         // must know whether the model is page-cache-shared or a private

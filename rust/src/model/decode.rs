@@ -110,6 +110,22 @@ impl KvCache {
     pub fn capacity(&self) -> usize {
         self.capacity
     }
+
+    /// Roll the cache back to `len` tokens. O(1): [`LayerKv`] storage is
+    /// preallocated and rows are written in place by position, so shrinking
+    /// the valid length is all a rollback takes — the stale rows beyond
+    /// `len` are overwritten by whatever is decoded next, and re-decoding
+    /// the same tokens reproduces bit-identical state (tested). This is the
+    /// rollback primitive speculative decoding needs when the target model
+    /// rejects part of a drafted run ([`crate::serve::spec`]).
+    pub fn truncate(&mut self, len: usize) {
+        assert!(
+            len <= self.len,
+            "KvCache::truncate: cannot extend ({len} > {} cached rows)",
+            self.len
+        );
+        self.len = len;
+    }
 }
 
 impl Model {
@@ -184,6 +200,46 @@ impl Model {
         gemm::matvec_row(&xn, &self.lm_head)
     }
 
+    /// Multi-row decode step: feed `tokens` starting at the cache's current
+    /// position and return their k×vocab logits — row `t` is exactly what
+    /// [`Model::decode_step`] would have returned after feeding
+    /// `tokens[..t]`. One call, one activation matrix per layer: every
+    /// projection dispatches [`LinearWeight::apply`] (blocked GEMM) for
+    /// k > 1 and falls back to the single-row [`decode_step`] kernel for
+    /// k == 1, while attention stays per-row against the cache so the
+    /// arithmetic is shared with the sequential path (bit-identical —
+    /// parity-tested below). This is the target-verify kernel of
+    /// speculative decoding ([`crate::serve::spec`]) and the first batched
+    /// GEMM on the decode path (groundwork for batched decode, ROADMAP).
+    pub fn decode_step_multi(&self, cache: &mut KvCache, tokens: &[u16]) -> Mat {
+        assert!(!tokens.is_empty(), "decode_step_multi: empty token batch");
+        if tokens.len() == 1 {
+            // k == 1 is the plain decode step: per-row kernels, no GEMM.
+            let row = self.decode_step(cache, tokens[0]);
+            return Mat::from_vec(1, row.len(), row);
+        }
+        let pos0 = cache.len;
+        assert!(
+            pos0 + tokens.len() <= cache.capacity,
+            "decode_step_multi: {pos0} + {} tokens exceed cache capacity {}",
+            tokens.len(),
+            cache.capacity
+        );
+        let hd = self.cfg.head_dim();
+        let mut x = self.embed_tokens(tokens);
+        for (layer, stage) in self.stages.iter().enumerate() {
+            x = match stage {
+                Stage::Block(b) => {
+                    let kv = cache.layers[layer].as_mut().expect("block stage has a cache");
+                    b.decode_step_multi(&x, hd, self.cfg.rope_theta, kv, pos0)
+                }
+                Stage::Linear(t) => gemm::matmul(&x, t),
+            };
+        }
+        cache.len += tokens.len();
+        gemm::matmul(&rmsnorm(&x, &self.final_norm), &self.lm_head)
+    }
+
     /// Sampled continuation of `prompt` by up to `max_new` tokens through
     /// the incremental runtime. Returns `[]` for an empty prompt or
     /// `max_new == 0`; stops early at the config's `max_seq` (matching
@@ -235,22 +291,7 @@ impl Block {
         rope_row(&mut q, head_dim, theta, pos);
         rope_row(&mut k, head_dim, theta, pos);
         kv.append_row(pos, &k, &v);
-        let total = pos + 1;
-        let q_per_kv = self.n_heads / self.n_kv_heads;
-        let mut concat = vec![0f32; self.n_heads * head_dim];
-        // Materialize each KV head's cached context once and share it across
-        // its q_per_kv query heads (GQA) — the T×hd copy is the step's only
-        // O(T) memory traffic.
-        for kvh in 0..self.n_kv_heads {
-            let kh = kv.k_head(kvh, head_dim, total);
-            let vh = kv.v_head(kvh, head_dim, total);
-            for hq in 0..q_per_kv {
-                let h = kvh * q_per_kv + hq;
-                let qh = Mat::from_vec(1, head_dim, q[h * head_dim..(h + 1) * head_dim].to_vec());
-                let oh = attention_head(&qh, &kh, &vh, true);
-                concat[h * head_dim..(h + 1) * head_dim].copy_from_slice(oh.row(0));
-            }
-        }
+        let concat = self.attend_row(&q, kv, head_dim, pos + 1);
         let attn_out = self.o.apply_row(&concat);
         let x1: Vec<f32> = x.iter().zip(attn_out.iter()).map(|(a, b)| a + b).collect();
 
@@ -261,6 +302,78 @@ impl Block {
         let h: Vec<f32> = g.iter().zip(u.iter()).map(|(&gv, &uv)| silu(gv) * uv).collect();
         let mlp_out = self.down.apply_row(&h);
         x1.iter().zip(mlp_out.iter()).map(|(a, b)| a + b).collect()
+    }
+
+    /// Cached attention for one query row against the first `total` cached
+    /// rows: materialize each KV head's context once and share it across its
+    /// q_per_kv query heads (GQA) — the T×hd copy is the step's only O(T)
+    /// memory traffic. The one attention body both [`Block::decode_step`]
+    /// and [`Block::decode_step_multi`] run, so the sequential and batched
+    /// decode paths cannot drift apart.
+    fn attend_row(&self, q: &[f32], kv: &LayerKv, head_dim: usize, total: usize) -> Vec<f32> {
+        let q_per_kv = self.n_heads / self.n_kv_heads;
+        let mut concat = vec![0f32; self.n_heads * head_dim];
+        for kvh in 0..self.n_kv_heads {
+            let kh = kv.k_head(kvh, head_dim, total);
+            let vh = kv.v_head(kvh, head_dim, total);
+            for hq in 0..q_per_kv {
+                let h = kvh * q_per_kv + hq;
+                let qh = Mat::from_vec(1, head_dim, q[h * head_dim..(h + 1) * head_dim].to_vec());
+                let oh = attention_head(&qh, &kh, &vh, true);
+                concat[h * head_dim..(h + 1) * head_dim].copy_from_slice(oh.row(0));
+            }
+        }
+        concat
+    }
+
+    /// Multi-row decode step at positions `pos0..pos0+k`: projections run
+    /// batched through [`LinearWeight::apply`] (one blocked GEMM per
+    /// projection instead of k matvecs), while RoPE, KV appends, and
+    /// attention run per row through exactly the code [`Block::decode_step`]
+    /// runs — row `t` attends to the `pos0 + t + 1` cached rows its
+    /// sequential twin would see. Bit-identity with k sequential steps rests
+    /// on the `apply`/`apply_row` accumulation-order invariant the per-row
+    /// kernels are built on (see `linalg::gemm::matvec_row`) and is
+    /// parity-tested for every `LinearWeight` variant.
+    pub fn decode_step_multi(
+        &self,
+        x: &Mat,
+        head_dim: usize,
+        theta: f32,
+        kv: &mut LayerKv,
+        pos0: usize,
+    ) -> Mat {
+        // ---- attention ----
+        let xn = rmsnorm(x, &self.attn_norm);
+        let mut q = self.q.apply(&xn);
+        let mut k = self.k.apply(&xn);
+        let v = self.v.apply(&xn);
+        for t in 0..x.rows() {
+            rope_row(q.row_mut(t), head_dim, theta, pos0 + t);
+            rope_row(k.row_mut(t), head_dim, theta, pos0 + t);
+            kv.append_row(pos0 + t, k.row(t), v.row(t));
+        }
+        let mut concat = Mat::zeros(x.rows(), self.n_heads * head_dim);
+        for t in 0..x.rows() {
+            let row = self.attend_row(q.row(t), kv, head_dim, pos0 + t + 1);
+            concat.row_mut(t).copy_from_slice(&row);
+        }
+        let attn_out = self.o.apply(&concat);
+        let x1 = x.add(&attn_out);
+
+        // ---- MLP (SwiGLU) ----
+        let xn2 = rmsnorm(&x1, &self.mlp_norm);
+        let g = self.gate.apply(&xn2);
+        let u = self.up.apply(&xn2);
+        let mut h = g;
+        for i in 0..h.rows() {
+            let hrow = h.row_mut(i);
+            for (hv, uv) in hrow.iter_mut().zip(u.row(i).iter()) {
+                *hv = silu(*hv) * uv;
+            }
+        }
+        let mlp_out = self.down.apply(&h);
+        x1.add(&mlp_out)
     }
 }
 
@@ -321,7 +434,14 @@ impl Sampler {
             return argmax(logits);
         }
         let vocab = logits.len();
-        let k = if self.cfg.top_k == 0 { vocab } else { self.cfg.top_k.min(vocab) };
+        // top_k == 0 must mean "no top-k filtering", never an empty
+        // candidate set — `select_nth_unstable_by(k - 1, ..)` below would
+        // underflow on k == 0, and truncating to zero candidates would make
+        // the weighted draw panic.
+        let k = match self.cfg.top_k {
+            0 => vocab,
+            k => k.min(vocab),
+        };
         let mut order: Vec<u32> = (0..vocab as u32).collect();
         if k < vocab {
             order.select_nth_unstable_by(k - 1, |&a, &b| {
@@ -636,6 +756,134 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn truncate_rolls_back_and_redecodes_bit_identically() {
+        // The speculative-rollback primitive: decode T tokens, snapshot the
+        // logits, truncate back, re-decode the same tokens — every logits
+        // row must reproduce bitwise, for every stored-variant model.
+        for (name, model) in [
+            ("dense", tiny_model(61)),
+            ("lowrank", lowrank_model(61)),
+            ("factorized", factorized_model(61)),
+            ("quant-dense", quantized(&tiny_model(61))),
+        ] {
+            let mut cache = model.new_cache();
+            model.prefill(&mut cache, &[3, 1, 4, 1]);
+            let keep = cache.len();
+            let extra: [u16; 3] = [5, 9, 2];
+            let first: Vec<Vec<f32>> =
+                extra.iter().map(|&t| model.decode_step(&mut cache, t)).collect();
+            assert_eq!(cache.len(), keep + extra.len());
+            cache.truncate(keep);
+            assert_eq!(cache.len(), keep);
+            for (i, &t) in extra.iter().enumerate() {
+                let again = model.decode_step(&mut cache, t);
+                assert_eq!(again.len(), first[i].len(), "{name}");
+                for j in 0..again.len() {
+                    assert!(
+                        (again[j] - first[i][j]).abs() == 0.0,
+                        "{name}: step {i} logit {j} changed after rollback: {} vs {}",
+                        again[j],
+                        first[i][j]
+                    );
+                }
+            }
+            // truncate to 0 and re-prefill is also exact
+            cache.truncate(0);
+            let mut fresh = model.new_cache();
+            let a = model.prefill(&mut cache, &[3, 1, 4, 1]);
+            let b = model.prefill(&mut fresh, &[3, 1, 4, 1]);
+            assert_same_mat(&a, &b, name);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot extend")]
+    fn truncate_cannot_extend_the_cache() {
+        let model = tiny_model(62);
+        let mut cache = model.new_cache();
+        model.prefill(&mut cache, &[1, 2]);
+        cache.truncate(5);
+    }
+
+    #[test]
+    fn multi_row_step_matches_sequential_steps_bitwise() {
+        // The speculative verify kernel: one decode_step_multi over k tokens
+        // must reproduce the k sequential decode_step logits rows bitwise —
+        // for dense, low-rank, factorized, and all packed-quantized
+        // variants, i.e. every `LinearWeight` (GEMM dispatch vs apply_row).
+        for (name, model) in [
+            ("dense", tiny_model(63)),
+            ("lowrank", lowrank_model(63)),
+            ("factorized", factorized_model(63)),
+            ("quant-dense", quantized(&tiny_model(63))),
+            ("quant-lowrank", quantized(&lowrank_model(63))),
+            ("quant-factorized", quantized(&factorized_model(63))),
+        ] {
+            let prompt: Vec<u16> = vec![3, 1, 4, 1, 5];
+            let batch: Vec<u16> = vec![9, 2, 6, 5];
+            let mut seq_cache = model.new_cache();
+            model.prefill(&mut seq_cache, &prompt);
+            let seq_rows: Vec<Vec<f32>> =
+                batch.iter().map(|&t| model.decode_step(&mut seq_cache, t)).collect();
+            let mut multi_cache = model.new_cache();
+            model.prefill(&mut multi_cache, &prompt);
+            let multi = model.decode_step_multi(&mut multi_cache, &batch);
+            assert_eq!(multi.shape(), (batch.len(), model.cfg.vocab), "{name}");
+            assert_eq!(multi_cache.len(), seq_cache.len(), "{name}");
+            for (t, row) in seq_rows.iter().enumerate() {
+                for j in 0..row.len() {
+                    assert!(
+                        (multi[(t, j)] - row[j]).abs() == 0.0,
+                        "{name}: row {t} logit {j}: {} vs {}",
+                        multi[(t, j)],
+                        row[j]
+                    );
+                }
+            }
+            // ...and the caches themselves are interchangeable afterwards
+            let a = model.decode_step(&mut seq_cache, 7);
+            let b = model.decode_step(&mut multi_cache, 7);
+            for j in 0..a.len() {
+                assert!((a[j] - b[j]).abs() == 0.0, "{name}: post-step logit {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn multi_row_step_single_token_equals_decode_step() {
+        let model = quantized(&lowrank_model(64));
+        let mut a = model.new_cache();
+        let mut b = model.new_cache();
+        model.prefill(&mut a, &[1, 2, 3]);
+        model.prefill(&mut b, &[1, 2, 3]);
+        let row = model.decode_step(&mut a, 9);
+        let one = model.decode_step_multi(&mut b, &[9]);
+        assert_eq!(one.shape(), (1, row.len()));
+        for j in 0..row.len() {
+            assert!((one[(0, j)] - row[j]).abs() == 0.0, "logit {j}");
+        }
+        assert_eq!(a.len(), b.len());
+    }
+
+    #[test]
+    fn sampler_top_k_zero_means_no_filtering() {
+        // top_k = 0 must keep the full vocabulary (not truncate the
+        // candidate order to empty): at a high temperature over near-flat
+        // logits, sampled tokens land outside any small top set, and no
+        // draw panics.
+        let mut logits = vec![0.0f32; 16];
+        logits[3] = 0.05; // a slight favorite, far from dominating at T=50
+        let mut s = Sampler::new(SamplerCfg { temperature: 50.0, top_k: 0, seed: 9 });
+        let picks: Vec<u16> = (0..400).map(|_| s.pick(&logits)).collect();
+        assert!(picks.iter().all(|&t| (t as usize) < logits.len()));
+        let distinct: std::collections::BTreeSet<u16> = picks.iter().copied().collect();
+        assert!(
+            distinct.len() > 8,
+            "top_k=0 at high temperature must sample broadly, saw {distinct:?}"
+        );
     }
 
     #[test]

@@ -8,9 +8,16 @@
 //! metrics come back per response and aggregated — the substrate for the
 //! serving comparison in `examples/serve_compressed.rs` and the decode
 //! benchmark (`benches/decode.rs`).
+//!
+//! With a second (cheaper) checkpoint loaded as a draft, the same worker
+//! also serves speculative decoding ([`spec`]): requests pick a `tier` —
+//! draft-only, target-only, or draft-proposed/target-verified — and the
+//! spec tier's greedy output is token-identical to the target alone.
 
 pub mod batcher;
 pub mod server;
+pub mod spec;
 
 pub use batcher::{BatchPolicy, Batcher};
-pub use server::{serve_blocking, Client, GenRequest, GenResponse};
+pub use server::{serve_blocking, serve_blocking_tiers, Client, GenRequest, GenResponse};
+pub use spec::{SpecRound, SpeculativeSession, Tier};

@@ -1,12 +1,22 @@
 //! JSON-lines TCP inference server over the incremental decode runtime.
 //!
 //! Protocol (one JSON object per line):
-//!   → {"prompt": [1,2,3], "max_new": 16,
-//!      "temperature": 0.8, "top_k": 20, "seed": 7}   (sampling optional)
-//!   ← {"tokens": [...], "latency_ms": 1.8, "batch": 3}
+//!   → {"prompt": [1,2,3], "max_new": 16, "tier": "spec",
+//!      "temperature": 0.8, "top_k": 20, "seed": 7}   (sampling, tier optional)
+//!   ← {"tokens": [...], "latency_ms": 1.8, "batch": 3, "tier": "spec"}
 //!   → {"cmd": "stats"}   ← aggregated metrics
 //!   → {"cmd": "info"}    ← static serving metadata (model, compression plan, CR)
 //!   → {"cmd": "shutdown"}
+//!
+//! A server started with a draft model ([`serve_blocking_tiers`]) routes
+//! each request by its `tier`: `"draft"` decodes on the draft alone,
+//! `"full"` on the target alone, and `"spec"` (the default when a draft is
+//! loaded) runs a [`SpeculativeSession`] — draft-proposed, target-verified,
+//! greedy output token-identical to `"full"`. Unknown tiers and
+//! draft-requiring tiers on a draftless server get structured errors with a
+//! machine-readable `code`; non-greedy `"spec"` requests silently take the
+//! full tier (speculative acceptance is argmax-vs-argmax, i.e. greedy), and
+//! the response's `tier` field always reports what actually ran.
 //!
 //! Thread-per-connection front-end feeds the shared [`Batcher`]; one worker
 //! thread runs **continuous batching**: each request becomes a
@@ -20,6 +30,7 @@
 //! — no tokio), which is fine at this scale: the model forward dominates.
 
 use super::batcher::{BatchPolicy, Batcher};
+use super::spec::{SpeculativeSession, Tier};
 use crate::model::decode::{sampler_cfg_from_json, DecodeSession, SamplerCfg};
 use crate::model::Model;
 use crate::util::json::Json;
@@ -34,6 +45,9 @@ pub struct GenRequest {
     pub prompt: Vec<u16>,
     pub max_new: usize,
     pub sampling: SamplerCfg,
+    /// Resolved at the protocol edge: defaults applied, unknown/unavailable
+    /// tiers already rejected, non-greedy spec downgraded to full.
+    pub tier: Tier,
 }
 
 #[derive(Clone, Debug)]
@@ -42,6 +56,8 @@ pub struct GenResponse {
     pub latency_ms: f64,
     /// Concurrently active sessions when this request finished.
     pub batch: usize,
+    /// Tier that actually served the request ("draft" | "spec" | "full").
+    pub tier: String,
 }
 
 struct Job {
@@ -50,9 +66,66 @@ struct Job {
     reply: mpsc::Sender<GenResponse>,
 }
 
+/// One scheduling unit of the continuous batch: a plain decode session on
+/// the target or draft, or a speculative draft/verify session. Each gets
+/// one "turn" per worker round — a single token for the plain tiers, up to
+/// draft_k + 1 tokens for spec (its verify forward costs about one target
+/// step, so per-round work stays balanced across tiers).
+enum AnySession {
+    Full(DecodeSession),
+    Draft(DecodeSession),
+    Spec(SpeculativeSession),
+}
+
+impl AnySession {
+    fn tier(&self) -> Tier {
+        match self {
+            AnySession::Full(_) => Tier::Full,
+            AnySession::Draft(_) => Tier::Draft,
+            AnySession::Spec(_) => Tier::Spec,
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        match self {
+            AnySession::Full(s) | AnySession::Draft(s) => s.is_done(),
+            AnySession::Spec(s) => s.is_done(),
+        }
+    }
+
+    fn generated(&self) -> &[u16] {
+        match self {
+            AnySession::Full(s) | AnySession::Draft(s) => s.generated(),
+            AnySession::Spec(s) => s.generated(),
+        }
+    }
+
+    fn turn(&mut self, target: &Model, draft: Option<&Model>, metrics: &Metrics) {
+        match self {
+            AnySession::Full(s) => {
+                s.step(target);
+                metrics.steps.fetch_add(1, Ordering::Relaxed);
+            }
+            AnySession::Draft(s) => {
+                s.step(draft.expect("draft session admitted without a draft model"));
+                metrics.steps.fetch_add(1, Ordering::Relaxed);
+            }
+            AnySession::Spec(s) => {
+                let d = draft.expect("spec session admitted without a draft model");
+                if let Some(r) = s.round(target, d) {
+                    metrics.steps.fetch_add(1, Ordering::Relaxed);
+                    metrics.spec_rounds.fetch_add(1, Ordering::Relaxed);
+                    metrics.draft_proposed.fetch_add(r.proposed as u64, Ordering::Relaxed);
+                    metrics.draft_accepted.fetch_add(r.accepted as u64, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}
+
 /// One admitted request inside the continuous batch.
 struct Active {
-    session: DecodeSession,
+    session: AnySession,
     enqueued: Timer,
     reply: mpsc::Sender<GenResponse>,
 }
@@ -65,18 +138,43 @@ pub struct Metrics {
     pub total_latency_us: AtomicU64,
     /// Admission rounds that brought at least one new session into the batch.
     pub batches: AtomicU64,
-    /// Total KV-cached decode steps executed across all sessions.
+    /// Total target-model forwards on the decode path: one per plain decode
+    /// step, one per speculative verify round (however many rows it stacks).
     pub steps: AtomicU64,
+    /// Speculative verify rounds (multi-row target forwards).
+    pub spec_rounds: AtomicU64,
+    /// Tokens the draft proposed across all speculative rounds.
+    pub draft_proposed: AtomicU64,
+    /// Proposed tokens the target accepted.
+    pub draft_accepted: AtomicU64,
 }
 
 impl Metrics {
     pub fn to_json(&self) -> Json {
         let reqs = self.requests.load(Ordering::Relaxed).max(1);
+        let rounds = self.spec_rounds.load(Ordering::Relaxed);
+        let proposed = self.draft_proposed.load(Ordering::Relaxed);
+        let accepted = self.draft_accepted.load(Ordering::Relaxed);
         let mut j = Json::obj();
         j.set("requests", (self.requests.load(Ordering::Relaxed) as f64).into())
             .set("tokens_out", (self.tokens_out.load(Ordering::Relaxed) as f64).into())
             .set("batches", (self.batches.load(Ordering::Relaxed) as f64).into())
             .set("decode_steps", (self.steps.load(Ordering::Relaxed) as f64).into())
+            .set("spec_rounds", (rounds as f64).into())
+            .set("draft_proposed", (proposed as f64).into())
+            .set("draft_accepted", (accepted as f64).into())
+            // Fraction of drafted tokens the target kept: the health number
+            // for a draft/target pairing (1.0 = draft always agrees).
+            .set(
+                "acceptance_rate",
+                (if proposed == 0 { 0.0 } else { accepted as f64 / proposed as f64 }).into(),
+            )
+            // Accepted draft tokens amortized per verify forward: how many
+            // target steps speculation saved per round on average.
+            .set(
+                "draft_tokens_per_target_forward",
+                (if rounds == 0 { 0.0 } else { accepted as f64 / rounds as f64 }).into(),
+            )
             .set(
                 "mean_latency_ms",
                 (self.total_latency_us.load(Ordering::Relaxed) as f64 / reqs as f64 / 1e3).into(),
@@ -90,12 +188,18 @@ impl Metrics {
         reply: &mpsc::Sender<GenResponse>,
         tokens: Vec<u16>,
         batch: usize,
+        tier: Tier,
     ) {
         let latency = enqueued.secs() * 1e3;
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.tokens_out.fetch_add(tokens.len() as u64, Ordering::Relaxed);
         self.total_latency_us.fetch_add((latency * 1e3) as u64, Ordering::Relaxed);
-        let _ = reply.send(GenResponse { tokens, latency_ms: latency, batch });
+        let _ = reply.send(GenResponse {
+            tokens,
+            latency_ms: latency,
+            batch,
+            tier: tier.name().to_string(),
+        });
     }
 }
 
@@ -103,6 +207,10 @@ impl Metrics {
 /// through `on_ready` (port 0 = ephemeral). `info` is static serving
 /// metadata (model preset, compression plan, achieved CR — whatever the
 /// launcher knows) exposed verbatim on `{"cmd":"info"}`.
+///
+/// Single-tier convenience wrapper: every request runs on `model` (the
+/// `tier` protocol field only admits `"full"`). Launchers with a draft
+/// checkpoint use [`serve_blocking_tiers`].
 pub fn serve_blocking(
     model: Arc<Model>,
     addr: &str,
@@ -110,6 +218,33 @@ pub fn serve_blocking(
     info: Json,
     on_ready: impl FnOnce(std::net::SocketAddr),
 ) -> anyhow::Result<()> {
+    serve_blocking_tiers(model, None, 4, addr, policy, info, on_ready)
+}
+
+/// Run the server with an optional draft model for speculative serving.
+/// With `draft` present the process serves three tiers — `draft` (draft
+/// model alone), `full` (target alone), and `spec` (draft proposes up to
+/// `draft_k` tokens per round, target verifies in one multi-row forward;
+/// greedy output token-identical to `full`) — with `spec` the default tier.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_blocking_tiers(
+    model: Arc<Model>,
+    draft: Option<Arc<Model>>,
+    draft_k: usize,
+    addr: &str,
+    policy: BatchPolicy,
+    info: Json,
+    on_ready: impl FnOnce(std::net::SocketAddr),
+) -> anyhow::Result<()> {
+    if let Some(d) = &draft {
+        anyhow::ensure!(
+            d.cfg.vocab == model.cfg.vocab,
+            "draft/target vocab mismatch: {} vs {}",
+            d.cfg.vocab,
+            model.cfg.vocab
+        );
+    }
+    anyhow::ensure!(draft_k >= 1, "draft_k must be >= 1");
     let listener = TcpListener::bind(addr)?;
     listener.set_nonblocking(true)?;
     on_ready(listener.local_addr()?);
@@ -135,6 +270,15 @@ pub fn serve_blocking(
         };
         info.set("weights_source", src.into());
     }
+    // Tier routing metadata: which tiers this process serves and the
+    // default applied when a request omits the `tier` field.
+    let has_draft = draft.is_some();
+    info.set("tier_default", if has_draft { "spec" } else { "full" }.into());
+    if let Some(d) = &draft {
+        info.set("draft_k", draft_k.into());
+        info.set("draft_resident_weight_bytes", d.resident_weight_bytes().into());
+        info.set("draft_mapped_weight_bytes", d.mapped_weight_bytes().into());
+    }
     let info = Arc::new(info);
     let batcher: Arc<Batcher<Job>> = Arc::new(Batcher::new(policy));
     let metrics = Arc::new(Metrics::default());
@@ -147,6 +291,7 @@ pub fn serve_blocking(
         let batcher = batcher.clone();
         let metrics = metrics.clone();
         let model = model.clone();
+        let draft = draft.clone();
         std::thread::spawn(move || {
             let mut active: Vec<Active> = Vec::new();
             loop {
@@ -167,33 +312,59 @@ pub fn serve_blocking(
                 }
                 for job in incoming {
                     if job.req.prompt.is_empty() || job.req.max_new == 0 {
-                        metrics.finish(&job.enqueued, &job.reply, Vec::new(), active.len() + 1);
+                        metrics.finish(
+                            &job.enqueued,
+                            &job.reply,
+                            Vec::new(),
+                            active.len() + 1,
+                            job.req.tier,
+                        );
                         continue;
                     }
-                    let session = DecodeSession::start(
-                        &model,
-                        &job.req.prompt,
-                        job.req.max_new,
-                        job.req.sampling,
-                    );
+                    // The protocol edge already resolved the tier against
+                    // the loaded models, so the expects here are unreachable
+                    // for admitted jobs.
+                    let session = match job.req.tier {
+                        Tier::Full => AnySession::Full(DecodeSession::start(
+                            &model,
+                            &job.req.prompt,
+                            job.req.max_new,
+                            job.req.sampling,
+                        )),
+                        Tier::Draft => AnySession::Draft(DecodeSession::start(
+                            draft.as_deref().expect("draft tier admitted without --draft"),
+                            &job.req.prompt,
+                            job.req.max_new,
+                            job.req.sampling,
+                        )),
+                        Tier::Spec => AnySession::Spec(SpeculativeSession::start(
+                            &model,
+                            draft.as_deref().expect("spec tier admitted without --draft"),
+                            &job.req.prompt,
+                            job.req.max_new,
+                            draft_k,
+                        )),
+                    };
                     active.push(Active { session, enqueued: job.enqueued, reply: job.reply });
                 }
-                // One decode step per running session, then retire finished
-                // sessions so their slots free up for the next admission.
+                // One turn per running session (a token, or a spec round),
+                // then retire finished sessions so their slots free up for
+                // the next admission.
                 let bsize = active.len();
                 let mut i = 0;
                 while i < active.len() {
                     if !active[i].session.is_done() {
-                        active[i].session.step(&model);
-                        metrics.steps.fetch_add(1, Ordering::Relaxed);
+                        active[i].session.turn(&model, draft.as_deref(), &metrics);
                     }
                     if active[i].session.is_done() {
                         let done = active.swap_remove(i);
+                        let tier = done.session.tier();
                         metrics.finish(
                             &done.enqueued,
                             &done.reply,
                             done.session.generated().to_vec(),
                             bsize,
+                            tier,
                         );
                     } else {
                         i += 1;
@@ -213,7 +384,8 @@ pub fn serve_blocking(
                 let info = info.clone();
                 let vocab = model.cfg.vocab;
                 conns.push(std::thread::spawn(move || {
-                    let _ = handle_conn(stream, &batcher, &metrics, &info, &shutdown, vocab);
+                    let _ =
+                        handle_conn(stream, &batcher, &metrics, &info, &shutdown, vocab, has_draft);
                 }));
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -232,6 +404,14 @@ pub fn serve_blocking(
     Ok(())
 }
 
+/// Structured protocol error: a human-readable `error` plus a stable
+/// machine-readable `code` clients can branch on.
+fn protocol_error(msg: String, code: &str) -> String {
+    let mut e = Json::obj();
+    e.set("error", msg.into()).set("code", code.into());
+    e.to_string()
+}
+
 fn handle_conn(
     stream: TcpStream,
     batcher: &Batcher<Job>,
@@ -239,6 +419,7 @@ fn handle_conn(
     info: &Json,
     shutdown: &AtomicBool,
     vocab: usize,
+    has_draft: bool,
 ) -> anyhow::Result<()> {
     stream.set_nonblocking(false)?;
     let mut writer = stream.try_clone()?;
@@ -281,9 +462,49 @@ fn handle_conn(
         let prompt: Vec<u16> = raw.into_iter().map(|t| t as u16).collect();
         let max_new = j.get("max_new").and_then(Json::as_usize).unwrap_or(16);
         let sampling = sampler_cfg_from_json(&j);
+        // Resolve the requested tier at the edge, with structured errors —
+        // a silently ignored `tier` field would let a client believe it got
+        // draft-speed or spec-verified output it never did.
+        let tier = match j.get("tier").and_then(Json::as_str) {
+            None => {
+                if has_draft {
+                    Tier::Spec
+                } else {
+                    Tier::Full
+                }
+            }
+            Some(s) => match Tier::parse(s) {
+                Some(t) => t,
+                None => {
+                    writeln!(
+                        writer,
+                        "{}",
+                        protocol_error(
+                            format!("unknown tier '{s}' (expected draft | spec | full)"),
+                            "unknown_tier",
+                        )
+                    )?;
+                    continue;
+                }
+            },
+        };
+        if tier != Tier::Full && !has_draft {
+            writeln!(
+                writer,
+                "{}",
+                protocol_error(
+                    format!("tier '{}' requires a server started with --draft", tier.name()),
+                    "tier_unavailable",
+                )
+            )?;
+            continue;
+        }
+        // Speculative acceptance is argmax-vs-argmax, i.e. greedy; sampled
+        // requests take the full tier (the response reports what ran).
+        let tier = if tier == Tier::Spec && !sampling.is_greedy() { Tier::Full } else { tier };
         let (tx, rx) = mpsc::channel();
         let accepted = batcher.push(Job {
-            req: GenRequest { prompt, max_new, sampling },
+            req: GenRequest { prompt, max_new, sampling, tier },
             enqueued: Timer::start(),
             reply: tx,
         });
@@ -295,7 +516,8 @@ fn handle_conn(
         let mut out = Json::obj();
         out.set("tokens", Json::Arr(resp.tokens.iter().map(|&t| Json::Num(t as f64)).collect()))
             .set("latency_ms", resp.latency_ms.into())
-            .set("batch", resp.batch.into());
+            .set("batch", resp.batch.into())
+            .set("tier", resp.tier.into());
         writeln!(writer, "{}", out.to_string())?;
     }
     Ok(())
@@ -319,6 +541,25 @@ impl Client {
         self.request_with(prompt, max_new, SamplerCfg::greedy())
     }
 
+    /// Greedy request pinned to a specific tier (`"draft"` | `"spec"` |
+    /// `"full"`).
+    pub fn request_tier(
+        &mut self,
+        prompt: &[u16],
+        max_new: usize,
+        tier: &str,
+    ) -> anyhow::Result<GenResponse> {
+        let mut j = Json::obj();
+        j.set("prompt", Json::Arr(prompt.iter().map(|&t| Json::Num(t as f64)).collect()))
+            .set("max_new", max_new.into())
+            .set("tier", tier.into());
+        let r = self.request_raw(&j)?;
+        if let Some(err) = r.get("error").and_then(Json::as_str) {
+            anyhow::bail!("server error: {err}");
+        }
+        Ok(Self::parse_response(&r))
+    }
+
     /// Request with explicit sampling controls.
     pub fn request_with(
         &mut self,
@@ -334,14 +575,25 @@ impl Client {
                 .set("top_k", sampling.top_k.into())
                 .set("seed", (sampling.seed as f64).into());
         }
-        writeln!(self.stream, "{}", j.to_string())?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        let r = Json::parse(&line).map_err(|e| anyhow::anyhow!("bad response: {e}"))?;
+        let r = self.request_raw(&j)?;
         if let Some(err) = r.get("error").and_then(Json::as_str) {
             anyhow::bail!("server error: {err}");
         }
-        Ok(GenResponse {
+        Ok(Self::parse_response(&r))
+    }
+
+    /// Send an arbitrary request object and return the raw response JSON
+    /// without interpreting `error` fields — the hook protocol-hardening
+    /// tests use to inspect structured error codes.
+    pub fn request_raw(&mut self, j: &Json) -> anyhow::Result<Json> {
+        writeln!(self.stream, "{}", j.to_string())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(&line).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+    }
+
+    fn parse_response(r: &Json) -> GenResponse {
+        GenResponse {
             tokens: r
                 .get("tokens")
                 .and_then(Json::as_arr)
@@ -349,7 +601,8 @@ impl Client {
                 .unwrap_or_default(),
             latency_ms: r.get("latency_ms").and_then(Json::as_f64).unwrap_or(0.0),
             batch: r.get("batch").and_then(Json::as_usize).unwrap_or(0),
-        })
+            tier: r.get("tier").and_then(Json::as_str).unwrap_or("").to_string(),
+        }
     }
 
     pub fn stats(&mut self) -> anyhow::Result<Json> {
@@ -584,6 +837,164 @@ mod tests {
         assert_eq!(a.tokens, b.tokens);
         assert_eq!(a.tokens.len(), 8);
         assert!(a.tokens.iter().all(|&t| t < 64));
+        c.shutdown().unwrap();
+        server.join().unwrap();
+    }
+
+    /// 4-bit-pack every dense projection: the cheap same-network draft the
+    /// speculative tier is designed around.
+    fn quantized_draft(target: &Model) -> Model {
+        use crate::compress::LinearWeight;
+        use crate::linalg::QuantMat;
+        use crate::model::config::ProjKind;
+        use crate::model::transformer::Stage;
+        let mut d = target.clone();
+        for stage in d.stages.iter_mut() {
+            if let Stage::Block(b) = stage {
+                for p in ProjKind::DECODER_SET {
+                    let packed = match b.proj(p) {
+                        LinearWeight::Dense(w) => Some(QuantMat::quantize_from(w, 4)),
+                        _ => None,
+                    };
+                    if let Some(q) = packed {
+                        *b.proj_mut(p) = LinearWeight::QuantDense(q);
+                    }
+                }
+            }
+        }
+        d
+    }
+
+    fn spawn_tier_server(
+        target: Arc<Model>,
+        draft: Option<Arc<Model>>,
+        draft_k: usize,
+    ) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+        let (addr_tx, addr_rx) = mpsc::channel();
+        let server = std::thread::spawn(move || {
+            serve_blocking_tiers(
+                target,
+                draft,
+                draft_k,
+                "127.0.0.1:0",
+                BatchPolicy::default(),
+                Json::obj(),
+                |a| {
+                    addr_tx.send(a).unwrap();
+                },
+            )
+            .unwrap();
+        });
+        (addr_rx.recv().unwrap(), server)
+    }
+
+    #[test]
+    fn tier_requests_without_draft_get_structured_errors() {
+        // Protocol hardening: a draftless server must refuse — with a
+        // machine-readable code, not silence — both unknown tier names and
+        // tiers it cannot serve.
+        let (addr, server) = spawn_server(9, BatchPolicy::default(), Json::obj());
+        let mut c = Client::connect(addr).unwrap();
+
+        let mut req = Json::obj();
+        req.set("prompt", Json::Arr(vec![Json::Num(1.0), Json::Num(2.0)]))
+            .set("max_new", 3.into())
+            .set("tier", "turbo".into());
+        let r = c.request_raw(&req).unwrap();
+        assert!(r.get("error").is_some(), "unknown tier must be an error");
+        assert_eq!(r.get("code").and_then(Json::as_str), Some("unknown_tier"));
+
+        for t in ["spec", "draft"] {
+            let mut req = Json::obj();
+            req.set("prompt", Json::Arr(vec![Json::Num(1.0), Json::Num(2.0)]))
+                .set("max_new", 3.into())
+                .set("tier", t.into());
+            let r = c.request_raw(&req).unwrap();
+            assert!(r.get("error").is_some(), "tier '{t}' without --draft must be an error");
+            assert_eq!(r.get("code").and_then(Json::as_str), Some("tier_unavailable"), "{t}");
+        }
+
+        // explicit "full" and the default both still work, and the worker
+        // survived the rejected requests
+        let r = c.request_tier(&[1, 2, 3], 4, "full").unwrap();
+        assert_eq!(r.tokens.len(), 4);
+        assert_eq!(r.tier, "full");
+        let r = c.request(&[1, 2, 3], 4).unwrap();
+        assert_eq!(r.tier, "full", "draftless default tier must be full");
+        let info = c.info().unwrap();
+        assert_eq!(info.get("tier_default").and_then(Json::as_str), Some("full"));
+        c.shutdown().unwrap();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn draft_server_serves_three_tiers_with_spec_identical_to_full() {
+        // The PR's acceptance contract: one process, three tiers; greedy
+        // spec output token-identical to full; acceptance metrics in stats.
+        let target = Model::random(&ModelConfig::test_tiny(), &mut Rng::new(31));
+        let draft = quantized_draft(&target);
+        let want_full = target.greedy_decode(&[3, 1, 4, 1, 5], 10);
+        let want_draft = draft.greedy_decode(&[3, 1, 4, 1, 5], 10);
+        let (addr, server) = spawn_tier_server(Arc::new(target), Some(Arc::new(draft)), 4);
+        let mut c = Client::connect(addr).unwrap();
+
+        let info = c.info().unwrap();
+        assert_eq!(info.get("tier_default").and_then(Json::as_str), Some("spec"));
+        assert_eq!(info.get("draft_k").and_then(Json::as_usize), Some(4));
+
+        let full = c.request_tier(&[3, 1, 4, 1, 5], 10, "full").unwrap();
+        assert_eq!(full.tokens, want_full);
+        assert_eq!(full.tier, "full");
+        let spec = c.request_tier(&[3, 1, 4, 1, 5], 10, "spec").unwrap();
+        assert_eq!(spec.tokens, want_full, "spec output diverged from full");
+        assert_eq!(spec.tier, "spec");
+        let draft_r = c.request_tier(&[3, 1, 4, 1, 5], 10, "draft").unwrap();
+        assert_eq!(draft_r.tokens, want_draft);
+        assert_eq!(draft_r.tier, "draft");
+        // omitted tier defaults to spec on a draft-loaded server
+        let default_r = c.request(&[3, 1, 4, 1, 5], 10).unwrap();
+        assert_eq!(default_r.tier, "spec");
+        assert_eq!(default_r.tokens, want_full);
+
+        let stats = c.stats().unwrap();
+        assert!(stats.get("spec_rounds").and_then(Json::as_usize).unwrap() >= 1);
+        assert!(stats.get("draft_proposed").and_then(Json::as_usize).unwrap() >= 1);
+        let rate = stats.get("acceptance_rate").and_then(Json::as_f64).unwrap();
+        assert!((0.0..=1.0).contains(&rate), "acceptance_rate {rate}");
+        assert!(
+            stats.get("draft_tokens_per_target_forward").and_then(Json::as_f64).unwrap() >= 0.0
+        );
+        c.shutdown().unwrap();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn non_greedy_spec_requests_fall_back_to_full_tier() {
+        // Speculative acceptance is argmax-vs-argmax; a sampled request on
+        // the spec tier must run (and report) the full tier instead, with
+        // the same seed-determinism as a direct full-tier request.
+        let target = Model::random(&ModelConfig::test_tiny(), &mut Rng::new(33));
+        let draft = quantized_draft(&target);
+        let (addr, server) = spawn_tier_server(Arc::new(target), Some(Arc::new(draft)), 4);
+        let mut c = Client::connect(addr).unwrap();
+        let mut req = Json::obj();
+        req.set("prompt", Json::Arr(vec![Json::Num(1.0), Json::Num(2.0), Json::Num(3.0)]))
+            .set("max_new", 8.into())
+            .set("tier", "spec".into())
+            .set("temperature", 0.9.into())
+            .set("top_k", 4.into())
+            .set("seed", 11.into());
+        let a = c.request_raw(&req).unwrap();
+        assert_eq!(a.get("tier").and_then(Json::as_str), Some("full"));
+        let sampled =
+            c.request_with(&[1, 2, 3], 8, SamplerCfg { temperature: 0.9, top_k: 4, seed: 11 });
+        let b = sampled.unwrap();
+        let a_tokens: Vec<u16> = a
+            .get("tokens")
+            .and_then(Json::as_arr)
+            .map(|v| v.iter().filter_map(|x| x.as_usize().map(|t| t as u16)).collect())
+            .unwrap();
+        assert_eq!(a_tokens, b.tokens);
         c.shutdown().unwrap();
         server.join().unwrap();
     }

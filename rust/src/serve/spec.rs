@@ -1,0 +1,419 @@
+//! Self-speculative decoding: a cheap **draft** model proposes k tokens,
+//! the **target** model verifies all k in one multi-row cached forward
+//! ([`Model::decode_step_multi`]), and greedy output stays token-identical
+//! to decoding with the target alone.
+//!
+//! COMPOT's composed compression plans deliberately produce several
+//! fidelity points of the same network (e.g. `compot@0.15+rtn2` vs `gptq4`
+//! vs dense, Table 7); CPT2 + mmap made holding two of them at once nearly
+//! free (shared page cache). [`SpeculativeSession`] turns that pair into a
+//! latency feature: per generated token the target runs `1/k`-th as many
+//! forwards when the draft agrees with it, and exactly corrects it when it
+//! does not.
+//!
+//! ## The round invariant
+//!
+//! Between rounds, both KV caches hold every token of `tokens` except the
+//! last (the cache length is "rows appended", and the last token has been
+//! *chosen* but not yet *fed*). One round then:
+//!
+//! 1. syncs the draft cache to that invariant ([`KvCache::truncate`] if it
+//!    ran ahead on a rejected draft, catch-up `decode_step`s if the target
+//!    out-generated it on an accepted one);
+//! 2. lets the draft propose up to k tokens via sequential cached
+//!    [`Model::decode_step`]s (greedy argmax);
+//! 3. feeds the last committed token plus all k proposals to the target as
+//!    **one** k+1-row [`Model::decode_step_multi`] — row `i` is the
+//!    target's next-token distribution after the proposals' `i`-prefix;
+//! 4. accepts the longest prefix on which the draft's choice equals the
+//!    target's argmax, then appends one more target-chosen token: the
+//!    correction at the first divergence (rolling the target cache back
+//!    over the rejected rows), or the "bonus" token from the last verify
+//!    row when everything was accepted.
+//!
+//! **Greedy parity, by induction:** every token this session ever appends
+//! is the argmax of a target logits row at its position — accepted
+//! proposals are accepted *because* they equal that argmax, and the
+//! correction/bonus token *is* that argmax. Since `decode_step_multi` is
+//! bit-identical to sequential target `decode_step`s (parity-tested in
+//! `model/decode.rs`) and `truncate` + re-decode is bit-exact, the token
+//! sequence equals [`Model::greedy_decode`] on the target, token for token
+//! — no matter how good or bad the draft is. The draft only moves the
+//! *cost*, never the *output*. Tested below with a self-draft (accepts
+//! everything), a quantized draft, and an adversarial unrelated draft
+//! (rejects almost everything).
+
+use crate::model::decode::{argmax, KvCache};
+use crate::model::Model;
+
+/// Request routing tier for a serve process holding a target and
+/// (optionally) a draft model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// Draft model only: cheapest and fastest, draft-fidelity output.
+    Draft,
+    /// Speculative: draft proposes, target verifies — target-fidelity
+    /// greedy output at draft-ish latency.
+    Spec,
+    /// Target model only, stepped token by token.
+    Full,
+}
+
+impl Tier {
+    /// Parse a protocol `tier` value. `None` for unknown strings — the
+    /// server turns that into a structured error, not a silent default.
+    pub fn parse(s: &str) -> Option<Tier> {
+        match s {
+            "draft" => Some(Tier::Draft),
+            "spec" => Some(Tier::Spec),
+            "full" => Some(Tier::Full),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Draft => "draft",
+            Tier::Spec => "spec",
+            Tier::Full => "full",
+        }
+    }
+}
+
+/// What one speculative round did — the per-round deltas the serving
+/// metrics aggregate.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpecRound {
+    /// Tokens committed this round (accepted prefix + correction/bonus).
+    pub appended: usize,
+    /// Tokens the draft proposed this round (≤ draft_k).
+    pub proposed: usize,
+    /// Proposals the target accepted this round.
+    pub accepted: usize,
+}
+
+/// One in-flight speculative generation: the target/draft KV-cache pair,
+/// the committed token sequence, and stop conditions — the speculative
+/// counterpart of [`crate::model::DecodeSession`], scheduled the same way
+/// by the continuous batcher (one [`round`](SpeculativeSession::round) per
+/// scheduling turn; a round may commit up to draft_k + 1 tokens).
+///
+/// Greedy-only by construction: speculative acceptance compares the
+/// draft's argmax against the target's argmax, which is exactly the greedy
+/// sampler. The server routes non-greedy requests to the full tier
+/// instead.
+#[derive(Clone, Debug)]
+pub struct SpeculativeSession {
+    target_cache: KvCache,
+    draft_cache: KvCache,
+    tokens: Vec<u16>,
+    prompt_len: usize,
+    max_new: usize,
+    max_total: usize,
+    draft_k: usize,
+    done: bool,
+    proposed: u64,
+    accepted: u64,
+    rounds: u64,
+}
+
+impl SpeculativeSession {
+    /// Prefill both models over `prompt` and commit the first target-chosen
+    /// token (exactly [`crate::model::DecodeSession::start`]'s greedy
+    /// behavior on the target). `draft_k` is the per-round proposal budget.
+    pub fn start(
+        target: &Model,
+        draft: &Model,
+        prompt: &[u16],
+        max_new: usize,
+        draft_k: usize,
+    ) -> SpeculativeSession {
+        assert!(!prompt.is_empty(), "SpeculativeSession: empty prompt");
+        assert!(draft_k >= 1, "SpeculativeSession: draft_k must be >= 1");
+        assert_eq!(
+            target.cfg.vocab, draft.cfg.vocab,
+            "SpeculativeSession: draft/target vocab mismatch"
+        );
+        let capacity = prompt.len().max(target.cfg.max_seq);
+        let mut target_cache = target.new_cache_with(capacity);
+        let mut draft_cache = draft.new_cache_with(capacity);
+        let mut tokens = prompt.to_vec();
+        let max_total = target.cfg.max_seq;
+        let mut done = max_new == 0;
+        if !done {
+            let logits = target.prefill(&mut target_cache, prompt);
+            tokens.push(argmax(logits.row(logits.rows() - 1)));
+            draft.prefill(&mut draft_cache, prompt);
+            done = tokens.len() - prompt.len() >= max_new || tokens.len() >= max_total;
+        }
+        SpeculativeSession {
+            target_cache,
+            draft_cache,
+            tokens,
+            prompt_len: prompt.len(),
+            max_new,
+            max_total,
+            draft_k,
+            done,
+            proposed: 0,
+            accepted: 0,
+            rounds: 0,
+        }
+    }
+
+    /// One draft-propose / target-verify round; commits 1..=draft_k+1
+    /// tokens. Returns `None` once the session has finished.
+    pub fn round(&mut self, target: &Model, draft: &Model) -> Option<SpecRound> {
+        if self.done {
+            return None;
+        }
+        let t_len = self.tokens.len();
+        let last = self.tokens[t_len - 1];
+        // Proposal budget: never draft past the request/model limits — the
+        // verify step always commits at least one token beyond the
+        // proposals' accepted prefix, so k is capped at remaining - 1.
+        let remaining =
+            (self.max_new - self.generated_len()).min(self.max_total - t_len);
+        let k = self.draft_k.min(remaining - 1);
+
+        // 1. Sync the draft cache to the round invariant (all committed
+        //    tokens except the last are fed). After a rejection it ran
+        //    ahead on tokens that no longer exist — roll it back; after a
+        //    fully accepted round the target committed a bonus token the
+        //    draft never saw — catch it up.
+        if k > 0 {
+            if self.draft_cache.len() > t_len - 1 {
+                self.draft_cache.truncate(t_len - 1);
+            }
+            while self.draft_cache.len() < t_len - 1 {
+                let tok = self.tokens[self.draft_cache.len()];
+                draft.decode_step(&mut self.draft_cache, tok);
+            }
+        }
+
+        // 2. Draft proposes k tokens, sequential greedy decode steps.
+        let mut proposals: Vec<u16> = Vec::with_capacity(k);
+        let mut cur = last;
+        for _ in 0..k {
+            let logits = draft.decode_step(&mut self.draft_cache, cur);
+            cur = argmax(&logits);
+            proposals.push(cur);
+        }
+
+        // 3. Target verifies all proposals in ONE multi-row cached forward:
+        //    row i is the target's next-token logits after the committed
+        //    tokens plus proposals[..i].
+        let mut rows: Vec<u16> = Vec::with_capacity(k + 1);
+        rows.push(last);
+        rows.extend_from_slice(&proposals);
+        let logits = target.decode_step_multi(&mut self.target_cache, &rows);
+
+        // 4. Accept the longest agreeing prefix, then commit one more
+        //    target-chosen token (correction at the divergence, or the
+        //    bonus token from the last row when everything was accepted).
+        let mut a = 0;
+        while a < k && argmax(logits.row(a)) == proposals[a] {
+            a += 1;
+        }
+        let mut appended: Vec<u16> = proposals[..a].to_vec();
+        appended.push(argmax(logits.row(a.min(k))));
+        if a < k {
+            // Rows a+1..=k were computed from rejected proposals — roll the
+            // target cache back so it holds exactly the committed tokens
+            // minus the new last one (the round invariant).
+            self.target_cache.truncate(t_len + a);
+        }
+        self.tokens.extend_from_slice(&appended);
+        self.rounds += 1;
+        self.proposed += k as u64;
+        self.accepted += a as u64;
+        if self.generated_len() >= self.max_new || self.tokens.len() >= self.max_total {
+            self.done = true;
+        }
+        Some(SpecRound { appended: appended.len(), proposed: k, accepted: a })
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Prompt + generated tokens.
+    pub fn tokens(&self) -> &[u16] {
+        &self.tokens
+    }
+
+    /// Generated continuation only.
+    pub fn generated(&self) -> &[u16] {
+        &self.tokens[self.prompt_len..]
+    }
+
+    pub fn generated_len(&self) -> usize {
+        self.tokens.len() - self.prompt_len
+    }
+
+    /// Tokens the draft has proposed across all rounds.
+    pub fn draft_proposed(&self) -> u64 {
+        self.proposed
+    }
+
+    /// Proposed tokens the target accepted across all rounds.
+    pub fn draft_accepted(&self) -> u64 {
+        self.accepted
+    }
+
+    /// Target verify forwards run (one multi-row step per round).
+    pub fn verify_rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    /// Fraction of drafted tokens the target accepted (1.0 when the draft
+    /// always agrees — e.g. a self-draft; low for a bad draft, which costs
+    /// speed, never correctness).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.proposed == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.proposed as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::LinearWeight;
+    use crate::linalg::QuantMat;
+    use crate::model::config::{ModelConfig, ProjKind};
+    use crate::model::transformer::Stage;
+    use crate::util::Rng;
+
+    fn tiny_model(seed: u64) -> Model {
+        Model::random(&ModelConfig::test_tiny(), &mut Rng::new(seed))
+    }
+
+    /// 4-bit-pack every dense projection — a realistic cheap draft of the
+    /// same network.
+    fn rtn4(model: &Model) -> Model {
+        let mut m = model.clone();
+        for stage in m.stages.iter_mut() {
+            if let Stage::Block(b) = stage {
+                for p in ProjKind::DECODER_SET {
+                    let packed = match b.proj(p) {
+                        LinearWeight::Dense(w) => Some(QuantMat::quantize_from(w, 4)),
+                        _ => None,
+                    };
+                    if let Some(q) = packed {
+                        *b.proj_mut(p) = LinearWeight::QuantDense(q);
+                    }
+                }
+            }
+        }
+        m
+    }
+
+    fn run_spec(target: &Model, draft: &Model, prompt: &[u16], max_new: usize, k: usize) -> SpeculativeSession {
+        let mut s = SpeculativeSession::start(target, draft, prompt, max_new, k);
+        while s.round(target, draft).is_some() {}
+        s
+    }
+
+    #[test]
+    fn self_draft_accepts_everything_and_matches_greedy() {
+        // draft == target: every proposal is the target's own argmax, so
+        // acceptance is exactly 100% and each round commits k+1 tokens.
+        let model = tiny_model(70);
+        let prompt: Vec<u16> = vec![3, 1, 4, 1, 5];
+        let want = model.greedy_decode(&prompt, 12);
+        for k in [1usize, 2, 4, 8] {
+            let s = run_spec(&model, &model, &prompt, 12, k);
+            assert_eq!(s.generated(), &want[..], "k={k}");
+            assert_eq!(s.generated_len(), 12, "k={k}");
+            assert_eq!(s.draft_accepted(), s.draft_proposed(), "k={k}: self-draft rejected");
+            assert!(s.draft_proposed() > 0, "k={k}");
+            assert!((s.acceptance_rate() - 1.0).abs() < 1e-12, "k={k}");
+        }
+        // with k=4 and full acceptance, 12 tokens need far fewer than 12
+        // target forwards (1 prefill pick + ceil(11/5) rounds = 4)
+        let s = run_spec(&model, &model, &prompt, 12, 4);
+        assert!(s.verify_rounds() <= 4, "rounds {}", s.verify_rounds());
+    }
+
+    #[test]
+    fn quantized_draft_is_token_identical_to_target_alone() {
+        let target = tiny_model(71);
+        let draft = rtn4(&target);
+        let prompts: [&[u16]; 3] = [&[1, 2, 3], &[7, 8, 9, 10], &[5]];
+        for prompt in prompts {
+            let want = target.greedy_decode(prompt, 14);
+            for k in [1usize, 3, 4] {
+                let s = run_spec(&target, &draft, prompt, 14, k);
+                assert_eq!(s.generated(), &want[..], "prompt {prompt:?} k={k}");
+                assert!(s.draft_accepted() <= s.draft_proposed());
+            }
+        }
+    }
+
+    #[test]
+    fn unrelated_draft_still_matches_target_exactly() {
+        // An adversarial draft (a different random model) disagrees with
+        // the target almost everywhere, hammering the rejection + rollback
+        // path — output must STILL be token-identical to the target alone.
+        let target = tiny_model(72);
+        let draft = tiny_model(973);
+        let prompt: Vec<u16> = vec![2, 7, 1, 8, 2, 8];
+        let want = target.greedy_decode(&prompt, 16);
+        let s = run_spec(&target, &draft, &prompt, 16, 4);
+        assert_eq!(s.generated(), &want[..]);
+        assert_eq!(s.generated_len(), 16);
+        // sanity: the adversarial draft really was mostly rejected (if this
+        // ever fails the two "random" models agree suspiciously often)
+        assert!(
+            s.draft_accepted() < s.draft_proposed(),
+            "unrelated draft was never rejected: {}/{}",
+            s.draft_accepted(),
+            s.draft_proposed()
+        );
+    }
+
+    #[test]
+    fn respects_max_new_and_max_seq_stops() {
+        let target = tiny_model(73);
+        let draft = rtn4(&target);
+        // exact max_new, never overshoots regardless of k
+        for (max_new, k) in [(1usize, 4usize), (2, 4), (5, 3), (9, 2)] {
+            let s = run_spec(&target, &draft, &[4, 2], max_new, k);
+            assert_eq!(s.generated_len(), max_new, "max_new={max_new} k={k}");
+            assert_eq!(
+                s.generated(),
+                &target.greedy_decode(&[4, 2], max_new)[..],
+                "max_new={max_new} k={k}"
+            );
+        }
+        // max_seq cap: prompt of 60 on a max_seq-64 config stops at 4
+        let prompt: Vec<u16> = (0..60u16).collect();
+        let s = run_spec(&target, &draft, &prompt, 50, 4);
+        assert_eq!(s.generated_len(), 4);
+        assert_eq!(s.generated(), &target.greedy_decode(&prompt, 50)[..]);
+    }
+
+    #[test]
+    fn max_new_zero_is_immediately_done() {
+        let target = tiny_model(74);
+        let mut s = SpeculativeSession::start(&target, &target, &[1, 2], 0, 4);
+        assert!(s.is_done());
+        assert!(s.round(&target, &target).is_none());
+        assert!(s.generated().is_empty());
+    }
+
+    #[test]
+    fn tier_parses_known_names_only() {
+        assert_eq!(Tier::parse("draft"), Some(Tier::Draft));
+        assert_eq!(Tier::parse("spec"), Some(Tier::Spec));
+        assert_eq!(Tier::parse("full"), Some(Tier::Full));
+        assert_eq!(Tier::parse("turbo"), None);
+        assert_eq!(Tier::parse(""), None);
+        for t in [Tier::Draft, Tier::Spec, Tier::Full] {
+            assert_eq!(Tier::parse(t.name()), Some(t));
+        }
+    }
+}

@@ -348,3 +348,75 @@ fn kv_cached_decode_is_bit_identical_for_compressed_plans() {
         }
     }
 }
+
+#[test]
+fn speculative_decode_is_token_identical_across_all_variants() {
+    // NOT artifact-gated. The speculative-serving acceptance matrix: for
+    // draft/target pairs covering all six LinearWeight variants (dense,
+    // low-rank, factorized, and their three packed-quantized forms), and
+    // for both the owned and the zero-copy (--mmap) load paths, greedy
+    // speculative decode must be token-identical to decoding with the
+    // target alone. The draft only ever moves the cost, never the output.
+    use compot::coordinator::plan::CompressionPlan;
+    use compot::data::SynthLang;
+    use compot::model::config::ModelConfig;
+    use compot::serve::SpeculativeSession;
+
+    let base = Model::random(&ModelConfig::test_tiny(), &mut Rng::new(60));
+    let lang = SynthLang::wiki(base.cfg.vocab);
+    let calib = lang.gen_batch(6, 48, &mut Rng::new(61));
+    let defaults = StageConfig::new(0.25, false);
+    let dir = std::env::temp_dir().join("compot_spec_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Each spec produces a model exercising specific LinearWeight variants:
+    // dense / LowRank / Factorized / QuantDense / QuantLowRank /
+    // QuantFactorized. Every one serves as the target with the rtn4
+    // artifact drafting, and as the draft under the dense target.
+    let specs: [Option<&str>; 6] = [
+        None, // dense
+        Some("svd-llm@0.2"),
+        Some("compot@0.25"),
+        Some("rtn4"),
+        Some("svd-llm@0.2+rtn4"),
+        Some("compot@0.25+gptq4"),
+    ];
+    let variants: Vec<Model> = specs
+        .iter()
+        .map(|spec| match spec {
+            Some(s) => {
+                CompressionPlan::parse(s, &defaults).unwrap().run(&base, &calib).unwrap().0
+            }
+            None => base.clone(),
+        })
+        .collect();
+    let run = |target: &Model, draft: &Model, prompt: &[u16], k: usize| -> Vec<u16> {
+        let mut s = SpeculativeSession::start(target, draft, prompt, 12, k);
+        while s.round(target, draft).is_some() {}
+        s.generated().to_vec()
+    };
+    let prompt: Vec<u16> = vec![3, 1, 4, 1, 5, 9];
+    let rtn4 = &variants[3];
+    for (i, (spec, target)) in specs.iter().zip(variants.iter()).enumerate() {
+        let label = spec.unwrap_or("dense");
+        let want = target.greedy_decode(&prompt, 12);
+
+        // 1. the variant as the target, the rtn4 artifact as its draft
+        assert_eq!(run(target, rtn4, &prompt, 4), want, "{label} as target");
+        // 2. the variant as the draft under the dense target
+        let dense_want = variants[0].greedy_decode(&prompt, 12);
+        assert_eq!(run(&variants[0], target, &prompt, 3), dense_want, "{label} as draft");
+
+        // 3. both roles again with checkpoint-reloaded copies: the owned
+        //    loader as target, the zero-copy mmap loader as draft — parity
+        //    must survive both storage paths at once.
+        let path = dir.join(format!("spec{i}.cpt2"));
+        target.save_compressed(&path, spec.as_deref()).unwrap();
+        let (owned, _) = Model::load_compressed(&path).unwrap();
+        let (mapped, minfo) = Model::load_compressed_mmap(&path).unwrap();
+        assert!(minfo.source.starts_with("mmap"), "{label}: {}", minfo.source);
+        assert_eq!(owned.greedy_decode(&prompt, 12), want, "{label}: owned reload");
+        assert_eq!(run(&owned, &mapped, &prompt, 4), want, "{label} owned+mmap pair");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -20,6 +20,11 @@ positive number — "pending" placeholder baselines with zeros gate nothing):
   the baseline (packed bytes vs dense, per-step cost scaling) — again
   machine-independent, so a real ceiling can be committed without running
   the bench on CI hardware first;
+- acceptance-rate floor keys (any key ending in ``acceptance_rate``):
+  fresh must be >= the baseline. The speculative self-draft rate is an
+  exact machine-independent invariant (1.0 — the draft IS the target), so
+  its committed floor gates everywhere; measured draft rates become gates
+  once a baseline is committed;
 - boolean gate keys (parity / round-trip flags): a baseline of true must
   stay true.
 
@@ -32,7 +37,12 @@ import os
 import sys
 
 TOLERANCE = 0.30
-BENCHES = ["BENCH_decode.json", "BENCH_quant.json", "BENCH_checkpoint.json"]
+BENCHES = [
+    "BENCH_decode.json",
+    "BENCH_quant.json",
+    "BENCH_checkpoint.json",
+    "BENCH_spec.json",
+]
 
 
 def is_throughput(key):
@@ -49,6 +59,10 @@ def is_speedup_floor(key):
 
 def is_ratio_ceiling(key):
     return "_ratio" in key
+
+
+def is_acceptance_floor(key):
+    return key.endswith("acceptance_rate")
 
 
 def compare(name, base, fresh):
@@ -87,6 +101,13 @@ def compare(name, base, fresh):
                 failures.append(
                     f"{name}: '{key}' exceeded its committed ceiling "
                     f"({fval:.3f} > {bval:.3f})"
+                )
+        elif is_acceptance_floor(key):
+            checked += 1
+            if fval < bval:
+                failures.append(
+                    f"{name}: '{key}' fell below its committed floor "
+                    f"({fval:.3f} < {bval:.3f})"
                 )
         elif is_size(key):
             checked += 1
