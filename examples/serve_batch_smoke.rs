@@ -1,0 +1,131 @@
+//! Serve smoke for cross-session batched decode — what CI runs to prove
+//! the continuous-batching worker's one-GEMM-per-layer rounds end to end:
+//! it builds a tiny target + rtn4 draft in-process (CPT2 round-tripped like
+//! a real launch), drives the server first sequentially and then with 12
+//! concurrent mixed-tier requests, and asserts every concurrent response is
+//! token-identical to its sequential twin — batching must never change a
+//! continuation — while `stats` shows real multi-session GEMM rounds (exit
+//! code is the assertion).
+//!
+//! Run: cargo run --release --example serve_batch_smoke
+
+use compot::compress::StageConfig;
+use compot::coordinator::plan::CompressionPlan;
+use compot::data::SynthLang;
+use compot::model::config::ModelConfig;
+use compot::model::Model;
+use compot::serve::server::Client;
+use compot::serve::{serve_blocking_tiers, BatchPolicy};
+use compot::util::json::Json;
+use compot::util::Rng;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+const DRAFT_PLAN: &str = "rtn4";
+const DRAFT_K: usize = 4;
+const N_REQUESTS: usize = 12;
+const MAX_NEW: usize = 8;
+const TIERS: [&str; 3] = ["full", "spec", "draft"];
+
+fn main() -> anyhow::Result<()> {
+    // --- one network, two fidelity points: dense target + rtn4 draft ---
+    let target = Model::random(&ModelConfig::test_tiny(), &mut Rng::new(51));
+    let lang = SynthLang::wiki(target.cfg.vocab);
+    let calib = lang.gen_batch(6, 48, &mut Rng::new(52));
+    let plan = CompressionPlan::parse(DRAFT_PLAN, &StageConfig::new(0.25, false))?;
+    let (draft, _) = plan.run(&target, &calib)?;
+    let tdir = std::env::temp_dir();
+    let target_path = tdir.join("compot_batch_smoke_target.cpt2");
+    let draft_path = tdir.join("compot_batch_smoke_draft.cpt2");
+    target.save_compressed(&target_path, None)?;
+    draft.save_compressed(&draft_path, Some(DRAFT_PLAN))?;
+    let (target, _) = Model::load_compressed_mmap(&target_path)?;
+    let (draft, _) = Model::load_compressed_mmap(&draft_path)?;
+
+    // Mixed-tier request mix over mixed-length prompts: heterogeneous cache
+    // positions inside every batched round.
+    let prompts: Vec<Vec<u16>> = {
+        let mut rng = Rng::new(53);
+        (0..N_REQUESTS).map(|i| lang.gen(6 + i % 7, &mut rng)).collect()
+    };
+
+    // --- one process; max_batch 8 with a wide admission window so the 12
+    // concurrent requests actually stack into multi-session rounds ---
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let server = {
+        let target = Arc::new(target);
+        let draft = Arc::new(draft);
+        std::thread::spawn(move || {
+            serve_blocking_tiers(
+                target,
+                Some(draft),
+                DRAFT_K,
+                "127.0.0.1:0",
+                BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(25) },
+                Json::obj(),
+                |a| {
+                    addr_tx.send(a).unwrap();
+                },
+            )
+            .unwrap();
+        })
+    };
+    let addr = addr_rx.recv()?;
+
+    // --- reference pass: every request alone, one at a time ---
+    let mut client = Client::connect(addr)?;
+    let mut sequential: Vec<Vec<u16>> = Vec::with_capacity(N_REQUESTS);
+    for (i, p) in prompts.iter().enumerate() {
+        let r = client.request_tier(p, MAX_NEW, TIERS[i % TIERS.len()])?;
+        anyhow::ensure!(r.tokens.len() == MAX_NEW, "sequential request {i} truncated");
+        sequential.push(r.tokens);
+    }
+
+    // --- concurrent pass: all 12 at once, mixed tiers ---
+    let mut handles = Vec::new();
+    for (i, p) in prompts.iter().enumerate() {
+        let p = p.clone();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<(usize, Vec<u16>)> {
+            let mut c = Client::connect(addr)?;
+            let r = c.request_tier(&p, MAX_NEW, TIERS[i % TIERS.len()])?;
+            Ok((i, r.tokens))
+        }));
+    }
+    for h in handles {
+        let (i, tokens) = h.join().expect("request thread panicked")?;
+        anyhow::ensure!(
+            tokens == sequential[i],
+            "concurrent request {i} ({} tier) diverged from sequential serve: {tokens:?} vs {:?}",
+            TIERS[i % TIERS.len()],
+            sequential[i]
+        );
+    }
+
+    // --- the worker must have actually batched: occupancy metrics live ---
+    let stats = client.stats()?;
+    let gemm = stats.get("gemm_rounds").and_then(Json::as_usize).unwrap_or(0);
+    let matvec = stats.get("matvec_rounds").and_then(Json::as_usize).unwrap_or(0);
+    let spec = stats.get("spec_rounds").and_then(Json::as_usize).unwrap_or(0);
+    let steps = stats.get("decode_steps").and_then(Json::as_usize).unwrap_or(0);
+    let maxb = stats.get("max_batch_rows").and_then(Json::as_usize).unwrap_or(0);
+    let avg = stats.get("avg_batch_rows").and_then(Json::as_f64).unwrap_or(0.0);
+    anyhow::ensure!(
+        gemm + matvec + spec == steps,
+        "round classes must partition decode_steps: {gemm} + {matvec} + {spec} != {steps}"
+    );
+    anyhow::ensure!(
+        gemm >= 1,
+        "12 concurrent requests against a 25ms admission window produced no GEMM round"
+    );
+    anyhow::ensure!((2..=8).contains(&maxb), "max_batch_rows out of range: {maxb}");
+    anyhow::ensure!(avg >= 1.0, "avg_batch_rows out of range: {avg}");
+    client.shutdown()?;
+    server.join().unwrap();
+    std::fs::remove_file(&target_path).ok();
+    std::fs::remove_file(&draft_path).ok();
+    println!(
+        "batch serve smoke ok: {N_REQUESTS} concurrent mixed-tier requests token-identical to \
+         sequential serve ({gemm} GEMM rounds, max batch {maxb}, avg rows {avg:.2})"
+    );
+    Ok(())
+}

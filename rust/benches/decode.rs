@@ -1,15 +1,19 @@
 //! Decode-throughput benchmark: prefill tok/s, KV-cached vs uncached decode
-//! tok/s, and direct evidence that per-token decode cost is O(T) with the
+//! tok/s, direct evidence that per-token decode cost is O(T) with the
 //! cache (a step at position 2N is nowhere near 2× a step at position N,
-//! while the uncached full forward scales ~quadratically).
+//! while the uncached full forward scales ~quadratically), and
+//! cross-session batched decode throughput at batch 1/8/32 — the serve
+//! worker's round kernel (`decode_step_batch`: one GEMM per projection per
+//! layer for the whole batch) vs stepping every session through its own
+//! matvecs, measured on the same run (`batch_gemm_speedup`).
 //!
 //! Run: `cargo bench --bench decode` (add `-- --tiny` for the CI smoke run
 //! on the test-tiny config). Writes the numbers to `BENCH_decode.json`
 //! (override the path with `BENCH_DECODE_OUT`).
 
 use compot::model::config::ModelConfig;
-use compot::model::decode::{DecodeSession, SamplerCfg};
-use compot::model::Model;
+use compot::model::decode::{argmax, DecodeSession, SamplerCfg};
+use compot::model::{KvCache, Model};
 use compot::util::json::Json;
 use compot::util::timer::{bench, humanize};
 use compot::util::{Rng, Timer};
@@ -31,6 +35,67 @@ fn step_cost(model: &Model, at: &DecodeSession, reps: usize) -> f64 {
 /// Step a session forward until `target` tokens are cached.
 fn advance_to(model: &Model, s: &mut DecodeSession, target: usize) {
     while s.position() < target && s.step(model).is_some() {}
+}
+
+/// Prefilled starting state for a batch of B sessions with mixed prompt
+/// lengths (heterogeneous cache positions, like a real serve round): each
+/// entry is a cache plus the greedy next-input token.
+fn batch_base(model: &Model, bsize: usize) -> Vec<(KvCache, u16)> {
+    (0..bsize)
+        .map(|i| {
+            let prompt: Vec<u16> = (0..4 + i % 5)
+                .map(|t| ((t * 7 + i * 3 + 1) % model.cfg.vocab) as u16)
+                .collect();
+            let mut cache = model.new_cache();
+            let logits = model.prefill(&mut cache, &prompt);
+            let tok = argmax(logits.row(logits.rows() - 1));
+            (cache, tok)
+        })
+        .collect()
+}
+
+/// Run `rounds` greedy decode rounds over clones of `base` — one
+/// `decode_step_batch` per round when `batched`, else one `decode_step` per
+/// session per round — and return the final token of every session.
+fn run_rounds(model: &Model, base: &[(KvCache, u16)], rounds: usize, batched: bool) -> Vec<u16> {
+    let mut caches: Vec<KvCache> = base.iter().map(|(c, _)| c.clone()).collect();
+    let mut toks: Vec<u16> = base.iter().map(|&(_, t)| t).collect();
+    for _ in 0..rounds {
+        if batched {
+            let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+            let logits = model.decode_step_batch(&mut refs, &toks);
+            for (i, t) in toks.iter_mut().enumerate() {
+                *t = argmax(logits.row(i));
+            }
+        } else {
+            for (c, t) in caches.iter_mut().zip(toks.iter_mut()) {
+                let logits = model.decode_step(c, *t);
+                *t = argmax(&logits);
+            }
+        }
+    }
+    toks
+}
+
+/// Batched (or per-session sequential) decode throughput over `rounds`
+/// rounds from the prefilled base state. The per-iteration cache clone is
+/// identical in both modes, so the batched/sequential ratio isolates the
+/// dispatch difference.
+fn batch_tok_s(
+    model: &Model,
+    base: &[(KvCache, u16)],
+    rounds: usize,
+    budget: f64,
+    batched: bool,
+) -> f64 {
+    let st = bench(
+        || {
+            std::hint::black_box(run_rounds(model, base, rounds, batched));
+        },
+        budget,
+        200,
+    );
+    (base.len() * rounds) as f64 / st.median_s
 }
 
 fn main() {
@@ -108,6 +173,34 @@ fn main() {
         eprintln!("WARNING: step-cost ratio {ratio:.2} ≥ 2 — cache not amortizing");
     }
 
+    // --- cross-session batched decode: one GEMM per layer per round ---
+    // B sessions at heterogeneous positions, stepped together through
+    // decode_step_batch vs one at a time through decode_step, same run,
+    // same starting caches. Parity is asserted before timing: batching
+    // must never change a continuation.
+    let batch_rounds = 8usize;
+    let mut batch_tok: Vec<(usize, f64)> = Vec::new();
+    let mut seq32_tok_s = 0.0f64;
+    for bsize in [1usize, 8, 32] {
+        let base = batch_base(&model, bsize);
+        assert_eq!(
+            run_rounds(&model, &base, batch_rounds, true),
+            run_rounds(&model, &base, batch_rounds, false),
+            "batched decode diverged from per-session stepping at batch {bsize}"
+        );
+        let batched = batch_tok_s(&model, &base, batch_rounds, budget, true);
+        println!("batched decode @B={bsize}: {batched:.0} tok/s");
+        if bsize == 32 {
+            seq32_tok_s = batch_tok_s(&model, &base, batch_rounds, budget, false);
+            println!(
+                "sequential decode @B=32: {seq32_tok_s:.0} tok/s ({:.2}x GEMM speedup)",
+                batched / seq32_tok_s
+            );
+        }
+        batch_tok.push((bsize, batched));
+    }
+    let batch_gemm_speedup = batch_tok.last().map(|&(_, t)| t / seq32_tok_s).unwrap_or(0.0);
+
     // --- record the trajectory point ---
     let mut j = Json::obj();
     j.set("bench", "decode".into())
@@ -121,7 +214,14 @@ fn main() {
         .set("step_s_at_n", step_n.into())
         .set("step_s_at_2n", step_2n.into())
         .set("step_cost_ratio_2n_vs_n", ratio.into())
-        .set("o_t_scaling_ok", Json::Bool(ratio < 2.0));
+        .set("o_t_scaling_ok", Json::Bool(ratio < 2.0))
+        .set("batch_rounds", batch_rounds.into());
+    for &(bsize, tok_s) in &batch_tok {
+        j.set(&format!("decode_tok_s_batch{bsize}"), tok_s.into());
+    }
+    j.set("decode_tok_s_batch32_sequential", seq32_tok_s.into())
+        // batch-32 batched round vs 32 per-row steps, same run, same caches
+        .set("batch_gemm_speedup", batch_gemm_speedup.into());
     let out = std::env::var("BENCH_DECODE_OUT").unwrap_or_else(|_| "BENCH_decode.json".into());
     match std::fs::write(&out, j.to_string() + "\n") {
         Ok(()) => println!("wrote {out}"),

@@ -123,9 +123,12 @@ pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
 }
 
 /// f32 dot with 4-way unrolled accumulators (vectorizes well, keeps error
-/// ~sqrt(k) smaller than naive single-accumulator summation).
+/// ~sqrt(k) smaller than naive single-accumulator summation). Crate-visible
+/// so the cached-attention row kernel (`model::decode::Block::attend_row`)
+/// scores against K slices with the exact dot [`matmul_nt`] uses —
+/// bit-identity between the slice path and the Mat path depends on it.
 #[inline]
-fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+pub(crate) fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
     let mut acc = [0.0f32; 4];
     let chunks = a.len() / 4;
     for c in 0..chunks {

@@ -24,9 +24,7 @@
 //! serving layer can step many sessions round-robin and admit/retire them
 //! mid-flight (continuous batching, see `serve::server`).
 
-use super::transformer::{
-    attention_head, rmsnorm, rmsnorm_row, rope_row, silu, Block, Model, Stage,
-};
+use super::transformer::{rmsnorm, rmsnorm_row, rope_row, silu, Block, Model, Stage};
 use crate::linalg::{gemm, Mat};
 use crate::util::Rng;
 
@@ -69,23 +67,6 @@ impl LayerKv {
         self.k.row_mut(pos).copy_from_slice(k);
         self.v.row_mut(pos).copy_from_slice(v);
     }
-
-    /// First `len` cached rows of KV head `h` as a len×hd matrix.
-    fn k_head(&self, h: usize, hd: usize, len: usize) -> Mat {
-        head_of(&self.k, h, hd, len)
-    }
-
-    fn v_head(&self, h: usize, hd: usize, len: usize) -> Mat {
-        head_of(&self.v, h, hd, len)
-    }
-}
-
-fn head_of(m: &Mat, h: usize, hd: usize, len: usize) -> Mat {
-    let mut out = Mat::zeros(len, hd);
-    for t in 0..len {
-        out.row_mut(t).copy_from_slice(&m.row(t)[h * hd..(h + 1) * hd]);
-    }
-    out
 }
 
 /// Per-model KV cache: one [`LayerKv`] per [`Stage::Block`] (Linear
@@ -240,6 +221,74 @@ impl Model {
         gemm::matmul(&rmsnorm(&x, &self.final_norm), &self.lm_head)
     }
 
+    /// Cross-session batched decode step: feed one token per session, each
+    /// against its *own* cache at its *own* position, and return the
+    /// B×vocab logits — row `b` is exactly what [`Model::decode_step`] on
+    /// `caches[b]` alone would have returned. One call, one activation
+    /// matrix per layer: every projection dispatches a single
+    /// [`LinearWeight::apply`] (blocked GEMM) across the whole batch, while
+    /// RoPE, KV appends, and attention stay per-row against each session's
+    /// cache ([`Block::decode_step_batch`]). B == 1 falls back to the plain
+    /// matvec [`decode_step`] kernel. This is the serve worker's round
+    /// kernel ([`crate::serve::server`]): N active sessions cost one GEMM
+    /// per projection per layer per round instead of N matvecs.
+    ///
+    /// Bit-identity with each session stepping alone rests on the
+    /// `apply`/`apply_row` accumulation-order invariant (see
+    /// `linalg::gemm::matvec_row`) and is parity-tested for every
+    /// `LinearWeight` variant at heterogeneous cache positions.
+    pub fn decode_step_batch(&self, caches: &mut [&mut KvCache], tokens: &[u16]) -> Mat {
+        assert!(!tokens.is_empty(), "decode_step_batch: empty batch");
+        assert_eq!(
+            caches.len(),
+            tokens.len(),
+            "decode_step_batch: {} caches for {} tokens",
+            caches.len(),
+            tokens.len()
+        );
+        if tokens.len() == 1 {
+            // B == 1 is the plain decode step: per-row kernels, no GEMM.
+            let row = self.decode_step(&mut *caches[0], tokens[0]);
+            return Mat::from_vec(1, row.len(), row);
+        }
+        // Read every session's position once up front — all stages of this
+        // round see the same snapshot; lengths advance only at the end.
+        let positions: Vec<usize> = caches.iter().map(|c| c.len).collect();
+        for (b, c) in caches.iter().enumerate() {
+            assert_eq!(
+                c.layers.len(),
+                self.stages.len(),
+                "decode_step_batch: cache {b} built for a different model"
+            );
+            assert!(
+                positions[b] < c.capacity,
+                "decode_step_batch: KV cache {b} full ({} rows)",
+                positions[b]
+            );
+        }
+        let hd = self.cfg.head_dim();
+        let mut x = self.embed_tokens(tokens);
+        for (layer, stage) in self.stages.iter().enumerate() {
+            x = match stage {
+                Stage::Block(b) => {
+                    let mut rows: Vec<(&mut LayerKv, usize)> = caches
+                        .iter_mut()
+                        .zip(positions.iter())
+                        .map(|(c, &p)| {
+                            (c.layers[layer].as_mut().expect("block stage has a cache"), p)
+                        })
+                        .collect();
+                    b.decode_step_batch(&x, hd, self.cfg.rope_theta, &mut rows)
+                }
+                Stage::Linear(t) => gemm::matmul(&x, t),
+            };
+        }
+        for c in caches.iter_mut() {
+            c.len += 1;
+        }
+        gemm::matmul(&rmsnorm(&x, &self.final_norm), &self.lm_head)
+    }
+
     /// Sampled continuation of `prompt` by up to `max_new` tokens through
     /// the incremental runtime. Returns `[]` for an empty prompt or
     /// `max_new == 0`; stops early at the config's `max_seq` (matching
@@ -305,22 +354,48 @@ impl Block {
     }
 
     /// Cached attention for one query row against the first `total` cached
-    /// rows: materialize each KV head's context once and share it across its
-    /// q_per_kv query heads (GQA) — the T×hd copy is the step's only O(T)
-    /// memory traffic. The one attention body both [`Block::decode_step`]
-    /// and [`Block::decode_step_multi`] run, so the sequential and batched
-    /// decode paths cannot drift apart.
+    /// rows, reading K/V head slices straight out of the cache storage — no
+    /// per-head `Mat` materialization. The only per-call scratch is one
+    /// `total`-length scores buffer, reused across every head; scores run
+    /// through the same dot kernel GEMM uses ([`gemm::dot_f32`]) and the
+    /// softmax + weighted-V accumulation mirrors
+    /// [`super::transformer::attention_head`] operation for operation, so
+    /// this stays bit-identical to the batched reference path. The one
+    /// attention body [`Block::decode_step`], [`Block::decode_step_multi`],
+    /// and [`Block::decode_step_batch`] all run, so the sequential and
+    /// batched decode paths cannot drift apart.
     fn attend_row(&self, q: &[f32], kv: &LayerKv, head_dim: usize, total: usize) -> Vec<f32> {
         let q_per_kv = self.n_heads / self.n_kv_heads;
+        let scale = 1.0 / (head_dim as f32).sqrt();
         let mut concat = vec![0f32; self.n_heads * head_dim];
-        for kvh in 0..self.n_kv_heads {
-            let kh = kv.k_head(kvh, head_dim, total);
-            let vh = kv.v_head(kvh, head_dim, total);
-            for hq in 0..q_per_kv {
-                let h = kvh * q_per_kv + hq;
-                let qh = Mat::from_vec(1, head_dim, q[h * head_dim..(h + 1) * head_dim].to_vec());
-                let oh = attention_head(&qh, &kh, &vh, true);
-                concat[h * head_dim..(h + 1) * head_dim].copy_from_slice(oh.row(0));
+        let mut scores = vec![0f32; total];
+        for h in 0..self.n_heads {
+            let off = (h / q_per_kv) * head_dim;
+            let qh = &q[h * head_dim..(h + 1) * head_dim];
+            for (j, s) in scores.iter_mut().enumerate() {
+                *s = gemm::dot_f32(qh, &kv.k.row(j)[off..off + head_dim]);
+            }
+            let mut maxv = f32::NEG_INFINITY;
+            for s in scores.iter_mut() {
+                *s *= scale;
+                maxv = maxv.max(*s);
+            }
+            let mut denom = 0.0f32;
+            for s in scores.iter_mut() {
+                *s = (*s - maxv).exp();
+                denom += *s;
+            }
+            let inv = 1.0 / denom.max(1e-20);
+            let orow = &mut concat[h * head_dim..(h + 1) * head_dim];
+            for (j, &s) in scores.iter().enumerate() {
+                let w = s * inv;
+                if w == 0.0 {
+                    continue;
+                }
+                let vrow = &kv.v.row(j)[off..off + head_dim];
+                for (oc, vc) in orow.iter_mut().zip(vrow.iter()) {
+                    *oc += w * vc;
+                }
             }
         }
         concat
@@ -356,6 +431,58 @@ impl Block {
         let mut concat = Mat::zeros(x.rows(), self.n_heads * head_dim);
         for t in 0..x.rows() {
             let row = self.attend_row(q.row(t), kv, head_dim, pos0 + t + 1);
+            concat.row_mut(t).copy_from_slice(&row);
+        }
+        let attn_out = self.o.apply(&concat);
+        let x1 = x.add(&attn_out);
+
+        // ---- MLP (SwiGLU) ----
+        let xn2 = rmsnorm(&x1, &self.mlp_norm);
+        let g = self.gate.apply(&xn2);
+        let u = self.up.apply(&xn2);
+        let mut h = g;
+        for i in 0..h.rows() {
+            let hrow = h.row_mut(i);
+            for (hv, uv) in hrow.iter_mut().zip(u.row(i).iter()) {
+                *hv = silu(*hv) * uv;
+            }
+        }
+        let mlp_out = self.down.apply(&h);
+        x1.add(&mlp_out)
+    }
+
+    /// Cross-session decode step: row `t` of `x` is one session's hidden
+    /// row, and `rows[t]` is that session's layer cache plus its absolute
+    /// position. Generalizes [`Block::decode_step_multi`] from "one cache,
+    /// consecutive positions" to "one cache *per row*, arbitrary positions":
+    /// projections run batched through [`LinearWeight::apply`] (one blocked
+    /// GEMM per projection for the whole batch), while RoPE, the KV append,
+    /// and attention run per row against each row's own cache — exactly the
+    /// kernels [`Block::decode_step`] runs, so every output row is
+    /// bit-identical to that session stepping alone (the `apply`/`apply_row`
+    /// accumulation-order invariant; parity-tested for every `LinearWeight`
+    /// variant).
+    pub fn decode_step_batch(
+        &self,
+        x: &Mat,
+        head_dim: usize,
+        theta: f32,
+        rows: &mut [(&mut LayerKv, usize)],
+    ) -> Mat {
+        debug_assert_eq!(x.rows(), rows.len());
+        // ---- attention ----
+        let xn = rmsnorm(x, &self.attn_norm);
+        let mut q = self.q.apply(&xn);
+        let mut k = self.k.apply(&xn);
+        let v = self.v.apply(&xn);
+        for (t, (kv, pos)) in rows.iter_mut().enumerate() {
+            rope_row(q.row_mut(t), head_dim, theta, *pos);
+            rope_row(k.row_mut(t), head_dim, theta, *pos);
+            kv.append_row(*pos, k.row(t), v.row(t));
+        }
+        let mut concat = Mat::zeros(x.rows(), self.n_heads * head_dim);
+        for (t, (kv, pos)) in rows.iter().enumerate() {
+            let row = self.attend_row(q.row(t), &**kv, head_dim, pos + 1);
             concat.row_mut(t).copy_from_slice(&row);
         }
         let attn_out = self.o.apply(&concat);
@@ -509,19 +636,43 @@ impl DecodeSession {
     }
 
     /// Advance one decode step; returns the newly generated token, or `None`
-    /// once the session has finished.
+    /// once the session has finished. Composed from the two batched-decode
+    /// halves below: produce the input token, run the single-session
+    /// forward, consume the logits row.
     pub fn step(&mut self, model: &Model) -> Option<u16> {
+        let last = self.next_input()?;
+        let logits = model.decode_step(&mut self.cache, last);
+        Some(self.consume_logits(&logits))
+    }
+
+    /// First half of [`DecodeSession::step`]: the token this session feeds
+    /// on its next decode step, or `None` once it has finished. The serving
+    /// layer collects these across sessions, runs one
+    /// [`Model::decode_step_batch`] over the group, then hands each session
+    /// its logits row via [`DecodeSession::consume_logits`].
+    pub fn next_input(&self) -> Option<u16> {
         if self.done {
             return None;
         }
-        let last = *self.tokens.last().expect("session holds at least the prompt");
-        let logits = model.decode_step(&mut self.cache, last);
-        let next = self.sampler.pick(&logits);
+        Some(*self.tokens.last().expect("session holds at least the prompt"))
+    }
+
+    /// This session's KV cache, for stepping it through a batched forward.
+    pub fn cache_mut(&mut self) -> &mut KvCache {
+        &mut self.cache
+    }
+
+    /// Second half of [`DecodeSession::step`]: sample from a freshly
+    /// computed logits row, record the token, and update the stop state.
+    /// Call exactly once after a forward that advanced this session's cache
+    /// by the row [`DecodeSession::next_input`] produced.
+    pub fn consume_logits(&mut self, logits: &[f32]) -> u16 {
+        let next = self.sampler.pick(logits);
         self.tokens.push(next);
         if self.generated_len() >= self.max_new || self.tokens.len() >= self.max_total {
             self.done = true;
         }
-        Some(next)
+        next
     }
 
     pub fn is_done(&self) -> bool {
@@ -866,6 +1017,128 @@ mod tests {
             assert!((one[(0, j)] - row[j]).abs() == 0.0, "logit {j}");
         }
         assert_eq!(a.len(), b.len());
+    }
+
+    #[test]
+    fn batched_step_matches_individual_steps_bitwise() {
+        // The cross-session batched kernel: one decode_step_batch over B
+        // sessions (each cache prefilled to a *different* length, so rows
+        // sit at heterogeneous positions) must reproduce each session's
+        // solo decode_step logits bitwise — for every `LinearWeight`
+        // variant (GEMM dispatch vs apply_row), at batch sizes 1, 2, 8.
+        for (name, model) in [
+            ("dense", tiny_model(71)),
+            ("lowrank", lowrank_model(71)),
+            ("factorized", factorized_model(71)),
+            ("quant-dense", quantized(&tiny_model(71))),
+            ("quant-lowrank", quantized(&lowrank_model(71))),
+            ("quant-factorized", quantized(&factorized_model(71))),
+        ] {
+            for bsize in [1usize, 2, 8] {
+                let prompts: Vec<Vec<u16>> = (0..bsize)
+                    .map(|i| {
+                        (0..3 + (i * 7) % 5).map(|t| ((t * 11 + i * 13) % 64) as u16).collect()
+                    })
+                    .collect();
+                let toks: Vec<u16> = (0..bsize).map(|i| ((i * 17 + 5) % 64) as u16).collect();
+                let prefilled = |p: &[u16]| {
+                    let mut c = model.new_cache();
+                    model.prefill(&mut c, p);
+                    c
+                };
+                // sequential twin: each session steps alone
+                let mut seq: Vec<KvCache> = prompts.iter().map(|p| prefilled(p)).collect();
+                let seq_rows: Vec<Vec<f32>> = seq
+                    .iter_mut()
+                    .zip(toks.iter())
+                    .map(|(c, &t)| model.decode_step(c, t))
+                    .collect();
+                // batched: one forward for the whole group
+                let mut bat: Vec<KvCache> = prompts.iter().map(|p| prefilled(p)).collect();
+                let mut refs: Vec<&mut KvCache> = bat.iter_mut().collect();
+                let logits = model.decode_step_batch(&mut refs, &toks);
+                drop(refs);
+                assert_eq!(logits.shape(), (bsize, model.cfg.vocab), "{name}/b{bsize}");
+                for (b, row) in seq_rows.iter().enumerate() {
+                    for j in 0..row.len() {
+                        assert!(
+                            (logits[(b, j)] - row[j]).abs() == 0.0,
+                            "{name}/b{bsize}: row {b} logit {j}: {} vs {}",
+                            logits[(b, j)],
+                            row[j]
+                        );
+                    }
+                }
+                // ...and the caches themselves are interchangeable afterwards
+                for (b, (sc, bc)) in seq.iter_mut().zip(bat.iter_mut()).enumerate() {
+                    assert_eq!(sc.len(), bc.len(), "{name}/b{bsize}: row {b} position");
+                    let a = model.decode_step(sc, 7);
+                    let z = model.decode_step(bc, 7);
+                    for j in 0..a.len() {
+                        assert!(
+                            (a[j] - z[j]).abs() == 0.0,
+                            "{name}/b{bsize}: post-step row {b} logit {j}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "empty batch")]
+    fn batched_step_rejects_empty_batch() {
+        let model = tiny_model(72);
+        let mut refs: Vec<&mut KvCache> = Vec::new();
+        model.decode_step_batch(&mut refs, &[]);
+    }
+
+    #[test]
+    #[should_panic(expected = "full")]
+    fn batched_step_rejects_full_cache() {
+        let model = tiny_model(73);
+        let mut a = model.new_cache_with(8);
+        let mut b = model.new_cache_with(4);
+        model.prefill(&mut a, &[1, 2, 3]);
+        model.prefill(&mut b, &[1, 2, 3, 4]); // b is at capacity
+        let mut refs = vec![&mut a, &mut b];
+        model.decode_step_batch(&mut refs, &[5, 6]);
+    }
+
+    #[test]
+    #[should_panic(expected = "caches for")]
+    fn batched_step_rejects_mismatched_lengths() {
+        let model = tiny_model(74);
+        let mut a = model.new_cache();
+        model.prefill(&mut a, &[1, 2]);
+        let mut refs = vec![&mut a];
+        model.decode_step_batch(&mut refs, &[5, 6]);
+    }
+
+    #[test]
+    fn session_split_step_halves_compose_to_step() {
+        // next_input / consume_logits must drive a session to exactly the
+        // tokens step() produces, including the done transition.
+        let model = tiny_model(75);
+        let prompt: Vec<u16> = vec![4, 2, 7];
+        let mut whole = DecodeSession::start(&model, &prompt, 6, SamplerCfg::greedy());
+        let mut split = DecodeSession::start(&model, &prompt, 6, SamplerCfg::greedy());
+        loop {
+            let a = whole.step(&model);
+            let b = match split.next_input() {
+                None => None,
+                Some(last) => {
+                    let logits = model.decode_step(split.cache_mut(), last);
+                    Some(split.consume_logits(&logits))
+                }
+            };
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
+        assert_eq!(whole.tokens(), split.tokens());
+        assert!(split.is_done() && split.next_input().is_none());
     }
 
     #[test]

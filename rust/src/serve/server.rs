@@ -21,17 +21,23 @@
 //! Thread-per-connection front-end feeds the shared [`Batcher`]; one worker
 //! thread runs **continuous batching**: each request becomes a
 //! [`DecodeSession`] (prefill once, then O(T) KV-cached decode steps), the
-//! worker steps every active session one token per round, and sessions
+//! worker advances every active session one token per round, and sessions
 //! join/leave the running batch as they arrive/finish — a finished request
 //! frees its slot for a queued one immediately instead of waiting for the
-//! whole batch. Shutdown is graceful: closing the batcher rejects *new*
-//! work, but queued requests still admit and every in-flight session decodes
-//! to completion and flushes its response. Everything std-only (offline env
-//! — no tokio), which is fine at this scale: the model forward dominates.
+//! whole batch. Each round the plain sessions sharing a model (full-tier on
+//! the target, draft-tier on the draft) step through ONE cross-session
+//! batched forward ([`Model::decode_step_batch`]): one `LinearWeight::apply`
+//! per projection per layer for the whole group — a real blocked GEMM when
+//! more than one session is active, the single-row matvec kernel at batch
+//! 1 — while speculative sessions keep their own multi-row verify forwards.
+//! Shutdown is graceful: closing the batcher rejects *new* work, but queued
+//! requests still admit and every in-flight session decodes to completion
+//! and flushes its response. Everything std-only (offline env — no tokio),
+//! which is fine at this scale: the model forward dominates.
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::spec::{SpeculativeSession, Tier};
-use crate::model::decode::{sampler_cfg_from_json, DecodeSession, SamplerCfg};
+use crate::model::decode::{sampler_cfg_from_json, DecodeSession, KvCache, SamplerCfg};
 use crate::model::Model;
 use crate::util::json::Json;
 use crate::util::Timer;
@@ -68,9 +74,11 @@ struct Job {
 
 /// One scheduling unit of the continuous batch: a plain decode session on
 /// the target or draft, or a speculative draft/verify session. Each gets
-/// one "turn" per worker round — a single token for the plain tiers, up to
-/// draft_k + 1 tokens for spec (its verify forward costs about one target
-/// step, so per-round work stays balanced across tiers).
+/// one "turn" per worker round — a single token for the plain tiers
+/// (stepped together through one batched forward per model, see
+/// [`step_plain_group`]), up to draft_k + 1 tokens for spec (its verify
+/// forward costs about one target step, so per-round work stays balanced
+/// across tiers).
 enum AnySession {
     Full(DecodeSession),
     Draft(DecodeSession),
@@ -99,26 +107,44 @@ impl AnySession {
             AnySession::Spec(s) => s.generated(),
         }
     }
+}
 
-    fn turn(&mut self, target: &Model, draft: Option<&Model>, metrics: &Metrics) {
-        match self {
-            AnySession::Full(s) => {
-                s.step(target);
-                metrics.steps.fetch_add(1, Ordering::Relaxed);
+/// Step every unfinished plain session of one model group — `Full` sessions
+/// on the target (`want_draft == false`) or `Draft` sessions on the draft
+/// (`want_draft == true`) — through a single cross-session batched forward:
+/// collect each session's next input token and KV cache, run one
+/// [`Model::decode_step_batch`] (one `LinearWeight::apply` per projection
+/// per layer for the whole group; matvec fallback at batch 1), then hand
+/// each session its own logits row so sampling and stop logic stay
+/// per-session. Output is bit-identical to each session stepping alone —
+/// the kernel's parity contract — so continuous batching never changes a
+/// continuation.
+fn step_plain_group(model: &Model, active: &mut [Active], want_draft: bool, metrics: &Metrics) {
+    let mut idxs: Vec<usize> = Vec::new();
+    let mut tokens: Vec<u16> = Vec::new();
+    let mut caches: Vec<&mut KvCache> = Vec::new();
+    for (i, a) in active.iter_mut().enumerate() {
+        let s = match (&mut a.session, want_draft) {
+            (AnySession::Full(s), false) | (AnySession::Draft(s), true) => s,
+            _ => continue,
+        };
+        let Some(tok) = s.next_input() else { continue };
+        idxs.push(i);
+        tokens.push(tok);
+        caches.push(s.cache_mut());
+    }
+    if tokens.is_empty() {
+        return;
+    }
+    let logits = model.decode_step_batch(&mut caches, &tokens);
+    drop(caches);
+    metrics.record_batch_forward(tokens.len());
+    for (r, &i) in idxs.iter().enumerate() {
+        match &mut active[i].session {
+            AnySession::Full(s) | AnySession::Draft(s) => {
+                s.consume_logits(logits.row(r));
             }
-            AnySession::Draft(s) => {
-                s.step(draft.expect("draft session admitted without a draft model"));
-                metrics.steps.fetch_add(1, Ordering::Relaxed);
-            }
-            AnySession::Spec(s) => {
-                let d = draft.expect("spec session admitted without a draft model");
-                if let Some(r) = s.round(target, d) {
-                    metrics.steps.fetch_add(1, Ordering::Relaxed);
-                    metrics.spec_rounds.fetch_add(1, Ordering::Relaxed);
-                    metrics.draft_proposed.fetch_add(r.proposed as u64, Ordering::Relaxed);
-                    metrics.draft_accepted.fetch_add(r.accepted as u64, Ordering::Relaxed);
-                }
-            }
+            AnySession::Spec(_) => unreachable!("plain group collected a spec session"),
         }
     }
 }
@@ -138,9 +164,21 @@ pub struct Metrics {
     pub total_latency_us: AtomicU64,
     /// Admission rounds that brought at least one new session into the batch.
     pub batches: AtomicU64,
-    /// Total target-model forwards on the decode path: one per plain decode
-    /// step, one per speculative verify round (however many rows it stacks).
+    /// Total decode-path forwards: one per batched plain-group forward
+    /// (however many session rows it stacks), one per speculative verify
+    /// round. Always `gemm_rounds + matvec_rounds + spec_rounds`.
     pub steps: AtomicU64,
+    /// Plain-group forwards that stacked more than one session row — real
+    /// blocked-GEMM dispatch per projection.
+    pub gemm_rounds: AtomicU64,
+    /// Plain-group forwards that held a single session row and took the
+    /// matvec fallback kernel.
+    pub matvec_rounds: AtomicU64,
+    /// Total session rows fed through plain-group forwards (Σ batch sizes —
+    /// `avg_batch_rows` in stats is this over the forward count).
+    pub batched_rows: AtomicU64,
+    /// Largest row count any single plain-group forward stacked.
+    pub max_batch_rows: AtomicU64,
     /// Speculative verify rounds (multi-row target forwards).
     pub spec_rounds: AtomicU64,
     /// Tokens the draft proposed across all speculative rounds.
@@ -155,11 +193,33 @@ impl Metrics {
         let rounds = self.spec_rounds.load(Ordering::Relaxed);
         let proposed = self.draft_proposed.load(Ordering::Relaxed);
         let accepted = self.draft_accepted.load(Ordering::Relaxed);
+        let tokens_out = self.tokens_out.load(Ordering::Relaxed);
+        let steps = self.steps.load(Ordering::Relaxed);
+        let gemm = self.gemm_rounds.load(Ordering::Relaxed);
+        let matvec = self.matvec_rounds.load(Ordering::Relaxed);
+        let brows = self.batched_rows.load(Ordering::Relaxed);
         let mut j = Json::obj();
         j.set("requests", (self.requests.load(Ordering::Relaxed) as f64).into())
-            .set("tokens_out", (self.tokens_out.load(Ordering::Relaxed) as f64).into())
+            .set("tokens_out", (tokens_out as f64).into())
             .set("batches", (self.batches.load(Ordering::Relaxed) as f64).into())
-            .set("decode_steps", (self.steps.load(Ordering::Relaxed) as f64).into())
+            .set("decode_steps", (steps as f64).into())
+            .set("gemm_rounds", (gemm as f64).into())
+            .set("matvec_rounds", (matvec as f64).into())
+            .set("max_batch_rows", (self.max_batch_rows.load(Ordering::Relaxed) as f64).into())
+            // Mean session rows per plain-group forward: the occupancy
+            // number — how much of the continuous batch each dispatched
+            // apply actually amortizes.
+            .set(
+                "avg_batch_rows",
+                (if gemm + matvec == 0 { 0.0 } else { brows as f64 / (gemm + matvec) as f64 })
+                    .into(),
+            )
+            // Output tokens amortized per decode-path forward across all
+            // tiers — batching and speculative acceptance both raise it.
+            .set(
+                "tokens_per_forward",
+                (if steps == 0 { 0.0 } else { tokens_out as f64 / steps as f64 }).into(),
+            )
             .set("spec_rounds", (rounds as f64).into())
             .set("draft_proposed", (proposed as f64).into())
             .set("draft_accepted", (accepted as f64).into())
@@ -180,6 +240,22 @@ impl Metrics {
                 (self.total_latency_us.load(Ordering::Relaxed) as f64 / reqs as f64 / 1e3).into(),
             );
         j
+    }
+
+    /// Account one plain-group batched forward that stacked `rows` session
+    /// rows: one decode step (steps count forwards, not rows), classified
+    /// as a GEMM round (rows > 1) or a matvec-fallback round (rows == 1),
+    /// plus the occupancy aggregates behind `avg_batch_rows` /
+    /// `max_batch_rows`.
+    fn record_batch_forward(&self, rows: usize) {
+        self.steps.fetch_add(1, Ordering::Relaxed);
+        self.batched_rows.fetch_add(rows as u64, Ordering::Relaxed);
+        self.max_batch_rows.fetch_max(rows as u64, Ordering::Relaxed);
+        if rows > 1 {
+            self.gemm_rounds.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.matvec_rounds.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     fn finish(
@@ -347,15 +423,41 @@ pub fn serve_blocking_tiers(
                     };
                     active.push(Active { session, enqueued: job.enqueued, reply: job.reply });
                 }
-                // One turn per running session (a token, or a spec round),
-                // then retire finished sessions so their slots free up for
-                // the next admission.
+                // One turn per running session per round. The plain tiers
+                // step through one batched forward per model — all full
+                // sessions stack into a single target forward, all draft
+                // sessions into a single draft forward (one apply per
+                // projection per layer each; matvec at batch 1) — while
+                // spec sessions run their own draft/verify rounds. Then
+                // retire finished sessions so their slots free up for the
+                // next admission.
+                step_plain_group(&model, &mut active, false, &metrics);
+                if let Some(d) = draft.as_deref() {
+                    step_plain_group(d, &mut active, true, &metrics);
+                }
+                for a in active.iter_mut() {
+                    if let AnySession::Spec(s) = &mut a.session {
+                        if s.is_done() {
+                            continue;
+                        }
+                        let d = draft
+                            .as_deref()
+                            .expect("spec session admitted without a draft model");
+                        if let Some(r) = s.round(&model, d) {
+                            metrics.steps.fetch_add(1, Ordering::Relaxed);
+                            metrics.spec_rounds.fetch_add(1, Ordering::Relaxed);
+                            metrics
+                                .draft_proposed
+                                .fetch_add(r.proposed as u64, Ordering::Relaxed);
+                            metrics
+                                .draft_accepted
+                                .fetch_add(r.accepted as u64, Ordering::Relaxed);
+                        }
+                    }
+                }
                 let bsize = active.len();
                 let mut i = 0;
                 while i < active.len() {
-                    if !active[i].session.is_done() {
-                        active[i].session.turn(&model, draft.as_deref(), &metrics);
-                    }
                     if active[i].session.is_done() {
                         let done = active.swap_remove(i);
                         let tier = done.session.tier();
@@ -809,6 +911,45 @@ mod tests {
             assert_eq!(tokens.len(), 6);
         }
         let mut c = Client::connect(addr).unwrap();
+        c.shutdown().unwrap();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn stats_report_batch_occupancy() {
+        // Six concurrent full-tier requests against a max_batch-8 worker:
+        // the batched rounds must show up in the occupancy metrics, and the
+        // forward classification must exactly partition decode_steps.
+        let (addr, server) = spawn_server(
+            12,
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(50) },
+            Json::obj(),
+        );
+        let mut handles = Vec::new();
+        for i in 0..6u16 {
+            handles.push(std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                c.request(&[i + 1, i + 2], 8).unwrap().tokens.len()
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 8);
+        }
+        let mut c = Client::connect(addr).unwrap();
+        let stats = c.stats().unwrap();
+        let gemm = stats.get("gemm_rounds").and_then(Json::as_usize).unwrap();
+        let matvec = stats.get("matvec_rounds").and_then(Json::as_usize).unwrap();
+        let spec = stats.get("spec_rounds").and_then(Json::as_usize).unwrap();
+        let steps = stats.get("decode_steps").and_then(Json::as_usize).unwrap();
+        assert_eq!(gemm + matvec + spec, steps, "round classes must partition decode_steps");
+        // the 50ms admission window makes truly serialized execution of six
+        // concurrent 8-token requests effectively impossible
+        assert!(gemm >= 1, "no multi-session GEMM round recorded");
+        let maxb = stats.get("max_batch_rows").and_then(Json::as_usize).unwrap();
+        assert!((2..=8).contains(&maxb), "max_batch_rows {maxb}");
+        let avg = stats.get("avg_batch_rows").and_then(Json::as_f64).unwrap();
+        assert!((1.0..=8.0).contains(&avg), "avg_batch_rows {avg}");
+        assert!(stats.get("tokens_per_forward").and_then(Json::as_f64).unwrap() > 0.0);
         c.shutdown().unwrap();
         server.join().unwrap();
     }

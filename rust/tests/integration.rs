@@ -350,6 +350,93 @@ fn kv_cached_decode_is_bit_identical_for_compressed_plans() {
 }
 
 #[test]
+fn batched_decode_is_bit_identical_across_all_variants() {
+    // NOT artifact-gated. The cross-session batched-decode acceptance
+    // matrix: for every LinearWeight variant — in-memory, checkpoint
+    // owned-reloaded, AND zero-copy mmap-reloaded — one
+    // `Model::decode_step_batch` over sessions whose caches sit at
+    // heterogeneous positions (mixed prompt lengths) must reproduce each
+    // session's solo `decode_step` logits bitwise, and the caches must stay
+    // interchangeable with the sequential path afterwards.
+    use compot::coordinator::plan::CompressionPlan;
+    use compot::data::SynthLang;
+    use compot::model::config::ModelConfig;
+    use compot::model::KvCache;
+
+    let base = Model::random(&ModelConfig::test_tiny(), &mut Rng::new(70));
+    let lang = SynthLang::wiki(base.cfg.vocab);
+    let calib = lang.gen_batch(6, 48, &mut Rng::new(71));
+    let defaults = StageConfig::new(0.25, false);
+    let dir = std::env::temp_dir().join("compot_batch_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let specs: [Option<&str>; 6] = [
+        None, // dense
+        Some("svd-llm@0.2"),
+        Some("compot@0.25"),
+        Some("rtn4"),
+        Some("svd-llm@0.2+rtn4"),
+        Some("compot@0.25+gptq4"),
+    ];
+    // mixed prompt lengths → heterogeneous cache positions inside one batch
+    let prompts: [&[u16]; 4] = [&[3, 1, 4, 1, 5, 9, 2, 6], &[2, 7], &[1, 8, 2, 8, 1], &[9, 9, 8]];
+    let toks: [u16; 4] = [5, 11, 3, 60];
+    let check = |m: &Model, label: &str| {
+        let prefilled = |p: &&[u16]| {
+            let mut c = m.new_cache();
+            m.prefill(&mut c, p);
+            c
+        };
+        let mut seq: Vec<KvCache> = prompts.iter().map(prefilled).collect();
+        let seq_rows: Vec<Vec<f32>> =
+            seq.iter_mut().zip(toks.iter()).map(|(c, &t)| m.decode_step(c, t)).collect();
+        let mut bat: Vec<KvCache> = prompts.iter().map(prefilled).collect();
+        let mut refs: Vec<&mut KvCache> = bat.iter_mut().collect();
+        let logits = m.decode_step_batch(&mut refs, &toks);
+        drop(refs);
+        for (b, row) in seq_rows.iter().enumerate() {
+            for (j, &want) in row.iter().enumerate() {
+                assert!(
+                    (logits[(b, j)] - want).abs() == 0.0,
+                    "{label}: row {b} logit {j}: {} vs {want}",
+                    logits[(b, j)]
+                );
+            }
+        }
+        for (b, (sc, bc)) in seq.iter_mut().zip(bat.iter_mut()).enumerate() {
+            assert_eq!(sc.len(), bc.len(), "{label}: row {b} position");
+            let a = m.decode_step(sc, 7);
+            let z = m.decode_step(bc, 7);
+            assert!(
+                a.iter().zip(z.iter()).all(|(x, y)| (x - y).abs() == 0.0),
+                "{label}: post-batch step diverged on row {b}"
+            );
+        }
+    };
+    for (i, spec) in specs.iter().enumerate() {
+        let label = spec.unwrap_or("dense");
+        let compressed = match spec {
+            Some(s) => {
+                CompressionPlan::parse(s, &defaults).unwrap().run(&base, &calib).unwrap().0
+            }
+            None => base.clone(),
+        };
+        check(&compressed, label);
+        // ...and through both checkpoint load paths: the batched kernel
+        // must not care whether the weight buffers live on the heap or in
+        // the file mapping.
+        let path = dir.join(format!("batch{i}.cpt2"));
+        compressed.save_compressed(&path, spec.as_deref()).unwrap();
+        let (owned, _) = Model::load_compressed(&path).unwrap();
+        let (mapped, minfo) = Model::load_compressed_mmap(&path).unwrap();
+        assert!(minfo.source.starts_with("mmap"), "{label}: {}", minfo.source);
+        check(&owned, &format!("{label} owned-reload"));
+        check(&mapped, &format!("{label} mmap-reload"));
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
 fn speculative_decode_is_token_identical_across_all_variants() {
     // NOT artifact-gated. The speculative-serving acceptance matrix: for
     // draft/target pairs covering all six LinearWeight variants (dense,

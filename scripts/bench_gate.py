@@ -8,14 +8,18 @@ Rules (applied per matching JSON key, only when the baseline value is a
 positive number — "pending" placeholder baselines with zeros gate nothing):
 
 - throughput keys (``prefill_tok_s`` or any key starting with
-  ``decode_tok_s``): fresh must be >= (1 - TOLERANCE) * baseline;
+  ``decode_tok_s`` — including the cross-session batched-decode keys
+  ``decode_tok_s_batch{1,8,32}``): fresh must be >= (1 - TOLERANCE) *
+  baseline;
 - size keys (any key containing ``resident_bytes`` or equal to
   ``checkpoint_file_bytes``): fresh must not exceed the baseline — packed
   bytes growing is a regression regardless of speed;
 - speedup-floor keys (any key ending in ``_speedup``): fresh must be >=
   the baseline. These are machine-independent invariants (cached decode
   beats uncached, cold load beats recompress, mmap load beats the copying
-  load), so a committed floor of 1.0 gates on every machine;
+  load, the batch-32 batched decode round holds its floor against 32
+  per-row steps measured on the same run — ``batch_gemm_speedup``), so a
+  committed floor gates on every machine;
 - ratio-ceiling keys (any key containing ``_ratio``): fresh must be <=
   the baseline (packed bytes vs dense, per-step cost scaling) — again
   machine-independent, so a real ceiling can be committed without running
