@@ -1,0 +1,17 @@
+// Deliberately-violating fixture for L0 (malformed audit:allow
+// annotations). A malformed annotation is itself an error AND does not
+// suppress the underlying violation. Not compiled; scanned as the virtual
+// path below by the --fixtures self-test.
+// audit:as(rust/src/serve/ann.rs)
+
+pub fn missing_reason(o: Option<u8>) -> u8 {
+    o.unwrap() // audit:allow(panic) audit:expect(L0) audit:expect(L3)
+}
+
+pub fn unknown_kind(o: Option<u8>) -> u8 {
+    o.unwrap() // audit:allow(frobnicate): reasons audit:expect(L0) audit:expect(L3)
+}
+
+pub fn well_formed(o: Option<u8>) -> u8 {
+    o.unwrap() // audit:allow(panic): fixture — caller guarantees Some.
+}

@@ -1,0 +1,31 @@
+// Deliberately-violating fixture for L5 (public linalg constructors taking
+// raw buffers must be fallible). Not compiled; scanned as the virtual path
+// below by the --fixtures self-test.
+// audit:as(rust/src/linalg/newmat.rs)
+
+pub struct NewMat {
+    rows: usize,
+    data: Vec<f32>,
+}
+
+impl NewMat {
+    pub fn from_parts(rows: usize, data: Vec<f32>) -> NewMat { // audit:expect(L5)
+        NewMat { rows, data }
+    }
+
+    pub fn from_checked(rows: usize, data: Vec<f32>) -> Result<NewMat, String> {
+        if data.len() % rows.max(1) != 0 {
+            return Err("ragged".to_string());
+        }
+        Ok(NewMat { rows, data })
+    }
+
+    // audit:allow(ctor): fixture — the shape is a compile-time constant.
+    pub fn from_fixed(data: Vec<f32>) -> NewMat {
+        NewMat { rows: 1, data }
+    }
+
+    pub fn from_seed(rows: usize, seed: u64) -> NewMat {
+        NewMat { rows, data: vec![seed as f32] }
+    }
+}

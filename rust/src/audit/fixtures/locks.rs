@@ -1,0 +1,22 @@
+// Deliberately-violating fixture for L4 (lock results unwrapped in serve).
+// Not compiled; scanned as the virtual path below by the --fixtures
+// self-test.
+// audit:as(rust/src/serve/state.rs)
+
+use std::sync::Mutex;
+
+pub fn poisoned_read(m: &Mutex<u64>) -> u64 {
+    *m.lock().unwrap() // audit:expect(L4)
+}
+
+pub fn poisoned_read_expect(m: &Mutex<u64>) -> u64 {
+    *m.lock().expect("not poisoned") // audit:expect(L4)
+}
+
+pub fn plain_unwrap(o: Option<u64>) -> u64 {
+    o.unwrap() // audit:expect(L3)
+}
+
+pub fn recovered(m: &Mutex<u64>) -> u64 {
+    *m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}

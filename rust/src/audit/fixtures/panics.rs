@@ -1,0 +1,36 @@
+// Deliberately-violating fixture for the L3 panic-family rules. This file
+// is NOT compiled (never declared as a module); the `--fixtures` self-test
+// scans it as the serve-path file named by the directive below and asserts
+// the violations match the audit:expect markers exactly.
+// audit:as(rust/src/serve/handler.rs)
+
+pub fn respond(o: Option<u8>, v: Vec<u8>, i: usize) -> u8 {
+    let a = o.unwrap(); // audit:expect(L3)
+    let b = o.expect("present"); // audit:expect(L3)
+    if a > b {
+        panic!("bad ordering"); // audit:expect(L3)
+    }
+    match a {
+        0 => unreachable!(), // audit:expect(L3)
+        _ => {}
+    }
+    v[i] // audit:expect(L3)
+}
+
+pub fn annotated(o: Option<u8>) -> u8 {
+    // audit:allow(panic): fixture — the caller guarantees Some here.
+    o.unwrap()
+}
+
+pub fn fallback(o: Option<u8>) -> u8 {
+    o.unwrap_or_else(|| 0)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn panics_are_fine_in_tests() {
+        let o: Option<u8> = Some(1);
+        assert_eq!(o.unwrap(), 1);
+    }
+}

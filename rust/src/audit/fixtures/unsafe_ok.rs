@@ -1,0 +1,22 @@
+// Clean fixture: correctly-annotated unsafe in an allowlisted module plus
+// every lexer trap (raw strings, normal strings, char literals, block
+// comments containing trigger tokens). Expects ZERO violations — this is
+// the no-false-positive guard.
+// audit:as(rust/src/linalg/buf.rs)
+
+pub struct View;
+
+// SAFETY: fixture text — the backing bytes are never mutated after
+// construction, so sharing across threads is sound.
+unsafe impl Send for View {}
+
+pub fn masked_traps() -> String {
+    let raw = r#"unsafe { x.unwrap() } panic! v[0] m.lock().unwrap()"#;
+    let extra = r##"still "masked"# here: o.expect("x") unreachable!"##;
+    let s = "// not a comment: q.unwrap() and unsafe { }";
+    let quote = '"';
+    let escaped = '\n';
+    /* a block comment mentioning unsafe and x.unwrap()
+    spanning multiple lines, still masked */
+    format!("{raw}{extra}{s}{quote}{escaped}")
+}

@@ -1,0 +1,13 @@
+// Deliberately-violating fixture for L1 (unsafe without SAFETY) and L2
+// (unsafe outside the allowlisted modules). Not compiled; scanned as the
+// virtual path below by the --fixtures self-test.
+// audit:as(rust/src/model/fast.rs)
+
+pub fn read_first(p: *const u8) -> u8 {
+    unsafe { *p } // audit:expect(L1) audit:expect(L2)
+}
+
+pub fn read_marked(p: *const u8) -> u8 {
+    // SAFETY: fixture text — p is valid for one byte by caller contract.
+    unsafe { *p } // audit:expect(L2)
+}

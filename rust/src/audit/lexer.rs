@@ -1,0 +1,425 @@
+//! Comment/string/raw-string-aware masking lexer for the audit scanner.
+//!
+//! `mask_source` splits a Rust source file into per-line `MaskedLine`s:
+//! `code` holds the line with every comment and string-literal *interior*
+//! replaced by spaces (column-preserving, so byte offsets into `code` are
+//! byte offsets into the original line), and `comment` holds the comment
+//! text of the line (everything else spaced out). Rules match trigger
+//! tokens against `code` and look up `SAFETY:` / `audit:allow` annotations
+//! in `comment`, so `r#"unsafe { x.unwrap() }"#` or a `'"'` char literal
+//! can never produce a false positive.
+
+/// One source line after lexical masking.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MaskedLine {
+    /// The line with comments and string interiors replaced by spaces.
+    pub code: String,
+    /// The line with everything *except* comment text replaced by spaces.
+    pub comment: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    Code,
+    LineComment,
+    /// Nested block comment depth (Rust block comments nest).
+    BlockComment(u32),
+    /// Inside a normal `"` string (escape-aware).
+    Str,
+    /// Inside a raw string opened with `hashes` `#` characters.
+    RawStr(u32),
+}
+
+/// True if `c` can appear in an identifier (used for word-boundary and
+/// raw-string-prefix checks).
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Mask `src` into per-line code/comment channels.
+///
+/// Every masked character becomes exactly one space, so columns line up
+/// with the original source. String *delimiters* (`"`, the `r#...` prefix)
+/// stay in the code channel; only interiors are blanked. Char literals are
+/// consumed inline (distinguished from lifetimes by lookahead), and `b"`/
+/// `b'` byte literals are handled like their textual counterparts.
+pub fn mask_source(src: &str) -> Vec<MaskedLine> {
+    let mut lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut state = State::Code;
+    let chars: Vec<char> = src.chars().collect();
+    let mut i = 0usize;
+    let n = chars.len();
+    // Previous non-masked char pushed to `code` on the current logical
+    // stream (across lines), used to reject `r`/`br` raw prefixes that are
+    // actually identifier tails (e.g. `var` before `"..."` is impossible,
+    // but `ar#"` inside an identifier is).
+    let mut prev_code_char: Option<char> = None;
+
+    macro_rules! push {
+        (code $c:expr) => {{
+            code.push($c);
+            comment.push(' ');
+        }};
+        (comment $c:expr) => {{
+            code.push(' ');
+            comment.push($c);
+        }};
+        (mask) => {{
+            code.push(' ');
+            comment.push(' ');
+        }};
+    }
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            lines.push(MaskedLine {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+            });
+            if state == State::LineComment {
+                state = State::Code;
+            }
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    state = State::LineComment;
+                    push!(comment '/');
+                    push!(comment '/');
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    state = State::BlockComment(1);
+                    push!(mask);
+                    push!(mask);
+                    i += 2;
+                } else if c == '"' {
+                    state = State::Str;
+                    push!(code '"');
+                    prev_code_char = Some('"');
+                    i += 1;
+                } else if (c == 'r' || c == 'b')
+                    && !prev_code_char.map(is_ident).unwrap_or(false)
+                    && is_raw_or_byte_start(&chars, i)
+                {
+                    // r"..." / r#"..."# / br"..." / b"..." / b'x'
+                    let mut j = i;
+                    if chars[j] == 'b' {
+                        push!(code 'b');
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'\'') {
+                        // b'x' byte literal: consume like a char literal.
+                        push!(code '\'');
+                        j += 1;
+                        j = consume_char_literal_body(&chars, j, &mut code, &mut comment);
+                        prev_code_char = Some('\'');
+                        i = j;
+                        continue;
+                    }
+                    if chars.get(j) == Some(&'r') {
+                        push!(code 'r');
+                        j += 1;
+                    }
+                    let mut hashes = 0u32;
+                    while chars.get(j) == Some(&'#') {
+                        push!(code '#');
+                        hashes += 1;
+                        j += 1;
+                    }
+                    // is_raw_or_byte_start guarantees a `"` here.
+                    push!(code '"');
+                    j += 1;
+                    state = State::RawStr(hashes);
+                    prev_code_char = Some('"');
+                    i = j;
+                } else if c == '\'' && is_char_literal(&chars, i) {
+                    push!(code '\'');
+                    let j = consume_char_literal_body(&chars, i + 1, &mut code, &mut comment);
+                    prev_code_char = Some('\'');
+                    i = j;
+                } else {
+                    push!(code c);
+                    prev_code_char = Some(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                push!(comment c);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    state = State::BlockComment(depth + 1);
+                    push!(mask);
+                    push!(mask);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    state = if depth > 1 {
+                        State::BlockComment(depth - 1)
+                    } else {
+                        State::Code
+                    };
+                    push!(mask);
+                    push!(mask);
+                    i += 2;
+                } else {
+                    // Block comments still carry SAFETY:/allow annotations.
+                    push!(comment c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    push!(mask);
+                    if i + 1 < n && chars[i + 1] != '\n' {
+                        push!(mask);
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    state = State::Code;
+                    push!(code '"');
+                    prev_code_char = Some('"');
+                    i += 1;
+                } else {
+                    push!(mask);
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' {
+                    // Close only if followed by `hashes` consecutive `#`s.
+                    let mut k = 0u32;
+                    while (k as usize) < hashes as usize
+                        && chars.get(i + 1 + k as usize) == Some(&'#')
+                    {
+                        k += 1;
+                    }
+                    if k == hashes {
+                        push!(code '"');
+                        for _ in 0..hashes {
+                            push!(code '#');
+                        }
+                        state = State::Code;
+                        prev_code_char = Some(if hashes > 0 { '#' } else { '"' });
+                        i += 1 + hashes as usize;
+                    } else {
+                        push!(mask);
+                        i += 1;
+                    }
+                } else {
+                    push!(mask);
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        lines.push(MaskedLine { code, comment });
+    }
+    lines
+}
+
+/// Does `chars[i]` start a raw string / byte string / byte char literal?
+/// (`r"`, `r#"`, `br"`, `br#"`, `b"`, `b'`). Caller has already checked the
+/// preceding char is not identifier-ish.
+fn is_raw_or_byte_start(chars: &[char], i: usize) -> bool {
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+        if chars.get(j) == Some(&'\'') {
+            return true; // b'x'
+        }
+    }
+    if chars.get(j) == Some(&'r') {
+        j += 1;
+        while chars.get(j) == Some(&'#') {
+            j += 1;
+        }
+        return chars.get(j) == Some(&'"');
+    }
+    // bare b"..."
+    chars[i] == 'b' && chars.get(j) == Some(&'"')
+}
+
+/// Is the `'` at `chars[i]` a char literal (vs a lifetime)? Char literal iff
+/// the following char is a backslash escape, or the char after next is a
+/// closing `'`.
+fn is_char_literal(chars: &[char], i: usize) -> bool {
+    match chars.get(i + 1) {
+        Some('\\') => true,
+        Some(_) => chars.get(i + 2) == Some(&'\''),
+        None => false,
+    }
+}
+
+/// Consume a char-literal body starting after the opening `'` at `chars[j]`,
+/// masking the interior and keeping the closing quote. Returns the index one
+/// past the closing `'`.
+fn consume_char_literal_body(
+    chars: &[char],
+    mut j: usize,
+    code: &mut String,
+    comment: &mut String,
+) -> usize {
+    if chars.get(j) == Some(&'\\') {
+        code.push(' ');
+        comment.push(' ');
+        j += 1;
+        if j < chars.len() {
+            code.push(' ');
+            comment.push(' ');
+            j += 1;
+        }
+        // Multi-char escapes (\u{...}, \x41): mask until closing quote.
+        while j < chars.len() && chars[j] != '\'' && chars[j] != '\n' {
+            code.push(' ');
+            comment.push(' ');
+            j += 1;
+        }
+    } else if j < chars.len() && chars[j] != '\'' {
+        code.push(' ');
+        comment.push(' ');
+        j += 1;
+    }
+    if chars.get(j) == Some(&'\'') {
+        code.push('\'');
+        comment.push(' ');
+        j += 1;
+    }
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(src: &str) -> Vec<String> {
+        mask_source(src).into_iter().map(|l| l.code).collect()
+    }
+
+    fn comment_of(src: &str) -> Vec<String> {
+        mask_source(src).into_iter().map(|l| l.comment).collect()
+    }
+
+    #[test]
+    fn raw_string_interior_is_masked() {
+        let code = code_of(r##"let s = r#"unsafe { x.unwrap() }"#;"##);
+        assert_eq!(code.len(), 1);
+        assert!(!code[0].contains("unsafe"), "{:?}", code[0]);
+        assert!(!code[0].contains("unwrap"), "{:?}", code[0]);
+        // Delimiters survive in the code channel.
+        assert!(code[0].contains(r##"r#""##));
+        assert!(code[0].ends_with(r##""#;"##));
+    }
+
+    #[test]
+    fn raw_string_with_extra_hashes_spans_inner_quotes() {
+        let src = "let s = r##\"tail\"# still \"## ; x.unsafe_marker";
+        let code = code_of(src);
+        // `"#` inside does not close a ##-string; the trailing ident stays.
+        assert!(code[0].contains("unsafe_marker"));
+        assert!(!code[0].contains("tail"));
+        assert!(!code[0].contains("still"));
+    }
+
+    #[test]
+    fn normal_string_masks_comment_markers_and_escaped_quote() {
+        let code = code_of(r#"let s = "// not a comment \" still"; foo();"#);
+        assert!(code[0].contains("foo();"), "{:?}", code[0]);
+        assert!(!code[0].contains("not a comment"));
+        assert!(!code[0].contains("//"));
+    }
+
+    #[test]
+    fn multiline_nested_block_comment_is_masked() {
+        let src = "a();\n/* unsafe\n /* nested unwrap() */\n still comment */ b();\nc();";
+        let code = code_of(src);
+        assert_eq!(code.len(), 5);
+        assert!(code[0].contains("a();"));
+        assert!(!code[1].contains("unsafe"));
+        assert!(!code[2].contains("unwrap"));
+        assert!(!code[3].contains("still"));
+        assert!(code[3].contains("b();"));
+        assert!(code[4].contains("c();"));
+        // Comment channel still carries the text (for SAFETY lookups).
+        let com = comment_of(src);
+        assert!(com[1].contains("unsafe"));
+    }
+
+    #[test]
+    fn char_literal_quote_does_not_open_string() {
+        let code = code_of("let q = '\"'; x.unwrap();");
+        assert!(code[0].contains("x.unwrap();"), "{:?}", code[0]);
+    }
+
+    #[test]
+    fn lifetime_is_not_a_char_literal() {
+        let code = code_of("fn f<'a>(x: &'a str) -> &'a str { x }");
+        assert!(code[0].contains("&'a str"), "{:?}", code[0]);
+        assert!(code[0].contains("{ x }"));
+    }
+
+    #[test]
+    fn escaped_char_literal_consumed() {
+        let code = code_of(r"let c = '\n'; y.unwrap();");
+        assert!(code[0].contains("y.unwrap();"), "{:?}", code[0]);
+    }
+
+    #[test]
+    fn byte_string_and_byte_char() {
+        let code = code_of(r#"let b = b"unsafe"; let c = b'x'; z();"#);
+        assert!(!code[0].contains("unsafe"));
+        assert!(code[0].contains("z();"));
+    }
+
+    #[test]
+    fn line_comment_goes_to_comment_channel() {
+        let lines = mask_source("x(); // SAFETY: fine\ny();");
+        assert!(lines[0].code.contains("x();"));
+        assert!(!lines[0].code.contains("SAFETY"));
+        assert!(lines[0].comment.contains("// SAFETY: fine"));
+        assert!(lines[1].code.contains("y();"));
+    }
+
+    #[test]
+    fn raw_identifier_is_not_a_raw_string() {
+        // `r#fn` is a raw identifier, not a raw-string opener (no quote).
+        let code = code_of("let r#fn = 1; w.unwrap();");
+        assert!(code[0].contains("w.unwrap();"), "{:?}", code[0]);
+    }
+
+    #[test]
+    fn ident_ending_in_r_before_string_is_not_raw_prefix() {
+        let code = code_of(r#"var("literal text"); q.unwrap();"#);
+        assert!(!code[0].contains("literal text"));
+        assert!(code[0].contains("q.unwrap();"));
+    }
+
+    #[test]
+    fn columns_are_preserved() {
+        let src = r#"ab("xy") // c"#;
+        let lines = mask_source(src);
+        assert_eq!(lines[0].code.chars().count(), src.chars().count());
+        assert_eq!(lines[0].comment.chars().count(), src.chars().count());
+        // `)` stays at its original column.
+        let col = src.find(')').unwrap();
+        assert_eq!(lines[0].code.as_bytes()[col], b')');
+    }
+
+    #[test]
+    fn unterminated_string_masks_to_eof() {
+        let code = code_of("let s = \"open\nunwrap()");
+        // Unterminated string swallows the rest (matches rustc's view that
+        // the file is malformed; we just must not false-positive).
+        assert!(!code.concat().contains("unwrap"));
+    }
+}

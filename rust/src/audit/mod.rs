@@ -1,0 +1,285 @@
+//! `compot audit` — in-tree static analysis for the repo's own invariants.
+//!
+//! A dependency-free, comment/string/raw-string-aware scanner that walks
+//! the Rust sources (`rust/src`, `rust/benches`, `rust/tests`, `examples/`,
+//! `python/examples`) and enforces where unsafe may live and where panics
+//! may not, the same way `scripts/bench_gate.py` gates perf invariants.
+//! See [`rules`] for the rule suite (L0–L5) and the suppression grammar
+//! (`// audit:allow(panic): <reason>` and friends).
+//!
+//! Fixture files under `src/audit/fixtures/` are deliberately violating
+//! sources used by the `--fixtures` self-test. They are **not** compiled
+//! (not declared as modules) and are excluded from normal scans. Each
+//! fixture declares the virtual path it should be scanned as via
+//! `audit:as(<path>)` and marks every line expected to fire with one
+//! `audit:expect(<RULE>)` per expected violation.
+
+pub mod lexer;
+pub mod rules;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One lint violation: a location, a rule ID, and how to fix it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Repo-relative, forward-slash path.
+    pub file: String,
+    /// 1-indexed line.
+    pub line: usize,
+    /// Rule ID (`"L0"` ..= `"L5"`).
+    pub rule: &'static str,
+    pub msg: String,
+    pub hint: &'static str,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{} [{}] {} ({})",
+            self.file, self.line, self.rule, self.msg, self.hint
+        )
+    }
+}
+
+/// One `unsafe` occurrence, for the machine-readable inventory.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UnsafeSite {
+    pub file: String,
+    pub line: usize,
+    /// `"block"`, `"impl"`, `"fn"`, or `"trait"`.
+    pub kind: String,
+    /// The SAFETY justification, if one annotates the site.
+    pub safety: Option<String>,
+}
+
+/// Everything one audit run produced.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct AuditReport {
+    pub violations: Vec<Violation>,
+    pub unsafe_sites: Vec<UnsafeSite>,
+    pub files_scanned: usize,
+}
+
+impl AuditReport {
+    /// Machine-readable form (for `audit --inventory` and tooling).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("files_scanned", self.files_scanned.into());
+        let sites: Vec<Json> = self
+            .unsafe_sites
+            .iter()
+            .map(|s| {
+                let mut o = Json::obj();
+                o.set("file", s.file.as_str().into())
+                    .set("line", s.line.into())
+                    .set("kind", s.kind.as_str().into())
+                    .set(
+                        "safety",
+                        s.safety.clone().map(Json::Str).unwrap_or(Json::Null),
+                    );
+                o
+            })
+            .collect();
+        j.set("unsafe_sites", Json::Arr(sites));
+        let viols: Vec<Json> = self
+            .violations
+            .iter()
+            .map(|v| {
+                let mut o = Json::obj();
+                o.set("file", v.file.as_str().into())
+                    .set("line", v.line.into())
+                    .set("rule", v.rule.into())
+                    .set("msg", v.msg.as_str().into())
+                    .set("hint", v.hint.into());
+                o
+            })
+            .collect();
+        j.set("violations", Json::Arr(viols));
+        j
+    }
+}
+
+/// Directory roots scanned relative to the repo root.
+pub const SCAN_ROOTS: [&str; 5] = [
+    "rust/src",
+    "rust/benches",
+    "rust/tests",
+    "examples",
+    "python/examples",
+];
+
+/// Walk up from `start` to the repo root (the first ancestor containing
+/// `rust/src`).
+pub fn find_root(start: &Path) -> Option<PathBuf> {
+    let mut cur = Some(start.to_path_buf());
+    while let Some(d) = cur {
+        if d.join("rust/src").is_dir() {
+            return Some(d);
+        }
+        cur = d.parent().map(Path::to_path_buf);
+    }
+    None
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(root: &Path, file: &Path) -> String {
+    file.strip_prefix(root)
+        .unwrap_or(file)
+        .to_string_lossy()
+        .replace('\\', "/")
+}
+
+/// Scan the whole repo under `root`, excluding the fixture corpus.
+pub fn audit_repo(root: &Path) -> anyhow::Result<AuditReport> {
+    let mut report = AuditReport::default();
+    for sub in SCAN_ROOTS {
+        let dir = root.join(sub);
+        if !dir.is_dir() {
+            continue;
+        }
+        let mut files = Vec::new();
+        collect_rs(&dir, &mut files)?;
+        files.sort();
+        for file in files {
+            let rel = rel_path(root, &file);
+            if rel.contains("src/audit/fixtures/") {
+                continue;
+            }
+            let src = std::fs::read_to_string(&file)?;
+            rules::scan_file(&rel, &src, &mut report);
+            report.files_scanned += 1;
+        }
+    }
+    Ok(report)
+}
+
+/// Pull the parenthesized argument after `needle` out of a comment line.
+fn directive_arg<'a>(comment: &'a str, pos: usize, needle: &str) -> Option<&'a str> {
+    let rest = &comment[pos + needle.len()..];
+    rest.split_once(')').map(|(arg, _)| arg.trim())
+}
+
+/// Self-test: scan every fixture under `rust/src/audit/fixtures/` as the
+/// virtual path its `audit:as(...)` directive names, and compare the
+/// violations against the `audit:expect(RULE)` markers line by line.
+/// Returns a list of human-readable failures (empty = all fixtures pass).
+/// Also fails if the corpus as a whole does not exercise every rule.
+pub fn run_fixtures(root: &Path) -> anyhow::Result<Vec<String>> {
+    let dir = root.join("rust/src/audit/fixtures");
+    let mut files = Vec::new();
+    collect_rs(&dir, &mut files)?;
+    files.sort();
+    anyhow::ensure!(!files.is_empty(), "no fixtures found under {dir:?}");
+
+    let mut failures = Vec::new();
+    let mut rules_fired: Vec<&'static str> = Vec::new();
+    for file in &files {
+        let name = rel_path(root, file);
+        let src = std::fs::read_to_string(file)?;
+        let lines = lexer::mask_source(&src);
+
+        let mut vpath: Option<String> = None;
+        let mut expected: Vec<(usize, String)> = Vec::new();
+        for (i, l) in lines.iter().enumerate() {
+            for (pos, _) in l.comment.match_indices("audit:as(") {
+                if let Some(arg) = directive_arg(&l.comment, pos, "audit:as(") {
+                    vpath = Some(arg.to_string());
+                }
+            }
+            for (pos, _) in l.comment.match_indices("audit:expect(") {
+                if let Some(arg) = directive_arg(&l.comment, pos, "audit:expect(") {
+                    expected.push((i + 1, arg.to_string()));
+                }
+            }
+        }
+        let Some(vpath) = vpath else {
+            failures.push(format!("{name}: missing audit:as(<virtual path>) directive"));
+            continue;
+        };
+
+        let mut report = AuditReport::default();
+        rules::scan_file(&vpath, &src, &mut report);
+        let mut got: Vec<(usize, String)> = report
+            .violations
+            .iter()
+            .map(|v| (v.line, v.rule.to_string()))
+            .collect();
+        got.sort();
+        expected.sort();
+        if got != expected {
+            failures.push(format!(
+                "{name} (as {vpath}): expected {expected:?}, got {got:?}"
+            ));
+        }
+        rules_fired.extend(report.violations.iter().map(|v| v.rule));
+    }
+    for rule in ["L0", "L1", "L2", "L3", "L4", "L5"] {
+        if !rules_fired.contains(&rule) {
+            failures.push(format!("fixture corpus never fires rule {rule}"));
+        }
+    }
+    Ok(failures)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_shape() {
+        let mut r = AuditReport::default();
+        r.files_scanned = 2;
+        r.unsafe_sites.push(UnsafeSite {
+            file: "rust/src/linalg/buf.rs".into(),
+            line: 7,
+            kind: "block".into(),
+            safety: Some("ptr is valid".into()),
+        });
+        r.violations.push(Violation {
+            file: "rust/src/serve/server.rs".into(),
+            line: 3,
+            rule: "L3",
+            msg: "x".into(),
+            hint: "y",
+        });
+        let j = r.to_json();
+        assert_eq!(j.get("files_scanned").unwrap().as_usize(), Some(2));
+        let sites = j.get("unsafe_sites").unwrap().as_arr().unwrap();
+        assert_eq!(sites.len(), 1);
+        assert_eq!(sites[0].get("line").unwrap().as_usize(), Some(7));
+        assert_eq!(sites[0].get("safety").unwrap().as_str(), Some("ptr is valid"));
+        let viols = j.get("violations").unwrap().as_arr().unwrap();
+        assert_eq!(viols[0].get("rule").unwrap().as_str(), Some("L3"));
+        // Round-trips through the JSON parser.
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn violation_display_is_clickable() {
+        let v = Violation {
+            file: "rust/src/serve/server.rs".into(),
+            line: 42,
+            rule: "L4",
+            msg: "lock unwrapped".into(),
+            hint: "use lock_recover",
+        };
+        let s = v.to_string();
+        assert!(s.starts_with("rust/src/serve/server.rs:42 [L4]"), "{s}");
+        assert!(s.contains("use lock_recover"));
+    }
+}

@@ -1,0 +1,690 @@
+//! Lint rules over masked source lines.
+//!
+//! Rules match trigger tokens against the masked code channel (so strings
+//! and comments can never false-positive) and look up annotations — the
+//! `SAFETY:` convention and the suppression grammar
+//! `// audit:allow(panic): <reason>` (kinds: `panic`, `index`, `lock`,
+//! `ctor`) — in the comment channel of the same line plus the contiguous
+//! comment block directly above (attribute lines in between are skipped).
+//!
+//! Rule suite:
+//! - **L0** — an `audit:allow(...)` annotation that does not parse (unknown
+//!   kind or missing reason) is itself an error, so a typo can't silently
+//!   disable a lint.
+//! - **L1** — every `unsafe` block/impl/fn needs a `SAFETY:` comment; all
+//!   sites feed the machine-readable unsafe inventory.
+//! - **L2** — `unsafe` is only permitted in the allowlisted modules
+//!   (`linalg/buf.rs`, `linalg/qmat.rs`).
+//! - **L3** — no `.unwrap()` / `.expect(` / `panic!` / `unreachable!` /
+//!   `todo!` / `unimplemented!` / `[idx]` indexing in the serve request
+//!   path (`serve/`, `model/decode.rs`; indexing in `serve/` only).
+//! - **L4** — `.lock()` results must not be unwrapped in `serve/`; use the
+//!   poison-recovering `serve::lock_recover` helper.
+//! - **L5** — public constructors in `linalg/` that take raw buffers or
+//!   lengths (`Vec<`, `&[`, raw pointers, `WeightBuf`, `Mapping`) must
+//!   return `Result`.
+//!
+//! `#[cfg(test)]` regions are exempt from L3/L4/L5 (tests may panic) but
+//! still feed L1/L2 — unsafe in tests is still unsafe.
+
+use super::lexer::{mask_source, MaskedLine};
+use super::{AuditReport, UnsafeSite, Violation};
+
+/// Which rule families apply to a file, derived from its repo-relative path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FileScope {
+    /// L2: is `unsafe` permitted here?
+    pub unsafe_allowed: bool,
+    /// L3 panic family (`unwrap`/`expect`/`panic!`/`unreachable!`...).
+    pub panic_linted: bool,
+    /// L3 `[idx]` indexing.
+    pub index_linted: bool,
+    /// L4 lock-unwrap.
+    pub lock_linted: bool,
+    /// L5 fallible raw-buffer constructors.
+    pub ctor_linted: bool,
+}
+
+/// Derive the rule scope for a repo-relative, forward-slash path.
+pub fn scope_for(path: &str) -> FileScope {
+    let serve = path.contains("src/serve/");
+    FileScope {
+        unsafe_allowed: path.ends_with("src/linalg/buf.rs")
+            || path.ends_with("src/linalg/qmat.rs"),
+        panic_linted: serve || path.ends_with("src/model/decode.rs"),
+        index_linted: serve,
+        lock_linted: serve,
+        ctor_linted: path.contains("src/linalg/"),
+    }
+}
+
+const HINT_L0: &str = "grammar: `// audit:allow(panic|index|lock|ctor): <reason>`";
+const HINT_L1: &str = "add a `// SAFETY: <invariant>` comment on or directly above the unsafe item";
+const HINT_L2: &str = "move unsafe code into an allowlisted module (linalg/buf.rs, linalg/qmat.rs)";
+const HINT_L3_PANIC: &str =
+    "return a structured error to the client, or annotate `// audit:allow(panic): <reason>`";
+const HINT_L3_INDEX: &str =
+    "use .get()/.get_mut() with error handling, or annotate `// audit:allow(index): <reason>`";
+const HINT_L4: &str =
+    "use serve::lock_recover / wait_timeout_recover (PoisonError::into_inner) on lock results";
+const HINT_L5: &str =
+    "return anyhow::Result and validate buffer lengths, or annotate `// audit:allow(ctor): <reason>`";
+
+const ALLOW_KINDS: [&str; 4] = ["panic", "index", "lock", "ctor"];
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_' || b >= 0x80
+}
+
+/// Byte offsets of `word` in `hay` at word boundaries. The left boundary
+/// also rejects `#` so raw identifiers (`r#fn`) never match.
+fn word_positions(hay: &str, word: &str) -> Vec<usize> {
+    let bytes = hay.as_bytes();
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    while let Some(off) = hay[start..].find(word) {
+        let pos = start + off;
+        let end = pos + word.len();
+        let before_ok = pos == 0 || {
+            let b = bytes[pos - 1];
+            !is_ident_byte(b) && b != b'#'
+        };
+        let after_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            out.push(pos);
+        }
+        start = pos + word.len();
+    }
+    out
+}
+
+/// Mark every line inside a `#[cfg(test)]`-gated item (brace-balanced from
+/// the attribute line).
+fn test_regions(lines: &[MaskedLine]) -> Vec<bool> {
+    let mut in_test = vec![false; lines.len()];
+    let mut i = 0usize;
+    while i < lines.len() {
+        if !lines[i].code.contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        let mut depth = 0i64;
+        let mut opened = false;
+        let mut j = i;
+        while j < lines.len() {
+            in_test[j] = true;
+            for ch in lines[j].code.chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if opened && depth <= 0 {
+                break;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    in_test
+}
+
+/// Comment text that annotates line `idx`: the line's own trailing comment
+/// plus the contiguous pure-comment block directly above it. Attribute
+/// lines (`#[...]`, `#![...]`) between the comment block and the item are
+/// skipped, so a comment above `#[cfg(unix)]` still annotates the item.
+fn annotations_for(lines: &[MaskedLine], idx: usize) -> String {
+    let mut parts: Vec<&str> = Vec::new();
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let code_t = lines[j].code.trim();
+        let com_t = lines[j].comment.trim();
+        if code_t.is_empty() && com_t.is_empty() {
+            break; // blank line ends the block
+        }
+        if code_t.is_empty() {
+            parts.push(&lines[j].comment);
+            continue;
+        }
+        if code_t.starts_with('#') {
+            parts.push(&lines[j].comment);
+            continue; // attribute line — keep scanning upward
+        }
+        break; // a code line ends the block
+    }
+    parts.reverse();
+    parts.push(&lines[idx].comment);
+    parts.join("\n")
+}
+
+/// Does the annotation text carry a well-formed `audit:allow(<kind>): r`?
+fn allows(ann: &str, kind: &str) -> bool {
+    let needle = format!("audit:allow({kind})");
+    for (pos, _) in ann.match_indices(&needle) {
+        let rest = &ann[pos + needle.len()..];
+        if let Some(r) = rest.strip_prefix(':') {
+            let reason = r.lines().next().unwrap_or("").trim();
+            if !reason.is_empty() {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Extract the SAFETY justification from an annotation block, if any.
+fn extract_safety(ann: &str) -> Option<String> {
+    let pos = ann.find("SAFETY:")?;
+    let text = ann[pos + "SAFETY:".len()..]
+        .lines()
+        .map(|l| l.trim().trim_start_matches("//").trim_start_matches('!').trim())
+        .collect::<Vec<_>>()
+        .join(" ");
+    let t = text.trim().to_string();
+    if t.is_empty() {
+        None
+    } else {
+        Some(t)
+    }
+}
+
+/// Scan one file (given its repo-relative virtual path) into `report`.
+pub fn scan_file(path: &str, src: &str, report: &mut AuditReport) {
+    let lines = mask_source(src);
+    let scope = scope_for(path);
+    let in_test = test_regions(&lines);
+
+    for (idx, line) in lines.iter().enumerate() {
+        let lineno = idx + 1;
+        let code = &line.code;
+        let ann = annotations_for(&lines, idx);
+        let push = |report: &mut AuditReport, rule: &'static str, msg: String, hint: &'static str| {
+            report.violations.push(Violation {
+                file: path.to_string(),
+                line: lineno,
+                rule,
+                msg,
+                hint,
+            });
+        };
+
+        // L0: malformed audit:allow annotations (trailing comment only —
+        // a block-comment annotation above is validated on its own line).
+        for (pos, _) in line.comment.match_indices("audit:allow(") {
+            let rest = &line.comment[pos + "audit:allow(".len()..];
+            let well_formed = rest
+                .split_once(')')
+                .map(|(kind, after)| {
+                    ALLOW_KINDS.contains(&kind)
+                        && after
+                            .strip_prefix(':')
+                            .map(|r| !r.lines().next().unwrap_or("").trim().is_empty())
+                            .unwrap_or(false)
+                })
+                .unwrap_or(false);
+            if !well_formed {
+                push(
+                    report,
+                    "L0",
+                    "malformed audit:allow annotation".to_string(),
+                    HINT_L0,
+                );
+            }
+        }
+
+        // L1/L2 + unsafe inventory (applies everywhere, incl. tests).
+        for pos in word_positions(code, "unsafe") {
+            let after = code[pos + "unsafe".len()..].trim_start();
+            let kind = if after.starts_with("impl") {
+                "impl"
+            } else if after.starts_with("fn") {
+                "fn"
+            } else if after.starts_with("trait") {
+                "trait"
+            } else {
+                "block"
+            };
+            let safety = extract_safety(&ann);
+            if safety.is_none() {
+                push(
+                    report,
+                    "L1",
+                    format!("unsafe {kind} without a SAFETY: comment"),
+                    HINT_L1,
+                );
+            }
+            if !scope.unsafe_allowed {
+                push(
+                    report,
+                    "L2",
+                    format!("unsafe {kind} outside the unsafe-allowlisted modules"),
+                    HINT_L2,
+                );
+            }
+            report.unsafe_sites.push(UnsafeSite {
+                file: path.to_string(),
+                line: lineno,
+                kind: kind.to_string(),
+                safety,
+            });
+        }
+
+        // L4: `.lock()` immediately unwrapped. Runs before L3 and records
+        // the consumed unwrap/expect position so the same call site is not
+        // double-reported.
+        let mut consumed: Vec<usize> = Vec::new();
+        if scope.lock_linted && !in_test[idx] {
+            let mut search = 0usize;
+            while let Some(off) = code[search..].find(".lock()") {
+                let rest_start = search + off + ".lock()".len();
+                let rest = code[rest_start..].trim_start();
+                let ws = code[rest_start..].len() - rest.len();
+                if rest.starts_with(".unwrap()") || rest.starts_with(".expect(") {
+                    consumed.push(rest_start + ws + 1); // position of the word after '.'
+                    if !allows(&ann, "lock") {
+                        push(
+                            report,
+                            "L4",
+                            "lock() result unwrapped — a panicked holder poisons the mutex"
+                                .to_string(),
+                            HINT_L4,
+                        );
+                    }
+                }
+                search = rest_start;
+            }
+        }
+
+        // L3: panic family.
+        if scope.panic_linted && !in_test[idx] {
+            let bytes = code.as_bytes();
+            for word in ["unwrap", "expect"] {
+                for pos in word_positions(code, word) {
+                    if consumed.contains(&pos) {
+                        continue;
+                    }
+                    if pos == 0 || bytes[pos - 1] != b'.' {
+                        continue;
+                    }
+                    if bytes.get(pos + word.len()) != Some(&b'(') {
+                        continue;
+                    }
+                    if !allows(&ann, "panic") {
+                        push(
+                            report,
+                            "L3",
+                            format!(".{word}() in the serve request path"),
+                            HINT_L3_PANIC,
+                        );
+                    }
+                }
+            }
+            for word in ["panic", "unreachable", "todo", "unimplemented"] {
+                for pos in word_positions(code, word) {
+                    if bytes.get(pos + word.len()) != Some(&b'!') {
+                        continue;
+                    }
+                    if !allows(&ann, "panic") {
+                        push(
+                            report,
+                            "L3",
+                            format!("{word}! in the serve request path"),
+                            HINT_L3_PANIC,
+                        );
+                    }
+                }
+            }
+        }
+
+        // L3: free indexing (`expr[...]`).
+        if scope.index_linted && !in_test[idx] {
+            let bytes = code.as_bytes();
+            for (pos, ch) in code.char_indices() {
+                if ch != '[' {
+                    continue;
+                }
+                let mut k = pos;
+                let mut prev = None;
+                while k > 0 {
+                    k -= 1;
+                    if bytes[k] != b' ' {
+                        prev = Some(bytes[k]);
+                        break;
+                    }
+                }
+                let Some(p) = prev else { continue };
+                // A keyword before `[` starts a slice/array type or a new
+                // expression (`&mut [T]`, `return [..]`), not an indexing
+                // operation on a value.
+                if is_ident_byte(p) {
+                    let mut start = k;
+                    while start > 0 && is_ident_byte(bytes[start - 1]) {
+                        start -= 1;
+                    }
+                    const KEYWORDS: [&str; 10] = [
+                        "mut", "dyn", "as", "in", "return", "break", "continue", "else",
+                        "match", "move",
+                    ];
+                    if KEYWORDS.contains(&&code[start..k + 1]) {
+                        continue;
+                    }
+                }
+                if (is_ident_byte(p) || p == b')' || p == b']') && !allows(&ann, "index") {
+                    push(
+                        report,
+                        "L3",
+                        "unchecked [index] in the serve request path".to_string(),
+                        HINT_L3_INDEX,
+                    );
+                }
+            }
+        }
+    }
+
+    // L5: fallible raw-buffer constructors (separate pass with signature
+    // lookahead across lines).
+    if scope.ctor_linted {
+        scan_ctors(path, &lines, &in_test, report);
+    }
+}
+
+const RAW_BUFFER_MARKERS: [&str; 6] = ["Vec<", "&[", "*const", "*mut", "WeightBuf", "Mapping"];
+
+fn scan_ctors(path: &str, lines: &[MaskedLine], in_test: &[bool], report: &mut AuditReport) {
+    for (idx, line) in lines.iter().enumerate() {
+        if in_test[idx] {
+            continue;
+        }
+        let t = line.code.trim_start();
+        let Some(rest) = t
+            .strip_prefix("pub fn ")
+            .or_else(|| t.strip_prefix("pub const fn "))
+        else {
+            continue;
+        };
+        let name: String = rest
+            .chars()
+            .take_while(|c| c.is_alphanumeric() || *c == '_')
+            .collect();
+        if !(name.starts_with("from_") || name == "view") {
+            continue;
+        }
+        // Join signature lines until the body opens (or the decl ends).
+        let mut sig = String::new();
+        for l in &lines[idx..] {
+            sig.push_str(&l.code);
+            sig.push(' ');
+            if l.code.contains('{') || l.code.contains(';') {
+                break;
+            }
+        }
+        // Split at the LAST `->` so a closure's `-> f32` inside the params
+        // doesn't masquerade as the return type.
+        let (params, ret) = match sig.rfind("->") {
+            Some(p) => (&sig[..p], &sig[p + 2..]),
+            None => (&sig[..], ""),
+        };
+        if !RAW_BUFFER_MARKERS.iter().any(|m| params.contains(m)) {
+            continue;
+        }
+        if ret.contains("Result") {
+            continue;
+        }
+        if allows(&annotations_for(lines, idx), "ctor") {
+            continue;
+        }
+        report.violations.push(Violation {
+            file: path.to_string(),
+            line: idx + 1,
+            rule: "L5",
+            msg: format!("public constructor `{name}` takes raw buffers but is infallible"),
+            hint: HINT_L5,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(path: &str, src: &str) -> AuditReport {
+        let mut r = AuditReport::default();
+        scan_file(path, src, &mut r);
+        r
+    }
+
+    fn rules_of(r: &AuditReport) -> Vec<&str> {
+        r.violations.iter().map(|v| v.rule).collect()
+    }
+
+    #[test]
+    fn unwrap_in_serve_fires_l3() {
+        let r = scan("rust/src/serve/x.rs", "fn f(o: Option<u8>) { o.unwrap(); }\n");
+        assert_eq!(rules_of(&r), ["L3"]);
+        assert_eq!(r.violations[0].line, 1);
+    }
+
+    #[test]
+    fn unwrap_outside_scope_is_fine() {
+        let r = scan("rust/src/compress/x.rs", "fn f(o: Option<u8>) { o.unwrap(); }\n");
+        assert!(r.violations.is_empty());
+    }
+
+    #[test]
+    fn unwrap_or_variants_are_not_flagged() {
+        let src = "fn f(o: Option<u8>) { o.unwrap_or(0); o.unwrap_or_else(|| 0); o.unwrap_or_default(); }\n";
+        let r = scan("rust/src/serve/x.rs", src);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn allow_panic_suppresses_same_line_and_above() {
+        let src = "\
+fn f(o: Option<u8>) {
+    o.unwrap(); // audit:allow(panic): checked by caller
+    // audit:allow(panic): invariant established in new()
+    o.expect(\"x\");
+}
+";
+        let r = scan("rust/src/serve/x.rs", src);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn allow_without_reason_is_l0_and_does_not_suppress() {
+        let src = "fn f(o: Option<u8>) { o.unwrap() } // audit:allow(panic)\n";
+        let r = scan("rust/src/serve/x.rs", src);
+        let mut rules = rules_of(&r);
+        rules.sort();
+        assert_eq!(rules, ["L0", "L3"]);
+    }
+
+    #[test]
+    fn allow_unknown_kind_is_l0() {
+        let src = "fn f() {} // audit:allow(frobnicate): because\n";
+        let r = scan("rust/src/serve/x.rs", src);
+        assert_eq!(rules_of(&r), ["L0"]);
+    }
+
+    #[test]
+    fn lock_unwrap_fires_l4_only_once() {
+        let src = "fn f(m: &std::sync::Mutex<u8>) { let g = m.lock().unwrap(); drop(g); }\n";
+        let r = scan("rust/src/serve/x.rs", src);
+        assert_eq!(rules_of(&r), ["L4"]);
+    }
+
+    #[test]
+    fn lock_recover_body_is_not_flagged() {
+        let src = "fn lr(m: &Mutex<u8>) -> MutexGuard<'_, u8> { m.lock().unwrap_or_else(PoisonError::into_inner) }\n";
+        let r = scan("rust/src/serve/mod.rs", src);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn panic_and_unreachable_fire_l3() {
+        let src = "fn f(x: u8) { if x > 1 { panic!(\"no\") } else { unreachable!() } }\n";
+        let r = scan("rust/src/serve/x.rs", src);
+        assert_eq!(rules_of(&r), ["L3", "L3"]);
+    }
+
+    #[test]
+    fn catch_unwind_path_is_not_panic_macro() {
+        let src = "fn f() { let _ = std::panic::catch_unwind(|| 1); }\n";
+        let r = scan("rust/src/serve/x.rs", src);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn indexing_fires_l3_but_attrs_and_macros_do_not() {
+        let src = "\
+#[derive(Debug)]
+struct S;
+fn f(v: &[u8], i: usize) -> u8 {
+    let _ = vec![1, 2];
+    let a: [u8; 2] = [0, 0];
+    let _ = &a;
+    v[i]
+}
+";
+        let r = scan("rust/src/serve/x.rs", src);
+        assert_eq!(rules_of(&r), ["L3"]);
+        assert_eq!(r.violations[0].line, 7);
+    }
+
+    #[test]
+    fn keyword_before_bracket_is_a_type_not_an_index() {
+        let src = "\
+fn f(active: &mut [u8], xs: &[u8]) -> u8 {
+    for x in [1u8, 2] {
+        let _ = x;
+    }
+    return [0u8; 2].len() as u8;
+}
+";
+        let r = scan("rust/src/serve/x.rs", src);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn cfg_test_region_skips_l3_but_not_l1() {
+        let src = "\
+#[cfg(test)]
+mod tests {
+    fn helper(o: Option<u8>) -> u8 {
+        let p: *const u8 = std::ptr::null();
+        unsafe { *p };
+        o.unwrap()
+    }
+}
+";
+        let r = scan("rust/src/serve/x.rs", src);
+        // unwrap inside cfg(test) is fine; the unsafe block still needs
+        // SAFETY (L1) and is outside the allowlist (L2).
+        let mut rules = rules_of(&r);
+        rules.sort();
+        assert_eq!(rules, ["L1", "L2"]);
+    }
+
+    #[test]
+    fn safety_comment_satisfies_l1_in_allowlisted_module() {
+        let src = "\
+// SAFETY: ptr is valid for len bytes — allocated two lines up.
+unsafe { std::ptr::read(p) };
+";
+        let r = scan("rust/src/linalg/buf.rs", src);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+        assert_eq!(r.unsafe_sites.len(), 1);
+        assert!(r.unsafe_sites[0].safety.as_deref().unwrap().contains("valid for len"));
+    }
+
+    #[test]
+    fn safety_comment_skips_attribute_lines() {
+        let src = "\
+// SAFETY: exact values mmap returned; Drop runs once.
+#[cfg(unix)]
+unsafe { sys::munmap(p, l) };
+";
+        let r = scan("rust/src/linalg/buf.rs", src);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn unsafe_without_safety_fires_l1_and_l2_outside_allowlist() {
+        let src = "fn f(p: *const u8) -> u8 { unsafe { *p } }\n";
+        let r = scan("rust/src/model/fast.rs", src);
+        let mut rules = rules_of(&r);
+        rules.sort();
+        assert_eq!(rules, ["L1", "L2"]);
+        assert_eq!(r.unsafe_sites.len(), 1);
+        assert_eq!(r.unsafe_sites[0].kind, "block");
+        assert!(r.unsafe_sites[0].safety.is_none());
+    }
+
+    #[test]
+    fn unsafe_impl_kind_is_recorded() {
+        let src = "// SAFETY: no interior mutability.\nunsafe impl Send for X {}\n";
+        let r = scan("rust/src/linalg/buf.rs", src);
+        assert!(r.violations.is_empty());
+        assert_eq!(r.unsafe_sites[0].kind, "impl");
+    }
+
+    #[test]
+    fn infallible_raw_buffer_ctor_fires_l5() {
+        let src = "\
+impl M {
+    pub fn from_parts(rows: usize, data: Vec<f32>) -> M {
+        M { rows, data }
+    }
+}
+";
+        let r = scan("rust/src/linalg/newmat.rs", src);
+        assert_eq!(rules_of(&r), ["L5"]);
+        assert_eq!(r.violations[0].line, 2);
+    }
+
+    #[test]
+    fn result_ctor_and_plain_value_ctor_pass_l5() {
+        let src = "\
+impl M {
+    pub fn from_parts(rows: usize, data: Vec<f32>) -> anyhow::Result<M> {
+        Ok(M { rows, data })
+    }
+    pub fn from_fn(rows: usize, f: impl Fn(usize) -> f32) -> M {
+        M::default()
+    }
+}
+";
+        let r = scan("rust/src/linalg/newmat.rs", src);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn multiline_ctor_signature_is_joined() {
+        let src = "\
+impl M {
+    pub fn from_parts(
+        rows: usize,
+        data: Vec<f32>,
+    ) -> M {
+        M { rows, data }
+    }
+}
+";
+        let r = scan("rust/src/linalg/newmat.rs", src);
+        assert_eq!(rules_of(&r), ["L5"]);
+    }
+
+    #[test]
+    fn triggers_inside_strings_do_not_fire() {
+        let src = r##"fn f() { let s = "x.unwrap() panic! unsafe"; let r = r#"m.lock().unwrap()"#; }
+"##;
+        let r = scan("rust/src/serve/x.rs", src);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+        assert!(r.unsafe_sites.is_empty());
+    }
+}

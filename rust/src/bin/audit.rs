@@ -1,0 +1,119 @@
+//! `compot audit` — static-analysis gate over the repo's own sources.
+//!
+//! Walks `rust/src`, `rust/benches`, `rust/tests`, `examples/` and
+//! `python/examples` with a comment/string-aware scanner and enforces the
+//! L0–L5 rule suite (see `compot::audit::rules`): SAFETY-commented unsafe,
+//! an unsafe-module allowlist, a panic-free serve request path,
+//! poison-recovering lock handling in `serve/`, and fallible raw-buffer
+//! constructors in `linalg/`.
+//!
+//! Exit codes: 0 clean, 1 violations (or fixture mismatches), 2 usage or
+//! I/O errors.
+//!
+//! ```text
+//! cargo run --bin audit                 # scan the repo
+//! cargo run --bin audit -- --fixtures   # self-test against fixtures
+//! cargo run --bin audit -- --inventory  # JSON report (unsafe inventory)
+//! ```
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use compot::audit;
+
+fn print_help() {
+    println!(
+        "compot audit — in-tree static analysis\n\
+         \n\
+         USAGE: audit [--root PATH] [--fixtures | --inventory]\n\
+         \n\
+         --root PATH   repo root (default: walk upward looking for rust/src)\n\
+         --fixtures    self-test the scanner against src/audit/fixtures/\n\
+         --inventory   print the JSON report (unsafe inventory + violations)"
+    );
+}
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut fixtures = false;
+    let mut inventory = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => root = args.next().map(PathBuf::from),
+            "--fixtures" => fixtures = true,
+            "--inventory" => inventory = true,
+            "-h" | "--help" => {
+                print_help();
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("audit: unknown argument `{other}`\n");
+                print_help();
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let root = root.or_else(|| std::env::current_dir().ok().and_then(|d| audit::find_root(&d)));
+    let Some(root) = root else {
+        eprintln!(
+            "audit: could not locate the repo root (no ancestor contains rust/src); \
+             pass --root PATH"
+        );
+        return ExitCode::from(2);
+    };
+
+    if fixtures {
+        return match audit::run_fixtures(&root) {
+            Ok(failures) if failures.is_empty() => {
+                println!("audit --fixtures: every fixture produced exactly its expected violations");
+                ExitCode::SUCCESS
+            }
+            Ok(failures) => {
+                for f in &failures {
+                    eprintln!("FIXTURE FAIL: {f}");
+                }
+                eprintln!("audit --fixtures: {} failure(s)", failures.len());
+                ExitCode::FAILURE
+            }
+            Err(e) => {
+                eprintln!("audit --fixtures: {e:#}");
+                ExitCode::from(2)
+            }
+        };
+    }
+
+    let report = match audit::audit_repo(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("audit: {e:#}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if inventory {
+        println!("{}", report.to_json().to_string());
+    } else {
+        for v in &report.violations {
+            eprintln!("{v}");
+        }
+        let missing = report
+            .unsafe_sites
+            .iter()
+            .filter(|s| s.safety.is_none())
+            .count();
+        println!(
+            "audit: {} files scanned, {} unsafe site(s) ({} missing SAFETY:), {} violation(s)",
+            report.files_scanned,
+            report.unsafe_sites.len(),
+            missing,
+            report.violations.len()
+        );
+    }
+    if report.violations.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -142,7 +142,10 @@ fn gptq_core(w: &Mat, stats: &CalibStats, bits: u32, group: usize) -> (Mat, Opti
             }
         }
     }
-    let packed = pack.then(|| QuantMat::from_codes_grouped(m, n, bits, group, &codes, scales));
+    let packed = pack.then(|| {
+        QuantMat::from_codes_grouped(m, n, bits, group, &codes, scales)
+            .expect("gptq_core builds matching codes/scales")
+    });
     (out, packed)
 }
 

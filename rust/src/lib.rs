@@ -18,7 +18,13 @@
 //! See the repository `README.md` for the registry/plan API, the method
 //! table, and CLI examples.
 
+// Unsafe code is an audited privilege, not a default: only the allowlisted
+// modules (see `audit::rules::scope_for`) opt back in, and `compot audit`
+// (CI-gated) requires a SAFETY: comment on every site.
+#![deny(unsafe_code)]
+
 pub mod allocator;
+pub mod audit;
 pub mod compress;
 pub mod coordinator;
 pub mod eval;

@@ -133,9 +133,12 @@ pub struct Mapping {
     kind: MapKind,
 }
 
-// The pointed-to bytes are never mutated after construction and the pointer
-// is owned exclusively by this Mapping, so sharing across threads is sound.
+// SAFETY: the pointed-to bytes are never mutated after construction and the
+// pointer is owned exclusively by this Mapping (freed only in Drop), so
+// moving the owner to another thread is sound.
 unsafe impl Send for Mapping {}
+// SAFETY: &Mapping only exposes read access to immutable bytes, so
+// concurrent shared access cannot race.
 unsafe impl Sync for Mapping {}
 
 impl Mapping {
@@ -149,6 +152,11 @@ impl Mapping {
         {
             if len > 0 {
                 use std::os::unix::io::AsRawFd;
+                // SAFETY: null addr hint, PROT_READ|MAP_SHARED over the
+                // first `len` bytes of a file we hold open (the fd is live
+                // for the duration of the call, and len > 0 matches the
+                // file's metadata); the MAP_FAILED/null returns are checked
+                // before the pointer is ever used.
                 let ptr = unsafe {
                     sys::mmap(
                         std::ptr::null_mut(),
@@ -176,13 +184,43 @@ impl Mapping {
         use std::io::Read;
         let layout = std::alloc::Layout::from_size_align(len.max(1), 64)
             .map_err(|e| anyhow::anyhow!("mapping layout: {e}"))?;
+        // SAFETY: layout has nonzero size (len rounded up to at least 1)
+        // and valid power-of-two alignment 64; the null return is checked
+        // on the next line.
         let ptr = unsafe { std::alloc::alloc(layout) };
         anyhow::ensure!(!ptr.is_null(), "mapping fallback allocation of {len} bytes failed");
+        // SAFETY: ptr is a fresh exclusive allocation of at least `len`
+        // bytes (checked non-null above), aliased by nothing else while
+        // this local slice lives.
         let buf = unsafe { std::slice::from_raw_parts_mut(ptr, len) };
         if let Err(e) = file.read_exact(buf) {
+            // SAFETY: deallocates the allocation made above with the same
+            // layout; ptr is not used after this point.
             unsafe { std::alloc::dealloc(ptr, layout) };
             return Err(e.into());
         }
+        Ok(Arc::new(Mapping { ptr, len, kind: MapKind::Heap(layout) }))
+    }
+
+    /// Build an in-memory `Mapping` by copying `bytes` into one
+    /// 64-byte-aligned heap allocation — the same `Heap` kind the read
+    /// fallback produces, so section-offset alignment guarantees hold
+    /// identically. This gives tests (including miri, which can neither
+    /// mmap nor touch the filesystem) a fully in-process way to exercise
+    /// the view/aliasing/drop machinery.
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Arc<Mapping>> {
+        let len = bytes.len();
+        let layout = std::alloc::Layout::from_size_align(len.max(1), 64)
+            .map_err(|e| anyhow::anyhow!("mapping layout: {e}"))?;
+        // SAFETY: layout has nonzero size (len rounded up to at least 1)
+        // and valid power-of-two alignment 64; the null return is checked
+        // on the next line.
+        let ptr = unsafe { std::alloc::alloc(layout) };
+        anyhow::ensure!(!ptr.is_null(), "in-memory mapping allocation of {len} bytes failed");
+        // SAFETY: src is valid for `len` reads, dst is a fresh exclusive
+        // allocation of at least `len` bytes — distinct regions, so
+        // copy_nonoverlapping's no-overlap contract holds trivially.
+        unsafe { std::ptr::copy_nonoverlapping(bytes.as_ptr(), ptr, len) };
         Ok(Arc::new(Mapping { ptr, len, kind: MapKind::Heap(layout) }))
     }
 
@@ -230,6 +268,8 @@ impl Mapping {
             if start >= end {
                 return;
             }
+            // SAFETY: getpagesize takes no arguments and has no side
+            // effects; any return is handled (clamped to at least 1).
             let page = unsafe { sys::getpagesize() }.max(1) as usize;
             let aligned = start - start % page;
             let adv = match advice {
@@ -253,10 +293,15 @@ impl Mapping {
 impl Drop for Mapping {
     fn drop(&mut self) {
         match self.kind {
+            // SAFETY: ptr/len are the exact values mmap returned at
+            // construction, unmodified since; Drop runs at most once.
             #[cfg(unix)]
             MapKind::Mmap => unsafe {
                 sys::munmap(self.ptr, self.len);
             },
+            // SAFETY: deallocates the pointer alloc returned at
+            // construction with the same recorded layout; Drop runs at
+            // most once and no view can outlive the owning Arc.
             MapKind::Heap(layout) => unsafe { std::alloc::dealloc(self.ptr, layout) },
         }
     }
@@ -457,6 +502,11 @@ impl<T: Pod> std::fmt::Debug for WeightBuf<T> {
 mod tests {
     use super::*;
 
+    // File-backed tests are cfg(not(miri)): miri has no filesystem or mmap.
+    // The in-memory `Mapping::from_bytes` tests below run under miri and
+    // cover the same alloc/view/aliasing/drop machinery.
+
+    #[cfg(not(miri))]
     fn tmp(name: &str) -> std::path::PathBuf {
         let dir = std::env::temp_dir().join("compot_buf_tests");
         std::fs::create_dir_all(&dir).unwrap();
@@ -464,6 +514,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg(not(miri))]
     fn mapping_reads_file_bytes() {
         let path = tmp("map_bytes.bin");
         let payload: Vec<u8> = (0..=255u8).cycle().take(1000).collect();
@@ -475,6 +526,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg(not(miri))]
     fn empty_file_maps_without_panic() {
         let path = tmp("empty.bin");
         std::fs::write(&path, b"").unwrap();
@@ -488,6 +540,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg(not(miri))]
     fn views_reinterpret_le_payloads() {
         let path = tmp("views.bin");
         let mut bytes = Vec::new();
@@ -512,6 +565,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg(not(miri))]
     fn out_of_range_and_misaligned_views_are_errors() {
         let path = tmp("badviews.bin");
         std::fs::write(&path, vec![0u8; 64]).unwrap();
@@ -531,6 +585,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg(not(miri))]
     fn make_mut_copies_out_of_the_mapping() {
         let path = tmp("cow.bin");
         let mut bytes = Vec::new();
@@ -562,6 +617,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg(not(miri))]
     fn advise_is_safe_on_any_mapping_and_any_range() {
         // madvise is advisory; the only contract is "never crash, never
         // change visible bytes" — for true mappings, the heap fallback, and
@@ -582,6 +638,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg(not(miri))]
     fn owned_and_mapped_compare_by_content() {
         let path = tmp("eq.bin");
         let mut bytes = Vec::new();
@@ -595,5 +652,49 @@ mod tests {
         assert_eq!(mapped, owned);
         assert_eq!(mapped.into_vec(), vec![0.5, -1.0]);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn in_memory_mapping_views_roundtrip() {
+        // miri-clean path: no fs, no mmap — exercises alloc/copy/view/drop.
+        let mut bytes = Vec::new();
+        for v in [1.5f32, -2.0, 0.25] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in [7u32, 9] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let map = Mapping::from_bytes(&bytes).unwrap();
+        assert!(!map.is_mmap());
+        assert_eq!(map.bytes(), &bytes[..]);
+        let f: WeightBuf<f32> = WeightBuf::view(&map, 0, 3).unwrap();
+        assert_eq!(f.as_slice(), &[1.5, -2.0, 0.25]);
+        let u: WeightBuf<u32> = WeightBuf::view(&map, 12, 2).unwrap();
+        assert_eq!(u.as_slice(), &[7, 9]);
+        assert!(WeightBuf::<f32>::view(&map, 0, 6).is_err());
+        drop(map);
+        assert_eq!(u.as_slice(), &[7, 9], "views keep the mapping alive via Arc");
+        drop(f);
+    }
+
+    #[test]
+    fn empty_in_memory_mapping() {
+        let map = Mapping::from_bytes(&[]).unwrap();
+        assert!(map.is_empty());
+        let v: WeightBuf<u16> = WeightBuf::view(&map, 0, 0).unwrap();
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn make_mut_on_in_memory_view_is_copy_on_write() {
+        let bytes: Vec<u8> = [1u32, 2, 3].iter().flat_map(|v| v.to_le_bytes()).collect();
+        let map = Mapping::from_bytes(&bytes).unwrap();
+        let mut buf: WeightBuf<u32> = WeightBuf::view(&map, 0, 3).unwrap();
+        buf.make_mut()[1] = 99;
+        assert!(!buf.is_mapped());
+        assert_eq!(buf.as_slice(), &[1, 99, 3]);
+        // the mapping itself is untouched
+        let again: WeightBuf<u32> = WeightBuf::view(&map, 0, 3).unwrap();
+        assert_eq!(again.as_slice(), &[1, 2, 3]);
     }
 }

@@ -42,6 +42,9 @@ impl Mat {
         m
     }
 
+    // audit:allow(ctor): compression-math constructor fed by in-process
+    // shapes (~100 call sites); untrusted checkpoint data enters through
+    // the fallible from_buf/WeightBuf::view path instead.
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
         assert_eq!(data.len(), rows * cols, "from_vec: shape/data mismatch");
         Mat { rows, cols, data: data.into() }
@@ -49,9 +52,18 @@ impl Mat {
 
     /// Wrap an existing buffer — the zero-copy checkpoint loader hands a
     /// mapped [`WeightBuf`] straight in; owned buffers work identically.
-    pub fn from_buf(rows: usize, cols: usize, data: WeightBuf<f32>) -> Mat {
-        assert_eq!(data.len(), rows * cols, "from_buf: shape/data mismatch");
-        Mat { rows, cols, data }
+    /// Fallible because the shape comes from an untrusted checkpoint
+    /// header: a mismatch is a load error, not a panic.
+    pub fn from_buf(rows: usize, cols: usize, data: WeightBuf<f32>) -> anyhow::Result<Mat> {
+        let need = rows
+            .checked_mul(cols)
+            .ok_or_else(|| anyhow::anyhow!("from_buf: {rows}x{cols} element count overflows"))?;
+        anyhow::ensure!(
+            data.len() == need,
+            "from_buf: {rows}x{cols} needs {need} values, got {}",
+            data.len()
+        );
+        Ok(Mat { rows, cols, data })
     }
 
     pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f32) -> Mat {
@@ -311,7 +323,8 @@ mod tests {
     fn from_buf_matches_from_vec_and_reports_residency() {
         let v = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
         let a = Mat::from_vec(2, 3, v.clone());
-        let b = Mat::from_buf(2, 3, v.into());
+        let b = Mat::from_buf(2, 3, v.into()).unwrap();
+        assert!(Mat::from_buf(2, 4, vec![0.0f32; 6].into()).is_err());
         assert_eq!(a, b);
         assert!(!b.is_mapped());
         assert_eq!(b.resident_bytes(), 24);

@@ -282,6 +282,7 @@ impl QuantMat {
             }
         }
         Self::from_codes_grouped(rows, cols, bits, group, &codes, scales)
+            .expect("quantize_from_grouped builds matching codes/scales")
     }
 
     /// Assemble from explicit codes (row-major, offset-binary) and per-row
@@ -292,12 +293,14 @@ impl QuantMat {
         bits: u32,
         codes: &[u16],
         scales: Vec<u16>,
-    ) -> QuantMat {
+    ) -> anyhow::Result<QuantMat> {
         Self::from_codes_grouped(rows, cols, bits, GROUP, codes, scales)
     }
 
     /// Assemble from explicit codes and scales with an explicit group size
-    /// — the GPTQ loop builds these incrementally.
+    /// — the GPTQ loop builds these incrementally. Fallible because the
+    /// buffers may come from outside the quantizer: a length/shape mismatch
+    /// is an error, not a panic.
     pub fn from_codes_grouped(
         rows: usize,
         cols: usize,
@@ -305,21 +308,33 @@ impl QuantMat {
         group: usize,
         codes: &[u16],
         scales: Vec<u16>,
-    ) -> QuantMat {
-        assert!(Self::supported_bits(bits), "QuantMat packs 2..=8 bits, got {bits}");
-        assert!(supported_group(group), "unsupported quantization group size {group}");
-        assert_eq!(codes.len(), rows * cols, "from_codes: code count");
-        assert_eq!(scales.len(), rows * cols.div_ceil(group), "from_codes: scale count");
+    ) -> anyhow::Result<QuantMat> {
+        anyhow::ensure!(Self::supported_bits(bits), "QuantMat packs 2..=8 bits, got {bits}");
+        anyhow::ensure!(supported_group(group), "unsupported quantization group size {group}");
+        let count = rows
+            .checked_mul(cols)
+            .ok_or_else(|| anyhow::anyhow!("from_codes: {rows}x{cols} code count overflows"))?;
+        anyhow::ensure!(
+            codes.len() == count,
+            "from_codes: {rows}x{cols} needs {count} codes, got {}",
+            codes.len()
+        );
+        anyhow::ensure!(
+            scales.len() == rows * cols.div_ceil(group),
+            "from_codes: {rows}x{cols} at group {group} needs {} scales, got {}",
+            rows * cols.div_ceil(group),
+            scales.len()
+        );
         let max_code = (1u32 << bits) - 1;
         debug_assert!(codes.iter().all(|&c| (c as u32) < max_code), "code out of b-bit range");
-        QuantMat {
+        Ok(QuantMat {
             rows,
             cols,
             bits,
             group,
             packed: pack_codes(codes, bits).into(),
             scales: scales.into(),
-        }
+        })
     }
 
     #[inline]
@@ -521,9 +536,8 @@ impl QuantMat {
     }
 
     /// Reassemble from raw checkpoint buffers — owned vectors or zero-copy
-    /// mapped views alike. Unlike the panicking constructors this validates
-    /// everything and returns errors: the buffers come from disk, not from
-    /// our own quantizer.
+    /// mapped views alike. Validates everything and returns errors: the
+    /// buffers come from disk, not from our own quantizer.
     pub fn from_raw_parts(
         rows: usize,
         cols: usize,
@@ -645,7 +659,7 @@ mod tests {
                     (0..count).map(|_| (rng.range(0, max_code as usize)) as u16).collect();
                 let rows = 1;
                 let scales = vec![0x3c00u16; count.div_ceil(GROUP)];
-                let qm = QuantMat::from_codes(rows, count, bits, &codes, scales);
+                let qm = QuantMat::from_codes(rows, count, bits, &codes, scales).unwrap();
                 for (t, &c) in codes.iter().enumerate() {
                     assert_eq!(qm.code_at(t), c as u32, "bits {bits} count {count} t {t}");
                 }

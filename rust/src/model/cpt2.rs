@@ -335,7 +335,7 @@ impl SectionReader {
         let len = rows
             .checked_mul(cols)
             .ok_or_else(|| anyhow::anyhow!("section '{name}': {rows}x{cols} overflows"))?;
-        Ok(Mat::from_buf(rows, cols, self.buf::<f32>(name, len)?))
+        Mat::from_buf(rows, cols, self.buf::<f32>(name, len)?)
     }
 
     /// `bits`/`group` are pre-validated by `meta_bits`/`meta_group`

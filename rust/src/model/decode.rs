@@ -148,6 +148,9 @@ impl Model {
         for (layer, stage) in self.stages.iter().enumerate() {
             x = match stage {
                 Stage::Block(b) => {
+                    // audit:allow(panic): KvCache::new builds one LayerKv
+                    // per Block stage from this same stage list, so a Block
+                    // always finds its cache entry.
                     let kv = cache.layers[layer].as_mut().expect("block stage has a cache");
                     b.forward_cached(&x, hd, self.cfg.rope_theta, kv, pos0)
                 }
@@ -170,6 +173,9 @@ impl Model {
         for (layer, stage) in self.stages.iter().enumerate() {
             x = match stage {
                 Stage::Block(b) => {
+                    // audit:allow(panic): KvCache::new builds one LayerKv
+                    // per Block stage from this same stage list, so a Block
+                    // always finds its cache entry.
                     let kv = cache.layers[layer].as_mut().expect("block stage has a cache");
                     b.decode_step(&x, hd, self.cfg.rope_theta, kv, pos)
                 }
@@ -211,6 +217,9 @@ impl Model {
         for (layer, stage) in self.stages.iter().enumerate() {
             x = match stage {
                 Stage::Block(b) => {
+                    // audit:allow(panic): KvCache::new builds one LayerKv
+                    // per Block stage from this same stage list, so a Block
+                    // always finds its cache entry.
                     let kv = cache.layers[layer].as_mut().expect("block stage has a cache");
                     b.decode_step_multi(&x, hd, self.cfg.rope_theta, kv, pos0)
                 }
@@ -275,6 +284,8 @@ impl Model {
                         .iter_mut()
                         .zip(positions.iter())
                         .map(|(c, &p)| {
+                            // audit:allow(panic): every cache was asserted
+                            // above to mirror this model's stage list.
                             (c.layers[layer].as_mut().expect("block stage has a cache"), p)
                         })
                         .collect();
@@ -654,6 +665,8 @@ impl DecodeSession {
         if self.done {
             return None;
         }
+        // audit:allow(panic): start() asserts a non-empty prompt, and tokens
+        // only ever grows from there.
         Some(*self.tokens.last().expect("session holds at least the prompt"))
     }
 

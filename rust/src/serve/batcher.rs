@@ -9,6 +9,8 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use super::{lock_recover, wait_timeout_recover};
+
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
     pub max_batch: usize,
@@ -44,7 +46,7 @@ impl<T> Batcher<T> {
     /// accepted here is guaranteed to be seen by the draining worker before
     /// it observes the closed-and-empty exit condition.
     pub fn push(&self, item: T) -> bool {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = lock_recover(&self.queue);
         if self.closed.load(Ordering::SeqCst) {
             return false;
         }
@@ -59,7 +61,7 @@ impl<T> Batcher<T> {
     pub fn close(&self) {
         // Take the lock so close serializes against in-flight pushes; after
         // this returns, every accepted item is in the queue.
-        let _q = self.queue.lock().unwrap();
+        let _q = lock_recover(&self.queue);
         self.closed.store(true, Ordering::SeqCst);
         self.signal.notify_all();
     }
@@ -69,7 +71,7 @@ impl<T> Batcher<T> {
     }
 
     pub fn len(&self) -> usize {
-        self.queue.lock().unwrap().len()
+        lock_recover(&self.queue).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -80,12 +82,12 @@ impl<T> Batcher<T> {
     /// to `max_batch` items, waiting at most `max_wait` to fill the batch.
     /// Returns an empty vec only when closed and drained.
     pub fn next_batch(&self) -> Vec<T> {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = lock_recover(&self.queue);
         while q.is_empty() {
             if self.closed.load(Ordering::SeqCst) {
                 return Vec::new();
             }
-            let (guard, _) = self.signal.wait_timeout(q, Duration::from_millis(50)).unwrap();
+            let (guard, _) = wait_timeout_recover(&self.signal, q, Duration::from_millis(50));
             q = guard;
         }
         // First item arrived; give stragglers up to max_wait.
@@ -95,9 +97,9 @@ impl<T> Batcher<T> {
             if now >= deadline {
                 break;
             }
-            let (guard, timeout) = self.signal.wait_timeout(q, deadline - now).unwrap();
+            let (guard, timed_out) = wait_timeout_recover(&self.signal, q, deadline - now);
             q = guard;
-            if timeout.timed_out() {
+            if timed_out {
                 break;
             }
         }
@@ -108,7 +110,7 @@ impl<T> Batcher<T> {
     /// Non-blocking drain of up to `max` items — how the continuous-batching
     /// worker tops up a running batch between token steps.
     pub fn try_drain(&self, max: usize) -> Vec<T> {
-        let mut q = self.queue.lock().unwrap();
+        let mut q = lock_recover(&self.queue);
         let take = q.len().min(max);
         q.drain(..take).collect()
     }
@@ -116,6 +118,8 @@ impl<T> Batcher<T> {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use std::sync::Arc;
 
@@ -185,6 +189,30 @@ mod tests {
         assert_eq!(b.try_drain(4), vec![0, 1, 2, 3]);
         assert_eq!(b.try_drain(4), vec![4, 5]);
         assert!(b.try_drain(4).is_empty());
+    }
+
+    #[test]
+    fn poisoned_queue_recovers_instead_of_cascading() {
+        // A thread that panics while holding the queue lock poisons the
+        // mutex; lock_recover must shrug that off so the batcher keeps
+        // accepting and draining work (the regression behind serve's
+        // whole-server stats outage).
+        let b: Arc<Batcher<u32>> = Arc::new(Batcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+        }));
+        let b2 = b.clone();
+        let poisoner = std::thread::spawn(move || {
+            let _guard = b2.queue.lock().unwrap();
+            panic!("deliberate poison");
+        });
+        assert!(poisoner.join().is_err(), "poisoner must have panicked");
+        assert!(b.push(1), "push must survive a poisoned mutex");
+        assert!(b.push(2));
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.next_batch(), vec![1, 2]);
+        b.close();
+        assert!(b.next_batch().is_empty());
     }
 
     #[test]

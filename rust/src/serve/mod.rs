@@ -13,6 +13,19 @@
 //! also serves speculative decoding ([`spec`]): requests pick a `tier` —
 //! draft-only, target-only, or draft-proposed/target-verified — and the
 //! spec tier's greedy output is token-identical to the target alone.
+//!
+//! The request path is panic-hardened and statically gated: `compot audit`
+//! (rule L3/L4, CI-enforced) forbids unwrap/expect/panic/indexing here
+//! unless annotated, and the clippy attributes below promote stray
+//! unwraps to warnings (CI runs clippy with `-D warnings`). Lock results
+//! go through [`lock_recover`]/[`wait_timeout_recover`] so a panicked
+//! worker poisons nothing: the panic is caught, the one request fails
+//! with a structured error, and the server keeps answering.
+
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
 
 pub mod batcher;
 pub mod server;
@@ -21,3 +34,29 @@ pub mod spec;
 pub use batcher::{BatchPolicy, Batcher};
 pub use server::{serve_blocking, serve_blocking_tiers, Client, GenRequest, GenResponse};
 pub use spec::{SpecRound, SpeculativeSession, Tier};
+
+/// Poison-recovering `Mutex::lock`: a `PoisonError` only means some thread
+/// panicked while holding the guard — the protected data (queues, counters)
+/// is still structurally valid here, and refusing service forever because
+/// one request died is the worse failure mode. Required in `serve/` by
+/// audit rule L4.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Poison-recovering `Condvar::wait_timeout`: returns the reacquired guard
+/// and whether the wait timed out, recovering the guard from a poisoned
+/// wait the same way [`lock_recover`] does.
+pub fn wait_timeout_recover<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, bool) {
+    match cv.wait_timeout(guard, dur) {
+        Ok((g, t)) => (g, t.timed_out()),
+        Err(e) => {
+            let (g, t) = e.into_inner();
+            (g, t.timed_out())
+        }
+    }
+}

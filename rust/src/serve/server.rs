@@ -64,6 +64,10 @@ pub struct GenResponse {
     pub batch: usize,
     /// Tier that actually served the request ("draft" | "spec" | "full").
     pub tier: String,
+    /// Structured failure for a request the worker could not serve: the
+    /// human-readable message plus the stable protocol `code` (e.g.
+    /// `"worker_panic"`). `None` on success.
+    pub error: Option<(String, String)>,
 }
 
 struct Job {
@@ -119,7 +123,17 @@ impl AnySession {
 /// per-session. Output is bit-identical to each session stepping alone —
 /// the kernel's parity contract — so continuous batching never changes a
 /// continuation.
-fn step_plain_group(model: &Model, active: &mut [Active], want_draft: bool, metrics: &Metrics) {
+///
+/// The forward runs under `catch_unwind`: a panicking model must cost the
+/// sessions in this group a structured error, not the whole server. Returns
+/// the `active` indices of sessions lost to a panicked forward (empty on
+/// the happy path) so the caller can retire them with `worker_panic`.
+fn step_plain_group(
+    model: &Model,
+    active: &mut [Active],
+    want_draft: bool,
+    metrics: &Metrics,
+) -> Vec<usize> {
     let mut idxs: Vec<usize> = Vec::new();
     let mut tokens: Vec<u16> = Vec::new();
     let mut caches: Vec<&mut KvCache> = Vec::new();
@@ -134,19 +148,28 @@ fn step_plain_group(model: &Model, active: &mut [Active], want_draft: bool, metr
         caches.push(s.cache_mut());
     }
     if tokens.is_empty() {
-        return;
+        return Vec::new();
     }
-    let logits = model.decode_step_batch(&mut caches, &tokens);
+    let forward = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        model.decode_step_batch(&mut caches, &tokens)
+    }));
     drop(caches);
+    let logits = match forward {
+        Ok(l) => l,
+        // The panicked sessions' KV caches are in an unknown state; the
+        // caller drops them. Everything else (model weights, metrics) is
+        // shared-immutable or atomic, so recovery is safe.
+        Err(_) => return idxs,
+    };
     metrics.record_batch_forward(tokens.len());
     for (r, &i) in idxs.iter().enumerate() {
-        match &mut active[i].session {
-            AnySession::Full(s) | AnySession::Draft(s) => {
-                s.consume_logits(logits.row(r));
-            }
-            AnySession::Spec(_) => unreachable!("plain group collected a spec session"),
+        // audit:allow(index): `idxs` holds enumerate() indices of `active`
+        // collected above; bounds hold by construction.
+        if let AnySession::Full(s) | AnySession::Draft(s) = &mut active[i].session {
+            s.consume_logits(logits.row(r));
         }
     }
+    Vec::new()
 }
 
 /// One admitted request inside the continuous batch.
@@ -185,6 +208,10 @@ pub struct Metrics {
     pub draft_proposed: AtomicU64,
     /// Proposed tokens the target accepted.
     pub draft_accepted: AtomicU64,
+    /// Sessions lost to a caught panic in the decode worker (each one
+    /// answered with a structured `worker_panic` error instead of taking
+    /// the server down).
+    pub worker_panics: AtomicU64,
 }
 
 impl Metrics {
@@ -238,6 +265,10 @@ impl Metrics {
             .set(
                 "mean_latency_ms",
                 (self.total_latency_us.load(Ordering::Relaxed) as f64 / reqs as f64 / 1e3).into(),
+            )
+            .set(
+                "worker_panics",
+                (self.worker_panics.load(Ordering::Relaxed) as f64).into(),
             );
         j
     }
@@ -275,6 +306,34 @@ impl Metrics {
             latency_ms: latency,
             batch,
             tier: tier.name().to_string(),
+            error: None,
+        });
+    }
+
+    /// Answer a request the worker could not serve with a structured error
+    /// response instead of dropping its reply channel (which would surface
+    /// as an opaque disconnect at the protocol edge). Failures still count
+    /// as requests so latency aggregates stay honest.
+    fn fail(
+        &self,
+        enqueued: &Timer,
+        reply: &mpsc::Sender<GenResponse>,
+        tier: Tier,
+        msg: String,
+        code: &str,
+    ) {
+        let latency = enqueued.secs() * 1e3;
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.total_latency_us.fetch_add((latency * 1e3) as u64, Ordering::Relaxed);
+        if code == "worker_panic" {
+            self.worker_panics.fetch_add(1, Ordering::Relaxed);
+        }
+        let _ = reply.send(GenResponse {
+            tokens: Vec::new(),
+            latency_ms: latency,
+            batch: 0,
+            tier: tier.name().to_string(),
+            error: Some((msg, code.to_string())),
         });
     }
 }
@@ -398,30 +457,63 @@ pub fn serve_blocking_tiers(
                         continue;
                     }
                     // The protocol edge already resolved the tier against
-                    // the loaded models, so the expects here are unreachable
-                    // for admitted jobs.
-                    let session = match job.req.tier {
-                        Tier::Full => AnySession::Full(DecodeSession::start(
-                            &model,
-                            &job.req.prompt,
-                            job.req.max_new,
-                            job.req.sampling,
-                        )),
-                        Tier::Draft => AnySession::Draft(DecodeSession::start(
-                            draft.as_deref().expect("draft tier admitted without --draft"),
-                            &job.req.prompt,
-                            job.req.max_new,
-                            job.req.sampling,
-                        )),
-                        Tier::Spec => AnySession::Spec(SpeculativeSession::start(
-                            &model,
-                            draft.as_deref().expect("spec tier admitted without --draft"),
-                            &job.req.prompt,
-                            job.req.max_new,
-                            draft_k,
-                        )),
-                    };
-                    active.push(Active { session, enqueued: job.enqueued, reply: job.reply });
+                    // the loaded models, so `None` here (a draft tier on a
+                    // draftless worker) is a defensive belt: it answers with
+                    // a structured error rather than panicking the worker.
+                    // Prefill runs under catch_unwind for the same reason —
+                    // a model that panics on this prompt must cost exactly
+                    // this request.
+                    let built = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        match job.req.tier {
+                            Tier::Full => Some(AnySession::Full(DecodeSession::start(
+                                &model,
+                                &job.req.prompt,
+                                job.req.max_new,
+                                job.req.sampling,
+                            ))),
+                            Tier::Draft => draft.as_deref().map(|d| {
+                                AnySession::Draft(DecodeSession::start(
+                                    d,
+                                    &job.req.prompt,
+                                    job.req.max_new,
+                                    job.req.sampling,
+                                ))
+                            }),
+                            Tier::Spec => draft.as_deref().map(|d| {
+                                AnySession::Spec(SpeculativeSession::start(
+                                    &model,
+                                    d,
+                                    &job.req.prompt,
+                                    job.req.max_new,
+                                    draft_k,
+                                ))
+                            }),
+                        }
+                    }));
+                    match built {
+                        Ok(Some(session)) => active.push(Active {
+                            session,
+                            enqueued: job.enqueued,
+                            reply: job.reply,
+                        }),
+                        Ok(None) => metrics.fail(
+                            &job.enqueued,
+                            &job.reply,
+                            job.req.tier,
+                            format!(
+                                "tier '{}' admitted without a draft model",
+                                job.req.tier.name()
+                            ),
+                            "tier_unavailable",
+                        ),
+                        Err(_) => metrics.fail(
+                            &job.enqueued,
+                            &job.reply,
+                            job.req.tier,
+                            "model panicked during prefill".to_string(),
+                            "worker_panic",
+                        ),
+                    }
                 }
                 // One turn per running session per round. The plain tiers
                 // step through one batched forward per model — all full
@@ -431,47 +523,68 @@ pub fn serve_blocking_tiers(
                 // spec sessions run their own draft/verify rounds. Then
                 // retire finished sessions so their slots free up for the
                 // next admission.
-                step_plain_group(&model, &mut active, false, &metrics);
+                let mut failed = step_plain_group(&model, &mut active, false, &metrics);
                 if let Some(d) = draft.as_deref() {
-                    step_plain_group(d, &mut active, true, &metrics);
-                }
-                for a in active.iter_mut() {
-                    if let AnySession::Spec(s) = &mut a.session {
-                        if s.is_done() {
-                            continue;
-                        }
-                        let d = draft
-                            .as_deref()
-                            .expect("spec session admitted without a draft model");
-                        if let Some(r) = s.round(&model, d) {
-                            metrics.steps.fetch_add(1, Ordering::Relaxed);
-                            metrics.spec_rounds.fetch_add(1, Ordering::Relaxed);
-                            metrics
-                                .draft_proposed
-                                .fetch_add(r.proposed as u64, Ordering::Relaxed);
-                            metrics
-                                .draft_accepted
-                                .fetch_add(r.accepted as u64, Ordering::Relaxed);
+                    failed.extend(step_plain_group(d, &mut active, true, &metrics));
+                    // Spec sessions only exist on draft-loaded servers (the
+                    // protocol edge rejects the tier otherwise), so their
+                    // rounds live under this branch — no expect needed.
+                    for (i, a) in active.iter_mut().enumerate() {
+                        if let AnySession::Spec(s) = &mut a.session {
+                            if s.is_done() {
+                                continue;
+                            }
+                            let round = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| s.round(&model, d)),
+                            );
+                            match round {
+                                Ok(Some(r)) => {
+                                    metrics.steps.fetch_add(1, Ordering::Relaxed);
+                                    metrics.spec_rounds.fetch_add(1, Ordering::Relaxed);
+                                    metrics
+                                        .draft_proposed
+                                        .fetch_add(r.proposed as u64, Ordering::Relaxed);
+                                    metrics
+                                        .draft_accepted
+                                        .fetch_add(r.accepted as u64, Ordering::Relaxed);
+                                }
+                                Ok(None) => {}
+                                Err(_) => failed.push(i),
+                            }
                         }
                     }
+                }
+                // Retire panicked sessions with a structured error. Indices
+                // come from disjoint passes over the same `active`; removing
+                // in descending order keeps the remaining ones valid across
+                // swap_remove.
+                failed.sort_unstable_by(|a, b| b.cmp(a));
+                for i in failed {
+                    let dead = active.swap_remove(i);
+                    let tier = dead.session.tier();
+                    metrics.fail(
+                        &dead.enqueued,
+                        &dead.reply,
+                        tier,
+                        "model panicked during decode".to_string(),
+                        "worker_panic",
+                    );
                 }
                 let bsize = active.len();
-                let mut i = 0;
-                while i < active.len() {
-                    if active[i].session.is_done() {
-                        let done = active.swap_remove(i);
-                        let tier = done.session.tier();
-                        metrics.finish(
-                            &done.enqueued,
-                            &done.reply,
-                            done.session.generated().to_vec(),
-                            bsize,
-                            tier,
-                        );
-                    } else {
-                        i += 1;
+                active.retain_mut(|a| {
+                    if !a.session.is_done() {
+                        return true;
                     }
-                }
+                    let tier = a.session.tier();
+                    metrics.finish(
+                        &a.enqueued,
+                        &a.reply,
+                        a.session.generated().to_vec(),
+                        bsize,
+                        tier,
+                    );
+                    false
+                });
             }
         })
     };
@@ -615,6 +728,10 @@ fn handle_conn(
             continue;
         }
         let resp = rx.recv()?;
+        if let Some((msg, code)) = resp.error {
+            writeln!(writer, "{}", protocol_error(msg, &code))?;
+            continue;
+        }
         let mut out = Json::obj();
         out.set("tokens", Json::Arr(resp.tokens.iter().map(|&t| Json::Num(t as f64)).collect()))
             .set("latency_ms", resp.latency_ms.into())
@@ -704,6 +821,10 @@ impl Client {
             latency_ms: r.get("latency_ms").and_then(Json::as_f64).unwrap_or(0.0),
             batch: r.get("batch").and_then(Json::as_usize).unwrap_or(0),
             tier: r.get("tier").and_then(Json::as_str).unwrap_or("").to_string(),
+            error: r.get("error").and_then(Json::as_str).map(|e| {
+                let code = r.get("code").and_then(Json::as_str).unwrap_or("");
+                (e.to_string(), code.to_string())
+            }),
         }
     }
 
@@ -729,6 +850,8 @@ impl Client {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::model::config::ModelConfig;
     use crate::util::Rng;
@@ -1064,6 +1187,40 @@ mod tests {
         assert_eq!(r.tier, "full", "draftless default tier must be full");
         let info = c.info().unwrap();
         assert_eq!(info.get("tier_default").and_then(Json::as_str), Some("full"));
+        c.shutdown().unwrap();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn panicking_session_degrades_one_request_not_the_server() {
+        // The mutex-poison cascade regression: a session that panics inside
+        // the decode worker must cost exactly that request — answered with a
+        // structured `worker_panic` error — while the server keeps serving
+        // other tiers and `stats` keeps answering. We provoke the panic with
+        // a deliberately broken draft model whose embedding table has one
+        // row: any admitted draft-tier token >= 1 indexes out of range.
+        let target = Model::random(&ModelConfig::test_tiny(), &mut Rng::new(41));
+        let mut broken = quantized_draft(&target);
+        broken.embed = broken.embed.rows_range(0, 1);
+        let (addr, server) = spawn_tier_server(Arc::new(target), Some(Arc::new(broken)), 2);
+        let mut c = Client::connect(addr).unwrap();
+
+        let mut req = Json::obj();
+        req.set("prompt", Json::Arr(vec![Json::Num(2.0), Json::Num(3.0)]))
+            .set("max_new", 4.into())
+            .set("tier", "draft".into());
+        let r = c.request_raw(&req).unwrap();
+        assert!(r.get("error").is_some(), "panicked session must answer with an error");
+        assert_eq!(r.get("code").and_then(Json::as_str), Some("worker_panic"));
+
+        // The worker survived: the full tier (healthy target model) serves...
+        let ok = c.request_tier(&[2, 3], 4, "full").unwrap();
+        assert_eq!(ok.tokens.len(), 4);
+        assert_eq!(ok.tier, "full");
+        // ...and stats still answers, with the panic on the books.
+        let stats = c.stats().unwrap();
+        assert!(stats.get("worker_panics").and_then(Json::as_usize).unwrap() >= 1);
+        assert!(stats.get("requests").and_then(Json::as_usize).unwrap() >= 2);
         c.shutdown().unwrap();
         server.join().unwrap();
     }

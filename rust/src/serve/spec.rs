@@ -168,6 +168,8 @@ impl SpeculativeSession {
             return None;
         }
         let t_len = self.tokens.len();
+        // audit:allow(index): start() asserts a non-empty prompt and always
+        // appends the first target-chosen token, so tokens is never empty.
         let last = self.tokens[t_len - 1];
         // Proposal budget: never draft past the request/model limits — the
         // verify step always commits at least one token beyond the
@@ -186,6 +188,8 @@ impl SpeculativeSession {
                 self.draft_cache.truncate(t_len - 1);
             }
             while self.draft_cache.len() < t_len - 1 {
+                // audit:allow(index): the loop condition bounds the cache
+                // length below t_len - 1 < tokens.len().
                 let tok = self.tokens[self.draft_cache.len()];
                 draft.decode_step(&mut self.draft_cache, tok);
             }
@@ -212,9 +216,12 @@ impl SpeculativeSession {
         //    target-chosen token (correction at the divergence, or the
         //    bonus token from the last row when everything was accepted).
         let mut a = 0;
+        // audit:allow(index): a < k == proposals.len() is the loop guard.
         while a < k && argmax(logits.row(a)) == proposals[a] {
             a += 1;
         }
+        // audit:allow(index): the loop above stops with a <= k, so the
+        // prefix slice is in range.
         let mut appended: Vec<u16> = proposals[..a].to_vec();
         appended.push(argmax(logits.row(a.min(k))));
         if a < k {
@@ -244,6 +251,8 @@ impl SpeculativeSession {
 
     /// Generated continuation only.
     pub fn generated(&self) -> &[u16] {
+        // audit:allow(index): prompt_len is the length tokens started with
+        // and the sequence only ever grows.
         &self.tokens[self.prompt_len..]
     }
 

@@ -507,3 +507,37 @@ fn speculative_decode_is_token_identical_across_all_variants() {
         std::fs::remove_file(&path).ok();
     }
 }
+
+/// The static-analysis gate, in-process: the repo itself must scan clean
+/// under `compot audit` (every unsafe site SAFETY-commented and confined to
+/// the linalg buffer modules, no unannotated panic surface on the serve
+/// path), and the scanner must keep firing on its violation fixtures —
+/// the self-test that guards the gate against silent lexer regressions.
+#[test]
+#[cfg(not(miri))]
+fn repo_is_audit_clean_and_fixtures_fire() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a repo root parent")
+        .to_path_buf();
+    let report = compot::audit::audit_repo(&root).expect("audit scan");
+    assert!(report.files_scanned > 0, "audit scanned nothing");
+    let msgs: Vec<String> = report.violations.iter().map(|v| v.to_string()).collect();
+    assert!(msgs.is_empty(), "audit violations:\n{}", msgs.join("\n"));
+    for site in &report.unsafe_sites {
+        assert!(
+            site.safety.is_some(),
+            "unsafe site without SAFETY comment: {}:{}",
+            site.file,
+            site.line
+        );
+        assert!(
+            site.file.ends_with("src/linalg/buf.rs"),
+            "unsafe outside the allowlist: {}:{}",
+            site.file,
+            site.line
+        );
+    }
+    let failures = compot::audit::run_fixtures(&root).expect("fixture run");
+    assert!(failures.is_empty(), "fixture self-test failed:\n{}", failures.join("\n"));
+}
