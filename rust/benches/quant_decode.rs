@@ -3,11 +3,18 @@
 //! `apply_row` kernels, for a 4-bit RTN plan and the Table-7
 //! `compot@0.25+gptq4` composition.
 //!
-//! Gates (the process exits non-zero if either fails):
+//! Gates (the process exits non-zero if any fails):
 //! - a 4-bit quantized model's resident weight bytes are **< 0.5×** the
 //!   dense f32 model's;
 //! - greedy decode through the packed path is **token-identical** to the
-//!   fake-quant f32 reference model.
+//!   fake-quant f32 reference model;
+//! - the same model re-encoded row-sequentially decodes token-identically
+//!   to the planar default (layout parity).
+//!
+//! Also measured: the planar-vs-row-seq unpack speedup and the fused int8
+//! matvec speedup on a synthetic packed matrix, plus the active SIMD
+//! kernel name — `rtn4_unpack_speedup` carries a committed CI floor in
+//! `BENCH_quant.json` (see the note there).
 //!
 //! Run: `cargo bench --bench quant_decode` (add `-- --tiny` for the CI
 //! smoke run). Writes `BENCH_quant.json` (override with `BENCH_QUANT_OUT`).
@@ -15,6 +22,7 @@
 use compot::compress::StageConfig;
 use compot::coordinator::plan::CompressionPlan;
 use compot::data::SynthLang;
+use compot::linalg::{simd, Mat, QuantLayout, QuantMat};
 use compot::model::config::ModelConfig;
 use compot::model::Model;
 use compot::util::json::Json;
@@ -76,6 +84,49 @@ fn main() {
         cfg.name
     );
 
+    // --- planar vs row-sequential unpack, same weights, same run ---
+    // The same model re-encoded row-sequentially decodes through the legacy
+    // scalar unpack; the ratio is the code-planar + SIMD kernel speedup and
+    // is measured within one run, so it gates machine-independently.
+    let kernel = simd::active().name();
+    let rowseq_model = q4.with_quant_layout(QuantLayout::RowSeq);
+    let rowseq_tok_s = decode_tok_s(&rowseq_model, &prompt, gen_len, budget);
+    let layout_parity = rowseq_model.greedy_decode(&prompt, gen_len) == packed_out;
+    let (rows, cols) = if tiny { (64, 256) } else { (256, 1024) };
+    let wsynth = Mat::randn(&mut Rng::new(79), rows, cols, 1.0);
+    let qm = QuantMat::quantize_from_grouped(&wsynth, 4, 128);
+    let qm_rowseq = qm.with_layout(QuantLayout::RowSeq);
+    let x: Vec<f32> = (0..rows).map(|i| ((i * 37 + 11) % 97) as f32 / 97.0 - 0.5).collect();
+    let t_planar = bench(
+        || {
+            std::hint::black_box(qm.apply_row(&x));
+        },
+        budget,
+        500,
+    );
+    let t_rowseq = bench(
+        || {
+            std::hint::black_box(qm_rowseq.apply_row(&x));
+        },
+        budget,
+        500,
+    );
+    let t_i8 = bench(
+        || {
+            std::hint::black_box(qm.apply_row_i8(&x));
+        },
+        budget,
+        500,
+    );
+    let unpack_speedup = t_rowseq.median_s / t_planar.median_s;
+    let i8_speedup = t_planar.median_s / t_i8.median_s;
+    println!(
+        "unpack kernels ({kernel}, {rows}x{cols} @4b g128): planar {unpack_speedup:.2}x over \
+         row-seq | int8 fused {i8_speedup:.2}x over f32 | rowseq decode {rowseq_tok_s:.0} tok/s \
+         | layout parity {}",
+        if layout_parity { "ok" } else { "DIVERGED" }
+    );
+
     // --- Table 7 composition: factorize then 4-bit GPTQ the factors ---
     let plan_t7 = CompressionPlan::parse("compot@0.25+gptq4", &defaults).expect("t7 plan");
     let (t7, report) = plan_t7.run(&model, &calib).expect("t7 run");
@@ -103,7 +154,12 @@ fn main() {
         .set("rtn4_bytes_ratio", ratio.into())
         .set("decode_tok_s_dense", dense_tok_s.into())
         .set("decode_tok_s_rtn4_packed", packed_tok_s.into())
+        .set("decode_tok_s_rtn4_rowseq", rowseq_tok_s.into())
         .set("decode_tok_s_dequant_reference", reference_tok_s.into())
+        .set("simd_kernel", kernel.into())
+        .set("rtn4_unpack_speedup", unpack_speedup.into())
+        .set("rtn4_i8_matvec_speedup", i8_speedup.into())
+        .set("rtn4_layout_parity", Json::Bool(layout_parity))
         .set("rtn4_parity_vs_reference", Json::Bool(parity))
         .set("t7_composed_cr", report.composed_cr.into())
         .set("t7_resident_bytes", t7_bytes.into())
@@ -121,5 +177,6 @@ fn main() {
         "4-bit packed model must be < 0.5x dense resident bytes, got {ratio:.3}"
     );
     assert!(parity, "packed rtn4 decode diverged from the fake-quant f32 reference");
+    assert!(layout_parity, "row-seq re-encode diverged from the planar decode");
     assert!(t7_parity, "packed compot+gptq4 decode diverged from its reference");
 }

@@ -1,0 +1,26 @@
+// Clean fixture: correctly-annotated unsafe in the SIMD kernel allowlist
+// (`linalg/simd/`). Mirrors the runtime-dispatch idiom the real kernels
+// use — a safe public wrapper that checks the CPU feature, private
+// `target_feature` inners. Expects ZERO violations.
+// audit:as(rust/src/linalg/simd/x86.rs)
+
+pub fn axpy(x: f32, src: &[f32], out: &mut [f32]) {
+    if !std::is_x86_feature_detected!("avx2") {
+        return;
+    }
+    // SAFETY: the AVX2 feature was verified on this CPU directly above,
+    // and the inner fn only reads/writes within the passed slices.
+    unsafe { axpy_avx2(x, src, out) }
+}
+
+#[target_feature(enable = "avx2")]
+// SAFETY: callers must verify AVX2 support before calling; slice accesses
+// inside stay in bounds because both loops are clamped to min(len).
+unsafe fn axpy_avx2(x: f32, src: &[f32], out: &mut [f32]) {
+    let n = src.len().min(out.len());
+    let mut j = 0usize;
+    while j < n {
+        out[j] += x * src[j];
+        j += 1;
+    }
+}

@@ -1,0 +1,28 @@
+// Deliberately-violating fixture for L5 on the sparse dictionary module:
+// compress/sparse.rs joined the ctor-lint scope when ColumnSparse grew
+// fallible raw-buffer constructors. Not compiled; scanned as the virtual
+// path below by the --fixtures self-test.
+// audit:as(rust/src/compress/sparse.rs)
+
+pub struct Cols {
+    k: usize,
+    idx: Vec<u32>,
+}
+
+impl Cols {
+    pub fn from_columns(k: usize, idx: Vec<u32>) -> Cols { // audit:expect(L5)
+        Cols { k, idx }
+    }
+
+    pub fn from_checked(k: usize, idx: Vec<u32>) -> Result<Cols, String> {
+        if idx.iter().any(|&i| i as usize >= k) {
+            return Err("index out of range".to_string());
+        }
+        Ok(Cols { k, idx })
+    }
+
+    // audit:allow(ctor): fixture — the caller is the module's own test rig.
+    pub fn from_trusted(k: usize, idx: Vec<u32>) -> Cols {
+        Cols { k, idx }
+    }
+}

@@ -14,15 +14,16 @@
 //! - **L1** — every `unsafe` block/impl/fn needs a `SAFETY:` comment; all
 //!   sites feed the machine-readable unsafe inventory.
 //! - **L2** — `unsafe` is only permitted in the allowlisted modules
-//!   (`linalg/buf.rs`, `linalg/qmat.rs`).
+//!   (`linalg/buf.rs`, `linalg/qmat.rs`, the SIMD kernels under
+//!   `linalg/simd/`, and the worker pool in `util/parallel.rs`).
 //! - **L3** — no `.unwrap()` / `.expect(` / `panic!` / `unreachable!` /
 //!   `todo!` / `unimplemented!` / `[idx]` indexing in the serve request
 //!   path (`serve/`, `model/decode.rs`; indexing in `serve/` only).
 //! - **L4** — `.lock()` results must not be unwrapped in `serve/`; use the
 //!   poison-recovering `serve::lock_recover` helper.
-//! - **L5** — public constructors in `linalg/` that take raw buffers or
-//!   lengths (`Vec<`, `&[`, raw pointers, `WeightBuf`, `Mapping`) must
-//!   return `Result`.
+//! - **L5** — public constructors in `linalg/` and `compress/sparse.rs`
+//!   that take raw buffers or lengths (`Vec<`, `&[`, raw pointers,
+//!   `WeightBuf`, `Mapping`) must return `Result`.
 //!
 //! `#[cfg(test)]` regions are exempt from L3/L4/L5 (tests may panic) but
 //! still feed L1/L2 — unsafe in tests is still unsafe.
@@ -50,17 +51,20 @@ pub fn scope_for(path: &str) -> FileScope {
     let serve = path.contains("src/serve/");
     FileScope {
         unsafe_allowed: path.ends_with("src/linalg/buf.rs")
-            || path.ends_with("src/linalg/qmat.rs"),
+            || path.ends_with("src/linalg/qmat.rs")
+            || path.contains("src/linalg/simd/")
+            || path.ends_with("src/util/parallel.rs"),
         panic_linted: serve || path.ends_with("src/model/decode.rs"),
         index_linted: serve,
         lock_linted: serve,
-        ctor_linted: path.contains("src/linalg/"),
+        ctor_linted: path.contains("src/linalg/") || path.ends_with("src/compress/sparse.rs"),
     }
 }
 
 const HINT_L0: &str = "grammar: `// audit:allow(panic|index|lock|ctor): <reason>`";
 const HINT_L1: &str = "add a `// SAFETY: <invariant>` comment on or directly above the unsafe item";
-const HINT_L2: &str = "move unsafe code into an allowlisted module (linalg/buf.rs, linalg/qmat.rs)";
+const HINT_L2: &str =
+    "move unsafe code into an allowlisted module (linalg/buf.rs, linalg/qmat.rs, linalg/simd/, util/parallel.rs)";
 const HINT_L3_PANIC: &str =
     "return a structured error to the client, or annotate `// audit:allow(panic): <reason>`";
 const HINT_L3_INDEX: &str =
@@ -631,6 +635,44 @@ unsafe { sys::munmap(p, l) };
         let r = scan("rust/src/linalg/buf.rs", src);
         assert!(r.violations.is_empty());
         assert_eq!(r.unsafe_sites[0].kind, "impl");
+    }
+
+    #[test]
+    fn simd_and_worker_pool_modules_are_unsafe_allowlisted() {
+        let src = "\
+// SAFETY: caller verified the cpu feature; pointers are in bounds.
+unsafe fn kernel(p: *const u8) -> u8 {
+    unsafe { *p } // SAFETY: see fn-level contract
+}
+";
+        for path in [
+            "rust/src/linalg/simd/x86.rs",
+            "rust/src/linalg/simd/neon.rs",
+            "rust/src/util/parallel.rs",
+        ] {
+            let r = scan(path, src);
+            assert!(r.violations.is_empty(), "{path}: {:?}", r.violations);
+            assert_eq!(r.unsafe_sites.len(), 2, "{path}");
+        }
+        // the allowlist is per-module, not a blanket grant
+        let r = scan("rust/src/util/rng.rs", src);
+        assert_eq!(rules_of(&r), ["L2", "L2"]);
+    }
+
+    #[test]
+    fn sparse_ctors_are_l5_linted() {
+        let src = "\
+impl S {
+    pub fn from_columns(k: usize, cols: &[Vec<u32>]) -> S {
+        S { k, n: cols.len() }
+    }
+}
+";
+        let r = scan("rust/src/compress/sparse.rs", src);
+        assert_eq!(rules_of(&r), ["L5"]);
+        // the rest of compress/ is still out of L5 scope
+        let r = scan("rust/src/compress/quant.rs", src);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
     }
 
     #[test]

@@ -279,12 +279,14 @@ pub fn ksvd_factorize(
 
         // Track objective ‖W̃ − D·S‖_F directly (no closed form without
         // orthogonality — this asymmetry vs COMPOT is part of the cost).
-        let s_mat = ColumnSparse::from_columns(k, n, s, s_cols.clone());
+        let s_mat = ColumnSparse::from_columns(k, n, s, s_cols.clone())
+            .expect("internal: dictionary S update produced a malformed column list");
         let approx = s_mat.apply_after(&dict);
         err_trace.push(wt.sub(&approx).fro_norm());
     }
 
-    let s_mat = ColumnSparse::from_columns(k, n, s, s_cols);
+    let s_mat = ColumnSparse::from_columns(k, n, s, s_cols)
+        .expect("internal: dictionary S update produced a malformed column list");
     (dict, s_mat, err_trace)
 }
 

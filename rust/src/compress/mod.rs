@@ -133,6 +133,39 @@ impl LinearWeight {
         }
     }
 
+    /// Single-token decode with int8-quantized activations: the packed
+    /// variants run [`QuantMat::apply_row_i8`] (integer inner loop, one
+    /// combined f32 scale per group — a small, bounded activation rounding
+    /// error, see that method), the 16-bit forms stay exact. Opt-in: the
+    /// default decode path remains the exact [`apply_row`](Self::apply_row).
+    pub fn apply_row_i8(&self, x: &[f32]) -> Vec<f32> {
+        match self {
+            LinearWeight::QuantDense(w) => w.apply_row_i8(x),
+            LinearWeight::QuantLowRank { b, c } => c.apply_row_i8(&b.apply_row_i8(x)),
+            LinearWeight::QuantFactorized { a, s } => s.apply_after_row(&a.apply_row_i8(x)),
+            other => other.apply_row(x),
+        }
+    }
+
+    /// Re-encode every packed factor in `layout` (see
+    /// [`QuantMat::with_layout`]); 16-bit forms clone unchanged. Stored
+    /// values are identical either way — only the physical code layout (and
+    /// thus which unpack kernel serves decode) changes.
+    pub fn with_quant_layout(&self, layout: crate::linalg::QuantLayout) -> LinearWeight {
+        match self {
+            LinearWeight::QuantDense(w) => LinearWeight::QuantDense(w.with_layout(layout)),
+            LinearWeight::QuantLowRank { b, c } => LinearWeight::QuantLowRank {
+                b: b.with_layout(layout),
+                c: c.with_layout(layout),
+            },
+            LinearWeight::QuantFactorized { a, s } => LinearWeight::QuantFactorized {
+                a: a.with_layout(layout),
+                s: s.with_layout(layout),
+            },
+            other => other.clone(),
+        }
+    }
+
     /// Materialize the represented Ŵ (tests, error measurement).
     pub fn to_dense(&self) -> Mat {
         match self {
@@ -446,5 +479,53 @@ mod tests {
         assert!(matches!(fake, LinearWeight::Dense(_)));
         assert_eq!(fake.to_dense(), qd.to_dense());
         assert!(qd.is_quantized() && !fake.is_quantized());
+    }
+
+    #[test]
+    fn quant_layout_reencode_and_i8_decode_thread_through_variants() {
+        use crate::linalg::QuantLayout;
+        let mut rng = Rng::new(42);
+        let (m, n, r, k, s) = (24usize, 36usize, 6usize, 12usize, 5usize);
+        let variants = [
+            LinearWeight::QuantDense(QuantMat::quantize_from(&Mat::randn(&mut rng, m, n, 1.0), 4)),
+            LinearWeight::QuantLowRank {
+                b: QuantMat::quantize_from(&Mat::randn(&mut rng, m, r, 1.0), 4),
+                c: QuantMat::quantize_from(&Mat::randn(&mut rng, r, n, 1.0), 4),
+            },
+            LinearWeight::QuantFactorized {
+                a: QuantMat::quantize_from(&Mat::randn(&mut rng, m, k, 1.0), 4),
+                s: QuantColumnSparse::quantize_from(
+                    &ColumnSparse::hard_threshold(&Mat::randn(&mut rng, k, n, 1.0), s),
+                    4,
+                ),
+            },
+            LinearWeight::Dense(Mat::randn(&mut rng, m, n, 1.0)),
+        ];
+        for lw in &variants {
+            let x: Vec<f32> = (0..m).map(|_| rng.gauss32()).collect();
+            // layout re-encode: identical values through every consumer
+            let legacy = lw.with_quant_layout(QuantLayout::RowSeq);
+            assert_eq!(legacy.to_dense(), lw.to_dense(), "{lw:?}");
+            let (a, b) = (lw.apply_row(&x), legacy.apply_row(&x));
+            for j in 0..a.len() {
+                assert!((a[j] - b[j]).abs() == 0.0, "{lw:?} col {j}");
+            }
+            assert_eq!(
+                legacy.with_quant_layout(QuantLayout::Planar).storage_bits(),
+                lw.storage_bits(),
+                "round-trip restores the planar footprint"
+            );
+            // i8 decode: exact on 16-bit forms, close on packed forms
+            let exact = lw.apply_row(&x);
+            let viai8 = lw.apply_row_i8(&x);
+            let scale = exact.iter().fold(0.0f32, |acc, &v| acc.max(v.abs())).max(1.0);
+            for j in 0..exact.len() {
+                if lw.is_quantized() {
+                    assert!((viai8[j] - exact[j]).abs() <= 0.1 * scale, "{lw:?} col {j}");
+                } else {
+                    assert!((viai8[j] - exact[j]).abs() == 0.0, "{lw:?} col {j}");
+                }
+            }
+        }
     }
 }

@@ -229,13 +229,17 @@ pub fn quantize_weight_grouped(
 
     // stored value count, non-value (mask) bits, the packed-alignment slack
     // for the formula cross-check (≤ one extra 16-bit scale per stored
-    // row/column for ragged group tails + one u32 of padding per packed
-    // matrix), and — for the legacy fake-quant representation only — an
-    // exact bit accounting when the flat formula would miscount.
+    // row/column for ragged group tails, plus ≤ 31·bits bits of planar
+    // tail-strip padding per stored row — the code-planar layout word-aligns
+    // each bit-plane strip of a ragged tail group — plus one u32 of padding
+    // per packed matrix for the legacy row-sequential stream), and — for the
+    // legacy fake-quant representation only — an exact bit accounting when
+    // the flat formula would miscount.
+    let row_slack = 16 + 31 * bits as u64;
     let (weight, stored_values, mask_bits, slack_bits, fake_bits) = match &current {
         LinearWeight::Dense(w) => {
             let count = w.rows() * w.cols();
-            let slack = 16 * w.rows() as u64 + 31;
+            let slack = row_slack * w.rows() as u64 + 31;
             let weight = match quantize_mat(w, true) {
                 QFactor::Packed(qm) => LinearWeight::QuantDense(qm),
                 QFactor::Fake(q) => LinearWeight::Dense(q),
@@ -244,7 +248,7 @@ pub fn quantize_weight_grouped(
         }
         LinearWeight::LowRank { b, c } => {
             let count = b.rows() * b.cols() + c.rows() * c.cols();
-            let slack = 16 * (b.rows() + c.rows()) as u64 + 2 * 31;
+            let slack = row_slack * (b.rows() + c.rows()) as u64 + 2 * 31;
             let weight = match (quantize_mat(b, true), quantize_mat(c, false)) {
                 (QFactor::Packed(qb), QFactor::Packed(qc)) => {
                     LinearWeight::QuantLowRank { b: qb, c: qc }
@@ -259,7 +263,7 @@ pub fn quantize_weight_grouped(
         LinearWeight::Factorized { a, s } => {
             let count = a.rows() * a.cols() + s.s() * s.n();
             let mask = (s.k() * s.n()) as u64;
-            let slack = 16 * (a.rows() + s.n()) as u64 + 2 * 31;
+            let slack = row_slack * (a.rows() + s.n()) as u64 + 2 * 31;
             // Groups over the sparse values align to columns either way:
             // one column's outlier cannot poison its neighbors' scales.
             match quantize_mat(a, true) {

@@ -72,22 +72,30 @@ impl ColumnSparse {
     }
 
     /// Build from explicit per-column (index, value) lists (CoSpaDi/OMP).
-    pub fn from_columns(k: usize, n: usize, s: usize, cols: Vec<Vec<(u32, f32)>>) -> ColumnSparse {
-        assert_eq!(cols.len(), n);
+    /// The lists come from numeric solvers, so malformed shapes are errors
+    /// rather than panics (and `compot audit` rule L5 holds this module's
+    /// buffer-consuming constructors to the fallible signature).
+    pub fn from_columns(
+        k: usize,
+        n: usize,
+        s: usize,
+        cols: Vec<Vec<(u32, f32)>>,
+    ) -> anyhow::Result<ColumnSparse> {
+        anyhow::ensure!(cols.len() == n, "got {} columns, want n = {n}", cols.len());
         let mut idx = vec![0u32; n * s];
         let mut val = vec![0f32; n * s];
         for (j, col) in cols.into_iter().enumerate() {
-            assert!(col.len() <= s, "column {j} has more than s nonzeros");
+            anyhow::ensure!(col.len() <= s, "column {j} has more than s = {s} nonzeros");
             let mut col = col;
             col.sort_unstable_by_key(|&(i, _)| i);
             for (t, (i, v)) in col.into_iter().enumerate() {
-                assert!((i as usize) < k);
+                anyhow::ensure!((i as usize) < k, "column {j} index {i} out of range (k={k})");
                 idx[j * s + t] = i;
                 val[j * s + t] = v;
             }
             // remaining slots stay (0, 0.0) — harmless padding
         }
-        ColumnSparse { k, n, s, idx: idx.into(), val: val.into() }
+        Ok(ColumnSparse { k, n, s, idx: idx.into(), val: val.into() })
     }
 
     pub fn k(&self) -> usize {
@@ -320,6 +328,12 @@ impl QuantColumnSparse {
             idx: cs.idx.clone(),
             val: QuantMat::quantize_from_grouped(&vmat, bits, group),
         }
+    }
+
+    /// Re-encode the packed value matrix in `layout` (see
+    /// [`QuantMat::with_layout`]); indices and stored values are unchanged.
+    pub fn with_layout(&self, layout: qmat::QuantLayout) -> QuantColumnSparse {
+        QuantColumnSparse { k: self.k, idx: self.idx.clone(), val: self.val.with_layout(layout) }
     }
 
     /// Fake-quant f32 form — bit-identical values to what the packed apply
@@ -566,12 +580,19 @@ mod tests {
     #[test]
     fn roundtrip_from_columns() {
         let cols = vec![vec![(3u32, 1.5f32), (0, -2.0)], vec![(1, 0.25)]];
-        let cs = ColumnSparse::from_columns(5, 2, 2, cols);
+        let cs = ColumnSparse::from_columns(5, 2, 2, cols).unwrap();
         let d = cs.to_dense();
         assert_eq!(d[(0, 0)], -2.0);
         assert_eq!(d[(3, 0)], 1.5);
         assert_eq!(d[(1, 1)], 0.25);
         assert_eq!(cs.s(), 2);
+        // malformed inputs are errors, not panics: wrong column count,
+        // overfull column, out-of-range row index
+        assert!(ColumnSparse::from_columns(5, 3, 2, vec![vec![]]).is_err());
+        let over = vec![vec![(0u32, 1.0f32), (1, 1.0), (2, 1.0)], vec![]];
+        assert!(ColumnSparse::from_columns(5, 2, 2, over).is_err());
+        let oob = vec![vec![(5u32, 1.0f32)], vec![]];
+        assert!(ColumnSparse::from_columns(5, 2, 2, oob).is_err());
     }
 
     #[test]
@@ -758,11 +779,17 @@ mod tests {
         let z = Mat::zeros(128, 256);
         let cs = ColumnSparse::hard_threshold(&z, 16);
         let qs = QuantColumnSparse::quantize_from(&cs, 4);
-        // 256 columns × 16 values at 4 bits = 16384 bits = 512 words; one
-        // scale per column (16 ≤ 128); mask 128×256.
-        assert_eq!(qs.storage_bits(), 512 * 32 + 256 * 16 + 128 * 256);
-        assert_eq!(qs.resident_bytes(), 512 * 4 + 256 * 2 + 4 * 256 * 16);
+        // 256 columns × 16 values at 4 bits, code-planar: each column is one
+        // ragged tail group whose 4 bit-plane strips word-align to 4 u32s →
+        // 1024 words; one scale per column (16 ≤ 128); mask 128×256.
+        assert_eq!(qs.storage_bits(), 1024 * 32 + 256 * 16 + 128 * 256);
+        assert_eq!(qs.resident_bytes(), 1024 * 4 + 256 * 2 + 4 * 256 * 16);
         assert!(qs.storage_bits() < cs.storage_bits());
+        // the legacy row-sequential re-encode packs the same values into
+        // 512 words and stays value-identical
+        let legacy = qs.with_layout(crate::linalg::QuantLayout::RowSeq);
+        assert_eq!(legacy.storage_bits(), 512 * 32 + 256 * 16 + 128 * 256);
+        assert_eq!(legacy.dequantize(), qs.dequantize());
         // s = 0 degenerates cleanly
         let qs0 = QuantColumnSparse::quantize_from(&ColumnSparse::hard_threshold(&z, 0), 4);
         assert_eq!(qs0.s(), 0);

@@ -14,10 +14,10 @@
 //! compression path, or a zero-copy view into a shared checkpoint
 //! [`buf::Mapping`] on the serve path.
 
-// The one module allowed to hold unsafe code (crate root is
-// deny(unsafe_code)): the mmap/raw-pointer machinery behind WeightBuf.
-// `compot audit` enforces the same allowlist (rule L2) plus SAFETY
-// comments on every site (rule L1).
+// Unsafe-allowlisted modules (crate root is deny(unsafe_code)): the
+// mmap/raw-pointer machinery behind WeightBuf, and the runtime-dispatched
+// AVX2/NEON unpack kernels under `simd/`. `compot audit` enforces the
+// same allowlist (rule L2) plus SAFETY comments on every site (rule L1).
 #[allow(unsafe_code)]
 pub mod buf;
 pub mod cholesky;
@@ -26,6 +26,8 @@ pub mod gemm;
 pub mod matrix;
 pub mod qmat;
 pub mod qr;
+#[allow(unsafe_code)]
+pub mod simd;
 pub mod solve;
 pub mod svd;
 
@@ -34,7 +36,7 @@ pub use cholesky::cholesky;
 pub use eigh::eigh;
 pub use gemm::{matmul, matmul_nt, matmul_tn};
 pub use matrix::Mat;
-pub use qmat::QuantMat;
+pub use qmat::{QuantLayout, QuantMat};
 pub use qr::{complete_basis, qr_thin, random_orthonormal};
 pub use solve::{solve_lower_transpose_left, solve_lower_left};
 pub use svd::{procrustes, svd_thin, Svd};

@@ -9,6 +9,18 @@
 //! value + 16-bit scale per group, Eq. 25) becomes bits that are actually
 //! resident in memory.
 //!
+//! **Physical layouts** ([`QuantLayout`]). The quantizer emits the
+//! group-interleaved code-*planar* layout whenever the group size divides
+//! by 32 (all sweep sizes qualify): per row, per group, `bits` contiguous
+//! bit-plane strips of `⌈len/32⌉` words each, so the SIMD kernels in
+//! [`super::simd`] unpack 32 codes per plane word with pure shift/mask
+//! arithmetic and no straddle branches. The legacy row-*sequential* stream
+//! (value `t` occupies bits `[t·b, (t+1)·b)` of one global word stream)
+//! remains fully supported — pre-planar CPT2 checkpoints load through it
+//! unchanged, and group 16 (not 32-divisible, every plane strip would pad)
+//! stays row-sequential. [`QuantMat::with_layout`] converts between the
+//! two bit-identically.
+//!
 //! Both buffers are [`WeightBuf`]s: owned when the quantizer produced them,
 //! or zero-copy views into a CPT2 checkpoint mapping on the serve path —
 //! the fused kernels read through the same slices either way.
@@ -34,6 +46,7 @@
 use super::buf::WeightBuf;
 use super::gemm::axpy;
 use super::matrix::Mat;
+use super::simd;
 use crate::util::parallel::parallel_chunks_mut;
 
 /// Default values per quantization group (one f16 scale each).
@@ -44,6 +57,62 @@ pub const GROUP: usize = 128;
 /// an untrusted checkpoint header cannot pick a degenerate layout.
 pub fn supported_group(group: usize) -> bool {
     group.is_power_of_two() && (16..=4096).contains(&group)
+}
+
+/// Physical arrangement of the packed code words.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantLayout {
+    /// Legacy row-sequential stream (pre-planar checkpoints, group 16):
+    /// value `t` of the row-major code stream occupies bits
+    /// `[t·b, (t+1)·b)` of one global u32 stream, with words shared across
+    /// rows and groups (so codes can straddle word boundaries).
+    RowSeq,
+    /// Group-interleaved code-planar — the default whenever the group size
+    /// divides by 32: per row, per group, `bits` contiguous bit-plane
+    /// strips of `⌈len/32⌉` words; value `j`'s code bit `p` sits at bit
+    /// `j mod 32` of strip word `p·⌈len/32⌉ + j/32`. This is the layout
+    /// the [`super::simd`] kernels consume.
+    Planar,
+}
+
+impl QuantLayout {
+    /// Stable tag written into CPT2 per-tensor headers.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            QuantLayout::RowSeq => "row_seq",
+            QuantLayout::Planar => "planar",
+        }
+    }
+
+    /// Parse a CPT2 header tag; `None` for unknown layouts.
+    pub fn parse(s: &str) -> Option<QuantLayout> {
+        match s {
+            "row_seq" => Some(QuantLayout::RowSeq),
+            "planar" => Some(QuantLayout::Planar),
+            _ => None,
+        }
+    }
+
+    /// Whether this layout can represent matrices at this group size.
+    /// Planar requires a 32-divisible group so full groups never pad
+    /// (only a ragged tail group pads, ≤ 31·bits bits per row).
+    pub fn supports_group(self, group: usize) -> bool {
+        match self {
+            QuantLayout::RowSeq => true,
+            QuantLayout::Planar => group % 32 == 0,
+        }
+    }
+}
+
+/// The layout the quantizer emits for a group size: planar when the SIMD
+/// kernels can consume it without per-group padding, else the legacy
+/// stream.
+pub fn default_layout(group: usize) -> QuantLayout {
+    if QuantLayout::Planar.supports_group(group) {
+        QuantLayout::Planar
+    } else {
+        QuantLayout::RowSeq
+    }
 }
 
 /// Largest positive quantization level for b-bit symmetric quantization.
@@ -208,15 +277,15 @@ pub fn fake_quantize_group(vals: &mut [f32], bits: u32) {
 // ---------------------------------------------------------------------------
 
 /// A b-bit (2..=8) packed quantized matrix: offset-binary codes bit-packed
-/// into `u32` words (value `t` of the row-major stream occupies bits
-/// `[t·b, (t+1)·b)`), plus one f16 scale per per-row group of `group`
-/// values (default [`GROUP`]).
+/// into `u32` words under a [`QuantLayout`], plus one f16 scale per
+/// per-row group of `group` values (default [`GROUP`]).
 #[derive(Clone, PartialEq)]
 pub struct QuantMat {
     rows: usize,
     cols: usize,
     bits: u32,
     group: usize,
+    layout: QuantLayout,
     packed: WeightBuf<u32>,
     scales: WeightBuf<u16>,
 }
@@ -225,8 +294,12 @@ impl std::fmt::Debug for QuantMat {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "QuantMat({}x{} @ {} bits, g{})",
-            self.rows, self.cols, self.bits, self.group
+            "QuantMat({}x{} @ {} bits, g{}, {})",
+            self.rows,
+            self.cols,
+            self.bits,
+            self.group,
+            self.layout.as_str()
         )
     }
 }
@@ -246,6 +319,50 @@ fn pack_codes(codes: &[u16], bits: u32) -> Vec<u32> {
         bit += bits as usize;
     }
     words
+}
+
+/// Packed words one row occupies in the planar layout: each full group
+/// takes `bits·group/32` words (the group size is 32-divisible whenever
+/// planar is chosen), and a ragged tail group pads each of its `bits`
+/// plane strips to a whole word — ≤ 31·bits padding bits per row.
+fn planar_row_words(cols: usize, bits: u32, group: usize) -> usize {
+    let fg = cols / group;
+    let tail = cols % group;
+    let mut words = fg * bits as usize * group.div_ceil(32);
+    if tail > 0 {
+        words += bits as usize * tail.div_ceil(32);
+    }
+    words
+}
+
+/// Pack row-major codes into the group-interleaved planar layout (see
+/// [`QuantLayout::Planar`] for the bit addressing).
+fn pack_codes_planar(codes: &[u16], rows: usize, cols: usize, bits: u32, group: usize) -> Vec<u32> {
+    let rw = planar_row_words(cols, bits, group);
+    let mut words = vec![0u32; rows * rw];
+    let bits = bits as usize;
+    for i in 0..rows {
+        let mut base = i * rw;
+        for g0 in (0..cols).step_by(group) {
+            let len = (g0 + group).min(cols) - g0;
+            let wpp = len.div_ceil(32);
+            for (j, &c) in codes[i * cols + g0..i * cols + g0 + len].iter().enumerate() {
+                let (word, bit) = (j >> 5, j & 31);
+                for p in 0..bits {
+                    words[base + p * wpp + word] |= (((c as u32) >> p) & 1) << bit;
+                }
+            }
+            base += bits * wpp;
+        }
+    }
+    words
+}
+
+/// Resolve an explicitly requested kernel, panicking with a clear message
+/// when this host cannot run it (parity-suite entry points only).
+fn require_kernel(kernel: simd::Kernel) -> simd::GroupKernels {
+    simd::kernels_for(kernel)
+        .unwrap_or_else(|| panic!("kernel {} unavailable on this host", kernel.name()))
 }
 
 impl QuantMat {
@@ -327,12 +444,18 @@ impl QuantMat {
         );
         let max_code = (1u32 << bits) - 1;
         debug_assert!(codes.iter().all(|&c| (c as u32) < max_code), "code out of b-bit range");
+        let layout = default_layout(group);
+        let packed = match layout {
+            QuantLayout::RowSeq => pack_codes(codes, bits),
+            QuantLayout::Planar => pack_codes_planar(codes, rows, cols, bits, group),
+        };
         Ok(QuantMat {
             rows,
             cols,
             bits,
             group,
-            packed: pack_codes(codes, bits).into(),
+            layout,
+            packed: packed.into(),
             scales: scales.into(),
         })
     }
@@ -360,28 +483,122 @@ impl QuantMat {
         self.group
     }
 
-    /// Unpack one code (tests; the kernels inline the unpacking with the
-    /// buffer slices hoisted out of the loop).
-    #[cfg(test)]
-    fn code_at(&self, t: usize) -> u32 {
+    /// Physical layout of the packed code words.
+    pub fn layout(&self) -> QuantLayout {
+        self.layout
+    }
+
+    /// Extract the code of value `(i, j)` straight from the packed words —
+    /// layout-aware, one value at a time (conversion and test paths; the
+    /// kernels unpack whole blocks).
+    fn extract_code(&self, i: usize, j: usize) -> u32 {
         let packed = self.packed.as_slice();
         let bits = self.bits as usize;
-        let bit = t * bits;
-        let w = bit >> 5;
-        let off = bit & 31;
         let mask = (1u32 << bits) - 1;
-        let mut v = packed[w] >> off;
-        if off + bits > 32 {
-            v |= packed[w + 1] << (32 - off);
+        match self.layout {
+            QuantLayout::RowSeq => {
+                let bit = (i * self.cols + j) * bits;
+                let w = bit >> 5;
+                let off = bit & 31;
+                let mut v = packed[w] >> off;
+                if off + bits > 32 {
+                    v |= packed[w + 1] << (32 - off);
+                }
+                v & mask
+            }
+            QuantLayout::Planar => {
+                let g = j / self.group;
+                let g0 = g * self.group;
+                let len = (g0 + self.group).min(self.cols) - g0;
+                let wpp = len.div_ceil(32);
+                let jj = j - g0;
+                // groups before g are all full, so their strips have the
+                // full-group width
+                let base = i * planar_row_words(self.cols, self.bits, self.group)
+                    + g * bits * self.group.div_ceil(32);
+                let mut c = 0u32;
+                for p in 0..bits {
+                    c |= ((packed[base + p * wpp + (jj >> 5)] >> (jj & 31)) & 1) << p;
+                }
+                c & mask
+            }
         }
-        v & mask
+    }
+
+    /// All codes in row-major logical order (layout-independent) — the
+    /// re-layout path and GPTQ-style consumers that want plain codes.
+    fn codes_vec(&self) -> Vec<u16> {
+        let mut v = Vec::with_capacity(self.rows * self.cols);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                v.push(self.extract_code(i, j) as u16);
+            }
+        }
+        v
+    }
+
+    /// Same matrix under another layout. Codes and scales are
+    /// bit-identical, so every dequant/apply result is unchanged; only the
+    /// physical word arrangement (and hence `storage_bits`) may differ.
+    /// Requesting `Planar` with a group the layout cannot represent
+    /// (group 16) keeps the matrix row-sequential.
+    pub fn with_layout(&self, layout: QuantLayout) -> QuantMat {
+        let layout = if layout.supports_group(self.group) { layout } else { QuantLayout::RowSeq };
+        if layout == self.layout {
+            return self.clone();
+        }
+        let codes = self.codes_vec();
+        let packed = match layout {
+            QuantLayout::RowSeq => pack_codes(&codes, self.bits),
+            QuantLayout::Planar => {
+                pack_codes_planar(&codes, self.rows, self.cols, self.bits, self.group)
+            }
+        };
+        QuantMat {
+            rows: self.rows,
+            cols: self.cols,
+            bits: self.bits,
+            group: self.group,
+            layout,
+            packed: packed.into(),
+            scales: self.scales.as_slice().to_vec().into(),
+        }
+    }
+
+    /// Unpack one code by flat row-major index (tests).
+    #[cfg(test)]
+    fn code_at(&self, t: usize) -> u32 {
+        self.extract_code(t / self.cols, t % self.cols)
     }
 
     /// Dequantize row `i` into `out` (len == cols). The buffer slices are
     /// hoisted once per call so the inner loop is identical for owned and
-    /// mapped storage.
+    /// mapped storage; planar rows go through the runtime-dispatched
+    /// [`simd`] kernels, legacy rows through the sequential unpack.
     pub fn dequant_row_into(&self, i: usize, out: &mut [f32]) {
         assert_eq!(out.len(), self.cols, "dequant_row_into: width");
+        match self.layout {
+            QuantLayout::RowSeq => self.dequant_row_rowseq(i, out),
+            QuantLayout::Planar => self.dequant_row_planar(i, out, &simd::kernels()),
+        }
+    }
+
+    /// [`dequant_row_into`](Self::dequant_row_into) on an explicitly chosen
+    /// kernel — the cross-arch parity suite's entry point. The legacy
+    /// layout has no vector path, so the choice only affects planar
+    /// matrices. Panics if the kernel is unavailable on this host; gate on
+    /// [`simd::available`].
+    pub fn dequant_row_into_with(&self, i: usize, out: &mut [f32], kernel: simd::Kernel) {
+        assert_eq!(out.len(), self.cols, "dequant_row_into: width");
+        match self.layout {
+            QuantLayout::RowSeq => self.dequant_row_rowseq(i, out),
+            QuantLayout::Planar => self.dequant_row_planar(i, out, &require_kernel(kernel)),
+        }
+    }
+
+    /// Legacy row-sequential unpack — kept verbatim so pre-planar
+    /// checkpoints decode exactly as before.
+    fn dequant_row_rowseq(&self, i: usize, out: &mut [f32]) {
         let packed = self.packed.as_slice();
         let scales = self.scales.as_slice();
         let group = self.group;
@@ -402,6 +619,22 @@ impl QuantMat {
                 }
                 *o = ((v & mask) as i32 - iqmax) as f32 * scale;
             }
+        }
+    }
+
+    /// Planar unpack of row `i`: one kernel call per group block.
+    fn dequant_row_planar(&self, i: usize, out: &mut [f32], k: &simd::GroupKernels) {
+        let packed = self.packed.as_slice();
+        let scales = self.scales.as_slice();
+        let gpr = self.cols.div_ceil(self.group);
+        let bits = self.bits as usize;
+        let rw = planar_row_words(self.cols, self.bits, self.group);
+        let mut base = i * rw;
+        for (g, chunk) in out.chunks_mut(self.group).enumerate() {
+            let scale = f16_decode(scales[i * gpr + g]);
+            let blk = bits * chunk.len().div_ceil(32);
+            (k.dequant)(&packed[base..base + blk], self.bits, scale, chunk);
+            base += blk;
         }
     }
 
@@ -472,20 +705,156 @@ impl QuantMat {
     /// Per-token fused-dequant matvec `y = x·W` for one activation row —
     /// the packed-native decode kernel. Mirrors
     /// [`gemm::matvec_row`](super::gemm::matvec_row), so it is bit-identical
-    /// to `matvec_row(x, &self.dequantize())`.
+    /// to `matvec_row(x, &self.dequantize())`. On the planar layout the
+    /// unpack is fused into the accumulation (no materialized weight row);
+    /// the per-element float op sequence is unchanged, so the result is
+    /// also bit-identical to the legacy row-sequential path.
     pub fn apply_row(&self, x: &[f32]) -> Vec<f32> {
         assert_eq!(x.len(), self.rows, "QuantMat::apply_row: inner dim");
         let mut out = vec![0.0f32; self.cols];
         if self.cols == 0 {
             return out;
         }
+        match self.layout {
+            QuantLayout::RowSeq => self.apply_row_rowseq(x, &mut out),
+            QuantLayout::Planar => self.apply_row_planar(x, &mut out, &simd::kernels()),
+        }
+        out
+    }
+
+    /// [`apply_row`](Self::apply_row) on an explicitly chosen kernel — the
+    /// cross-arch parity suite's entry point. Panics if the kernel is
+    /// unavailable on this host; gate on [`simd::available`].
+    pub fn apply_row_with(&self, x: &[f32], kernel: simd::Kernel) -> Vec<f32> {
+        assert_eq!(x.len(), self.rows, "QuantMat::apply_row: inner dim");
+        let mut out = vec![0.0f32; self.cols];
+        if self.cols == 0 {
+            return out;
+        }
+        match self.layout {
+            QuantLayout::RowSeq => self.apply_row_rowseq(x, &mut out),
+            QuantLayout::Planar => self.apply_row_planar(x, &mut out, &require_kernel(kernel)),
+        }
+        out
+    }
+
+    /// Legacy matvec: dequantize each contributing weight row into a
+    /// scratch buffer, then axpy — exactly the pre-planar kernel.
+    fn apply_row_rowseq(&self, x: &[f32], out: &mut [f32]) {
         let mut wrow = vec![0.0f32; self.cols];
         for (kk, &xi) in x.iter().enumerate() {
             if xi == 0.0 {
                 continue;
             }
-            self.dequant_row_into(kk, &mut wrow);
-            axpy(xi, &wrow, &mut out);
+            self.dequant_row_rowseq(kk, &mut wrow);
+            axpy(xi, &wrow, out);
+        }
+    }
+
+    /// Planar fused matvec: per contributing weight row, one `axpy` kernel
+    /// call per group block, straight from the plane strips.
+    fn apply_row_planar(&self, x: &[f32], out: &mut [f32], k: &simd::GroupKernels) {
+        let packed = self.packed.as_slice();
+        let scales = self.scales.as_slice();
+        let gpr = self.cols.div_ceil(self.group);
+        let bits = self.bits as usize;
+        let rw = planar_row_words(self.cols, self.bits, self.group);
+        for (kk, &xi) in x.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let mut base = kk * rw;
+            for (g, chunk) in out.chunks_mut(self.group).enumerate() {
+                let scale = f16_decode(scales[kk * gpr + g]);
+                let blk = bits * chunk.len().div_ceil(32);
+                (k.axpy)(&packed[base..base + blk], self.bits, scale, xi, chunk);
+                base += blk;
+            }
+        }
+    }
+
+    /// Integer-dominated opt-in matvec: the activation row is quantized to
+    /// int8 once (`sx = amax/127`, `qx = round(x/sx)` clamped to ±127),
+    /// then each (weight row, group) contributes
+    /// `out[j] += ((code_j − qmax)·qx) as f32 · (sx·scale_g)` — the code
+    /// products are exact in i32 and f32 is touched only at the per-group
+    /// combined-scale multiply. Deterministic and bit-identical across
+    /// kernels, but intentionally *different* from [`apply_row`]
+    /// (activation quantization error ≤ sx/2 per input): the parity-gated
+    /// decode default stays on the exact path, callers opt in.
+    ///
+    /// [`apply_row`]: Self::apply_row
+    pub fn apply_row_i8(&self, x: &[f32]) -> Vec<f32> {
+        self.apply_row_i8_with(x, simd::active())
+    }
+
+    /// [`apply_row_i8`](Self::apply_row_i8) on an explicitly chosen kernel
+    /// (parity suite). Panics if the kernel is unavailable on this host.
+    pub fn apply_row_i8_with(&self, x: &[f32], kernel: simd::Kernel) -> Vec<f32> {
+        assert_eq!(x.len(), self.rows, "QuantMat::apply_row_i8: inner dim");
+        let mut out = vec![0.0f32; self.cols];
+        if self.cols == 0 || self.rows == 0 {
+            return out;
+        }
+        let amax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        if amax == 0.0 {
+            return out;
+        }
+        if !amax.is_finite() {
+            // A non-finite activation row has no meaningful int8 grid —
+            // fall back to the exact path rather than poisoning it.
+            return self.apply_row(x);
+        }
+        let sx = amax / 127.0;
+        let scales = self.scales.as_slice();
+        let gpr = self.cols.div_ceil(self.group);
+        let bits = self.bits as usize;
+        match self.layout {
+            QuantLayout::Planar => {
+                let k = require_kernel(kernel);
+                let packed = self.packed.as_slice();
+                let rw = planar_row_words(self.cols, self.bits, self.group);
+                for (kk, &xi) in x.iter().enumerate() {
+                    let qx = (xi / sx).round().clamp(-127.0, 127.0) as i32;
+                    if qx == 0 {
+                        continue;
+                    }
+                    let mut base = kk * rw;
+                    for (g, chunk) in out.chunks_mut(self.group).enumerate() {
+                        let cs = sx * f16_decode(scales[kk * gpr + g]);
+                        let blk = bits * chunk.len().div_ceil(32);
+                        (k.axpy_i8)(&packed[base..base + blk], self.bits, cs, qx, chunk);
+                        base += blk;
+                    }
+                }
+            }
+            QuantLayout::RowSeq => {
+                // Legacy layout: same arithmetic straight off the stream
+                // (kernel choice is irrelevant — there is no vector path).
+                let packed = self.packed.as_slice();
+                let mask = (1u32 << bits) - 1;
+                let iqmax = qmax(self.bits) as i32;
+                for (kk, &xi) in x.iter().enumerate() {
+                    let qx = (xi / sx).round().clamp(-127.0, 127.0) as i32;
+                    if qx == 0 {
+                        continue;
+                    }
+                    for (g, chunk) in out.chunks_mut(self.group).enumerate() {
+                        let cs = sx * f16_decode(scales[kk * gpr + g]);
+                        let base = kk * self.cols + g * self.group;
+                        for (t, o) in chunk.iter_mut().enumerate() {
+                            let bit = (base + t) * bits;
+                            let w = bit >> 5;
+                            let off = bit & 31;
+                            let mut v = packed[w] >> off;
+                            if off + bits > 32 {
+                                v |= packed[w + 1] << (32 - off);
+                            }
+                            *o += (((v & mask) as i32 - iqmax) * qx) as f32 * cs;
+                        }
+                    }
+                }
+            }
         }
         out
     }
@@ -511,13 +880,42 @@ impl QuantMat {
         self.scales.as_slice()
     }
 
-    /// Packed-word count a `rows×cols` matrix at `bits` occupies, or `None`
-    /// on arithmetic overflow (untrusted header shapes).
+    /// Packed-word count a `rows×cols` matrix at `bits` occupies in the
+    /// legacy row-sequential stream, or `None` on arithmetic overflow
+    /// (untrusted header shapes).
     pub fn packed_len(rows: usize, cols: usize, bits: u32) -> Option<usize> {
         let total_bits = (rows as u64)
             .checked_mul(cols as u64)?
             .checked_mul(bits as u64)?;
         usize::try_from(total_bits.div_ceil(32)).ok()
+    }
+
+    /// Packed-word count for a shape under an explicit layout, or `None`
+    /// on overflow or a group the layout cannot represent.
+    pub fn packed_len_layout(
+        rows: usize,
+        cols: usize,
+        bits: u32,
+        group: usize,
+        layout: QuantLayout,
+    ) -> Option<usize> {
+        match layout {
+            QuantLayout::RowSeq => Self::packed_len(rows, cols, bits),
+            QuantLayout::Planar => {
+                if group == 0 || !layout.supports_group(group) {
+                    return None;
+                }
+                let fg = (cols / group) as u64;
+                let tail = (cols % group) as u64;
+                let mut row_words = fg
+                    .checked_mul(bits as u64)?
+                    .checked_mul((group as u64).div_ceil(32))?;
+                if tail > 0 {
+                    row_words = row_words.checked_add(bits as u64 * tail.div_ceil(32))?;
+                }
+                usize::try_from((rows as u64).checked_mul(row_words)?).ok()
+            }
+        }
     }
 
     /// Scale count of a `rows×cols` matrix at the default [`GROUP`], or
@@ -537,12 +935,15 @@ impl QuantMat {
 
     /// Reassemble from raw checkpoint buffers — owned vectors or zero-copy
     /// mapped views alike. Validates everything and returns errors: the
-    /// buffers come from disk, not from our own quantizer.
+    /// buffers come from disk, not from our own quantizer. The layout
+    /// comes from the checkpoint's per-tensor tag (absent tags mean the
+    /// legacy row-sequential stream).
     pub fn from_raw_parts(
         rows: usize,
         cols: usize,
         bits: u32,
         group: usize,
+        layout: QuantLayout,
         packed: impl Into<WeightBuf<u32>>,
         scales: impl Into<WeightBuf<u16>>,
     ) -> anyhow::Result<QuantMat> {
@@ -555,12 +956,18 @@ impl QuantMat {
             supported_group(group),
             "quantized tensor group size {group} unsupported (power of two in 16..=4096)"
         );
-        let want_packed = Self::packed_len(rows, cols, bits)
+        anyhow::ensure!(
+            layout.supports_group(group),
+            "quantized tensor layout {} cannot represent group size {group}",
+            layout.as_str()
+        );
+        let want_packed = Self::packed_len_layout(rows, cols, bits, group, layout)
             .ok_or_else(|| anyhow::anyhow!("quantized tensor {rows}x{cols} overflows"))?;
         anyhow::ensure!(
             packed.len() == want_packed,
-            "packed word count {} does not match {rows}x{cols} @ {bits} bits (want {want_packed})",
-            packed.len()
+            "packed word count {} does not match {rows}x{cols} @ {bits} bits {} (want {want_packed})",
+            packed.len(),
+            layout.as_str()
         );
         let want_scales = Self::scales_len_grouped(rows, cols, group)
             .ok_or_else(|| anyhow::anyhow!("quantized tensor {rows}x{cols} overflows"))?;
@@ -569,7 +976,7 @@ impl QuantMat {
             "scale count {} does not match {rows}x{cols} at group {group} (want {want_scales})",
             scales.len()
         );
-        Ok(QuantMat { rows, cols, bits, group, packed, scales })
+        Ok(QuantMat { rows, cols, bits, group, layout, packed, scales })
     }
 
     /// Total byte footprint of the packed buffers (owned or mapped).
@@ -803,18 +1210,29 @@ mod tests {
 
     #[test]
     fn storage_is_measured_from_buffers() {
-        // 16×200 at 4 bits: 3200 value bits → 100 words, per-row groups
-        // ⌈200/128⌉ = 2 per row → 32 scales.
+        // 16×200 at 4 bits, group 128, planar: per row one full group of
+        // 128 (4 strips × 4 words = 16 words) plus a tail of 72 (4 strips
+        // × ⌈72/32⌉ = 12 words) → 28 words/row, 448 total; ⌈200/128⌉ = 2
+        // groups per row → 32 scales.
         let w = Mat::zeros(16, 200);
         let qm = QuantMat::quantize_from(&w, 4);
-        assert_eq!(qm.storage_bits(), 100 * 32 + 32 * 16);
-        assert_eq!(qm.packed_bytes(), 400 + 64);
+        assert_eq!(qm.layout(), QuantLayout::Planar);
+        assert_eq!(qm.storage_bits(), 448 * 32 + 32 * 16);
+        assert_eq!(qm.packed_bytes(), 448 * 4 + 64);
+        // the legacy stream packs the same codes into ⌈16·200·4/32⌉ = 400
+        // words — planar pays ≤ 31·bits padding bits per row for the
+        // word-aligned strips
+        let legacy = qm.with_layout(QuantLayout::RowSeq);
+        assert_eq!(legacy.storage_bits(), 400 * 32 + 32 * 16);
+        assert!(qm.storage_bits() - legacy.storage_bits() <= 16 * 31 * 4);
         // measured ≥ the flat Eq.-25 formula
         let formula = (16 * 200 * 4) as u64 + ((16 * 200usize).div_ceil(GROUP) as u64) * 16;
-        assert!(qm.storage_bits() >= formula);
-        // 3 bits on a ragged row: 11·3 = 33 bits pad to 2 words, 1 scale
+        assert!(legacy.storage_bits() >= formula);
+        // 3 bits on a ragged row, planar: 3 strips of 1 word, 1 scale
         let qm3 = QuantMat::quantize_from(&Mat::zeros(1, 11), 3);
-        assert_eq!(qm3.storage_bits(), 2 * 32 + 16);
+        assert_eq!(qm3.storage_bits(), 3 * 32 + 16);
+        // same codes in the legacy stream: 11·3 = 33 bits pad to 2 words
+        assert_eq!(qm3.with_layout(QuantLayout::RowSeq).storage_bits(), 2 * 32 + 16);
     }
 
     #[test]
@@ -828,22 +1246,44 @@ mod tests {
                 qm.cols(),
                 qm.bits(),
                 qm.group(),
+                qm.layout(),
                 qm.packed_words().to_vec(),
                 qm.scale_bits().to_vec(),
             )
             .unwrap();
             assert_eq!(back, qm, "bits {bits}");
+            // the legacy layout round-trips through raw parts too
+            let legacy = qm.with_layout(QuantLayout::RowSeq);
+            let back = QuantMat::from_raw_parts(
+                legacy.rows(),
+                legacy.cols(),
+                legacy.bits(),
+                legacy.group(),
+                legacy.layout(),
+                legacy.packed_words().to_vec(),
+                legacy.scale_bits().to_vec(),
+            )
+            .unwrap();
+            assert_eq!(back, legacy, "bits {bits} legacy");
         }
-        // validation: wrong widths / lengths / groups are errors, not panics
+        // validation: wrong widths / lengths / groups / layouts are
+        // errors, not panics
         let qm = QuantMat::quantize_from(&Mat::zeros(2, 3), 4);
+        let lay = qm.layout();
         let (p, s) = (qm.packed_words().to_vec(), qm.scale_bits().to_vec());
-        assert!(QuantMat::from_raw_parts(2, 3, 1, GROUP, p.clone(), s.clone()).is_err());
-        assert!(QuantMat::from_raw_parts(2, 3, 9, GROUP, p.clone(), s.clone()).is_err());
-        assert!(QuantMat::from_raw_parts(2, 3, 4, 0, p.clone(), s.clone()).is_err());
-        assert!(QuantMat::from_raw_parts(2, 3, 4, 100, p.clone(), s.clone()).is_err());
-        assert!(QuantMat::from_raw_parts(2, 3, 4, GROUP, vec![], s.clone()).is_err());
-        assert!(QuantMat::from_raw_parts(2, 3, 4, GROUP, p.clone(), vec![0; 5]).is_err());
-        assert!(QuantMat::from_raw_parts(usize::MAX, usize::MAX, 8, GROUP, p, s).is_err());
+        assert!(QuantMat::from_raw_parts(2, 3, 1, GROUP, lay, p.clone(), s.clone()).is_err());
+        assert!(QuantMat::from_raw_parts(2, 3, 9, GROUP, lay, p.clone(), s.clone()).is_err());
+        assert!(QuantMat::from_raw_parts(2, 3, 4, 0, lay, p.clone(), s.clone()).is_err());
+        assert!(QuantMat::from_raw_parts(2, 3, 4, 100, lay, p.clone(), s.clone()).is_err());
+        assert!(QuantMat::from_raw_parts(2, 3, 4, GROUP, lay, vec![], s.clone()).is_err());
+        assert!(QuantMat::from_raw_parts(2, 3, 4, GROUP, lay, p.clone(), vec![0; 5]).is_err());
+        // planar cannot represent group 16 (strips would pad every group)
+        let pl = QuantLayout::Planar;
+        assert!(QuantMat::from_raw_parts(2, 3, 4, 16, pl, p.clone(), s.clone()).is_err());
+        // a legacy-sized buffer does not satisfy the planar word count
+        assert!(QuantMat::from_raw_parts(2, 3, 4, GROUP, QuantLayout::RowSeq, p.clone(), s.clone())
+            .is_err());
+        assert!(QuantMat::from_raw_parts(usize::MAX, usize::MAX, 8, GROUP, lay, p, s).is_err());
     }
 
     #[test]
@@ -886,6 +1326,148 @@ mod tests {
             QuantMat::quantize_from_grouped(&w, 4, 64),
             QuantMat::quantize_from_grouped(&w, 4, 128)
         );
+    }
+
+    #[test]
+    fn planar_and_legacy_layouts_agree_bitwise() {
+        let mut rng = Rng::new(98);
+        for &(bits, group) in &[(3u32, 64usize), (4, 128), (5, 256)] {
+            let w = Mat::randn(&mut rng, 6, group * 2 + 17, 0.5);
+            let qm = QuantMat::quantize_from_grouped(&w, bits, group);
+            assert_eq!(qm.layout(), QuantLayout::Planar);
+            let legacy = qm.with_layout(QuantLayout::RowSeq);
+            assert_eq!(legacy.layout(), QuantLayout::RowSeq);
+            // identical values through every consumer
+            let (dq, dl) = (qm.dequantize(), legacy.dequantize());
+            for i in 0..dq.rows() {
+                for j in 0..dq.cols() {
+                    assert_eq!(dq[(i, j)].to_bits(), dl[(i, j)].to_bits(), "({i},{j})");
+                }
+            }
+            let x: Vec<f32> = (0..6).map(|_| rng.gauss32()).collect();
+            let (rq, rl) = (qm.apply_row(&x), legacy.apply_row(&x));
+            for j in 0..rq.len() {
+                assert_eq!(rq[j].to_bits(), rl[j].to_bits(), "col {j}");
+            }
+            // converting back restores the exact planar words
+            assert_eq!(legacy.with_layout(QuantLayout::Planar), qm);
+        }
+        // group 16 cannot go planar: the quantizer emits the legacy stream
+        // and a planar request is a no-op
+        let w = Mat::randn(&mut rng, 2, 40, 0.5);
+        let q16 = QuantMat::quantize_from_grouped(&w, 4, 16);
+        assert_eq!(q16.layout(), QuantLayout::RowSeq);
+        assert_eq!(q16.with_layout(QuantLayout::Planar).layout(), QuantLayout::RowSeq);
+    }
+
+    /// Mapped clone of a QuantMat: serialize the raw buffers into an
+    /// in-memory Mapping and reassemble as zero-copy views, like a CPT2
+    /// load does.
+    fn mapped_clone(qm: &QuantMat) -> QuantMat {
+        use crate::linalg::buf::Mapping;
+        let mut bytes: Vec<u8> = Vec::new();
+        for w in qm.packed_words() {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        while bytes.len() % 64 != 0 {
+            bytes.push(0);
+        }
+        let soff = bytes.len();
+        for s in qm.scale_bits() {
+            bytes.extend_from_slice(&s.to_le_bytes());
+        }
+        let map = Mapping::from_bytes(&bytes).unwrap();
+        let packed = WeightBuf::<u32>::view(&map, 0, qm.packed_words().len()).unwrap();
+        let scales = WeightBuf::<u16>::view(&map, soff, qm.scale_bits().len()).unwrap();
+        QuantMat::from_raw_parts(
+            qm.rows(),
+            qm.cols(),
+            qm.bits(),
+            qm.group(),
+            qm.layout(),
+            packed,
+            scales,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn kernel_parity_matrix_exhaustive() {
+        // bits 2..=8 × groups {64,128,256} × ragged/exact widths ×
+        // owned/mapped × every kernel this host can run: dequant,
+        // apply_row, and apply_row_i8 must be bit-identical across
+        // kernels, layouts, and storage backings. The reference is the
+        // legacy row-sequential path, so this suite transitively gates the
+        // vector kernels with the pre-planar semantics.
+        let mut rng = Rng::new(99);
+        let kernels = simd::available();
+        for bits in 2u32..=8 {
+            for &group in &[64usize, 128, 256] {
+                for cols in [group / 2 + 3, group, 2 * group + 17] {
+                    let rows = 5;
+                    let w = Mat::randn(&mut rng, rows, cols, 0.5);
+                    let qm = QuantMat::quantize_from_grouped(&w, bits, group);
+                    let legacy = qm.with_layout(QuantLayout::RowSeq);
+                    let mapped = mapped_clone(&qm);
+                    assert!(mapped.is_mapped());
+                    let x: Vec<f32> = (0..rows).map(|_| rng.gauss32()).collect();
+                    let want_row = legacy.apply_row(&x);
+                    let mut want_deq = vec![0.0f32; cols];
+                    legacy.dequant_row_into(1, &mut want_deq);
+                    let want_i8 = legacy.apply_row_i8(&x);
+                    for &k in &kernels {
+                        let ctx = format!("b{bits} g{group} c{cols} {}", k.name());
+                        for m in [&qm, &mapped] {
+                            let row = m.apply_row_with(&x, k);
+                            let mut deq = vec![0.0f32; cols];
+                            m.dequant_row_into_with(1, &mut deq, k);
+                            let i8v = m.apply_row_i8_with(&x, k);
+                            for j in 0..cols {
+                                let (a, b) = (row[j].to_bits(), want_row[j].to_bits());
+                                assert_eq!(a, b, "row {ctx} j{j}");
+                                let (a, b) = (deq[j].to_bits(), want_deq[j].to_bits());
+                                assert_eq!(a, b, "deq {ctx} j{j}");
+                                let (a, b) = (i8v[j].to_bits(), want_i8[j].to_bits());
+                                assert_eq!(a, b, "i8 {ctx} j{j}");
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn apply_row_i8_error_is_bounded_by_activation_grid() {
+        // int8 activation quantization perturbs each input by ≤ sx/2, so
+        // the result must stay within Σ_kk |ŵ_kj|·sx/2 of the exact
+        // matvec (1% slack for the f32-rounded combined scale and the
+        // accumulation order, tiny absolute floor for all-zero columns).
+        let mut rng = Rng::new(100);
+        for _ in 0..5 {
+            let (m, n) = (rng.range(2, 40), rng.range(2, 200));
+            let w = Mat::randn(&mut rng, m, n, 0.5);
+            let qm = QuantMat::quantize_from(&w, 4);
+            let deq = qm.dequantize();
+            let x: Vec<f32> = (0..m).map(|_| rng.gauss32()).collect();
+            let exact = qm.apply_row(&x);
+            let viai8 = qm.apply_row_i8(&x);
+            let amax = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            let sx = amax / 127.0;
+            for j in 0..n {
+                let wsum: f32 = (0..m).map(|kk| deq[(kk, j)].abs()).sum();
+                let bound = 0.5 * sx * wsum * 1.01 + 1e-5;
+                assert!(
+                    (viai8[j] - exact[j]).abs() <= bound,
+                    "j{j}: {} vs {} (bound {bound})",
+                    viai8[j],
+                    exact[j]
+                );
+            }
+        }
+        // all-zero activations short-circuit to zeros on both layouts
+        let qm = QuantMat::quantize_from(&Mat::zeros(3, 7), 4);
+        assert_eq!(qm.apply_row_i8(&[0.0; 3]), vec![0.0; 7]);
     }
 
     #[test]

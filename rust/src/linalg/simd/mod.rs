@@ -1,0 +1,282 @@
+//! Runtime-dispatched group-block kernels for the planar quantized layout.
+//!
+//! [`crate::linalg::QuantMat`]'s planar layout stores each scale group as
+//! `bits` contiguous bit-plane strips of `ceil(len/32)` words: value `j`'s
+//! code bit `p` sits at bit `j % 32` of word `p * wpp + j / 32`. The three
+//! kernels here consume exactly one such group block:
+//!
+//! - `dequant`:  `out[j]  = (code_j − qmax) as f32 · scale`
+//! - `axpy`:     `out[j] += xi · ((code_j − qmax) as f32 · scale)`
+//! - `axpy_i8`:  `out[j] += ((code_j − qmax) · qx) as f32 · combined_scale`
+//!
+//! Bit-identity contract: every implementation performs the same float op
+//! sequence per element — one int→f32 convert, separate multiplies, one
+//! add, never a fused multiply-add — so scalar, AVX2, and NEON produce
+//! bit-identical outputs and the existing f32-reference parity tests gate
+//! the vector paths transitively.
+//!
+//! Dispatch: [`active`] picks the best kernel for the host once per
+//! process (AVX2 on x86_64 when the CPU reports it, NEON on aarch64,
+//! scalar otherwise). The `COMPOT_SIMD` env var (`scalar` | `avx2` |
+//! `neon` | `auto`) overrides the choice for debugging and for the
+//! cross-kernel parity suite in CI; unknown or unavailable names fall
+//! back to auto rather than failing decode. Under Miri everything runs
+//! scalar — vector intrinsics are not interpretable.
+
+pub mod scalar;
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+#[cfg(target_arch = "x86_64")]
+pub mod x86;
+
+use std::sync::OnceLock;
+
+/// Which kernel family executes group unpacking on this process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable 8-wide unrolled scalar kernels — the bit-exact reference.
+    Scalar,
+    /// 8-lane AVX2 kernels (x86_64, runtime-detected).
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// 4-lane NEON kernels (aarch64 baseline feature).
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+impl Kernel {
+    /// Stable lowercase name — the `COMPOT_SIMD` vocabulary, also recorded
+    /// by the quant bench so runs are attributable to a kernel.
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            Kernel::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            Kernel::Neon => "neon",
+        }
+    }
+}
+
+/// The three group-block kernels as plain fn pointers, so `QuantMat` can
+/// hoist the dispatch out of its per-group loops.
+#[derive(Clone, Copy)]
+pub struct GroupKernels {
+    /// `out[j] = (code_j − qmax) as f32 · scale`.
+    pub dequant: fn(&[u32], u32, f32, &mut [f32]),
+    /// `out[j] += xi · ((code_j − qmax) as f32 · scale)`.
+    pub axpy: fn(&[u32], u32, f32, f32, &mut [f32]),
+    /// `out[j] += ((code_j − qmax) · qx) as f32 · combined_scale`, with
+    /// `qx` an int8-quantized activation (|qx| ≤ 127, products exact).
+    pub axpy_i8: fn(&[u32], u32, f32, i32, &mut [f32]),
+}
+
+const SCALAR: GroupKernels = GroupKernels {
+    dequant: scalar::dequant,
+    axpy: scalar::axpy,
+    axpy_i8: scalar::axpy_i8,
+};
+
+/// Every kernel usable on this host, scalar first. The parity matrix test
+/// iterates this to compare all implementations pairwise.
+pub fn available() -> Vec<Kernel> {
+    let mut v = vec![Kernel::Scalar];
+    if cfg!(miri) {
+        return v;
+    }
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        v.push(Kernel::Avx2);
+    }
+    #[cfg(target_arch = "aarch64")]
+    v.push(Kernel::Neon);
+    v
+}
+
+/// Kernels for an explicit choice; `None` when the host can't run it
+/// (e.g. `Avx2` on a CPU without it, any vector kernel under Miri).
+pub fn kernels_for(k: Kernel) -> Option<GroupKernels> {
+    match k {
+        Kernel::Scalar => Some(SCALAR),
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Avx2 => {
+            if !cfg!(miri) && std::arch::is_x86_feature_detected!("avx2") {
+                Some(GroupKernels {
+                    dequant: x86::dequant,
+                    axpy: x86::axpy,
+                    axpy_i8: x86::axpy_i8,
+                })
+            } else {
+                None
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => {
+            if cfg!(miri) {
+                None
+            } else {
+                Some(GroupKernels {
+                    dequant: neon::dequant,
+                    axpy: neon::axpy,
+                    axpy_i8: neon::axpy_i8,
+                })
+            }
+        }
+    }
+}
+
+fn choose() -> Kernel {
+    let avail = available();
+    if let Ok(want) = std::env::var("COMPOT_SIMD") {
+        let w = want.trim().to_ascii_lowercase();
+        if !w.is_empty() && w != "auto" {
+            if let Some(k) = avail.iter().find(|k| k.name() == w) {
+                return *k;
+            }
+            // Unknown or unavailable names fall through to auto — the
+            // quant bench records the active kernel, so a typo is visible
+            // without crashing decode.
+        }
+    }
+    avail.last().copied().unwrap_or(Kernel::Scalar)
+}
+
+/// The kernel decode runs with, chosen once per process.
+pub fn active() -> Kernel {
+    static ACTIVE: OnceLock<Kernel> = OnceLock::new();
+    *ACTIVE.get_or_init(choose)
+}
+
+/// The active kernel's fn-pointer table (what `QuantMat` hot paths hoist).
+pub fn kernels() -> GroupKernels {
+    kernels_for(active()).unwrap_or(SCALAR)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Pack one group of codes into planar strips (reference packer kept
+    // deliberately naive and independent of the QuantMat packer).
+    fn pack(codes: &[u32], bits: u32) -> Vec<u32> {
+        let wpp = codes.len().div_ceil(32);
+        let mut planes = vec![0u32; bits as usize * wpp];
+        for (j, &c) in codes.iter().enumerate() {
+            for p in 0..bits as usize {
+                planes[p * wpp + (j >> 5)] |= ((c >> p) & 1) << (j & 31);
+            }
+        }
+        planes
+    }
+
+    fn codes_for(bits: u32, len: usize) -> Vec<u32> {
+        let m = (1u32 << bits) - 1;
+        (0..len)
+            .map(|j| (j as u32).wrapping_mul(2654435761).wrapping_shr(7) & m)
+            .collect()
+    }
+
+    #[test]
+    fn scalar_dequant_matches_direct_formula() {
+        for bits in 2u32..=8 {
+            for len in [1usize, 7, 31, 32, 33, 64, 96, 100] {
+                let codes = codes_for(bits, len);
+                let planes = pack(&codes, bits);
+                let qmax = (1i32 << (bits - 1)) - 1;
+                let scale = 0.0371f32;
+                let mut out = vec![f32::NAN; len];
+                scalar::dequant(&planes, bits, scale, &mut out);
+                for (j, &c) in codes.iter().enumerate() {
+                    let want = (c as i32 - qmax) as f32 * scale;
+                    assert!(out[j].to_bits() == want.to_bits(), "bits={bits} len={len} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_axpy_accumulates_in_reference_order() {
+        let bits = 4u32;
+        let len = 45usize;
+        let codes = codes_for(bits, len);
+        let planes = pack(&codes, bits);
+        let qmax = (1i32 << (bits - 1)) - 1;
+        let (scale, xi) = (0.25f32, -1.625f32);
+        let mut out: Vec<f32> = (0..len).map(|j| j as f32 * 0.125).collect();
+        let mut want = out.clone();
+        for (j, &c) in codes.iter().enumerate() {
+            let w = (c as i32 - qmax) as f32 * scale;
+            want[j] += xi * w;
+        }
+        scalar::axpy(&planes, bits, scale, xi, &mut out);
+        assert_eq!(
+            out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn scalar_axpy_i8_is_exact_integer_math() {
+        let bits = 8u32;
+        let len = 33usize;
+        let codes = codes_for(bits, len);
+        let planes = pack(&codes, bits);
+        let qmax = (1i32 << (bits - 1)) - 1;
+        let (cs, qx) = (0.0042f32, -117i32);
+        let mut out = vec![0.0f32; len];
+        scalar::axpy_i8(&planes, bits, cs, qx, &mut out);
+        for (j, &c) in codes.iter().enumerate() {
+            let want = ((c as i32 - qmax) * qx) as f32 * cs;
+            assert_eq!(out[j].to_bits(), want.to_bits(), "j={j}");
+        }
+    }
+
+    // The safe vector wrappers run under Miri too: they detect that the
+    // feature path is unusable (or fall back by design) without touching
+    // an intrinsic, which is the cfg(miri)-compatible coverage of the
+    // unsafe wrappers the nightly Miri job interprets.
+    #[test]
+    fn every_available_kernel_is_bit_identical_to_scalar() {
+        for bits in 2u32..=8 {
+            for len in [5usize, 32, 64, 100, 128, 250, 256] {
+                let codes = codes_for(bits, len);
+                let planes = pack(&codes, bits);
+                let scale = 0.0113f32;
+                let xi = 0.8125f32;
+                let mut base_d = vec![0.0f32; len];
+                scalar::dequant(&planes, bits, scale, &mut base_d);
+                let mut base_a: Vec<f32> = (0..len).map(|j| (j % 13) as f32 * 0.5).collect();
+                scalar::axpy(&planes, bits, scale, xi, &mut base_a);
+                let mut base_i = vec![1.5f32; len];
+                scalar::axpy_i8(&planes, bits, scale, 93, &mut base_i);
+                for k in available() {
+                    let kf = kernels_for(k).expect("available kernel must resolve");
+                    let mut d = vec![0.0f32; len];
+                    (kf.dequant)(&planes, bits, scale, &mut d);
+                    let mut a: Vec<f32> = (0..len).map(|j| (j % 13) as f32 * 0.5).collect();
+                    (kf.axpy)(&planes, bits, scale, xi, &mut a);
+                    let mut i8v = vec![1.5f32; len];
+                    (kf.axpy_i8)(&planes, bits, scale, 93, &mut i8v);
+                    for j in 0..len {
+                        let ctx = format!("{} bits={bits} len={len} j={j}", k.name());
+                        assert_eq!(d[j].to_bits(), base_d[j].to_bits(), "dequant {ctx}");
+                        assert_eq!(a[j].to_bits(), base_a[j].to_bits(), "axpy {ctx}");
+                        assert_eq!(i8v[j].to_bits(), base_i[j].to_bits(), "axpy_i8 {ctx}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_is_consistent() {
+        let avail = available();
+        assert_eq!(avail[0], Kernel::Scalar);
+        assert!(avail.contains(&active()));
+        assert!(kernels_for(active()).is_some());
+        for k in avail {
+            assert!(!k.name().is_empty());
+        }
+    }
+}

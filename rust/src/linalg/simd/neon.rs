@@ -1,0 +1,155 @@
+//! NEON group-block kernels (aarch64).
+//!
+//! Same contract as [`super::scalar`]: one group block of `bits` bit-plane
+//! strips, per element one int→f32 convert plus separate multiplies and
+//! adds — `vmulq_f32`/`vaddq_f32`, never `vmlaq_f32` — so outputs are
+//! bit-identical to the scalar reference. Four values unpack at once: the
+//! block's plane word is broadcast and `vshlq_u32` with negated per-lane
+//! offsets performs the variable right shift (NEON has no variable
+//! right-shift intrinsic). Lane groups of 4 never straddle a 32-value
+//! block.
+//!
+//! Safety model: NEON is a baseline feature of every aarch64 target this
+//! crate builds for (std itself requires it), so the safe wrappers call
+//! the `#[target_feature]` inners unconditionally; the inners are the
+//! only unsafe surface, confined to this L2-allowlisted module with
+//! SAFETY comments on every unsafe item.
+
+use std::arch::aarch64::*;
+
+/// `out[j] = (code_j − qmax) as f32 · scale` over one group block.
+pub fn dequant(planes: &[u32], bits: u32, scale: f32, out: &mut [f32]) {
+    // SAFETY: NEON is mandatory on aarch64 targets with std, so the
+    // target-feature requirement of the inner function always holds.
+    unsafe { dequant_neon(planes, bits, scale, out) }
+}
+
+/// `out[j] += xi · ((code_j − qmax) as f32 · scale)` over one group block.
+pub fn axpy(planes: &[u32], bits: u32, scale: f32, xi: f32, out: &mut [f32]) {
+    // SAFETY: NEON is mandatory on aarch64 targets with std, so the
+    // target-feature requirement of the inner function always holds.
+    unsafe { axpy_neon(planes, bits, scale, xi, out) }
+}
+
+/// `out[j] += ((code_j − qmax) · qx) as f32 · cs` over one group block.
+pub fn axpy_i8(planes: &[u32], bits: u32, cs: f32, qx: i32, out: &mut [f32]) {
+    // SAFETY: NEON is mandatory on aarch64 targets with std, so the
+    // target-feature requirement of the inner function always holds.
+    unsafe { axpy_i8_neon(planes, bits, cs, qx, out) }
+}
+
+/// Unpack 4 codes starting at `j0` (a multiple of 4) into an i32 vector.
+/// Carries the `neon` feature itself so it compiles and inlines at the
+/// inners' feature level.
+// SAFETY: requires the `neon` target feature, an aarch64 baseline
+// guarantee; every caller is one of the `#[target_feature]` inners below.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn gather4(planes: &[u32], bits: usize, wpp: usize, j0: usize) -> int32x4_t {
+    let lane: [i32; 4] = [0, 1, 2, 3];
+    let offs = vaddq_s32(vdupq_n_s32((j0 & 31) as i32), vld1q_s32(lane.as_ptr()));
+    let noffs = vnegq_s32(offs);
+    let vone = vdupq_n_u32(1);
+    let blk = j0 >> 5;
+    let mut codes = vdupq_n_u32(0);
+    for p in 0..bits {
+        let w = vdupq_n_u32(planes[p * wpp + blk]);
+        let bit = vandq_u32(vshlq_u32(w, noffs), vone);
+        codes = vorrq_u32(codes, vshlq_u32(bit, vdupq_n_s32(p as i32)));
+    }
+    vreinterpretq_s32_u32(codes)
+}
+
+/// Scalar tail shared by the three inners — same formula, same op order.
+#[inline(always)]
+fn gather1(planes: &[u32], bits: usize, wpp: usize, j: usize) -> i32 {
+    let mut c = 0u32;
+    for p in 0..bits {
+        c |= ((planes[p * wpp + (j >> 5)] >> (j & 31)) & 1) << p;
+    }
+    c as i32
+}
+
+// SAFETY: requires the `neon` target feature (an aarch64 baseline, see
+// the safe wrappers above); all memory accesses are bounds-derived from
+// the `out` and `planes` slices.
+#[target_feature(enable = "neon")]
+unsafe fn dequant_neon(planes: &[u32], bits: u32, scale: f32, out: &mut [f32]) {
+    let bits = bits as usize;
+    let n = out.len();
+    let wpp = n.div_ceil(32);
+    debug_assert_eq!(planes.len(), bits * wpp);
+    let iqmax = (1i32 << (bits - 1)) - 1;
+    let vqmax = vdupq_n_s32(iqmax);
+    let vscale = vdupq_n_f32(scale);
+    let full = n / 4;
+    for c in 0..full {
+        let j0 = c * 4;
+        let codes = gather4(planes, bits, wpp, j0);
+        let vals = vcvtq_f32_s32(vsubq_s32(codes, vqmax));
+        // SAFETY: j0 + 4 ≤ n, so the 4-lane store stays inside `out`.
+        vst1q_f32(out.as_mut_ptr().add(j0), vmulq_f32(vals, vscale));
+    }
+    for j in full * 4..n {
+        out[j] = (gather1(planes, bits, wpp, j) - iqmax) as f32 * scale;
+    }
+}
+
+// SAFETY: requires the `neon` target feature (an aarch64 baseline, see
+// the safe wrappers above); all memory accesses are bounds-derived from
+// the `out` and `planes` slices.
+#[target_feature(enable = "neon")]
+unsafe fn axpy_neon(planes: &[u32], bits: u32, scale: f32, xi: f32, out: &mut [f32]) {
+    let bits = bits as usize;
+    let n = out.len();
+    let wpp = n.div_ceil(32);
+    debug_assert_eq!(planes.len(), bits * wpp);
+    let iqmax = (1i32 << (bits - 1)) - 1;
+    let vqmax = vdupq_n_s32(iqmax);
+    let vscale = vdupq_n_f32(scale);
+    let vxi = vdupq_n_f32(xi);
+    let full = n / 4;
+    for c in 0..full {
+        let j0 = c * 4;
+        let codes = gather4(planes, bits, wpp, j0);
+        let vals = vcvtq_f32_s32(vsubq_s32(codes, vqmax));
+        let w = vmulq_f32(vals, vscale);
+        let t = vmulq_f32(vxi, w);
+        let p = out.as_mut_ptr().add(j0);
+        // SAFETY: j0 + 4 ≤ n, so the 4-lane load/store stay inside `out`.
+        vst1q_f32(p, vaddq_f32(vld1q_f32(p), t));
+    }
+    for j in full * 4..n {
+        out[j] += xi * ((gather1(planes, bits, wpp, j) - iqmax) as f32 * scale);
+    }
+}
+
+// SAFETY: requires the `neon` target feature (an aarch64 baseline, see
+// the safe wrappers above); all memory accesses are bounds-derived from
+// the `out` and `planes` slices.
+#[target_feature(enable = "neon")]
+unsafe fn axpy_i8_neon(planes: &[u32], bits: u32, cs: f32, qx: i32, out: &mut [f32]) {
+    let bits = bits as usize;
+    let n = out.len();
+    let wpp = n.div_ceil(32);
+    debug_assert_eq!(planes.len(), bits * wpp);
+    let iqmax = (1i32 << (bits - 1)) - 1;
+    let vqmax = vdupq_n_s32(iqmax);
+    let vqx = vdupq_n_s32(qx);
+    let vcs = vdupq_n_f32(cs);
+    let full = n / 4;
+    for c in 0..full {
+        let j0 = c * 4;
+        let codes = gather4(planes, bits, wpp, j0);
+        // |code − qmax| ≤ 128 and |qx| ≤ 127 → the i32 product is exact
+        // and converts to f32 exactly; one f32 multiply, one add.
+        let prod = vmulq_s32(vsubq_s32(codes, vqmax), vqx);
+        let t = vmulq_f32(vcvtq_f32_s32(prod), vcs);
+        let p = out.as_mut_ptr().add(j0);
+        // SAFETY: j0 + 4 ≤ n, so the 4-lane load/store stay inside `out`.
+        vst1q_f32(p, vaddq_f32(vld1q_f32(p), t));
+    }
+    for j in full * 4..n {
+        out[j] += ((gather1(planes, bits, wpp, j) - iqmax) * qx) as f32 * cs;
+    }
+}

@@ -1,0 +1,122 @@
+//! Portable scalar group-block kernels — 8-wide unrolled bit-plane unpack.
+//!
+//! These are the bit-exact reference for the vector paths: per element the
+//! op sequence is exactly `w = (code − qmax) as f32 · scale` followed by
+//! `out += xi · w` (multiplies and adds separate, no FMA), which AVX2 and
+//! NEON mirror instruction-for-instruction. All three kernels consume one
+//! group block: `bits` bit-plane strips of `ceil(out.len()/32)` words.
+//!
+//! The unroll works a 32-value block at a time so the ≤ 8 plane words of
+//! the block are hoisted into registers once and each code gather is pure
+//! shift/mask arithmetic — no per-value word indexing or straddle branch,
+//! which is what the legacy row-sequential unpack pays per value.
+
+/// Gather the b-bit code of value `j` (0..32) from hoisted plane words.
+#[inline(always)]
+fn gather(pw: &[u32; 8], bits: usize, j: usize) -> i32 {
+    let mut c = 0u32;
+    let mut p = 0;
+    while p < bits {
+        c |= ((pw[p] >> j) & 1) << p;
+        p += 1;
+    }
+    c as i32
+}
+
+/// Hoist the plane words of 32-value block `blk` into a fixed array.
+#[inline(always)]
+fn hoist(planes: &[u32], bits: usize, wpp: usize, blk: usize) -> [u32; 8] {
+    let mut pw = [0u32; 8];
+    for (p, w) in pw.iter_mut().take(bits).enumerate() {
+        *w = planes[p * wpp + blk];
+    }
+    pw
+}
+
+/// `out[j] = (code_j − qmax) as f32 · scale` over one group block.
+pub fn dequant(planes: &[u32], bits: u32, scale: f32, out: &mut [f32]) {
+    let bits = bits as usize;
+    let wpp = out.len().div_ceil(32);
+    debug_assert_eq!(planes.len(), bits * wpp);
+    let iqmax = (1i32 << (bits - 1)) - 1;
+    for (blk, chunk) in out.chunks_mut(32).enumerate() {
+        let pw = hoist(planes, bits, wpp, blk);
+        let m = chunk.len();
+        let mut j = 0;
+        while j + 8 <= m {
+            chunk[j] = (gather(&pw, bits, j) - iqmax) as f32 * scale;
+            chunk[j + 1] = (gather(&pw, bits, j + 1) - iqmax) as f32 * scale;
+            chunk[j + 2] = (gather(&pw, bits, j + 2) - iqmax) as f32 * scale;
+            chunk[j + 3] = (gather(&pw, bits, j + 3) - iqmax) as f32 * scale;
+            chunk[j + 4] = (gather(&pw, bits, j + 4) - iqmax) as f32 * scale;
+            chunk[j + 5] = (gather(&pw, bits, j + 5) - iqmax) as f32 * scale;
+            chunk[j + 6] = (gather(&pw, bits, j + 6) - iqmax) as f32 * scale;
+            chunk[j + 7] = (gather(&pw, bits, j + 7) - iqmax) as f32 * scale;
+            j += 8;
+        }
+        while j < m {
+            chunk[j] = (gather(&pw, bits, j) - iqmax) as f32 * scale;
+            j += 1;
+        }
+    }
+}
+
+/// `out[j] += xi · ((code_j − qmax) as f32 · scale)` over one group block.
+pub fn axpy(planes: &[u32], bits: u32, scale: f32, xi: f32, out: &mut [f32]) {
+    let bits = bits as usize;
+    let wpp = out.len().div_ceil(32);
+    debug_assert_eq!(planes.len(), bits * wpp);
+    let iqmax = (1i32 << (bits - 1)) - 1;
+    for (blk, chunk) in out.chunks_mut(32).enumerate() {
+        let pw = hoist(planes, bits, wpp, blk);
+        let m = chunk.len();
+        let mut j = 0;
+        while j + 8 <= m {
+            chunk[j] += xi * ((gather(&pw, bits, j) - iqmax) as f32 * scale);
+            chunk[j + 1] += xi * ((gather(&pw, bits, j + 1) - iqmax) as f32 * scale);
+            chunk[j + 2] += xi * ((gather(&pw, bits, j + 2) - iqmax) as f32 * scale);
+            chunk[j + 3] += xi * ((gather(&pw, bits, j + 3) - iqmax) as f32 * scale);
+            chunk[j + 4] += xi * ((gather(&pw, bits, j + 4) - iqmax) as f32 * scale);
+            chunk[j + 5] += xi * ((gather(&pw, bits, j + 5) - iqmax) as f32 * scale);
+            chunk[j + 6] += xi * ((gather(&pw, bits, j + 6) - iqmax) as f32 * scale);
+            chunk[j + 7] += xi * ((gather(&pw, bits, j + 7) - iqmax) as f32 * scale);
+            j += 8;
+        }
+        while j < m {
+            chunk[j] += xi * ((gather(&pw, bits, j) - iqmax) as f32 * scale);
+            j += 1;
+        }
+    }
+}
+
+/// Fused int8 path: `out[j] += ((code_j − qmax) · qx) as f32 · cs` where
+/// `qx` is the int8-quantized activation and `cs = sx · scale` folds both
+/// scales. `(code − qmax) · qx` is at most 128·127 in magnitude, so the
+/// product is exact in i32 and its f32 conversion is exact — the inner
+/// loop is integer-dominated, with f32 touched only at the final multiply.
+pub fn axpy_i8(planes: &[u32], bits: u32, cs: f32, qx: i32, out: &mut [f32]) {
+    let bits = bits as usize;
+    let wpp = out.len().div_ceil(32);
+    debug_assert_eq!(planes.len(), bits * wpp);
+    let iqmax = (1i32 << (bits - 1)) - 1;
+    for (blk, chunk) in out.chunks_mut(32).enumerate() {
+        let pw = hoist(planes, bits, wpp, blk);
+        let m = chunk.len();
+        let mut j = 0;
+        while j + 8 <= m {
+            chunk[j] += ((gather(&pw, bits, j) - iqmax) * qx) as f32 * cs;
+            chunk[j + 1] += ((gather(&pw, bits, j + 1) - iqmax) * qx) as f32 * cs;
+            chunk[j + 2] += ((gather(&pw, bits, j + 2) - iqmax) * qx) as f32 * cs;
+            chunk[j + 3] += ((gather(&pw, bits, j + 3) - iqmax) * qx) as f32 * cs;
+            chunk[j + 4] += ((gather(&pw, bits, j + 4) - iqmax) * qx) as f32 * cs;
+            chunk[j + 5] += ((gather(&pw, bits, j + 5) - iqmax) * qx) as f32 * cs;
+            chunk[j + 6] += ((gather(&pw, bits, j + 6) - iqmax) * qx) as f32 * cs;
+            chunk[j + 7] += ((gather(&pw, bits, j + 7) - iqmax) * qx) as f32 * cs;
+            j += 8;
+        }
+        while j < m {
+            chunk[j] += ((gather(&pw, bits, j) - iqmax) * qx) as f32 * cs;
+            j += 1;
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! AVX2 group-block kernels (x86_64).
+//!
+//! Same contract as [`super::scalar`]: one group block of `bits` bit-plane
+//! strips, and per element exactly one int→f32 convert plus separate
+//! multiplies and adds (no FMA), so outputs are bit-identical to the
+//! scalar reference. Eight values unpack at once: the block's plane word
+//! is broadcast, `_mm256_srlv_epi32` shifts each lane by its bit offset,
+//! and the masked bits OR into a code vector one plane at a time. Lane
+//! groups of 8 never straddle a 32-value block, so each group of lanes
+//! reads exactly one word per plane.
+//!
+//! Safety model: the public functions are safe — they verify AVX2 with
+//! `is_x86_feature_detected!` and fall back to the scalar kernels when
+//! the host lacks it. The `#[target_feature]` inner functions are the
+//! only unsafe surface; they are confined to this L2-allowlisted module
+//! and carry SAFETY comments on every unsafe item.
+
+use super::scalar;
+use std::arch::x86_64::*;
+
+/// `out[j] = (code_j − qmax) as f32 · scale` over one group block.
+pub fn dequant(planes: &[u32], bits: u32, scale: f32, out: &mut [f32]) {
+    if !is_x86_feature_detected!("avx2") {
+        scalar::dequant(planes, bits, scale, out);
+        return;
+    }
+    // SAFETY: AVX2 support was verified at runtime just above; the inner
+    // function's only requirement beyond safe Rust is that feature.
+    unsafe { dequant_avx2(planes, bits, scale, out) }
+}
+
+/// `out[j] += xi · ((code_j − qmax) as f32 · scale)` over one group block.
+pub fn axpy(planes: &[u32], bits: u32, scale: f32, xi: f32, out: &mut [f32]) {
+    if !is_x86_feature_detected!("avx2") {
+        scalar::axpy(planes, bits, scale, xi, out);
+        return;
+    }
+    // SAFETY: AVX2 support was verified at runtime just above; the inner
+    // function's only requirement beyond safe Rust is that feature.
+    unsafe { axpy_avx2(planes, bits, scale, xi, out) }
+}
+
+/// `out[j] += ((code_j − qmax) · qx) as f32 · cs` over one group block.
+pub fn axpy_i8(planes: &[u32], bits: u32, cs: f32, qx: i32, out: &mut [f32]) {
+    if !is_x86_feature_detected!("avx2") {
+        scalar::axpy_i8(planes, bits, cs, qx, out);
+        return;
+    }
+    // SAFETY: AVX2 support was verified at runtime just above; the inner
+    // function's only requirement beyond safe Rust is that feature.
+    unsafe { axpy_i8_avx2(planes, bits, cs, qx, out) }
+}
+
+/// Unpack 8 codes starting at `j0` (a multiple of 8) into an i32 vector.
+/// Carries the `avx2` feature itself so the 256-bit return ABI is
+/// well-defined and the body inlines into the inners below.
+// SAFETY: requires AVX2 — every caller is one of the
+// `#[target_feature(enable = "avx2")]` inners below, which the safe
+// wrappers gate on runtime feature detection.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn gather8(planes: &[u32], bits: usize, wpp: usize, j0: usize) -> __m256i {
+    let lanes = _mm256_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7);
+    let offs = _mm256_add_epi32(_mm256_set1_epi32((j0 & 31) as i32), lanes);
+    let vone = _mm256_set1_epi32(1);
+    let blk = j0 >> 5;
+    let mut codes = _mm256_setzero_si256();
+    for p in 0..bits {
+        let w = _mm256_set1_epi32(planes[p * wpp + blk] as i32);
+        let bit = _mm256_and_si256(_mm256_srlv_epi32(w, offs), vone);
+        codes = _mm256_or_si256(codes, _mm256_sll_epi32(bit, _mm_cvtsi32_si128(p as i32)));
+    }
+    codes
+}
+
+/// Scalar tail shared by the three inners — same formula, same op order.
+#[inline(always)]
+fn gather1(planes: &[u32], bits: usize, wpp: usize, j: usize) -> i32 {
+    let mut c = 0u32;
+    for p in 0..bits {
+        c |= ((planes[p * wpp + (j >> 5)] >> (j & 31)) & 1) << p;
+    }
+    c as i32
+}
+
+// SAFETY: requires AVX2 (enforced by the safe wrappers above via runtime
+// detection); all memory accesses are bounds-derived from the `out` and
+// `planes` slices.
+#[target_feature(enable = "avx2")]
+unsafe fn dequant_avx2(planes: &[u32], bits: u32, scale: f32, out: &mut [f32]) {
+    let bits = bits as usize;
+    let n = out.len();
+    let wpp = n.div_ceil(32);
+    debug_assert_eq!(planes.len(), bits * wpp);
+    let iqmax = (1i32 << (bits - 1)) - 1;
+    let vqmax = _mm256_set1_epi32(iqmax);
+    let vscale = _mm256_set1_ps(scale);
+    let full = n / 8;
+    for c in 0..full {
+        let j0 = c * 8;
+        let codes = gather8(planes, bits, wpp, j0);
+        let vals = _mm256_cvtepi32_ps(_mm256_sub_epi32(codes, vqmax));
+        // SAFETY: j0 + 8 ≤ n, so the 8-lane store stays inside `out`.
+        _mm256_storeu_ps(out.as_mut_ptr().add(j0), _mm256_mul_ps(vals, vscale));
+    }
+    for j in full * 8..n {
+        out[j] = (gather1(planes, bits, wpp, j) - iqmax) as f32 * scale;
+    }
+}
+
+// SAFETY: requires AVX2 (enforced by the safe wrappers above via runtime
+// detection); all memory accesses are bounds-derived from the `out` and
+// `planes` slices.
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(planes: &[u32], bits: u32, scale: f32, xi: f32, out: &mut [f32]) {
+    let bits = bits as usize;
+    let n = out.len();
+    let wpp = n.div_ceil(32);
+    debug_assert_eq!(planes.len(), bits * wpp);
+    let iqmax = (1i32 << (bits - 1)) - 1;
+    let vqmax = _mm256_set1_epi32(iqmax);
+    let vscale = _mm256_set1_ps(scale);
+    let vxi = _mm256_set1_ps(xi);
+    let full = n / 8;
+    for c in 0..full {
+        let j0 = c * 8;
+        let codes = gather8(planes, bits, wpp, j0);
+        let vals = _mm256_cvtepi32_ps(_mm256_sub_epi32(codes, vqmax));
+        let w = _mm256_mul_ps(vals, vscale);
+        let t = _mm256_mul_ps(vxi, w);
+        let p = out.as_mut_ptr().add(j0);
+        // SAFETY: j0 + 8 ≤ n, so the 8-lane load/store stay inside `out`.
+        _mm256_storeu_ps(p, _mm256_add_ps(_mm256_loadu_ps(p), t));
+    }
+    for j in full * 8..n {
+        out[j] += xi * ((gather1(planes, bits, wpp, j) - iqmax) as f32 * scale);
+    }
+}
+
+// SAFETY: requires AVX2 (enforced by the safe wrappers above via runtime
+// detection); all memory accesses are bounds-derived from the `out` and
+// `planes` slices.
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_i8_avx2(planes: &[u32], bits: u32, cs: f32, qx: i32, out: &mut [f32]) {
+    let bits = bits as usize;
+    let n = out.len();
+    let wpp = n.div_ceil(32);
+    debug_assert_eq!(planes.len(), bits * wpp);
+    let iqmax = (1i32 << (bits - 1)) - 1;
+    let vqmax = _mm256_set1_epi32(iqmax);
+    let vqx = _mm256_set1_epi32(qx);
+    let vcs = _mm256_set1_ps(cs);
+    let full = n / 8;
+    for c in 0..full {
+        let j0 = c * 8;
+        let codes = gather8(planes, bits, wpp, j0);
+        // |code − qmax| ≤ 128 and |qx| ≤ 127 → the i32 product is exact
+        // and converts to f32 exactly; one f32 multiply, one add.
+        let prod = _mm256_mullo_epi32(_mm256_sub_epi32(codes, vqmax), vqx);
+        let t = _mm256_mul_ps(_mm256_cvtepi32_ps(prod), vcs);
+        let p = out.as_mut_ptr().add(j0);
+        // SAFETY: j0 + 8 ≤ n, so the 8-lane load/store stay inside `out`.
+        _mm256_storeu_ps(p, _mm256_add_ps(_mm256_loadu_ps(p), t));
+    }
+    for j in full * 8..n {
+        out[j] += ((gather1(planes, bits, wpp, j) - iqmax) * qx) as f32 * cs;
+    }
+}

@@ -473,6 +473,24 @@ impl Model {
         out
     }
 
+    /// Every packed-quantized projection re-encoded in `layout` (see
+    /// [`crate::linalg::QuantMat::with_layout`]) — stored values identical,
+    /// only the physical code layout (and thus the unpack kernel serving
+    /// decode) changes. The `quant_decode` benchmark uses this to measure
+    /// the planar-vs-legacy unpack speedup on one model.
+    pub fn with_quant_layout(&self, layout: crate::linalg::QuantLayout) -> Model {
+        let mut out = self.clone();
+        for stage in out.stages.iter_mut() {
+            if let Stage::Block(b) = stage {
+                for p in ProjKind::DECODER_SET {
+                    let w = b.proj(p).with_quant_layout(layout);
+                    *b.proj_mut(p) = w;
+                }
+            }
+        }
+        out
+    }
+
     /// Storage bits of the compressible projections only (the quantity the
     /// model-level CR is defined over, matching the paper's protocol).
     pub fn projection_bits(&self) -> u64 {

@@ -1,9 +1,23 @@
-//! Minimal data-parallel helpers over `std::thread::scope` — the in-tree
-//! replacement for rayon (offline env). Used by the blocked GEMM and by the
-//! coordinator's layer-parallel compression pipeline.
+//! Minimal data-parallel helpers — the in-tree replacement for rayon
+//! (offline env). Used by the blocked GEMM and by the coordinator's
+//! layer-parallel compression pipeline.
+//!
+//! Work runs on a **persistent worker pool** spawned once per process
+//! (`num_threads() - 1` workers; the submitting thread always participates,
+//! so `num_threads()` threads touch every batch). The previous per-call
+//! `std::thread::scope` spawn paid thread setup on every GEMM; the pool
+//! replaces that with one mutex push and a condvar wake. Closures reach the
+//! workers through a type-erased thin pointer — sound because submission
+//! blocks until every task of the batch has finished (see
+//! [`WorkerPool::run_tasks`]).
+//!
+//! Under Miri and with `COMPOT_THREADS=1` the helpers degrade to the serial
+//! path; the pool itself is still exercised directly by this module's tests.
 
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
 
 /// Number of worker threads to use: `COMPOT_THREADS` env var, else the
 /// available parallelism, capped at 16.
@@ -19,6 +33,203 @@ pub fn num_threads() -> usize {
         .min(16)
 }
 
+/// Lock a mutex, recovering from poisoning. Tasks run under `catch_unwind`
+/// and every guarded section leaves the data structurally valid, so a
+/// poisoned flag carries no information here.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// One submitted batch: `n` tasks claimed off an atomic counter and executed
+/// through a type-erased pointer to the submitter's closure.
+struct Job {
+    /// Thin pointer to the submitter's `F: Fn(usize) + Sync` closure.
+    data: *const (),
+    /// Monomorphized trampoline that reborrows `data` as `&F` and calls it.
+    // SAFETY: only invoked from `run_job_tasks` with this job's `data`,
+    // while the submitting `run_tasks` call is still blocked on the batch —
+    // the pointee is alive and of exactly the type the trampoline expects.
+    call: unsafe fn(*const (), usize),
+    n: usize,
+    next: AtomicUsize,
+    done: Mutex<JobDone>,
+    done_cv: Condvar,
+}
+
+struct JobDone {
+    completed: usize,
+    panicked: bool,
+}
+
+// SAFETY: `data` points at a `Sync` closure (enforced by the bound on
+// `run_tasks`), so shared access from any thread is fine, and it is only
+// dereferenced while the submitting call is blocked waiting for the batch,
+// so the pointee is alive. Every other field is itself Send + Sync.
+unsafe impl Send for Job {}
+// SAFETY: see the `Send` impl directly above — the raw pointer is only ever
+// used for shared access to a live `Sync` closure.
+unsafe impl Sync for Job {}
+
+struct PoolState {
+    queue: VecDeque<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+}
+
+/// A persistent pool of worker threads. Dropping the pool signals shutdown,
+/// drains any exhausted batches still queued, and joins every worker.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `workers` threads (at least one).
+    pub fn new(workers: usize) -> WorkerPool {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState { queue: VecDeque::new(), shutdown: false }),
+            work_cv: Condvar::new(),
+        });
+        let workers = (0..workers.max(1))
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("compot-worker-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker thread")
+            })
+            .collect();
+        WorkerPool { shared, workers }
+    }
+
+    /// Run `f(i)` for every `i in 0..n` across the pool plus the calling
+    /// thread, returning once every task has finished. A panic inside a
+    /// task is caught on the thread that ran it and re-raised here after
+    /// the batch drains, so a bad task can never wedge or poison the pool.
+    pub fn run_tasks<F>(&self, n: usize, f: &F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        // SAFETY: `p` is the `&F` captured as `job.data` below; callers
+        // (`run_job_tasks`) only invoke this while the submitter is still
+        // blocked in this function, so the reborrow is of a live value.
+        unsafe fn trampoline<F: Fn(usize)>(p: *const (), i: usize) {
+            // SAFETY: `p` was produced from `&F` a few lines down and the
+            // referent outlives this call (the submitter is still blocked).
+            unsafe { (*(p as *const F))(i) }
+        }
+        let job = Arc::new(Job {
+            data: f as *const F as *const (),
+            call: trampoline::<F>,
+            n,
+            next: AtomicUsize::new(0),
+            done: Mutex::new(JobDone { completed: 0, panicked: false }),
+            done_cv: Condvar::new(),
+        });
+        lock_recover(&self.shared.state).queue.push_back(Arc::clone(&job));
+        self.shared.work_cv.notify_all();
+        // The submitting thread claims tasks too — the pool only holds
+        // `num_threads() - 1` workers.
+        run_job_tasks(&job);
+        let mut done = lock_recover(&job.done);
+        while done.completed < job.n {
+            done = job.done_cv.wait(done).unwrap_or_else(PoisonError::into_inner);
+        }
+        let panicked = done.panicked;
+        drop(done);
+        if panicked {
+            panic!("a parallel task panicked (original payload printed on stderr)");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        lock_recover(&self.shared.state).shutdown = true;
+        self.shared.work_cv.notify_all();
+        for h in self.workers.drain(..) {
+            if h.join().is_err() {
+                // Worker bodies never panic (tasks run under catch_unwind);
+                // be loud if that invariant ever breaks.
+                eprintln!("compot: worker pool thread panicked during shutdown");
+            }
+        }
+    }
+}
+
+/// Worker body: sleep on the condvar, pop exhausted batches, execute live
+/// ones, exit when shutdown is signalled and the queue has drained.
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let job = {
+            let mut st = lock_recover(&shared.state);
+            loop {
+                let exhausted =
+                    st.queue.front().is_some_and(|j| j.next.load(Ordering::Relaxed) >= j.n);
+                if exhausted {
+                    st.queue.pop_front();
+                    continue;
+                }
+                if let Some(j) = st.queue.front() {
+                    break Arc::clone(j);
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.work_cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+        };
+        run_job_tasks(&job);
+    }
+}
+
+/// Claim and run tasks from `job` until its counter is exhausted. Shared by
+/// the workers and the submitting thread.
+fn run_job_tasks(job: &Job) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.n {
+            return;
+        }
+        // SAFETY: `i < n`, so the submitter is still blocked in `run_tasks`
+        // waiting for this task's completion tick — `data` points to a live
+        // `Sync` closure, and `call` was monomorphized for exactly that
+        // closure's type by the `run_tasks` call that built this job.
+        let ok = catch_unwind(AssertUnwindSafe(|| unsafe { (job.call)(job.data, i) })).is_ok();
+        let mut done = lock_recover(&job.done);
+        if !ok {
+            done.panicked = true;
+        }
+        done.completed += 1;
+        if done.completed == job.n {
+            job.done_cv.notify_all();
+        }
+    }
+}
+
+/// Process-wide pool, spawned on first use. `None` when the environment is
+/// effectively single-threaded, or under Miri where the default path stays
+/// serial (the pool itself is still covered by direct tests).
+fn pool() -> Option<&'static WorkerPool> {
+    static POOL: OnceLock<Option<WorkerPool>> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let threads = num_threads();
+        if threads <= 1 || cfg!(miri) {
+            None
+        } else {
+            Some(WorkerPool::new(threads - 1))
+        }
+    })
+    .as_ref()
+}
+
 /// Run `f(i)` for every `i in 0..n`, work-stealing over an atomic counter.
 /// `f` must be Sync; use interior mutability / disjoint outputs.
 pub fn parallel_for<F>(n: usize, f: F)
@@ -32,18 +243,14 @@ where
         }
         return;
     }
-    let counter = AtomicUsize::new(0);
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = counter.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
+    match pool() {
+        Some(pool) => pool.run_tasks(n, &f),
+        None => {
+            for i in 0..n {
                 f(i);
-            });
+            }
         }
-    });
+    }
 }
 
 /// Map `f` over `0..n` in parallel, collecting results in index order.
@@ -77,8 +284,9 @@ where
         f(0, 0, out);
         return;
     }
-    // Pre-split into disjoint &mut chunks, then hand them out via a shared
-    // work queue (LIFO order — irrelevant, chunks are independent).
+    // Pre-split into disjoint &mut chunks, then hand them out through a
+    // shared work list — one pop per task index (order is irrelevant, the
+    // chunks are independent).
     let mut work: Vec<(usize, usize, &mut [T])> = Vec::with_capacity(n_chunks);
     let mut rest = out;
     let (mut off, mut idx) = (0usize, 0usize);
@@ -91,16 +299,10 @@ where
         rest = tail;
     }
     let work = Mutex::new(work);
-    let threads = num_threads().min(n_chunks);
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let item = work.lock().unwrap().pop();
-                match item {
-                    Some((idx, off, chunk)) => f(idx, off, chunk),
-                    None => break,
-                }
-            });
+    parallel_for(n_chunks, |_| {
+        let item = lock_recover(&work).pop();
+        if let Some((idx, off, chunk)) = item {
+            f(idx, off, chunk);
         }
     });
 }
@@ -145,5 +347,40 @@ mod tests {
             total.fetch_add(i as u64, Ordering::Relaxed);
         });
         assert_eq!(total.load(Ordering::Relaxed), 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn pool_drop_joins_workers_after_work() {
+        let pool = WorkerPool::new(3);
+        let hits: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+        pool.run_tasks(64, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        let shared = Arc::clone(&pool.shared);
+        // Drop must signal shutdown, drain the queue, and join every worker.
+        drop(pool);
+        assert_eq!(Arc::strong_count(&shared), 1, "workers still alive after drop");
+        assert!(lock_recover(&shared.state).queue.is_empty(), "queue not drained on drop");
+        assert!(lock_recover(&shared.state).shutdown);
+    }
+
+    #[test]
+    fn pool_task_panic_propagates_without_wedging() {
+        let pool = WorkerPool::new(2);
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_tasks(8, &|i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(err.is_err(), "a task panic must re-raise on the submitter");
+        // The pool must still execute fresh batches afterwards.
+        let total = AtomicUsize::new(0);
+        pool.run_tasks(16, &|i| {
+            total.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 15 * 16 / 2);
     }
 }

@@ -2,7 +2,11 @@
 """Bench-regression gate: diff freshly generated BENCH_*.json against the
 committed baselines and fail on meaningful regressions.
 
-Usage: bench_gate.py <baseline_dir> <fresh_dir>
+Usage: bench_gate.py <baseline_dir> <fresh_dir> [--only BENCH_x.json]
+
+``--only`` restricts the gate to a single bench file (used by CI jobs that
+run one bench, e.g. the aarch64 kernel-parity job gating BENCH_quant.json);
+a missing fresh file for the other benches is then not an error.
 
 Rules (applied per matching JSON key, only when the baseline value is a
 positive number — "pending" placeholder baselines with zeros gate nothing):
@@ -121,11 +125,24 @@ def compare(name, base, fresh):
 
 
 def main():
-    if len(sys.argv) != 3:
+    args = sys.argv[1:]
+    only = None
+    if "--only" in args:
+        i = args.index("--only")
+        if i + 1 >= len(args):
+            sys.exit(__doc__)
+        only = args[i + 1]
+        del args[i : i + 2]
+    if len(args) != 2:
         sys.exit(__doc__)
-    baseline_dir, fresh_dir = sys.argv[1], sys.argv[2]
+    baseline_dir, fresh_dir = args
+    benches = BENCHES
+    if only is not None:
+        if only not in BENCHES:
+            sys.exit(f"--only {only}: unknown bench (expected one of {BENCHES})")
+        benches = [only]
     all_failures = []
-    for bench in BENCHES:
+    for bench in benches:
         base_path = os.path.join(baseline_dir, bench)
         fresh_path = os.path.join(fresh_dir, bench)
         if not os.path.exists(base_path):
