@@ -1,0 +1,118 @@
+//! Serve smoke for the sharded pipeline path — what CI runs to prove
+//! `compot serve --load-compressed <index> --stages LO..HI [--next ...]`
+//! end to end without needing `make artifacts`: it builds a tiny model
+//! in-process, compresses it, saves a **2-shard** CPT2 set, loads each
+//! stage range as its own partial model (head owned, tail mmap — both
+//! loader paths cross the shard boundary), wires a head → tail pipeline
+//! over loopback TCP, and asserts every served continuation is
+//! token-identical to single-host decode (exit code is the assertion).
+//!
+//! Run: cargo run --release --example serve_pipeline_smoke
+
+use compot::compress::StageConfig;
+use compot::coordinator::plan::CompressionPlan;
+use compot::data::SynthLang;
+use compot::model::config::ModelConfig;
+use compot::model::Model;
+use compot::serve::server::Client;
+use compot::serve::{serve_pipeline_head, serve_pipeline_tail, BatchPolicy};
+use compot::util::json::Json;
+use compot::util::Rng;
+use std::sync::{mpsc, Arc};
+
+const PLAN: &str = "rtn4";
+
+fn main() -> anyhow::Result<()> {
+    // --- build + compress + shard a tiny model ---
+    let model = Model::random(&ModelConfig::test_tiny(), &mut Rng::new(41));
+    let lang = SynthLang::wiki(model.cfg.vocab);
+    let calib = lang.gen_batch(6, 48, &mut Rng::new(42));
+    let plan = CompressionPlan::parse(PLAN, &StageConfig::new(0.25, false))?;
+    let (compressed, _) = plan.run(&model, &calib)?;
+    let dir = std::env::temp_dir();
+    let path = dir.join("compot_serve_pipeline_smoke.cpt2");
+    compressed.save_compressed_sharded(&path, Some(PLAN), 2)?;
+    let n = compressed.stages.len();
+    let split = n / 2;
+
+    // --- one partial model per pipeline stage ---
+    let (head, hinfo) = Model::load_stage_range(&path, 0..split, false)?;
+    let (tail, tinfo) = Model::load_stage_range(&path, split..n, true)?;
+    anyhow::ensure!(hinfo.source == "owned", "head source tag wrong: {}", hinfo.source);
+    anyhow::ensure!(tinfo.source.starts_with("mmap"), "tail source tag wrong: {}", tinfo.source);
+    anyhow::ensure!(head.lm_head.rows() == 0, "head partial must not carry the LM head");
+    anyhow::ensure!(tail.embed.rows() == 0, "tail partial must not carry the embedding");
+    println!(
+        "sharded load: head stages 0..{split} ({} resident B) | tail stages {split}..{n} \
+         ({} resident + {} mapped B)",
+        head.resident_weight_bytes(),
+        tail.resident_weight_bytes(),
+        tail.mapped_weight_bytes()
+    );
+    let prompts: Vec<Vec<u16>> = {
+        let mut rng = Rng::new(43);
+        (0..6).map(|_| lang.gen(12, &mut rng)).collect()
+    };
+    let expected: Vec<Vec<u16>> = prompts.iter().map(|p| compressed.greedy_decode(p, 8)).collect();
+
+    // --- tail first (it must be listening before the head dials it) ---
+    let (tail_tx, tail_rx) = mpsc::channel();
+    let tail_thread = {
+        let tail = Arc::new(tail);
+        std::thread::spawn(move || {
+            serve_pipeline_tail(tail, "127.0.0.1:0", |a| {
+                tail_tx.send(a).unwrap();
+            })
+            .unwrap();
+        })
+    };
+    let tail_addr = tail_rx.recv()?;
+
+    // --- head: prefill + KV cache + relay to the tail ---
+    let (head_tx, head_rx) = mpsc::channel();
+    let head_thread = {
+        let head = Arc::new(head);
+        let next = tail_addr.to_string();
+        std::thread::spawn(move || {
+            serve_pipeline_head(
+                head,
+                "127.0.0.1:0",
+                &next,
+                BatchPolicy::default(),
+                Json::obj(),
+                |a| {
+                    head_tx.send(a).unwrap();
+                },
+            )
+            .unwrap();
+        })
+    };
+    let head_addr = head_rx.recv()?;
+
+    // --- serve through the pipeline, assert token-identical responses ---
+    let mut client = Client::connect(head_addr)?;
+    let info = client.info()?;
+    anyhow::ensure!(
+        info.get("pipeline_role").and_then(Json::as_str) == Some("head"),
+        "head must report pipeline_role \"head\", got {info:?}"
+    );
+    for (p, want) in prompts.iter().zip(expected.iter()) {
+        let got = client.request(p, 8)?.tokens;
+        anyhow::ensure!(
+            &got == want,
+            "pipeline-served continuation diverged from single-host decode for {p:?}"
+        );
+    }
+    client.shutdown()?;
+    head_thread.join().unwrap();
+    tail_thread.join().unwrap();
+    std::fs::remove_file(&path).ok();
+    for i in 0..2 {
+        std::fs::remove_file(dir.join(format!("compot_serve_pipeline_smoke.shard{i}.cpt2"))).ok();
+    }
+    println!(
+        "pipeline smoke ok: {} prompts served token-identically through the 2-stage pipeline",
+        prompts.len()
+    );
+    Ok(())
+}

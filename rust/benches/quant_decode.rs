@@ -14,7 +14,9 @@
 //! Also measured: the planar-vs-row-seq unpack speedup and the fused int8
 //! matvec speedup on a synthetic packed matrix, plus the active SIMD
 //! kernel name — `rtn4_unpack_speedup` carries a committed CI floor in
-//! `BENCH_quant.json` (see the note there).
+//! `BENCH_quant.json` (see the note there) — and a group-size sweep
+//! (64/128/256) recording resident bytes and perplexity per group size
+//! (`group{g}_resident_bytes` / `group{g}_ppl`, recorded not gated).
 //!
 //! Run: `cargo bench --bench quant_decode` (add `-- --tiny` for the CI
 //! smoke run). Writes `BENCH_quant.json` (override with `BENCH_QUANT_OUT`).
@@ -143,6 +145,32 @@ fn main() {
         if t7_parity { "ok" } else { "DIVERGED" }
     );
 
+    // --- group-size sweep: perplexity vs scale overhead ---
+    // One u16 scale per group adds 16/g bits on top of the 4 payload bits
+    // per weight (4.25 / 4.125 / 4.0625 bits at g = 64 / 128 / 256), while
+    // a tighter group tracks the local weight distribution more closely —
+    // this sweep records both sides of that trade so the README table has
+    // measured numbers behind the analytic overhead column.
+    let (n_eval, eval_len) = if tiny { (2, 32) } else { (4, 64) };
+    let eval_seqs = lang.gen_batch(n_eval, eval_len, &mut Rng::new(80));
+    let dense_ppl = compot::eval::perplexity(&model, &eval_seqs);
+    println!("group-size sweep (rtn4, dense ppl {dense_ppl:.3}):");
+    let mut sweep: Vec<(usize, usize, f64)> = Vec::new();
+    for g in [64usize, 128, 256] {
+        let plan = CompressionPlan::parse(&format!("rtn4,group_size={g}"), &defaults)
+            .expect("rtn4 group plan");
+        let (qg, _) = plan.run(&model, &calib).expect("rtn4 group run");
+        let bytes = qg.resident_weight_bytes();
+        let ppl = compot::eval::perplexity(&qg, &eval_seqs);
+        println!(
+            "  g={g:<3} {bytes} resident bytes ({:.3}x dense, {:.4} bits/weight analytic) \
+             | ppl {ppl:.3}",
+            bytes as f64 / dense_bytes as f64,
+            4.0 + 16.0 / g as f64,
+        );
+        sweep.push((g, bytes, ppl));
+    }
+
     // --- record the trajectory point ---
     let mut j = Json::obj();
     j.set("bench", "quant_decode".into())
@@ -164,7 +192,12 @@ fn main() {
         .set("t7_composed_cr", report.composed_cr.into())
         .set("t7_resident_bytes", t7_bytes.into())
         .set("decode_tok_s_t7_packed", t7_tok_s.into())
-        .set("t7_parity_vs_reference", Json::Bool(t7_parity));
+        .set("t7_parity_vs_reference", Json::Bool(t7_parity))
+        .set("dense_ppl", dense_ppl.into());
+    for (g, bytes, ppl) in &sweep {
+        j.set(format!("group{g}_resident_bytes").as_str(), (*bytes).into())
+            .set(format!("group{g}_ppl").as_str(), (*ppl).into());
+    }
     let out = std::env::var("BENCH_QUANT_OUT").unwrap_or_else(|_| "BENCH_quant.json".into());
     match std::fs::write(&out, j.to_string() + "\n") {
         Ok(()) => println!("wrote {out}"),

@@ -1,0 +1,209 @@
+//! Sharded-checkpoint + pipeline-serving benchmark: save a compressed
+//! model as a 2-shard CPT2 set, reload it whole and as per-stage partials,
+//! and run a 2-process-shaped (2-thread, loopback TCP) pipeline — head
+//! holds the embedding and the first stages, tail holds the rest plus the
+//! LM head — comparing its served tokens against single-host greedy
+//! decode.
+//!
+//! Gates (the process exits non-zero if any fails):
+//! - the sharded save reloads **bit-identically** through the full stage
+//!   range (token-identical greedy decode, equal resident bytes), owned
+//!   and mmap;
+//! - the head + tail partial models **partition** the full model's
+//!   resident weight bytes exactly (nothing duplicated, nothing dropped);
+//! - the loopback pipeline serves tokens **identical** to single-host
+//!   greedy decode.
+//!
+//! Also measured: sharded vs monolithic full cold-load time, the head
+//! partial's resident-byte share (`stage0_resident_ratio`, committed as a
+//! machine-independent ceiling in `BENCH_shard.json`), and pipeline vs
+//! in-process decode throughput.
+//!
+//! Run: `cargo bench --bench shard` (add `-- --tiny` for the CI smoke
+//! run). Writes `BENCH_shard.json` (override with `BENCH_SHARD_OUT`).
+
+use compot::compress::StageConfig;
+use compot::coordinator::plan::CompressionPlan;
+use compot::data::SynthLang;
+use compot::model::config::ModelConfig;
+use compot::model::Model;
+use compot::serve::{serve_pipeline_head, serve_pipeline_tail, BatchPolicy, Client};
+use compot::util::json::Json;
+use compot::util::timer::bench;
+use compot::util::{Rng, Timer};
+use std::sync::{mpsc, Arc};
+
+const PLAN: &str = "rtn4";
+const N_SHARDS: usize = 2;
+
+fn main() {
+    let tiny = std::env::args().any(|a| a == "--tiny");
+    let budget: f64 =
+        std::env::var("BENCH_SECS").ok().and_then(|v| v.parse().ok()).unwrap_or(0.4);
+    let (cfg, prompt_len, gen_len) = if tiny {
+        (ModelConfig::test_tiny(), 12usize, 12usize)
+    } else {
+        (ModelConfig::llama_micro(), 32, 32)
+    };
+    let mut rng = Rng::new(201);
+    let model = Model::random(&cfg, &mut rng);
+    let lang = SynthLang::wiki(cfg.vocab);
+    let calib = lang.gen_batch(6, 48, &mut Rng::new(202));
+    let prompt: Vec<u16> =
+        (0..prompt_len as u16).map(|i| (i * 7 + 1) % cfg.vocab as u16).collect();
+    let plan = CompressionPlan::parse(PLAN, &StageConfig::new(0.25, false)).expect("plan");
+    let (compressed, _) = plan.run(&model, &calib).expect("plan run");
+    let n_stages = compressed.stages.len();
+    let split = n_stages / 2;
+    let want = compressed.greedy_decode(&prompt, gen_len);
+
+    // --- save once sharded, once monolithic, and time the full reloads ---
+    let dir = std::env::temp_dir();
+    let sharded_path = dir.join(format!("compot_bench_shard_{}.cpt2", cfg.name));
+    let mono_path = dir.join(format!("compot_bench_shard_{}_mono.cpt2", cfg.name));
+    compressed
+        .save_compressed_sharded(&sharded_path, Some(PLAN), N_SHARDS)
+        .expect("save_compressed_sharded");
+    compressed.save_compressed(&mono_path, Some(PLAN)).expect("save_compressed");
+    let st_shard = bench(
+        || {
+            std::hint::black_box(
+                Model::load_stage_range(&sharded_path, 0..n_stages, false).expect("shard load"),
+            );
+        },
+        budget,
+        200,
+    );
+    let st_mono = bench(
+        || {
+            std::hint::black_box(Model::load_compressed(&mono_path).expect("mono load"));
+        },
+        budget,
+        200,
+    );
+    println!("{}", st_shard.format(&format!("full load from {N_SHARDS}-shard set")));
+    println!("{}", st_mono.format("full load from monolithic checkpoint"));
+
+    // --- sharded round trip: full range, owned and mmap ---
+    let mut manifest_parity = true;
+    for mmap in [false, true] {
+        let (full, info) =
+            Model::load_stage_range(&sharded_path, 0..n_stages, mmap).expect("full range");
+        let ok = full.greedy_decode(&prompt, gen_len) == want
+            && full.resident_weight_bytes() + full.mapped_weight_bytes()
+                == compressed.resident_weight_bytes();
+        println!(
+            "sharded full reload (source '{}'): {}",
+            info.source,
+            if ok { "token-identical, bytes equal" } else { "DIVERGED" }
+        );
+        manifest_parity &= ok;
+    }
+
+    // --- stage partials: byte partition + the head's share ---
+    let (head, _) = Model::load_stage_range(&sharded_path, 0..split, false).expect("head range");
+    let (tail, _) =
+        Model::load_stage_range(&sharded_path, split..n_stages, false).expect("tail range");
+    let full_bytes = compressed.resident_weight_bytes();
+    let (head_bytes, tail_bytes) = (head.resident_weight_bytes(), tail.resident_weight_bytes());
+    let partition_exact = head_bytes + tail_bytes == full_bytes;
+    let stage0_ratio = head_bytes as f64 / full_bytes as f64;
+    println!(
+        "partials (split {split}/{n_stages}): head {head_bytes} B ({stage0_ratio:.3}x) + \
+         tail {tail_bytes} B = full {full_bytes} B partition {}",
+        if partition_exact { "exact" } else { "BROKEN" }
+    );
+
+    // --- loopback pipeline: tail thread, head thread, one client ---
+    let (tail_tx, tail_rx) = mpsc::channel();
+    let tail_model = Arc::new(tail);
+    let tail_t = std::thread::spawn(move || {
+        serve_pipeline_tail(tail_model, "127.0.0.1:0", move |a| {
+            tail_tx.send(a).unwrap();
+        })
+    });
+    let tail_addr = tail_rx.recv().expect("tail ready");
+    let (head_tx, head_rx) = mpsc::channel();
+    let head_model = Arc::new(head);
+    let next = tail_addr.to_string();
+    let head_t = std::thread::spawn(move || {
+        serve_pipeline_head(
+            head_model,
+            "127.0.0.1:0",
+            &next,
+            BatchPolicy::default(),
+            Json::obj(),
+            move |a| {
+                head_tx.send(a).unwrap();
+            },
+        )
+    });
+    let head_addr = head_rx.recv().expect("head ready");
+    let mut c = Client::connect(head_addr).expect("connect");
+    let served = c.request(&prompt, gen_len).expect("pipeline request").tokens;
+    let pipeline_parity = served == want;
+    println!(
+        "pipeline decode vs single-host greedy: {}",
+        if pipeline_parity { "token-identical" } else { "DIVERGED" }
+    );
+
+    // --- throughput: pipeline rounds (loopback TCP) vs in-process decode ---
+    let iters = if tiny { 4 } else { 8 };
+    let t = Timer::start();
+    for _ in 0..iters {
+        c.request(&prompt, gen_len).expect("pipeline request");
+    }
+    let pipeline_tok_s = (iters * gen_len) as f64 / t.secs();
+    let st_single = bench(
+        || {
+            std::hint::black_box(compressed.greedy_decode(&prompt, gen_len));
+        },
+        budget,
+        500,
+    );
+    let single_tok_s = gen_len as f64 / st_single.median_s;
+    println!(
+        "decode tok/s ({}): pipeline {pipeline_tok_s:.0} | single-host {single_tok_s:.0}",
+        cfg.name
+    );
+    c.shutdown().expect("shutdown");
+    head_t.join().expect("head thread").expect("head serve");
+    tail_t.join().expect("tail thread").expect("tail serve");
+    std::fs::remove_file(&mono_path).ok();
+    std::fs::remove_file(&sharded_path).ok();
+    for i in 0..N_SHARDS {
+        let stem = sharded_path.file_stem().unwrap_or_default().to_string_lossy().into_owned();
+        std::fs::remove_file(dir.join(format!("{stem}.shard{i}.cpt2"))).ok();
+    }
+
+    // --- record the trajectory point ---
+    let mut j = Json::obj();
+    j.set("bench", "shard".into())
+        .set("model", cfg.name.as_str().into())
+        .set("plan", PLAN.into())
+        .set("prompt_len", prompt_len.into())
+        .set("gen_len", gen_len.into())
+        .set("n_shards", N_SHARDS.into())
+        .set("shard_load_s", st_shard.median_s.into())
+        .set("mono_load_s", st_mono.median_s.into())
+        .set("stage0_resident_ratio", stage0_ratio.into())
+        .set("decode_tok_s_pipeline", pipeline_tok_s.into())
+        .set("decode_tok_s_single", single_tok_s.into())
+        .set("shard_manifest_parity", Json::Bool(manifest_parity))
+        .set("shard_partition_exact", Json::Bool(partition_exact))
+        .set("pipeline_parity", Json::Bool(pipeline_parity));
+    let out = std::env::var("BENCH_SHARD_OUT").unwrap_or_else(|_| "BENCH_shard.json".into());
+    match std::fs::write(&out, j.to_string() + "\n") {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+
+    // --- hard gates (after the JSON so CI still records the numbers) ---
+    assert!(manifest_parity, "sharded full reload diverged from the in-memory model");
+    assert!(
+        partition_exact,
+        "head + tail partials must partition the full model's resident bytes \
+         ({head_bytes} + {tail_bytes} != {full_bytes})"
+    );
+    assert!(pipeline_parity, "pipeline decode diverged from single-host greedy decode");
+}

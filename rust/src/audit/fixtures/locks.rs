@@ -3,7 +3,7 @@
 // self-test.
 // audit:as(rust/src/serve/state.rs)
 
-use std::sync::Mutex;
+use std::sync::{Mutex, RwLock};
 
 pub fn poisoned_read(m: &Mutex<u64>) -> u64 {
     *m.lock().unwrap() // audit:expect(L4)
@@ -19,4 +19,20 @@ pub fn plain_unwrap(o: Option<u64>) -> u64 {
 
 pub fn recovered(m: &Mutex<u64>) -> u64 {
     *m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+pub fn rw_read_unwrapped(l: &RwLock<u64>) -> u64 {
+    *l.read().unwrap() // audit:expect(L4)
+}
+
+pub fn rw_write_unwrapped(l: &RwLock<u64>) {
+    *l.write().expect("not poisoned") += 1; // audit:expect(L4)
+}
+
+pub fn rw_recovered(l: &RwLock<u64>) -> u64 {
+    *l.read().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+pub fn io_write_with_arg(w: &mut dyn std::io::Write, b: &[u8]) -> usize {
+    w.write(b).unwrap() // audit:expect(L3)
 }

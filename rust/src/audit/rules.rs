@@ -19,8 +19,9 @@
 //! - **L3** — no `.unwrap()` / `.expect(` / `panic!` / `unreachable!` /
 //!   `todo!` / `unimplemented!` / `[idx]` indexing in the serve request
 //!   path (`serve/`, `model/decode.rs`; indexing in `serve/` only).
-//! - **L4** — `.lock()` results must not be unwrapped in `serve/`; use the
-//!   poison-recovering `serve::lock_recover` helper.
+//! - **L4** — `.lock()` / `.read()` / `.write()` results must not be
+//!   unwrapped in `serve/`; use the poison-recovering `serve::lock_recover`
+//!   / `read_recover` / `write_recover` helpers.
 //! - **L5** — public constructors in `linalg/` and `compress/sparse.rs`
 //!   that take raw buffers or lengths (`Vec<`, `&[`, raw pointers,
 //!   `WeightBuf`, `Mapping`) must return `Result`.
@@ -69,8 +70,8 @@ const HINT_L3_PANIC: &str =
     "return a structured error to the client, or annotate `// audit:allow(panic): <reason>`";
 const HINT_L3_INDEX: &str =
     "use .get()/.get_mut() with error handling, or annotate `// audit:allow(index): <reason>`";
-const HINT_L4: &str =
-    "use serve::lock_recover / wait_timeout_recover (PoisonError::into_inner) on lock results";
+const HINT_L4: &str = "use serve::lock_recover / read_recover / write_recover / \
+     wait_timeout_recover (PoisonError::into_inner) on lock results";
 const HINT_L5: &str =
     "return anyhow::Result and validate buffer lengths, or annotate `// audit:allow(ctor): <reason>`";
 
@@ -278,29 +279,38 @@ pub fn scan_file(path: &str, src: &str, report: &mut AuditReport) {
             });
         }
 
-        // L4: `.lock()` immediately unwrapped. Runs before L3 and records
-        // the consumed unwrap/expect position so the same call site is not
-        // double-reported.
+        // L4: `.lock()` / `.read()` / `.write()` immediately unwrapped.
+        // Runs before L3 and records the consumed unwrap/expect position so
+        // the same call site is not double-reported. Matching the exact
+        // zero-argument call keeps `io::Read::read(buf)` /
+        // `io::Write::write(buf)` sites (which take an argument) out.
         let mut consumed: Vec<usize> = Vec::new();
         if scope.lock_linted && !in_test[idx] {
-            let mut search = 0usize;
-            while let Some(off) = code[search..].find(".lock()") {
-                let rest_start = search + off + ".lock()".len();
-                let rest = code[rest_start..].trim_start();
-                let ws = code[rest_start..].len() - rest.len();
-                if rest.starts_with(".unwrap()") || rest.starts_with(".expect(") {
-                    consumed.push(rest_start + ws + 1); // position of the word after '.'
-                    if !allows(&ann, "lock") {
-                        push(
-                            report,
-                            "L4",
-                            "lock() result unwrapped — a panicked holder poisons the mutex"
-                                .to_string(),
-                            HINT_L4,
-                        );
+            for (needle, method, what) in [
+                (".lock()", "lock", "mutex"),
+                (".read()", "read", "RwLock"),
+                (".write()", "write", "RwLock"),
+            ] {
+                let mut search = 0usize;
+                while let Some(off) = code[search..].find(needle) {
+                    let rest_start = search + off + needle.len();
+                    let rest = code[rest_start..].trim_start();
+                    let ws = code[rest_start..].len() - rest.len();
+                    if rest.starts_with(".unwrap()") || rest.starts_with(".expect(") {
+                        consumed.push(rest_start + ws + 1); // position of the word after '.'
+                        if !allows(&ann, "lock") {
+                            push(
+                                report,
+                                "L4",
+                                format!(
+                                    "{method}() result unwrapped — a panicked holder poisons the {what}"
+                                ),
+                                HINT_L4,
+                            );
+                        }
                     }
+                    search = rest_start;
                 }
-                search = rest_start;
             }
         }
 
@@ -527,6 +537,44 @@ fn f(o: Option<u8>) {
         let src = "fn lr(m: &Mutex<u8>) -> MutexGuard<'_, u8> { m.lock().unwrap_or_else(PoisonError::into_inner) }\n";
         let r = scan("rust/src/serve/mod.rs", src);
         assert!(r.violations.is_empty(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn rwlock_read_write_unwrap_fire_l4_once_each() {
+        let src = "\
+fn f(l: &std::sync::RwLock<u8>) -> u8 {
+    let v = *l.read().unwrap();
+    *l.write().expect(\"poisoned\") = v;
+    v
+}
+";
+        let r = scan("rust/src/serve/x.rs", src);
+        assert_eq!(rules_of(&r), ["L4", "L4"], "{:?}", r.violations);
+        assert!(
+            r.violations.iter().any(|v| v.msg.contains("read()"))
+                && r.violations.iter().any(|v| v.msg.contains("write()")),
+            "{:?}",
+            r.violations
+        );
+    }
+
+    #[test]
+    fn rwlock_recover_bodies_are_not_flagged() {
+        let src = "\
+fn rr<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> { l.read().unwrap_or_else(PoisonError::into_inner) }
+fn wr<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> { l.write().unwrap_or_else(PoisonError::into_inner) }
+";
+        let r = scan("rust/src/serve/mod.rs", src);
+        assert!(r.violations.is_empty(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn io_write_with_argument_is_l3_not_l4() {
+        // io::Write::write takes a buffer argument, so the zero-argument
+        // `.write()` needle must not consume its unwrap — plain L3 applies.
+        let src = "fn f(w: &mut W, b: &[u8]) { w.write(b).unwrap(); }\n";
+        let r = scan("rust/src/serve/x.rs", src);
+        assert_eq!(rules_of(&r), ["L3"], "{:?}", r.violations);
     }
 
     #[test]

@@ -6,7 +6,9 @@
 //! compot compress --model <preset> --method <m> --cr <x> [--dynamic]
 //!                 [--set k=v ...]                        method options via the registry
 //! compot compress --model <preset> --plan "compot@0.25+gptq4"
-//!                 [--save-compressed <file>]             multi-stage plan; persist as CPT2
+//!                 [--save-compressed <file> [--shards N]]  multi-stage plan; persist as CPT2
+//!                                                        (--shards: index + N stage-keyed
+//!                                                        shard files for pipeline serving)
 //! compot eval --model <preset> | --load-compressed <file>  baseline evaluation
 //! compot serve --model <preset> [--addr host:port] [--max-batch n]
 //!              [--max-wait-ms ms] [--cr x --method m | --plan p]
@@ -16,6 +18,11 @@
 //! compot serve ... --draft <file.cpt2> [--draft-k k]     speculative serving: draft
 //!                                                        proposes k tokens/round, target
 //!                                                        verifies (tiers draft|spec|full)
+//! compot serve --load-compressed <file> --stages LO..HI [--next host:port]
+//!                                                        one pipeline stage per process:
+//!                                                        the head (LO=0, --next) relays
+//!                                                        hidden rows, the tail (HI=last)
+//!                                                        samples and answers
 //! compot allocate --model <preset>                       print Algorithm-2 allocation
 //! compot info [<file>.cpt2]                              artifacts / presets, or the
 //!                                                        header-only checkpoint fast path
@@ -185,7 +192,8 @@ fn print_help() {
          usage:\n  compot table <1|2|3|4|5|6|7|8|9|10|11|12|13|14|15|18|19> [--items N] [--calib N] [--seed S]\n  \
          compot figure <3|4..12|alloc:PRESET>\n  \
          compot compress --model PRESET [--method M [--set k=v]... | --plan SPEC] --cr X [--dynamic]\n           \
-         [--save-compressed FILE.cpt2]\n  \
+         [--save-compressed FILE.cpt2 [--shards N]]\n           \
+         (--shards N: write an index + N stage-keyed shard files for pipeline serving)\n  \
          compot eval [--model PRESET | --load-compressed FILE [--mmap]]\n  \
          compot allocate --model PRESET\n  \
          compot serve --model PRESET [--addr HOST:PORT] [--max-batch N] [--max-wait-ms MS]\n              \
@@ -196,6 +204,10 @@ fn print_help() {
          (speculative serving: draft proposes K tokens per round, target verifies in one\n              \
          multi-row forward; request tiers draft | spec | full, default spec; greedy spec\n              \
          output is token-identical to full)\n  \
+         compot serve --load-compressed FILE.cpt2 --stages LO..HI [--next HOST:PORT] [--mmap]\n              \
+         (pipeline serving, one stage range per process: the head — LO=0, with --next —\n              \
+         speaks the client protocol and relays f32 hidden rows; the tail — HI=last, no\n              \
+         --next — samples and answers; token-identical to single-host serve)\n  \
          compot info [FILE.cpt2]   (with a file: header-only fast path, no payload reads)\n\n\
          plans: stages joined by '+', each 'name[@cr][,key=value]*'\n       \
          e.g. --plan \"compot@0.25,iters=20+gptq4\"  (Table 7 composition)\n\n\
@@ -277,8 +289,13 @@ fn main() -> anyhow::Result<()> {
                     "calib",
                     "seed",
                     "save-compressed",
+                    "shards",
                 ],
             )?;
+            anyhow::ensure!(
+                !flags.has("shards") || flags.has("save-compressed"),
+                "--shards splits a saved checkpoint; it needs --save-compressed"
+            );
             let preset = flags.get("model").unwrap_or("llama-micro");
             let sc = scale_from(&flags)?;
             let plan = plan_from_flags(&flags, &sc, false)?;
@@ -319,7 +336,12 @@ fn main() -> anyhow::Result<()> {
             );
             if let Some(out) = flags.get("save-compressed") {
                 let out_path = PathBuf::from(out);
-                compressed.save_compressed(&out_path, Some(&plan.describe()))?;
+                let shards = flags.get_parsed::<usize>("shards")?;
+                if let Some(n) = shards {
+                    compressed.save_compressed_sharded(&out_path, Some(&plan.describe()), n)?;
+                } else {
+                    compressed.save_compressed(&out_path, Some(&plan.describe()))?;
+                }
                 let name = out_path
                     .file_stem()
                     .map(|s| s.to_string_lossy().into_owned())
@@ -331,13 +353,22 @@ fn main() -> anyhow::Result<()> {
                         path: out_path.clone(),
                         format: "cpt2".to_string(),
                         plan: Some(plan.describe()),
+                        shards,
                     },
                 )?;
                 let bytes = std::fs::metadata(&out_path).map(|m| m.len()).unwrap_or(0);
-                println!(
-                    "saved CPT2 checkpoint {out} ({bytes} bytes; plan recorded in the \
-                     artifacts manifest) — reload with `compot serve --load-compressed {out}`"
-                );
+                match shards {
+                    Some(n) => println!(
+                        "saved sharded CPT2 checkpoint {out} (index, {bytes} bytes; {n} shard \
+                         files alongside; shard set recorded in the artifacts manifest) — serve \
+                         a stage range with `compot serve --load-compressed {out} --stages \
+                         LO..HI`"
+                    ),
+                    None => println!(
+                        "saved CPT2 checkpoint {out} ({bytes} bytes; plan recorded in the \
+                         artifacts manifest) — reload with `compot serve --load-compressed {out}`"
+                    ),
+                }
             }
         }
         "eval" => {
@@ -398,6 +429,8 @@ fn main() -> anyhow::Result<()> {
                     "mmap",
                     "draft",
                     "draft-k",
+                    "stages",
+                    "next",
                 ],
             )?;
             let addr = flags.get("addr").unwrap_or("127.0.0.1:7199");
@@ -409,6 +442,84 @@ fn main() -> anyhow::Result<()> {
             if let Some(v) = flags.get_parsed::<u64>("max-wait-ms")? {
                 policy.max_wait = std::time::Duration::from_millis(v);
             }
+            if let Some(sr) = flags.get("stages") {
+                // Pipeline serving: this process runs one stage range of a
+                // checkpoint. Compression and speculative flags belong to
+                // whole-model serving and are contradictions here.
+                let ckpt = flags.get("load-compressed").ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "--stages serves a checkpoint stage range; it needs --load-compressed \
+                         (save one with `compot compress ... --save-compressed FILE.cpt2 \
+                         [--shards N]`)"
+                    )
+                })?;
+                for f in ["cr", "plan", "method", "set", "model", "dynamic", "seed", "draft",
+                    "draft-k"]
+                {
+                    anyhow::ensure!(
+                        !flags.has(f),
+                        "--stages runs a pipeline stage of the checkpoint as-is; drop --{f}"
+                    );
+                }
+                let range = compot::serve::parse_stage_range(sr)?;
+                let (m, ck) =
+                    Model::load_stage_range(Path::new(ckpt), range.clone(), flags.has("mmap"))?;
+                let n_stages = m.cfg.n_layers;
+                let role = compot::serve::pipeline_role(&range, n_stages, flags.has("next"))?;
+                println!(
+                    "pipeline {:?} stage: stages {}..{} of {n_stages} from {ckpt} ({}; {} \
+                     resident + {} mapped weight bytes)",
+                    role,
+                    range.start,
+                    range.end,
+                    ck.source,
+                    m.resident_weight_bytes(),
+                    m.mapped_weight_bytes()
+                );
+                match role {
+                    compot::serve::PipelineRole::Head => {
+                        let next = flags.get("next").unwrap_or_default();
+                        let mut info = Json::obj();
+                        info.set("model", m.cfg.name.as_str().into());
+                        info.set("checkpoint", ckpt.into());
+                        info.set("checkpoint_format", ck.format.into());
+                        info.set(
+                            "weights_source",
+                            if ck.source == "owned" { "checkpoint" } else { ck.source }.into(),
+                        );
+                        info.set(
+                            "pipeline_stages",
+                            format!("{}..{}", range.start, range.end).as_str().into(),
+                        );
+                        if let Some(p) = ck.plan {
+                            info.set("plan", p.into());
+                        }
+                        println!(
+                            "listening on {addr}, relaying hidden rows to {next} (json-lines; \
+                             {{\"cmd\":\"shutdown\"}} winds down the whole pipeline)"
+                        );
+                        compot::serve::serve_pipeline_head(
+                            std::sync::Arc::new(m),
+                            addr,
+                            next,
+                            policy,
+                            info,
+                            |a| println!("ready on {a}"),
+                        )?;
+                    }
+                    compot::serve::PipelineRole::Tail => {
+                        println!("listening for relay frames on {addr}");
+                        compot::serve::serve_pipeline_tail(std::sync::Arc::new(m), addr, |a| {
+                            println!("ready on {a}")
+                        })?;
+                    }
+                }
+                return Ok(());
+            }
+            anyhow::ensure!(
+                !flags.has("next"),
+                "--next relays between pipeline stages; it needs --stages LO..HI"
+            );
             let mut info = Json::obj();
             let model = if let Some(ckpt) = flags.get("load-compressed") {
                 // The checkpoint *is* the compressed artifact: serving it

@@ -46,6 +46,7 @@
 //! ([`super::weights`]) and `CPT2`.
 
 use super::config::ProjKind;
+use super::shard::{self, ShardEntry, ShardManifest};
 use super::transformer::{Block, Model, Stage};
 use super::weights::TensorFile;
 use crate::compress::sparse::{ColumnSparse, QuantColumnSparse};
@@ -57,7 +58,7 @@ use crate::model::config::ModelConfig;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::io::{Read, Seek, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 pub const MAGIC: &[u8; 4] = b"CPT2";
@@ -667,53 +668,76 @@ impl Model {
         sw.add_f32("final_norm", &self.final_norm);
         let mut stages = Vec::with_capacity(self.stages.len());
         for (i, stage) in self.stages.iter().enumerate() {
-            let mut sj = Json::obj();
-            match stage {
-                Stage::Block(b) => {
-                    sj.set("kind", "block".into())
-                        .set("n_heads", b.n_heads.into())
-                        .set("n_kv_heads", b.n_kv_heads.into());
-                    sw.add_f32(&format!("stages.{i}.attn_norm"), &b.attn_norm);
-                    sw.add_f32(&format!("stages.{i}.mlp_norm"), &b.mlp_norm);
-                    let mut projs = Json::obj();
-                    for p in ProjKind::DECODER_SET {
-                        let base = format!("stages.{i}.{}", p.group());
-                        projs.set(p.group(), write_weight(&mut sw, &base, b.proj(p)));
-                    }
-                    sj.set("projections", projs);
-                }
-                Stage::Linear(t) => {
-                    sj.set("kind", "linear".into())
-                        .set("rows", t.rows().into())
-                        .set("cols", t.cols().into());
-                    sw.add_f32(&format!("stages.{i}.linear"), t.data());
-                }
-            }
-            stages.push(sj);
+            stages.push(write_stage_sections(&mut sw, i, stage));
         }
         let (records, payload) = sw.finish();
-        let mut header = Json::obj();
-        header
-            .set("version", VERSION.into())
-            .set("config", self.cfg.to_json())
-            .set("align", ALIGN.into())
-            .set("sections", Json::Arr(records))
-            .set("stages", Json::Arr(stages));
-        if let Some(p) = plan {
-            header.set("plan", p.into());
-        }
-        let header_bytes = header.to_string().into_bytes();
-        let data_start = align_up(8 + header_bytes.len(), ALIGN);
+        let mut header = base_header(&self.cfg, plan);
+        header.set("sections", Json::Arr(records)).set("stages", Json::Arr(stages));
+        write_container(path, &header, &payload)?;
+        Ok(())
+    }
 
-        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-        f.write_all(MAGIC)?;
-        f.write_all(&(header_bytes.len() as u32).to_le_bytes())?;
-        f.write_all(&header_bytes)?;
-        f.write_all(&vec![0u8; data_start - 8 - header_bytes.len()])?;
-        f.write_all(&payload)?;
-        // Flush explicitly: the drop-time flush swallows errors, and a
-        // silently truncated checkpoint (disk full) must not report Ok.
-        f.flush()?;
+    /// Serialize this model as a **sharded** CPT2 checkpoint: `n_shards`
+    /// shard files beside `path`, each a complete CPT2 container holding a
+    /// contiguous stage range (shard 0 additionally carries `embed`, the
+    /// last shard `lm_head` + `final_norm`), plus the **index** file at
+    /// `path` — a CPT2 container with an empty data region whose header
+    /// records the full stage metadata and the shard manifest
+    /// (`{id, relative path, stage range, header crc}` per shard). A
+    /// pipeline stage later pages in only its shards via
+    /// [`MappedCheckpoint::load_stage_range`], while `compot info` on the
+    /// index stays header-only and never opens a shard file.
+    pub fn save_compressed_sharded(
+        &self,
+        path: &Path,
+        plan: Option<&str>,
+        n_shards: usize,
+    ) -> anyhow::Result<()> {
+        let ranges = shard::split_ranges(self.stages.len(), n_shards)?;
+        let file_name = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .ok_or_else(|| anyhow::anyhow!("sharded save needs a utf-8 file name: {path:?}"))?;
+        let dir = path.parent().unwrap_or_else(|| Path::new("."));
+        let last = ranges.len() - 1;
+        let mut entries = Vec::with_capacity(ranges.len());
+        let mut all_stages = Vec::with_capacity(self.stages.len());
+        for (id, &(lo, hi)) in ranges.iter().enumerate() {
+            let mut sw = SectionWriter::default();
+            if id == 0 {
+                sw.add_f32("embed", self.embed.data());
+            }
+            if id == last {
+                sw.add_f32("lm_head", self.lm_head.data());
+                sw.add_f32("final_norm", &self.final_norm);
+            }
+            // Section names keep their *absolute* stage indices, so a
+            // shard's sections are exactly the subset the single-file save
+            // would have written for those stages.
+            let mut metas = Vec::with_capacity(hi - lo);
+            for i in lo..hi {
+                metas.push(write_stage_sections(&mut sw, i, &self.stages[i]));
+            }
+            let (records, payload) = sw.finish();
+            let mut header = base_header(&self.cfg, plan);
+            let mut marker = Json::obj();
+            marker.set("id", id.into()).set("lo", lo.into()).set("hi", hi.into());
+            header
+                .set("shard", marker)
+                .set("sections", Json::Arr(records))
+                .set("stages", Json::Arr(metas.clone()));
+            let rel = shard::shard_file_name(file_name, id);
+            let crc = write_container(&dir.join(&rel), &header, &payload)?;
+            entries.push(ShardEntry { id, path: rel, lo, hi, crc });
+            all_stages.extend(metas);
+        }
+        let manifest = ShardManifest { entries };
+        let mut header = base_header(&self.cfg, plan);
+        header
+            .set("shards", manifest.to_json())
+            .set("sections", Json::Arr(Vec::new()))
+            .set("stages", Json::Arr(all_stages));
+        write_container(path, &header, &[])?;
         Ok(())
     }
 
@@ -725,6 +749,13 @@ impl Model {
         let mut f = std::fs::File::open(path)?;
         let (header, data_start, file_len) = read_header(&mut f, path)?;
         let (cfg, plan) = validate_header(&header)?;
+        let n = stage_count(&header);
+        if let Some(manifest) = ShardManifest::from_header(&header, n)? {
+            // Sharded index: the real sections live in the shard files.
+            drop(f);
+            let dir = path.parent().unwrap_or_else(|| Path::new("."));
+            return read_model_sharded(dir, &cfg, &header, &manifest, &(0..n), plan, false);
+        }
         // Seek past the alignment pad, then pull the data region. The region
         // is bounded by the real file size, so section bounds checked
         // against its length are checked against reality.
@@ -733,6 +764,39 @@ impl Model {
         f.read_to_end(&mut data)?;
         let sr = SectionReader::new(&header, Payload::Copied(data))?;
         let model = read_model(cfg, &header, &sr)?;
+        Ok((model, CheckpointInfo { format: "cpt2", plan, source: "owned" }))
+    }
+
+    /// Load only the stages in `range` as a **partial** model — the storage
+    /// half of pipeline serving. On a sharded checkpoint, only the shards
+    /// intersecting the range are opened (a stage process never pages
+    /// another stage's weights); on a monolithic checkpoint the same subset
+    /// of sections is materialized from the single file. `embed` is loaded
+    /// only when `range` starts at stage 0, `lm_head`/`final_norm` only
+    /// when it ends at the last stage; a partial model must run through the
+    /// hidden-state entry points, not token-level decode.
+    pub fn load_stage_range(
+        path: &Path,
+        range: std::ops::Range<usize>,
+        mmap: bool,
+    ) -> anyhow::Result<(Model, CheckpointInfo)> {
+        if mmap {
+            return MappedCheckpoint::open(path)?.load_stage_range(range);
+        }
+        let mut f = std::fs::File::open(path)?;
+        let (header, data_start, file_len) = read_header(&mut f, path)?;
+        let (cfg, plan) = validate_header(&header)?;
+        let n = stage_count(&header);
+        if let Some(manifest) = ShardManifest::from_header(&header, n)? {
+            drop(f);
+            let dir = path.parent().unwrap_or_else(|| Path::new("."));
+            return read_model_sharded(dir, &cfg, &header, &manifest, &range, plan, false);
+        }
+        f.seek(std::io::SeekFrom::Start(data_start))?;
+        let mut data = Vec::with_capacity((file_len - data_start) as usize);
+        f.read_to_end(&mut data)?;
+        let sr = SectionReader::new(&header, Payload::Copied(data))?;
+        let model = read_model_range(&cfg, &header, &sr, &range)?;
         Ok((model, CheckpointInfo { format: "cpt2", plan, source: "owned" }))
     }
 
@@ -808,10 +872,82 @@ impl Model {
     }
 }
 
+/// Serialize one stage's sections (under absolute stage index `i`) and
+/// return its header metadata — shared verbatim by the single-file and the
+/// sharded save so a shard's sections cannot drift from the monolith's.
+fn write_stage_sections(sw: &mut SectionWriter, i: usize, stage: &Stage) -> Json {
+    let mut sj = Json::obj();
+    match stage {
+        Stage::Block(b) => {
+            sj.set("kind", "block".into())
+                .set("n_heads", b.n_heads.into())
+                .set("n_kv_heads", b.n_kv_heads.into());
+            sw.add_f32(&format!("stages.{i}.attn_norm"), &b.attn_norm);
+            sw.add_f32(&format!("stages.{i}.mlp_norm"), &b.mlp_norm);
+            let mut projs = Json::obj();
+            for p in ProjKind::DECODER_SET {
+                let base = format!("stages.{i}.{}", p.group());
+                projs.set(p.group(), write_weight(sw, &base, b.proj(p)));
+            }
+            sj.set("projections", projs);
+        }
+        Stage::Linear(t) => {
+            sj.set("kind", "linear".into())
+                .set("rows", t.rows().into())
+                .set("cols", t.cols().into());
+            sw.add_f32(&format!("stages.{i}.linear"), t.data());
+        }
+    }
+    sj
+}
+
+/// Header fields common to every container this module writes (single-file
+/// checkpoints, shard files, and the sharded index).
+fn base_header(cfg: &ModelConfig, plan: Option<&str>) -> Json {
+    let mut header = Json::obj();
+    header
+        .set("version", VERSION.into())
+        .set("config", cfg.to_json())
+        .set("align", ALIGN.into());
+    if let Some(p) = plan {
+        header.set("plan", p.into());
+    }
+    header
+}
+
+/// Write one CPT2 container (`MAGIC | header | pad | payload`) and return
+/// the CRC32 of the header JSON bytes — what the sharded index records per
+/// shard so a replaced or corrupted shard header is caught at load time.
+fn write_container(path: &Path, header: &Json, payload: &[u8]) -> anyhow::Result<u32> {
+    let header_bytes = header.to_string().into_bytes();
+    let crc = crc32(&header_bytes);
+    let data_start = align_up(8 + header_bytes.len(), ALIGN);
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(header_bytes.len() as u32).to_le_bytes())?;
+    f.write_all(&header_bytes)?;
+    f.write_all(&vec![0u8; data_start - 8 - header_bytes.len()])?;
+    f.write_all(payload)?;
+    // Flush explicitly: the drop-time flush swallows errors, and a
+    // silently truncated checkpoint (disk full) must not report Ok.
+    f.flush()?;
+    Ok(crc)
+}
+
 /// Read and bound the `CPT2` preamble: magic, header JSON, aligned
 /// data-region start. Touches only the header bytes — the payload stays
 /// unread (and, for mapped opens, unpaged).
 fn read_header(f: &mut std::fs::File, path: &Path) -> anyhow::Result<(Json, u64, u64)> {
+    let (header, _, data_start, file_len) = read_header_raw(f, path)?;
+    Ok((header, data_start, file_len))
+}
+
+/// [`read_header`] plus the raw header JSON bytes — the sharded loader
+/// checksums them against the CRC the index manifest recorded per shard.
+fn read_header_raw(
+    f: &mut std::fs::File,
+    path: &Path,
+) -> anyhow::Result<(Json, Vec<u8>, u64, u64)> {
     let file_len = f.metadata()?.len();
     let mut magic = [0u8; 4];
     f.read_exact(&mut magic)?;
@@ -831,7 +967,29 @@ fn read_header(f: &mut std::fs::File, path: &Path) -> anyhow::Result<(Json, u64,
         .map_err(|e| anyhow::anyhow!("bad checkpoint header json: {e}"))?;
     let data_start = align_up(8 + hlen as usize, ALIGN) as u64;
     anyhow::ensure!(data_start <= file_len, "truncated checkpoint (no data region)");
-    Ok((header, data_start, file_len))
+    Ok((header, hbytes, data_start, file_len))
+}
+
+/// Number of stages the header describes — also the coverage target a
+/// shard manifest is validated against.
+fn stage_count(header: &Json) -> usize {
+    header.get("stages").and_then(Json::as_arr).map(<[Json]>::len).unwrap_or(0)
+}
+
+fn check_stage_range(range: &std::ops::Range<usize>, n: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        range.start < range.end,
+        "empty stage range {}..{}",
+        range.start,
+        range.end
+    );
+    anyhow::ensure!(
+        range.end <= n,
+        "stage range {}..{} is outside the checkpoint's {n} stages",
+        range.start,
+        range.end
+    );
+    Ok(())
 }
 
 /// Version/config/geometry checks shared by both load paths.
@@ -871,66 +1029,236 @@ fn read_model(cfg: ModelConfig, header: &Json, sr: &SectionReader) -> anyhow::Re
         .iter()
         .enumerate()
     {
-        match sj.get("kind").and_then(Json::as_str) {
-            Some("block") => {
-                let n_heads = sj
-                    .get("n_heads")
-                    .and_then(Json::as_usize)
-                    .ok_or_else(|| anyhow::anyhow!("stage {i}: missing n_heads"))?;
-                let n_kv_heads = sj
-                    .get("n_kv_heads")
-                    .and_then(Json::as_usize)
-                    .ok_or_else(|| anyhow::anyhow!("stage {i}: missing n_kv_heads"))?;
-                anyhow::ensure!(
-                    n_kv_heads >= 1 && n_heads >= n_kv_heads && n_heads % n_kv_heads == 0,
-                    "stage {i}: invalid head counts {n_heads}/{n_kv_heads}"
-                );
-                let projs = sj
-                    .get("projections")
-                    .ok_or_else(|| anyhow::anyhow!("stage {i}: missing projections"))?;
-                let get = |p: ProjKind| -> anyhow::Result<LinearWeight> {
-                    let base = format!("stages.{i}.{}", p.group());
-                    let meta = projs.get(p.group()).ok_or_else(|| {
-                        anyhow::anyhow!("stage {i}: missing projection '{}'", p.group())
-                    })?;
-                    read_weight(sr, &base, meta)
-                };
-                let block = Block {
-                    attn_norm: sr.vec_f32(&format!("stages.{i}.attn_norm"), d)?,
-                    q: get(ProjKind::Q)?,
-                    k: get(ProjKind::K)?,
-                    v: get(ProjKind::V)?,
-                    o: get(ProjKind::O)?,
-                    mlp_norm: sr.vec_f32(&format!("stages.{i}.mlp_norm"), d)?,
-                    gate: get(ProjKind::Gate)?,
-                    up: get(ProjKind::Up)?,
-                    down: get(ProjKind::Down)?,
-                    n_heads,
-                    n_kv_heads,
-                };
-                validate_block_shapes(i, &block, d, cfg.head_dim())?;
-                stages.push(Stage::Block(block));
-            }
-            Some("linear") => {
-                let rows = sj
-                    .get("rows")
-                    .and_then(Json::as_usize)
-                    .ok_or_else(|| anyhow::anyhow!("stage {i}: missing rows"))?;
-                let cols = sj
-                    .get("cols")
-                    .and_then(Json::as_usize)
-                    .ok_or_else(|| anyhow::anyhow!("stage {i}: missing cols"))?;
-                anyhow::ensure!(
-                    rows == d && cols == d,
-                    "stage {i}: linear shape {rows}x{cols} does not preserve the \
-                     d={d} residual stream"
-                );
-                stages.push(Stage::Linear(sr.mat(&format!("stages.{i}.linear"), rows, cols)?));
-            }
-            other => anyhow::bail!("stage {i}: unknown stage kind {other:?}"),
-        }
+        stages.push(read_stage(i, sj, sr, d, cfg.head_dim())?);
     }
     Ok(Model { cfg, embed, stages, final_norm, lm_head })
+}
+
+/// Reconstruct one stage from its metadata + sections. `i` is the
+/// *absolute* stage index — it names the sections (`stages.{i}.*`) and the
+/// errors, whether the sections live in a monolithic checkpoint or in the
+/// shard that owns stage `i`.
+fn read_stage(
+    i: usize,
+    sj: &Json,
+    sr: &SectionReader,
+    d: usize,
+    head_dim: usize,
+) -> anyhow::Result<Stage> {
+    match sj.get("kind").and_then(Json::as_str) {
+        Some("block") => {
+            let n_heads = sj
+                .get("n_heads")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("stage {i}: missing n_heads"))?;
+            let n_kv_heads = sj
+                .get("n_kv_heads")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("stage {i}: missing n_kv_heads"))?;
+            anyhow::ensure!(
+                n_kv_heads >= 1 && n_heads >= n_kv_heads && n_heads % n_kv_heads == 0,
+                "stage {i}: invalid head counts {n_heads}/{n_kv_heads}"
+            );
+            let projs = sj
+                .get("projections")
+                .ok_or_else(|| anyhow::anyhow!("stage {i}: missing projections"))?;
+            let get = |p: ProjKind| -> anyhow::Result<LinearWeight> {
+                let base = format!("stages.{i}.{}", p.group());
+                let meta = projs.get(p.group()).ok_or_else(|| {
+                    anyhow::anyhow!("stage {i}: missing projection '{}'", p.group())
+                })?;
+                read_weight(sr, &base, meta)
+            };
+            let block = Block {
+                attn_norm: sr.vec_f32(&format!("stages.{i}.attn_norm"), d)?,
+                q: get(ProjKind::Q)?,
+                k: get(ProjKind::K)?,
+                v: get(ProjKind::V)?,
+                o: get(ProjKind::O)?,
+                mlp_norm: sr.vec_f32(&format!("stages.{i}.mlp_norm"), d)?,
+                gate: get(ProjKind::Gate)?,
+                up: get(ProjKind::Up)?,
+                down: get(ProjKind::Down)?,
+                n_heads,
+                n_kv_heads,
+            };
+            validate_block_shapes(i, &block, d, head_dim)?;
+            Ok(Stage::Block(block))
+        }
+        Some("linear") => {
+            let rows = sj
+                .get("rows")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("stage {i}: missing rows"))?;
+            let cols = sj
+                .get("cols")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("stage {i}: missing cols"))?;
+            anyhow::ensure!(
+                rows == d && cols == d,
+                "stage {i}: linear shape {rows}x{cols} does not preserve the \
+                 d={d} residual stream"
+            );
+            Ok(Stage::Linear(sr.mat(&format!("stages.{i}.linear"), rows, cols)?))
+        }
+        other => anyhow::bail!("stage {i}: unknown stage kind {other:?}"),
+    }
+}
+
+/// Build a (possibly partial) model for `range` out of one monolithic
+/// section reader. Stages outside the range are skipped entirely; `embed`
+/// is read only when the range starts at stage 0 (the pipeline head embeds
+/// tokens), `lm_head`/`final_norm` only when it ends at the last stage (the
+/// pipeline tail samples). The absent ends are empty buffers — partial
+/// models run only through the hidden-state entry points
+/// ([`Model::forward_hidden_cached`] and friends), never through
+/// token-level decode.
+fn read_model_range(
+    cfg: &ModelConfig,
+    header: &Json,
+    sr: &SectionReader,
+    range: &std::ops::Range<usize>,
+) -> anyhow::Result<Model> {
+    let stages_meta = header
+        .get("stages")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("checkpoint header has no 'stages' array"))?;
+    check_stage_range(range, stages_meta.len())?;
+    let d = cfg.d_model;
+    let embed =
+        if range.start == 0 { sr.mat("embed", cfg.vocab, d)? } else { Mat::zeros(0, d) };
+    let (lm_head, final_norm) = if range.end == stages_meta.len() {
+        (sr.mat("lm_head", d, cfg.vocab)?, sr.vec_f32("final_norm", d)?)
+    } else {
+        (Mat::zeros(0, 0), Vec::new())
+    };
+    let mut stages = Vec::with_capacity(range.len());
+    for i in range.clone() {
+        stages.push(read_stage(i, &stages_meta[i], sr, d, cfg.head_dim())?);
+    }
+    Ok(Model { cfg: cfg.clone(), embed, stages, final_norm, lm_head })
+}
+
+/// Open one shard file for loading: verify its header CRC against the
+/// manifest, its config against the index, and its recorded stage range
+/// against the manifest entry, then hand back a section reader over its
+/// payload (`mmap = false` copies the data region; `true` maps it). The
+/// bool reports whether the mapping is a true mmap.
+fn open_shard_reader(
+    dir: &Path,
+    cfg: &ModelConfig,
+    e: &ShardEntry,
+    mmap: bool,
+) -> anyhow::Result<(SectionReader, bool)> {
+    let path = dir.join(&e.path);
+    let mut f = std::fs::File::open(&path).map_err(|err| {
+        anyhow::anyhow!("shard {}: cannot open {path:?}: {err}", e.id)
+    })?;
+    let (header, hbytes, data_start, file_len) = read_header_raw(&mut f, &path)?;
+    let got = crc32(&hbytes);
+    anyhow::ensure!(
+        got == e.crc,
+        "shard {}: header crc mismatch (manifest {:#010x}, file {got:#010x}) — \
+         shard replaced or corrupted",
+        e.id,
+        e.crc
+    );
+    let (shard_cfg, _) = validate_header(&header)?;
+    anyhow::ensure!(
+        shard_cfg == *cfg,
+        "shard {}: config '{}' does not match the index config '{}'",
+        e.id,
+        shard_cfg.name,
+        cfg.name
+    );
+    let marker = header
+        .get("shard")
+        .ok_or_else(|| anyhow::anyhow!("shard {}: {path:?} is not a shard file", e.id))?;
+    let field = |k: &str| marker.get(k).and_then(Json::as_usize);
+    anyhow::ensure!(
+        field("id") == Some(e.id) && field("lo") == Some(e.lo) && field("hi") == Some(e.hi),
+        "shard {}: file records id {:?} stages {:?}..{:?}, manifest says {}..{}",
+        e.id,
+        field("id"),
+        field("lo"),
+        field("hi"),
+        e.lo,
+        e.hi
+    );
+    let (payload, is_mmap) = if mmap {
+        let map = Mapping::open(&path)?;
+        anyhow::ensure!(
+            data_start as usize <= map.len(),
+            "shard {}: truncated while opening (data region past mapped {} B)",
+            e.id,
+            map.len()
+        );
+        let is_mmap = map.is_mmap();
+        (Payload::Mapped { map, start: data_start as usize }, is_mmap)
+    } else {
+        f.seek(std::io::SeekFrom::Start(data_start))?;
+        let mut data = Vec::with_capacity((file_len - data_start) as usize);
+        f.read_to_end(&mut data)?;
+        (Payload::Copied(data), false)
+    };
+    Ok((SectionReader::new(&header, payload)?, is_mmap))
+}
+
+/// Assemble a (possibly partial) model for `range` from the shards that
+/// intersect it. Shards outside the range are never opened — a stage-range
+/// process touches only its own files — and every opened shard is verified
+/// (header CRC, config, recorded range) before any section materializes.
+fn read_model_sharded(
+    dir: &Path,
+    cfg: &ModelConfig,
+    index_header: &Json,
+    manifest: &ShardManifest,
+    range: &std::ops::Range<usize>,
+    plan: Option<String>,
+    mmap: bool,
+) -> anyhow::Result<(Model, CheckpointInfo)> {
+    let stages_meta = index_header
+        .get("stages")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("sharded index has no 'stages' array"))?;
+    let n = stages_meta.len();
+    check_stage_range(range, n)?;
+    let d = cfg.d_model;
+    let last_id = manifest.entries.len() - 1;
+    let mut embed = None;
+    let mut lm_head = None;
+    let mut final_norm = None;
+    let mut stages = Vec::with_capacity(range.len());
+    let mut all_mmap = true;
+    for e in manifest.entries_for(range.start, range.end) {
+        let (sr, is_mmap) = open_shard_reader(dir, cfg, e, mmap)?;
+        all_mmap &= is_mmap;
+        if e.id == 0 && range.start == 0 {
+            embed = Some(sr.mat("embed", cfg.vocab, d)?);
+        }
+        if e.id == last_id && range.end == n {
+            lm_head = Some(sr.mat("lm_head", d, cfg.vocab)?);
+            final_norm = Some(sr.vec_f32("final_norm", d)?);
+        }
+        for i in e.lo.max(range.start)..e.hi.min(range.end) {
+            stages.push(read_stage(i, &stages_meta[i], &sr, d, cfg.head_dim())?);
+        }
+    }
+    let model = Model {
+        cfg: cfg.clone(),
+        embed: embed.unwrap_or_else(|| Mat::zeros(0, d)),
+        stages,
+        final_norm: final_norm.unwrap_or_default(),
+        lm_head: lm_head.unwrap_or_else(|| Mat::zeros(0, 0)),
+    };
+    let source = if !mmap {
+        "owned"
+    } else if all_mmap {
+        "mmap"
+    } else {
+        "mmap-fallback"
+    };
+    Ok((model, CheckpointInfo { format: "cpt2", plan, source }))
 }
 
 // ---------------------------------------------------------------------------
@@ -950,17 +1278,26 @@ pub struct MappedCheckpoint {
     data_start: usize,
     cfg: ModelConfig,
     plan: Option<String>,
+    /// Parsed shard manifest when this is a sharded **index** file. The
+    /// shard files themselves are *not* opened here — their mappings are
+    /// created (and their header CRCs verified) only when a load asks for
+    /// stages they hold, so `open` + `compot info` stay index-only.
+    shards: Option<ShardManifest>,
+    /// Directory shard paths resolve against (the index file's parent).
+    dir: PathBuf,
 }
 
 impl MappedCheckpoint {
     /// Map the file and validate the header (magic, version, config
-    /// geometry, data-region bounds). No section payload is read or
-    /// CRC-checked here.
+    /// geometry, data-region bounds; for a sharded index, also the
+    /// manifest's gap/overlap-free stage coverage). No section payload is
+    /// read or CRC-checked here, and no shard file is touched.
     pub fn open(path: &Path) -> anyhow::Result<MappedCheckpoint> {
         let mut f = std::fs::File::open(path)?;
         let (header, data_start, _) = read_header(&mut f, path)?;
         drop(f);
         let (cfg, plan) = validate_header(&header)?;
+        let shards = ShardManifest::from_header(&header, stage_count(&header))?;
         let map = Mapping::open(path)?;
         // The mapping is taken after the header read; guard against the file
         // shrinking in between (the section table is bounds-checked against
@@ -970,7 +1307,16 @@ impl MappedCheckpoint {
             "checkpoint truncated while opening (data region past mapped {} B)",
             map.len()
         );
-        Ok(MappedCheckpoint { map, header, data_start: data_start as usize, cfg, plan })
+        let dir = path.parent().unwrap_or_else(|| Path::new(".")).to_path_buf();
+        Ok(MappedCheckpoint {
+            map,
+            header,
+            data_start: data_start as usize,
+            cfg,
+            plan,
+            shards,
+            dir,
+        })
     }
 
     /// Model config recorded in the header.
@@ -995,11 +1341,61 @@ impl MappedCheckpoint {
         self.map.is_mmap()
     }
 
+    /// The shard manifest, when this checkpoint is a sharded index.
+    pub fn manifest(&self) -> Option<&ShardManifest> {
+        self.shards.as_ref()
+    }
+
+    /// Whether this checkpoint is a sharded index rather than a monolith.
+    pub fn is_sharded(&self) -> bool {
+        self.shards.is_some()
+    }
+
+    /// Load only the stages in `range` as a partial model (see
+    /// [`Model::load_stage_range`]). On a sharded index, only the
+    /// intersecting shards are mapped.
+    pub fn load_stage_range(
+        &self,
+        range: std::ops::Range<usize>,
+    ) -> anyhow::Result<(Model, CheckpointInfo)> {
+        if let Some(manifest) = &self.shards {
+            return read_model_sharded(
+                &self.dir,
+                &self.cfg,
+                &self.header,
+                manifest,
+                &range,
+                self.plan.clone(),
+                true,
+            );
+        }
+        let sr = SectionReader::new(
+            &self.header,
+            Payload::Mapped { map: self.map.clone(), start: self.data_start },
+        )?;
+        let model = read_model_range(&self.cfg, &self.header, &sr, &range)?;
+        let source = if self.map.is_mmap() { "mmap" } else { "mmap-fallback" };
+        Ok((model, CheckpointInfo { format: "cpt2", plan: self.plan.clone(), source }))
+    }
+
     /// Construct the model with every weight buffer pointing into the
     /// mapping. Each section's CRC is verified (lazily, here) before its
     /// view is handed out; reconstruction goes through the same fallible
-    /// constructors as the copying loader.
+    /// constructors as the copying loader. On a sharded index, every shard
+    /// is mapped and the full model assembled across them.
     pub fn load_model(&self) -> anyhow::Result<(Model, CheckpointInfo)> {
+        if let Some(manifest) = &self.shards {
+            let n = stage_count(&self.header);
+            return read_model_sharded(
+                &self.dir,
+                &self.cfg,
+                &self.header,
+                manifest,
+                &(0..n),
+                self.plan.clone(),
+                true,
+            );
+        }
         let sr = SectionReader::new(
             &self.header,
             Payload::Mapped { map: self.map.clone(), start: self.data_start },
@@ -1040,6 +1436,15 @@ pub fn header_summary(header: &Json) -> String {
         header.get("version").and_then(Json::as_usize).unwrap_or(0),
         header.get("plan").and_then(Json::as_str).unwrap_or("none recorded"),
     ));
+    // Sharded index: print the manifest. Still strictly header-derived —
+    // no shard file is opened, no payload byte is read.
+    if let Some(arr) = header.get("shards").and_then(Json::as_arr) {
+        out.push_str(&format!("sharded index: {} shards\n", arr.len()));
+        match ShardManifest::parse(arr, stage_count(header)) {
+            Ok(m) => out.push_str(&m.summary()),
+            Err(e) => out.push_str(&format!("(invalid shard manifest: {e})\n")),
+        }
+    }
     let Some(stages) = header.get("stages").and_then(Json::as_arr) else {
         out.push_str("(no stages array)\n");
         return out;
@@ -1625,5 +2030,201 @@ mod tests {
         // IEEE CRC32 of "123456789" is the classic check value.
         assert_eq!(crc32(b"123456789"), 0xcbf43926);
         assert_eq!(crc32(b""), 0);
+    }
+
+    // -----------------------------------------------------------------------
+    // Sharded checkpoints.
+    // -----------------------------------------------------------------------
+
+    fn assert_stages_eq(a: &[Stage], b: &[Stage]) {
+        assert_eq!(a.len(), b.len());
+        for (sa, sb) in a.iter().zip(b.iter()) {
+            match (sa, sb) {
+                (Stage::Block(ba), Stage::Block(bb)) => {
+                    assert_eq!(ba.attn_norm, bb.attn_norm);
+                    assert_eq!(ba.mlp_norm, bb.mlp_norm);
+                    for p in ProjKind::DECODER_SET {
+                        assert_eq!(ba.proj(p), bb.proj(p), "{p:?}");
+                    }
+                }
+                (Stage::Linear(ta), Stage::Linear(tb)) => assert_eq!(ta, tb),
+                _ => panic!("stage kind mismatch"),
+            }
+        }
+    }
+
+    /// Overwrite every byte of a container's data region, leaving the
+    /// header intact.
+    fn corrupt_payload(path: &Path) {
+        let mut bytes = std::fs::read(path).unwrap();
+        let hlen = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]) as usize;
+        let data_start = (8 + hlen).div_ceil(ALIGN) * ALIGN;
+        assert!(data_start < bytes.len(), "no payload to corrupt in {path:?}");
+        for b in bytes[data_start..].iter_mut() {
+            *b = 0xaa;
+        }
+        std::fs::write(path, &bytes).unwrap();
+    }
+
+    fn rm_sharded(name: &str) {
+        for f in
+            [format!("{name}.cpt2"), format!("{name}.shard0.cpt2"), format!("{name}.shard1.cpt2")]
+        {
+            std::fs::remove_file(tmp(&f)).ok();
+        }
+    }
+
+    #[test]
+    fn sharded_save_roundtrips_bit_identically() {
+        for (spec, name) in [("rtn4", "sh_quant"), ("compot@0.25+gptq4", "sh_qfact")] {
+            let m = compressed(spec);
+            let path = tmp(&format!("{name}.cpt2"));
+            m.save_compressed_sharded(&path, Some(spec), 2).unwrap();
+            assert!(tmp(&format!("{name}.shard0.cpt2")).exists());
+            assert!(tmp(&format!("{name}.shard1.cpt2")).exists());
+            // owned full load across shards is bit-identical (residency
+            // included: every buffer is copied, exactly like the monolith)
+            let (owned, oinfo) = Model::load_compressed(&path).unwrap();
+            assert_eq!(oinfo.source, "owned", "{spec}");
+            assert_eq!(oinfo.plan.as_deref(), Some(spec), "{spec}");
+            assert_identical(&m, &owned);
+            // mapped full load: one mapping per shard, same weights
+            let ck = MappedCheckpoint::open(&path).unwrap();
+            assert!(ck.is_sharded());
+            assert_eq!(ck.manifest().unwrap().entries.len(), 2);
+            let (mapped, minfo) = ck.load_model().unwrap();
+            assert!(minfo.source.starts_with("mmap"), "{spec}: {}", minfo.source);
+            assert_same_weights(&owned, &mapped);
+            rm_sharded(name);
+        }
+        // the dense (uncompressed) model shards too
+        let m = tiny();
+        let path = tmp("sh_dense.cpt2");
+        m.save_compressed_sharded(&path, None, 2).unwrap();
+        let (back, _) = Model::load_compressed(&path).unwrap();
+        assert_identical(&m, &back);
+        rm_sharded("sh_dense");
+    }
+
+    #[test]
+    fn load_stage_range_builds_partial_models() {
+        let m = compressed("rtn4");
+        let path = tmp("sh_range.cpt2");
+        m.save_compressed_sharded(&path, Some("rtn4"), 2).unwrap();
+        for mmap in [false, true] {
+            // head partial: embed + its stages, no LM head
+            let (head, _) = Model::load_stage_range(&path, 0..1, mmap).unwrap();
+            assert_eq!(head.stages.len(), 1, "mmap={mmap}");
+            assert_eq!(head.embed, m.embed, "mmap={mmap}");
+            assert!(head.final_norm.is_empty(), "mmap={mmap}");
+            assert_eq!(head.lm_head.rows(), 0, "mmap={mmap}");
+            assert_stages_eq(&head.stages, &m.stages[0..1]);
+            // tail partial: its stages + final_norm/lm_head, no embed
+            let (tail, _) = Model::load_stage_range(&path, 1..2, mmap).unwrap();
+            assert_eq!(tail.embed.rows(), 0, "mmap={mmap}");
+            assert_eq!(tail.final_norm, m.final_norm, "mmap={mmap}");
+            assert_eq!(tail.lm_head, m.lm_head, "mmap={mmap}");
+            assert_stages_eq(&tail.stages, &m.stages[1..2]);
+            // the full range through the partial API is the whole model
+            let (full, _) = Model::load_stage_range(&path, 0..2, mmap).unwrap();
+            assert_same_weights(&m, &full);
+        }
+        rm_sharded("sh_range");
+        // the same partial API works on a monolithic checkpoint
+        let mono = tmp("sh_range_mono.cpt2");
+        m.save_compressed(&mono, Some("rtn4")).unwrap();
+        for mmap in [false, true] {
+            let (head, _) = Model::load_stage_range(&mono, 0..1, mmap).unwrap();
+            assert_eq!(head.embed, m.embed, "mmap={mmap}");
+            assert!(head.final_norm.is_empty(), "mmap={mmap}");
+            assert_stages_eq(&head.stages, &m.stages[0..1]);
+        }
+        std::fs::remove_file(&mono).ok();
+    }
+
+    #[test]
+    fn sharded_index_open_and_info_never_touch_a_shard_payload() {
+        // The sharded counterpart of `mapped_open_defers_crc_to_load`:
+        // corrupting a NON-head shard's entire payload must not disturb the
+        // index-only open or the header summary (the `compot info` fast
+        // path opens no shard file at all), must leave the head range
+        // loadable, and must fail exactly the loads that touch the shard.
+        let m = compressed("rtn4");
+        let path = tmp("sh_lazy.cpt2");
+        m.save_compressed_sharded(&path, Some("rtn4"), 2).unwrap();
+        corrupt_payload(&tmp("sh_lazy.shard1.cpt2"));
+        let ck = MappedCheckpoint::open(&path).expect("index open never reads a shard");
+        let summary = header_summary(ck.header());
+        assert!(summary.contains("sharded index: 2 shards"), "{summary}");
+        assert!(summary.contains("sh_lazy.shard1.cpt2"), "{summary}");
+        assert!(summary.contains("quant_dense"), "{summary}");
+        // the intact head shard still serves its stage range, owned + mmap
+        assert!(Model::load_stage_range(&path, 0..1, false).is_ok());
+        assert!(Model::load_stage_range(&path, 0..1, true).is_ok());
+        // anything touching the corrupt shard fails its lazy section CRC
+        let err = ck.load_model().unwrap_err().to_string();
+        assert!(err.contains("crc mismatch"), "{err}");
+        let err = Model::load_compressed(&path).unwrap_err().to_string();
+        assert!(err.contains("crc mismatch"), "{err}");
+        rm_sharded("sh_lazy");
+    }
+
+    #[test]
+    fn shard_loader_error_paths_are_structured() {
+        let m = compressed("rtn4");
+
+        // more shards than stages is a save-time error
+        let err = m
+            .save_compressed_sharded(&tmp("sh_err_n.cpt2"), None, 3)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("at most one shard per stage"), "{err}");
+        assert!(m.save_compressed_sharded(&tmp("sh_err_n.cpt2"), None, 0).is_err());
+
+        // missing shard file: structured error naming the shard, and the
+        // range that avoids it still loads
+        let path = tmp("sh_err_miss.cpt2");
+        m.save_compressed_sharded(&path, None, 2).unwrap();
+        std::fs::remove_file(tmp("sh_err_miss.shard1.cpt2")).unwrap();
+        let err = Model::load_compressed(&path).unwrap_err().to_string();
+        assert!(err.contains("shard 1") && err.contains("cannot open"), "{err}");
+        assert!(Model::load_stage_range(&path, 0..1, false).is_ok());
+        rm_sharded("sh_err_miss");
+
+        // overlapping ranges in the manifest fire at open, header-only
+        let path = tmp("sh_err_lap.cpt2");
+        m.save_compressed_sharded(&path, None, 2).unwrap();
+        mangle_header(&path, "\"hi\":1,\"id\":0", "\"hi\":2,\"id\":0");
+        let err = MappedCheckpoint::open(&path).unwrap_err().to_string();
+        assert!(err.contains("overlap"), "{err}");
+        let err = Model::load_compressed(&path).unwrap_err().to_string();
+        assert!(err.contains("overlap"), "{err}");
+        rm_sharded("sh_err_lap");
+
+        // coverage shortfall (gap against the stage count) fires the same way
+        let path = tmp("sh_err_gap.cpt2");
+        m.save_compressed_sharded(&path, None, 1).unwrap();
+        mangle_header(&path, "\"hi\":2,\"id\":0", "\"hi\":1,\"id\":0");
+        let err = MappedCheckpoint::open(&path).unwrap_err().to_string();
+        assert!(err.contains("covers stages"), "{err}");
+        std::fs::remove_file(tmp("sh_err_gap.shard0.cpt2")).ok();
+        std::fs::remove_file(&path).ok();
+
+        // stage ranges outside the checkpoint are rejected before any I/O
+        let path = tmp("sh_err_range.cpt2");
+        m.save_compressed_sharded(&path, None, 2).unwrap();
+        let ck = MappedCheckpoint::open(&path).unwrap();
+        let err = ck.load_stage_range(0..5).unwrap_err().to_string();
+        assert!(err.contains("outside the checkpoint's 2 stages"), "{err}");
+        let err = ck.load_stage_range(1..1).unwrap_err().to_string();
+        assert!(err.contains("empty stage range"), "{err}");
+
+        // a tampered shard header (still valid JSON) fails the manifest's
+        // header CRC, while the untouched shard keeps serving its range
+        mangle_header(&tmp("sh_err_range.shard1.cpt2"), "\"align\":64", "\"align\":65");
+        let err = ck.load_stage_range(1..2).unwrap_err().to_string();
+        assert!(err.contains("header crc mismatch"), "{err}");
+        assert!(ck.load_stage_range(0..1).is_ok());
+        rm_sharded("sh_err_range");
     }
 }

@@ -300,6 +300,150 @@ impl Model {
         gemm::matmul(&rmsnorm(&x, &self.final_norm), &self.lm_head)
     }
 
+    /// Hidden-state prefill for one pipeline stage range: run `x` (T×d
+    /// hidden rows, e.g. [`Model::embed_tokens`] on the head stage or the
+    /// previous hop's relayed rows downstream) through this model's stages
+    /// starting at the cache's current position, filling every layer's K/V
+    /// rows, and return the T×d output hidden rows — **no** final norm and
+    /// **no** LM head, so partial models built by
+    /// [`Model::load_stage_range`] (`lm_head` empty on non-tail stages) run
+    /// it unchanged. On a full model, `forward_hidden_cached(embed_tokens(
+    /// toks))` followed by the tail logits helper reproduces
+    /// [`Model::prefill`] bit-identically — the pipeline parity spine,
+    /// tested below for every `LinearWeight` variant.
+    pub fn forward_hidden_cached(&self, cache: &mut KvCache, x: Mat) -> Mat {
+        assert!(x.rows() > 0, "forward_hidden_cached: empty hidden batch");
+        assert_eq!(x.cols(), self.cfg.d_model, "forward_hidden_cached: hidden width");
+        assert_eq!(cache.layers.len(), self.stages.len(), "cache built for a different model");
+        assert!(
+            cache.len + x.rows() <= cache.capacity,
+            "forward_hidden_cached: {} + {} rows exceed cache capacity {}",
+            cache.len,
+            x.rows(),
+            cache.capacity
+        );
+        let hd = self.cfg.head_dim();
+        let pos0 = cache.len;
+        let rows = x.rows();
+        let mut x = x;
+        for (layer, stage) in self.stages.iter().enumerate() {
+            x = match stage {
+                Stage::Block(b) => {
+                    // audit:allow(panic): KvCache::new builds one LayerKv
+                    // per Block stage from this same stage list, so a Block
+                    // always finds its cache entry.
+                    let kv = cache.layers[layer].as_mut().expect("block stage has a cache");
+                    b.forward_cached(&x, hd, self.cfg.rope_theta, kv, pos0)
+                }
+                Stage::Linear(t) => gemm::matmul(&x, t),
+            };
+        }
+        cache.len += rows;
+        x
+    }
+
+    /// Single-row hidden decode step: one hidden row at the cache's current
+    /// position, per-row kernels only ([`LinearWeight::apply_row`]) — the
+    /// stage-range slice of [`Model::decode_step`] between the embedding
+    /// and the LM head. Chaining the head stage's output into the tail
+    /// stage reproduces `decode_step` on the unsplit model bitwise.
+    pub fn decode_hidden_row(&self, cache: &mut KvCache, x: &[f32]) -> Vec<f32> {
+        let pos = cache.len;
+        assert!(pos < cache.capacity, "decode_hidden_row: KV cache full ({pos} rows)");
+        assert_eq!(x.len(), self.cfg.d_model, "decode_hidden_row: hidden width");
+        let hd = self.cfg.head_dim();
+        let mut x: Vec<f32> = x.to_vec();
+        for (layer, stage) in self.stages.iter().enumerate() {
+            x = match stage {
+                Stage::Block(b) => {
+                    // audit:allow(panic): KvCache::new builds one LayerKv
+                    // per Block stage from this same stage list, so a Block
+                    // always finds its cache entry.
+                    let kv = cache.layers[layer].as_mut().expect("block stage has a cache");
+                    b.decode_step(&x, hd, self.cfg.rope_theta, kv, pos)
+                }
+                Stage::Linear(t) => gemm::matvec_row(&x, t),
+            };
+        }
+        cache.len += 1;
+        x
+    }
+
+    /// Cross-session batched hidden decode step: row `b` of `x` is one
+    /// session's hidden row, advanced against `caches[b]` at its own
+    /// position — [`Model::decode_step_batch`] without the embedding or the
+    /// LM head, so one pipeline stage can keep PR 7's one-GEMM-per-layer
+    /// round shape over its slice of the model. B == 1 falls back to the
+    /// per-row [`Model::decode_hidden_row`] kernels, keeping single-session
+    /// pipeline serving bit-identical to single-host `decode_step`.
+    pub fn decode_hidden_batch(&self, caches: &mut [&mut KvCache], x: Mat) -> Mat {
+        assert!(x.rows() > 0, "decode_hidden_batch: empty batch");
+        assert_eq!(
+            caches.len(),
+            x.rows(),
+            "decode_hidden_batch: {} caches for {} rows",
+            caches.len(),
+            x.rows()
+        );
+        if x.rows() == 1 {
+            // B == 1 is the plain hidden decode step: per-row kernels.
+            let row = self.decode_hidden_row(&mut *caches[0], x.row(0));
+            return Mat::from_vec(1, row.len(), row);
+        }
+        assert_eq!(x.cols(), self.cfg.d_model, "decode_hidden_batch: hidden width");
+        // Read every session's position once up front — all stages of this
+        // round see the same snapshot; lengths advance only at the end.
+        let positions: Vec<usize> = caches.iter().map(|c| c.len).collect();
+        for (b, c) in caches.iter().enumerate() {
+            assert_eq!(
+                c.layers.len(),
+                self.stages.len(),
+                "decode_hidden_batch: cache {b} built for a different model"
+            );
+            assert!(
+                positions[b] < c.capacity,
+                "decode_hidden_batch: KV cache {b} full ({} rows)",
+                positions[b]
+            );
+        }
+        let hd = self.cfg.head_dim();
+        let mut x = x;
+        for (layer, stage) in self.stages.iter().enumerate() {
+            x = match stage {
+                Stage::Block(b) => {
+                    let mut rows: Vec<(&mut LayerKv, usize)> = caches
+                        .iter_mut()
+                        .zip(positions.iter())
+                        .map(|(c, &p)| {
+                            // audit:allow(panic): every cache was asserted
+                            // above to mirror this model's stage list.
+                            (c.layers[layer].as_mut().expect("block stage has a cache"), p)
+                        })
+                        .collect();
+                    b.decode_step_batch(&x, hd, self.cfg.rope_theta, &mut rows)
+                }
+                Stage::Linear(t) => gemm::matmul(&x, t),
+            };
+        }
+        for c in caches.iter_mut() {
+            c.len += 1;
+        }
+        x
+    }
+
+    /// Tail-of-pipeline logits for one hidden row: final RMSNorm + LM head
+    /// through the same per-row kernels [`Model::decode_step`] ends with,
+    /// so the pipeline tail's logits are bit-identical to the single-host
+    /// path (the `matvec_row`/`matmul` accumulation-order invariant makes
+    /// this hold for batched prefill rows too).
+    pub fn logits_from_hidden_row(&self, x: &[f32]) -> Vec<f32> {
+        assert!(
+            self.lm_head.rows() > 0,
+            "logits_from_hidden_row: this partial model has no LM head (not the tail stage)"
+        );
+        gemm::matvec_row(&rmsnorm_row(x, &self.final_norm), &self.lm_head)
+    }
+
     /// Sampled continuation of `prompt` by up to `max_new` tokens through
     /// the incremental runtime. Returns `[]` for an empty prompt or
     /// `max_new == 0`; stops early at the config's `max_seq` (matching
@@ -1126,6 +1270,146 @@ mod tests {
         model.prefill(&mut a, &[1, 2]);
         let mut refs = vec![&mut a];
         model.decode_step_batch(&mut refs, &[5, 6]);
+    }
+
+    /// Split a model at stage boundary `k` the way a 2-stage pipeline
+    /// does: the head keeps the embedding and stages `..k`, the tail keeps
+    /// stages `k..` plus the final norm and LM head — the same partial
+    /// shapes [`Model::load_stage_range`] builds from a sharded checkpoint.
+    fn split_at(model: &Model, k: usize) -> (Model, Model) {
+        let d = model.cfg.d_model;
+        let head = Model {
+            cfg: model.cfg.clone(),
+            embed: model.embed.clone(),
+            stages: model.stages[..k].to_vec(),
+            final_norm: Vec::new(),
+            lm_head: Mat::zeros(0, 0),
+        };
+        let tail = Model {
+            cfg: model.cfg.clone(),
+            embed: Mat::zeros(0, d),
+            stages: model.stages[k..].to_vec(),
+            final_norm: model.final_norm.clone(),
+            lm_head: model.lm_head.clone(),
+        };
+        (head, tail)
+    }
+
+    #[test]
+    fn hidden_split_matches_prefill_and_decode_step_bitwise() {
+        // The pipeline-parity spine: chaining the head stage's hidden rows
+        // into the tail stage must reproduce prefill and every sequential
+        // decode step of the unsplit model bitwise — for all six
+        // `LinearWeight` variants.
+        for (name, model) in [
+            ("dense", tiny_model(81)),
+            ("lowrank", lowrank_model(81)),
+            ("factorized", factorized_model(81)),
+            ("quant-dense", quantized(&tiny_model(81))),
+            ("quant-lowrank", quantized(&lowrank_model(81))),
+            ("quant-factorized", quantized(&factorized_model(81))),
+        ] {
+            let (head, tail) = split_at(&model, 1);
+            let prompt: Vec<u16> = vec![3, 1, 4, 1, 5];
+            let mut full_cache = model.new_cache();
+            let full_logits = model.prefill(&mut full_cache, &prompt);
+            let full_last = full_logits.row(full_logits.rows() - 1);
+            let mut hc = head.new_cache();
+            let mut tc = tail.new_cache();
+            let h = head.forward_hidden_cached(&mut hc, head.embed_tokens(&prompt));
+            assert_eq!(h.shape(), (prompt.len(), model.cfg.d_model), "{name}");
+            let th = tail.forward_hidden_cached(&mut tc, h);
+            let last = tail.logits_from_hidden_row(th.row(th.rows() - 1));
+            assert_eq!(last.len(), full_last.len(), "{name}");
+            for j in 0..last.len() {
+                assert!(
+                    (last[j] - full_last[j]).abs() == 0.0,
+                    "{name}: prefill logit {j}: {} vs {}",
+                    last[j],
+                    full_last[j]
+                );
+            }
+            for &t in &[9u16, 2, 6] {
+                let full_row = model.decode_step(&mut full_cache, t);
+                let x: Vec<f32> = head.embed.row(t as usize).to_vec();
+                let h = head.decode_hidden_row(&mut hc, &x);
+                let h2 = tail.decode_hidden_row(&mut tc, &h);
+                let row = tail.logits_from_hidden_row(&h2);
+                for j in 0..row.len() {
+                    assert!(
+                        (row[j] - full_row[j]).abs() == 0.0,
+                        "{name}: token {t} logit {j}: {} vs {}",
+                        row[j],
+                        full_row[j]
+                    );
+                }
+            }
+            assert_eq!(hc.len(), full_cache.len(), "{name}: head position");
+            assert_eq!(tc.len(), full_cache.len(), "{name}: tail position");
+        }
+    }
+
+    #[test]
+    fn hidden_batch_matches_batched_step_bitwise() {
+        // Pipeline × batching: one decode_hidden_batch per stage must
+        // reproduce the single-host decode_step_batch logits bitwise for
+        // heterogeneous cache positions, at batch sizes 1 and 3.
+        for (name, model) in [
+            ("dense", tiny_model(82)),
+            ("factorized", factorized_model(82)),
+            ("quant-lowrank", quantized(&lowrank_model(82))),
+        ] {
+            let (head, tail) = split_at(&model, 1);
+            for bsize in [1usize, 3] {
+                let prompts: Vec<Vec<u16>> = (0..bsize)
+                    .map(|i| {
+                        (0..3 + (i * 5) % 4).map(|t| ((t * 9 + i * 13) % 64) as u16).collect()
+                    })
+                    .collect();
+                let toks: Vec<u16> = (0..bsize).map(|i| ((i * 17 + 5) % 64) as u16).collect();
+                // single-host twin
+                let mut full: Vec<KvCache> = prompts
+                    .iter()
+                    .map(|p| {
+                        let mut c = model.new_cache();
+                        model.prefill(&mut c, p);
+                        c
+                    })
+                    .collect();
+                let mut refs: Vec<&mut KvCache> = full.iter_mut().collect();
+                let logits = model.decode_step_batch(&mut refs, &toks);
+                drop(refs);
+                // pipeline: prefill both stage caches, then one hidden
+                // round per stage and the tail logits helper per row
+                let mut hcs: Vec<KvCache> = Vec::new();
+                let mut tcs: Vec<KvCache> = Vec::new();
+                for p in &prompts {
+                    let mut hc = head.new_cache();
+                    let mut tc = tail.new_cache();
+                    let h = head.forward_hidden_cached(&mut hc, head.embed_tokens(p));
+                    tail.forward_hidden_cached(&mut tc, h);
+                    hcs.push(hc);
+                    tcs.push(tc);
+                }
+                let mut hrefs: Vec<&mut KvCache> = hcs.iter_mut().collect();
+                let h = head.decode_hidden_batch(&mut hrefs, head.embed_tokens(&toks));
+                drop(hrefs);
+                let mut trefs: Vec<&mut KvCache> = tcs.iter_mut().collect();
+                let th = tail.decode_hidden_batch(&mut trefs, h);
+                drop(trefs);
+                for b in 0..bsize {
+                    let row = tail.logits_from_hidden_row(th.row(b));
+                    for j in 0..row.len() {
+                        assert!(
+                            (row[j] - logits[(b, j)]).abs() == 0.0,
+                            "{name}/b{bsize}: row {b} logit {j}: {} vs {}",
+                            row[j],
+                            logits[(b, j)]
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -17,10 +17,12 @@ pub mod config;
 pub mod cpt2;
 pub mod decode;
 pub mod encdec;
+pub mod shard;
 pub mod transformer;
 pub mod weights;
 
 pub use config::{ModelConfig, ProjKind};
 pub use cpt2::{CheckpointInfo, MappedCheckpoint};
+pub use shard::{ShardEntry, ShardManifest};
 pub use decode::{DecodeSession, KvCache, Sampler, SamplerCfg};
 pub use transformer::{Block, Model};

@@ -1,0 +1,293 @@
+//! Shard manifest for sharded CPT2 checkpoints.
+//!
+//! A sharded checkpoint is an **index** file (a CPT2 container with an
+//! empty data region) plus N **shard** files, each a complete CPT2
+//! container holding the sections for a contiguous stage range. The index
+//! header carries a `"shards"` array:
+//!
+//! ```text
+//! {"shards": [{"id": 0, "path": "m.shard0.cpt2", "lo": 0, "hi": 12,
+//!              "crc": <crc32 of the shard file's header JSON bytes>}, ...],
+//!  "stages": [... metadata for ALL stages ...], "sections": []}
+//! ```
+//!
+//! Shard `0` additionally carries the `embed` section; the last shard
+//! carries `lm_head` and `final_norm`. Paths are relative to the index
+//! file's directory. The recorded `crc` covers only the shard's *header*
+//! bytes and is verified when the shard is opened at **load** time — the
+//! index-only open behind `compot info` never touches a shard file, let
+//! alone a shard payload (section payloads keep their own lazy per-section
+//! CRCs inside each shard).
+//!
+//! This module owns the manifest shape and its validation (contiguous,
+//! gap-free, overlap-free coverage of `0..n_stages`); the section I/O that
+//! writes and reads the containers lives in [`super::cpt2`].
+
+use crate::util::json::Json;
+
+/// One shard record from the index header.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardEntry {
+    pub id: usize,
+    /// Path relative to the index file's directory.
+    pub path: String,
+    /// Stage range `lo..hi` (absolute stage indices, half-open).
+    pub lo: usize,
+    pub hi: usize,
+    /// CRC32 of the shard file's header JSON bytes.
+    pub crc: u32,
+}
+
+impl ShardEntry {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("id", self.id.into())
+            .set("path", self.path.as_str().into())
+            .set("lo", self.lo.into())
+            .set("hi", self.hi.into())
+            .set("crc", (self.crc as usize).into());
+        j
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<ShardEntry> {
+        let id = j
+            .get("id")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("shard record without an id"))?;
+        let field = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("shard {id}: missing field '{k}'"))
+        };
+        let path = j
+            .get("path")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("shard {id}: missing relative path"))?;
+        anyhow::ensure!(!path.is_empty(), "shard {id}: empty path");
+        // Shard paths resolve against the index directory; an absolute path
+        // or a parent-escaping one in an untrusted header must not make the
+        // loader read outside that directory.
+        anyhow::ensure!(
+            !path.starts_with('/') && !path.split('/').any(|c| c == ".."),
+            "shard {id}: path '{path}' must be relative to the index directory"
+        );
+        Ok(ShardEntry {
+            id,
+            path: path.to_string(),
+            lo: field("lo")?,
+            hi: field("hi")?,
+            crc: field("crc")? as u32,
+        })
+    }
+}
+
+/// The validated shard table of one index header: entries in id order,
+/// covering `0..n_stages` contiguously with no gaps and no overlaps.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardManifest {
+    pub entries: Vec<ShardEntry>,
+}
+
+impl ShardManifest {
+    /// Parse the `"shards"` array of an index header, if present.
+    /// `n_stages` is the length of the same header's `stages` array — the
+    /// coverage target the ranges are validated against.
+    pub fn from_header(header: &Json, n_stages: usize) -> anyhow::Result<Option<ShardManifest>> {
+        match header.get("shards").and_then(Json::as_arr) {
+            None => Ok(None),
+            Some(arr) => Self::parse(arr, n_stages).map(Some),
+        }
+    }
+
+    /// Validate a raw manifest array: ids must be `0..len` in order, every
+    /// range non-empty, and the ranges must tile `0..n_stages` exactly —
+    /// a gap or an overlap is a structured error naming the shard.
+    pub fn parse(arr: &[Json], n_stages: usize) -> anyhow::Result<ShardManifest> {
+        anyhow::ensure!(!arr.is_empty(), "shard manifest is empty");
+        let mut entries = Vec::with_capacity(arr.len());
+        for rec in arr {
+            entries.push(ShardEntry::from_json(rec)?);
+        }
+        let mut expect_lo = 0usize;
+        for (i, e) in entries.iter().enumerate() {
+            anyhow::ensure!(
+                e.id == i,
+                "shard manifest out of order: entry {i} has id {}",
+                e.id
+            );
+            anyhow::ensure!(e.lo < e.hi, "shard {i}: empty stage range {}..{}", e.lo, e.hi);
+            anyhow::ensure!(
+                e.lo == expect_lo,
+                "shard manifest does not tile the stages: shard {i} covers {}..{} but \
+                 coverage so far ends at {expect_lo} ({})",
+                e.lo,
+                e.hi,
+                if e.lo > expect_lo { "gap" } else { "overlap" }
+            );
+            expect_lo = e.hi;
+        }
+        anyhow::ensure!(
+            expect_lo == n_stages,
+            "shard manifest covers stages 0..{expect_lo} but the checkpoint has {n_stages}"
+        );
+        Ok(ShardManifest { entries })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.entries.iter().map(ShardEntry::to_json).collect())
+    }
+
+    /// Total stage count the manifest covers.
+    pub fn n_stages(&self) -> usize {
+        self.entries.last().map(|e| e.hi).unwrap_or(0)
+    }
+
+    /// The shards whose stage range intersects `lo..hi`, in id order.
+    pub fn entries_for(&self, lo: usize, hi: usize) -> Vec<&ShardEntry> {
+        self.entries.iter().filter(|e| e.lo < hi && lo < e.hi).collect()
+    }
+
+    /// One line per shard — what `compot info` prints for a sharded index.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        for e in &self.entries {
+            out.push_str(&format!(
+                "shard {:>3} stages {:>3}..{:<3} {} (header crc {:#010x})\n",
+                e.id, e.lo, e.hi, e.path, e.crc
+            ));
+        }
+        out
+    }
+}
+
+/// Split `n_stages` stages into `n_shards` contiguous ranges of (near-)
+/// equal size: `ceil(n/k)` stages per shard, the last one possibly
+/// shorter. `n_shards` must be in `1..=n_stages` — more shards than stages
+/// would mean empty shard files.
+pub fn split_ranges(n_stages: usize, n_shards: usize) -> anyhow::Result<Vec<(usize, usize)>> {
+    anyhow::ensure!(n_shards >= 1, "cannot split a checkpoint into 0 shards");
+    anyhow::ensure!(
+        n_shards <= n_stages,
+        "cannot split {n_stages} stages into {n_shards} shards (at most one shard per stage)"
+    );
+    let chunk = n_stages.div_ceil(n_shards);
+    let mut ranges = Vec::with_capacity(n_shards);
+    let mut lo = 0usize;
+    while lo < n_stages {
+        let hi = (lo + chunk).min(n_stages);
+        ranges.push((lo, hi));
+        lo = hi;
+    }
+    Ok(ranges)
+}
+
+/// Shard file name derived from the index file name:
+/// `model.cpt2` → `model.shard3.cpt2`.
+pub fn shard_file_name(index_file_name: &str, id: usize) -> String {
+    match index_file_name.strip_suffix(".cpt2") {
+        Some(stem) => format!("{stem}.shard{id}.cpt2"),
+        None => format!("{index_file_name}.shard{id}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(id: usize, lo: usize, hi: usize) -> Json {
+        ShardEntry { id, path: format!("m.shard{id}.cpt2"), lo, hi, crc: 7 }.to_json()
+    }
+
+    #[test]
+    fn manifest_roundtrips_through_json() {
+        let arr = vec![entry(0, 0, 3), entry(1, 3, 5)];
+        let m = ShardManifest::parse(&arr, 5).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        assert_eq!(m.n_stages(), 5);
+        assert_eq!(m.entries[1].path, "m.shard1.cpt2");
+        let back = ShardManifest::parse(m.to_json().as_arr().unwrap(), 5).unwrap();
+        assert_eq!(m, back);
+        assert!(m.summary().contains("m.shard0.cpt2"));
+    }
+
+    #[test]
+    fn gaps_overlaps_and_bad_ids_are_structured_errors() {
+        // gap between shard 0 and 1
+        let err = ShardManifest::parse(&[entry(0, 0, 2), entry(1, 3, 5)], 5)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("gap"), "{err}");
+        // overlap
+        let err = ShardManifest::parse(&[entry(0, 0, 3), entry(1, 2, 5)], 5)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("overlap"), "{err}");
+        // short coverage
+        let err = ShardManifest::parse(&[entry(0, 0, 4)], 5).unwrap_err().to_string();
+        assert!(err.contains("0..4"), "{err}");
+        // out-of-order ids
+        let err = ShardManifest::parse(&[entry(1, 0, 2), entry(0, 2, 5)], 5)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("out of order"), "{err}");
+        // empty range
+        let err =
+            ShardManifest::parse(&[entry(0, 0, 0)], 0).unwrap_err().to_string();
+        assert!(err.contains("empty stage range"), "{err}");
+        // empty manifest
+        assert!(ShardManifest::parse(&[], 0).is_err());
+    }
+
+    #[test]
+    fn escaping_paths_are_rejected() {
+        let mut j = entry(0, 0, 2);
+        j.set("path", "/etc/passwd".into());
+        let err = ShardManifest::parse(&[j], 2).unwrap_err().to_string();
+        assert!(err.contains("relative"), "{err}");
+        let mut j = entry(0, 0, 2);
+        j.set("path", "../outside.cpt2".into());
+        let err = ShardManifest::parse(&[j], 2).unwrap_err().to_string();
+        assert!(err.contains("relative"), "{err}");
+    }
+
+    #[test]
+    fn entries_for_selects_intersecting_shards() {
+        let arr = vec![entry(0, 0, 2), entry(1, 2, 4), entry(2, 4, 6)];
+        let m = ShardManifest::parse(&arr, 6).unwrap();
+        let ids = |lo, hi| -> Vec<usize> {
+            m.entries_for(lo, hi).iter().map(|e| e.id).collect()
+        };
+        assert_eq!(ids(0, 6), vec![0, 1, 2]);
+        assert_eq!(ids(0, 2), vec![0]);
+        assert_eq!(ids(1, 3), vec![0, 1]);
+        assert_eq!(ids(4, 6), vec![2]);
+        assert_eq!(ids(3, 3), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn split_ranges_tiles_exactly() {
+        assert_eq!(split_ranges(4, 2).unwrap(), vec![(0, 2), (2, 4)]);
+        assert_eq!(split_ranges(5, 2).unwrap(), vec![(0, 3), (3, 5)]);
+        assert_eq!(split_ranges(2, 2).unwrap(), vec![(0, 1), (1, 2)]);
+        assert_eq!(split_ranges(7, 3).unwrap(), vec![(0, 3), (3, 6), (6, 7)]);
+        assert!(split_ranges(4, 0).is_err());
+        assert!(split_ranges(2, 3).is_err());
+        // every split parses back as a valid manifest
+        for (n, k) in [(4, 2), (5, 2), (7, 3), (12, 5)] {
+            let arr: Vec<Json> = split_ranges(n, k)
+                .unwrap()
+                .iter()
+                .enumerate()
+                .map(|(id, &(lo, hi))| entry(id, lo, hi))
+                .collect();
+            ShardManifest::parse(&arr, n).unwrap();
+        }
+    }
+
+    #[test]
+    fn shard_file_names_derive_from_the_index() {
+        assert_eq!(shard_file_name("model.cpt2", 0), "model.shard0.cpt2");
+        assert_eq!(shard_file_name("m-t7.cpt2", 12), "m-t7.shard12.cpt2");
+        assert_eq!(shard_file_name("weird.bin", 1), "weird.bin.shard1");
+    }
+}

@@ -16,6 +16,9 @@ pub struct CheckpointEntry {
     pub format: String,
     /// Compression-plan provenance (e.g. `compot@0.25 → gptq4`), if known.
     pub plan: Option<String>,
+    /// Shard count when `path` is a sharded CPT2 **index** file (the shard
+    /// payloads live next to it); `None` for a monolithic checkpoint.
+    pub shards: Option<usize>,
 }
 
 impl CheckpointEntry {
@@ -27,6 +30,9 @@ impl CheckpointEntry {
         if let Some(p) = &self.plan {
             j.set("plan", p.as_str().into());
         }
+        if let Some(n) = self.shards {
+            j.set("shards", n.into());
+        }
         j
     }
 
@@ -36,6 +42,7 @@ impl CheckpointEntry {
             path: PathBuf::from(j.get("path").and_then(Json::as_str)?),
             format: j.get("format").and_then(Json::as_str).unwrap_or("cpt2").to_string(),
             plan: j.get("plan").and_then(Json::as_str).map(String::from),
+            shards: j.get("shards").and_then(Json::as_usize),
         })
     }
 }
@@ -211,6 +218,7 @@ mod tests {
             path: dir.join("tiny-t7.cpt2"),
             format: "cpt2".to_string(),
             plan: Some("compot@0.25 → gptq4".to_string()),
+            shards: None,
         };
         record_checkpoint(&dir, &entry).unwrap();
         let m = Manifest::load(&dir).unwrap();
@@ -218,6 +226,7 @@ mod tests {
         let c = m.checkpoint("tiny-t7").unwrap();
         assert_eq!(c.format, "cpt2");
         assert_eq!(c.plan.as_deref(), Some("compot@0.25 → gptq4"));
+        assert_eq!(c.shards, None, "monolithic records must stay shard-free");
         assert!(m.checkpoint("nope").is_none());
         // same path replaces its record, a different path appends
         record_checkpoint(&dir, &CheckpointEntry { plan: None, ..entry.clone() }).unwrap();
@@ -247,6 +256,28 @@ mod tests {
         let m = Manifest::load(&dir).unwrap();
         assert_eq!(m.checkpoints.len(), 3);
         assert_eq!(m.checkpoint("tiny-t7").unwrap().plan.as_deref(), Some("svd-llm@0.20"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_set_records_roundtrip() {
+        // A sharded save records one entry for the index file with its
+        // shard count; reloading the manifest preserves it.
+        let dir = std::env::temp_dir().join("compot_manifest_shard_test");
+        std::fs::remove_dir_all(&dir).ok();
+        record_checkpoint(
+            &dir,
+            &CheckpointEntry {
+                name: "tiny-sharded".to_string(),
+                path: dir.join("tiny-sharded.cpt2"),
+                format: "cpt2".to_string(),
+                plan: Some("rtn4".to_string()),
+                shards: Some(2),
+            },
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.checkpoint("tiny-sharded").unwrap().shards, Some(2));
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -24,14 +24,21 @@
 
 #![warn(clippy::unwrap_used, clippy::expect_used)]
 
-use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+use std::sync::{
+    Condvar, Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard,
+};
 use std::time::Duration;
 
 pub mod batcher;
+pub mod pipeline;
 pub mod server;
 pub mod spec;
 
 pub use batcher::{BatchPolicy, Batcher};
+pub use pipeline::{
+    parse_stage_range, pipeline_role, serve_pipeline_head, serve_pipeline_tail, PipelineRole,
+    RelayClient,
+};
 pub use server::{serve_blocking, serve_blocking_tiers, Client, GenRequest, GenResponse};
 pub use spec::{SpecRound, SpeculativeSession, Tier};
 
@@ -42,6 +49,19 @@ pub use spec::{SpecRound, SpeculativeSession, Tier};
 /// audit rule L4.
 pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Poison-recovering `RwLock::read` — [`lock_recover`]'s reader twin for the
+/// shared tables the pipeline tail keeps per session. Required in `serve/`
+/// by audit rule L4, which flags unwrapped `.read()`/`.write()` results the
+/// same way it flags `.lock()`.
+pub fn read_recover<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Poison-recovering `RwLock::write` — see [`read_recover`].
+pub fn write_recover<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
 }
 
 /// Poison-recovering `Condvar::wait_timeout`: returns the reacquired guard

@@ -1,0 +1,1313 @@
+//! Two-stage pipeline serving: one process per stage range of a (sharded)
+//! checkpoint, hidden states relayed between them over JSON-lines TCP.
+//!
+//! A pipeline process is launched with `serve --stages LO..HI` on a partial
+//! model ([`Model::load_stage_range`]) and plays one of two roles:
+//!
+//! - **head** (`LO == 0`, `--next HOST:PORT` given): owns the embedding and
+//!   the client-facing serve protocol (the same JSON-lines request shape
+//!   [`super::server`] speaks, so [`super::Client`] works unchanged). It
+//!   embeds tokens, runs its stage range against per-session KV caches, and
+//!   relays the resulting f32 hidden rows to the next hop.
+//! - **tail** (`HI == n_stages`, no `--next`): owns the final norm, the LM
+//!   head, and each session's [`Sampler`]. It advances its stage range on
+//!   the relayed rows, samples the next token, and answers back along the
+//!   same connection.
+//!
+//! Middle hops (`LO > 0` with `--next`) are rejected with a structured
+//! error — >2-host pipelines (and relay retry/timeout) are a recorded
+//! ROADMAP follow-up.
+//!
+//! ## Relay frame protocol (head → tail, one JSON object per line)
+//!
+//! ```text
+//! {"op":"open","sid":7,"temperature":0.8,"top_k":20,"seed":9} → {"ok":true}
+//! {"op":"prefill","sid":7,"pos":0,"rows":T,"cols":D,"h":[..]} → {"token":t}
+//! {"op":"round","sids":[7,9],"pos":[5,3],"cols":D,"h":[..]}   → {"tokens":[..]}
+//! {"op":"truncate","sid":7,"len":4}                           → {"ok":true}
+//! {"op":"close","sid":7}                                      → {"ok":true}
+//! {"op":"stats"}                                              → {"sessions":n}
+//! {"op":"shutdown"}                                           → {"ok":true}
+//! errors: {"error":"...","code":"bad_frame|unknown_session|worker_panic"}
+//! ```
+//!
+//! Hidden rows cross the wire as the `u32` bit patterns of their f32 values
+//! (`f32::to_bits`, row-major in `"h"`), because JSON decimal round-trips
+//! are lossy and the whole point is **bit-identity**: a 2-process pipeline
+//! must produce exactly the tokens single-host serve produces. That holds
+//! because each stage runs the same kernels the single-host path runs —
+//! batched rounds go through [`Model::decode_hidden_batch`] (one GEMM per
+//! projection per layer per round, the PR 7 shape, falling back to per-row
+//! kernels at batch 1) and the tail finishes with the same per-row
+//! norm+head kernel [`Model::decode_step`] ends with. Parity is tested in
+//! `model/decode.rs` (kernel level), below (socket level), and in
+//! `tests/integration.rs` (all six `LinearWeight` variants, owned + mmap).
+//!
+//! Failure modes are structured, never panics (audit rule L3 applies to
+//! this file): a dead relay fails the in-flight requests with
+//! `relay_error` and the head keeps answering; a panicking model forward is
+//! caught and costs exactly the sessions in that round (`worker_panic`);
+//! malformed or out-of-order frames get `bad_frame`/`unknown_session`
+//! responses and the relay connection stays up. The tail's session table is
+//! an `RwLock` map accessed only through the poison-recovering
+//! [`super::read_recover`]/[`super::write_recover`] helpers (audit rule
+//! L4).
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::server::{protocol_error, GenResponse, Metrics};
+use super::spec::Tier;
+use super::{read_recover, write_recover};
+use crate::linalg::Mat;
+use crate::model::decode::{sampler_cfg_from_json, KvCache, Sampler, SamplerCfg};
+use crate::model::Model;
+use crate::util::json::Json;
+use crate::util::Timer;
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, RwLock};
+
+/// Role of one pipeline process, derived from its `--stages` range and
+/// whether `--next` was given.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PipelineRole {
+    Head,
+    Tail,
+}
+
+/// Parse a `--stages LO..HI` flag value (half-open, absolute stage
+/// indices).
+pub fn parse_stage_range(s: &str) -> anyhow::Result<Range<usize>> {
+    let (lo, hi) = s
+        .split_once("..")
+        .ok_or_else(|| anyhow::anyhow!("--stages wants a half-open range LO..HI, got '{s}'"))?;
+    let lo: usize = lo
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--stages: '{lo}' is not a stage index"))?;
+    let hi: usize = hi
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--stages: '{hi}' is not a stage index"))?;
+    Ok(lo..hi)
+}
+
+/// Decide which pipeline role a `--stages LO..HI` process plays against a
+/// checkpoint with `n_stages` stages. Every unsupported combination is a
+/// structured error: middle hops (a range touching neither end) are
+/// explicitly not supported yet — >2-host relaying is a recorded ROADMAP
+/// follow-up.
+pub fn pipeline_role(
+    range: &Range<usize>,
+    n_stages: usize,
+    has_next: bool,
+) -> anyhow::Result<PipelineRole> {
+    anyhow::ensure!(
+        range.start < range.end,
+        "--stages {}..{} is an empty range",
+        range.start,
+        range.end
+    );
+    anyhow::ensure!(
+        range.end <= n_stages,
+        "--stages {}..{} is outside the checkpoint's {n_stages} stages",
+        range.start,
+        range.end
+    );
+    match (range.start == 0, range.end == n_stages, has_next) {
+        (true, true, _) => anyhow::bail!(
+            "--stages 0..{n_stages} covers the whole model — drop --stages for single-host serve"
+        ),
+        (true, false, true) => Ok(PipelineRole::Head),
+        (true, false, false) => anyhow::bail!(
+            "the head stage (--stages 0..{}) needs --next HOST:PORT to relay hidden states to",
+            range.end
+        ),
+        (false, true, false) => Ok(PipelineRole::Tail),
+        (false, true, true) => anyhow::bail!(
+            "the tail stage holds the LM head and answers on the return path — it takes no --next"
+        ),
+        (false, false, _) => anyhow::bail!(
+            "middle pipeline hops (--stages {}..{} of {n_stages}) are not supported yet: \
+             only 2-stage head/tail pipelines run today (>2 hosts with relay retry/timeout \
+             is a ROADMAP follow-up)",
+            range.start,
+            range.end
+        ),
+    }
+}
+
+/// Encode a hidden-row matrix as the row-major `u32` bit patterns of its
+/// f32 values — exact over JSON, where decimal floats are not.
+fn bits_of_rows(m: &Mat) -> Json {
+    let mut a = Vec::with_capacity(m.rows() * m.cols());
+    for r in 0..m.rows() {
+        for &v in m.row(r) {
+            a.push(Json::Num(f32::to_bits(v) as f64));
+        }
+    }
+    Json::Arr(a)
+}
+
+/// Decode a `"h"` frame field back into a rows×cols matrix.
+fn rows_from_bits(arr: &[Json], rows: usize, cols: usize) -> anyhow::Result<Mat> {
+    anyhow::ensure!(
+        arr.len() == rows * cols,
+        "hidden frame holds {} values, expected {rows}×{cols}",
+        arr.len()
+    );
+    let mut data = Vec::with_capacity(arr.len());
+    for v in arr {
+        // strict: as_usize would silently truncate 0.5 → 0
+        let x = v
+            .as_f64()
+            .filter(|x| x.fract() == 0.0 && *x >= 0.0 && *x <= u32::MAX as f64)
+            .ok_or_else(|| anyhow::anyhow!("hidden frame holds a non-u32 bit pattern"))?;
+        data.push(f32::from_bits(x as u32));
+    }
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+/// Head-side client for the relay protocol: one persistent connection to
+/// the next hop, strictly synchronous frame → response. Also the raw
+/// handle the protocol tests drive the tail with.
+pub struct RelayClient {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl RelayClient {
+    pub fn connect(addr: &str) -> anyhow::Result<RelayClient> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(RelayClient { stream, reader })
+    }
+
+    /// Send one frame and wait for its response line; a structured error
+    /// response becomes an `Err` carrying the relay's message and code.
+    fn call(&mut self, j: &Json) -> anyhow::Result<Json> {
+        writeln!(self.stream, "{}", j.to_string())?;
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        anyhow::ensure!(n > 0, "relay connection closed mid-call");
+        let r = Json::parse(&line).map_err(|e| anyhow::anyhow!("bad relay response: {e}"))?;
+        if let Some(err) = r.get("error").and_then(Json::as_str) {
+            let code = r.get("code").and_then(Json::as_str).unwrap_or("relay_error");
+            anyhow::bail!("relay error ({code}): {err}");
+        }
+        Ok(r)
+    }
+
+    /// Open a session on the tail: it allocates the sampler stream the
+    /// session's tokens will be drawn from.
+    pub fn open(&mut self, sid: u64, sampling: SamplerCfg) -> anyhow::Result<()> {
+        let mut j = Json::obj();
+        j.set("op", "open".into())
+            .set("sid", (sid as usize).into())
+            .set("temperature", (sampling.temperature as f64).into())
+            .set("top_k", sampling.top_k.into())
+            .set("seed", (sampling.seed as f64).into());
+        self.call(&j).map(|_| ())
+    }
+
+    /// Relay a session's prefill hidden rows; returns the first sampled
+    /// token. `pos` is the session's cache position before these rows.
+    pub fn prefill(&mut self, sid: u64, pos: usize, h: &Mat) -> anyhow::Result<u16> {
+        let mut j = Json::obj();
+        j.set("op", "prefill".into())
+            .set("sid", (sid as usize).into())
+            .set("pos", pos.into())
+            .set("rows", h.rows().into())
+            .set("cols", h.cols().into())
+            .set("h", bits_of_rows(h));
+        let r = self.call(&j)?;
+        let tok = r
+            .get("token")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("relay prefill response without a token"))?;
+        anyhow::ensure!(tok <= u16::MAX as usize, "relay token {tok} exceeds u16");
+        Ok(tok as u16)
+    }
+
+    /// Relay one batched decode round: row `b` of `h` belongs to session
+    /// `sids[b]` at position `positions[b]`. Returns one sampled token per
+    /// session, in order.
+    pub fn round(
+        &mut self,
+        sids: &[u64],
+        positions: &[usize],
+        h: &Mat,
+    ) -> anyhow::Result<Vec<u16>> {
+        let mut j = Json::obj();
+        j.set("op", "round".into())
+            .set("sids", Json::Arr(sids.iter().map(|&s| Json::Num(s as f64)).collect()))
+            .set(
+                "pos",
+                Json::Arr(positions.iter().map(|&p| Json::Num(p as f64)).collect()),
+            )
+            .set("cols", h.cols().into())
+            .set("h", bits_of_rows(h));
+        let r = self.call(&j)?;
+        let toks: Vec<u16> = r
+            .get("tokens")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(|x| x.as_usize().map(|t| t as u16)).collect())
+            .unwrap_or_default();
+        anyhow::ensure!(
+            toks.len() == sids.len(),
+            "relay round returned {} tokens for {} sessions",
+            toks.len(),
+            sids.len()
+        );
+        Ok(toks)
+    }
+
+    /// Roll a session's tail cache back to `len` rows (cache-control op —
+    /// the pipeline twin of [`KvCache::truncate`]).
+    pub fn truncate(&mut self, sid: u64, len: usize) -> anyhow::Result<()> {
+        let mut j = Json::obj();
+        j.set("op", "truncate".into())
+            .set("sid", (sid as usize).into())
+            .set("len", len.into());
+        self.call(&j).map(|_| ())
+    }
+
+    /// Retire a session (idempotent).
+    pub fn close(&mut self, sid: u64) -> anyhow::Result<()> {
+        let mut j = Json::obj();
+        j.set("op", "close".into()).set("sid", (sid as usize).into());
+        self.call(&j).map(|_| ())
+    }
+
+    /// Tail-side session count (reads the table through `read_recover`).
+    pub fn stats(&mut self) -> anyhow::Result<Json> {
+        let mut j = Json::obj();
+        j.set("op", "stats".into());
+        self.call(&j)
+    }
+
+    /// Ask the tail process to exit once its connections drain.
+    pub fn shutdown(&mut self) -> anyhow::Result<()> {
+        let mut j = Json::obj();
+        j.set("op", "shutdown".into());
+        self.call(&j).map(|_| ())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tail: relay listener over the final stage range + LM head.
+// ---------------------------------------------------------------------------
+
+/// Tail-side state of one pipeline session: the sampler stream (opened
+/// before the first hidden rows arrive) and the stage-range KV cache
+/// (created lazily at prefill, when the row count is known).
+struct TailSession {
+    sampler: Sampler,
+    cache: Option<KvCache>,
+}
+
+/// Run the tail stage: listen for relay connections, advance the final
+/// stage range on each hidden frame, sample, and answer tokens until a
+/// `shutdown` frame arrives. The partial model must hold the LM head
+/// ([`Model::load_stage_range`] with the range ending at the last stage).
+pub fn serve_pipeline_tail(
+    model: Arc<Model>,
+    addr: &str,
+    on_ready: impl FnOnce(std::net::SocketAddr),
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        model.lm_head.rows() > 0,
+        "pipeline tail needs the LM head — load a stage range ending at the last stage"
+    );
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    on_ready(listener.local_addr()?);
+    let sessions: Arc<RwLock<HashMap<u64, TailSession>>> = Arc::new(RwLock::new(HashMap::new()));
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !shutdown.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let model = model.clone();
+                let sessions = sessions.clone();
+                let shutdown = shutdown.clone();
+                conns.push(std::thread::spawn(move || {
+                    let _ = handle_relay_conn(stream, &model, &sessions, &shutdown);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            Err(_) => break,
+        }
+    }
+    for c in conns {
+        let _ = c.join();
+    }
+    Ok(())
+}
+
+fn handle_relay_conn(
+    stream: TcpStream,
+    model: &Model,
+    sessions: &RwLock<HashMap<u64, TailSession>>,
+    shutdown: &AtomicBool,
+) -> anyhow::Result<()> {
+    stream.set_nonblocking(false)?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match Json::parse(&line) {
+            Ok(j) => handle_frame(model, sessions, shutdown, &j),
+            Err(e) => protocol_error(format!("bad relay frame: {e}"), "bad_frame"),
+        };
+        writeln!(writer, "{resp}")?;
+        if shutdown.load(Ordering::Relaxed) {
+            break;
+        }
+    }
+    Ok(())
+}
+
+fn ok_true() -> String {
+    "{\"ok\":true}".to_string()
+}
+
+fn frame_usize(j: &Json, key: &str) -> anyhow::Result<usize> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow::anyhow!("relay frame without a valid '{key}'"))
+}
+
+/// Dispatch one relay frame against the tail state; every outcome —
+/// success or failure — is a serialized response line.
+fn handle_frame(
+    model: &Model,
+    sessions: &RwLock<HashMap<u64, TailSession>>,
+    shutdown: &AtomicBool,
+    j: &Json,
+) -> String {
+    let Some(op) = j.get("op").and_then(Json::as_str) else {
+        return protocol_error("relay frame without an op".to_string(), "bad_frame");
+    };
+    match op {
+        "open" => frame_open(sessions, j),
+        "prefill" => frame_prefill(model, sessions, j),
+        "round" => frame_round(model, sessions, j),
+        "truncate" => frame_truncate(sessions, j),
+        "close" => match frame_usize(j, "sid") {
+            Ok(sid) => {
+                write_recover(sessions).remove(&(sid as u64));
+                ok_true()
+            }
+            Err(e) => protocol_error(e.to_string(), "bad_frame"),
+        },
+        "stats" => {
+            let n = read_recover(sessions).len();
+            let mut r = Json::obj();
+            r.set("sessions", n.into());
+            r.to_string()
+        }
+        "shutdown" => {
+            shutdown.store(true, Ordering::Relaxed);
+            ok_true()
+        }
+        other => protocol_error(format!("unknown relay op '{other}'"), "bad_frame"),
+    }
+}
+
+fn frame_open(sessions: &RwLock<HashMap<u64, TailSession>>, j: &Json) -> String {
+    let sid = match frame_usize(j, "sid") {
+        Ok(s) => s as u64,
+        Err(e) => return protocol_error(e.to_string(), "bad_frame"),
+    };
+    let cfg = sampler_cfg_from_json(j);
+    let mut guard = write_recover(sessions);
+    if guard.contains_key(&sid) {
+        return protocol_error(format!("session {sid} is already open"), "bad_frame");
+    }
+    guard.insert(sid, TailSession { sampler: Sampler::new(cfg), cache: None });
+    ok_true()
+}
+
+/// Parse and validate the shared hidden-payload fields of a frame.
+fn frame_hidden(j: &Json, rows: usize, d_model: usize) -> anyhow::Result<Mat> {
+    let cols = frame_usize(j, "cols")?;
+    anyhow::ensure!(
+        cols == d_model,
+        "hidden width {cols} does not match the model's d_model {d_model}"
+    );
+    let arr = j
+        .get("h")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("relay frame without an 'h' payload"))?;
+    rows_from_bits(arr, rows, cols)
+}
+
+fn frame_prefill(
+    model: &Model,
+    sessions: &RwLock<HashMap<u64, TailSession>>,
+    j: &Json,
+) -> String {
+    let parsed = frame_usize(j, "sid").and_then(|sid| {
+        let rows = frame_usize(j, "rows")?;
+        anyhow::ensure!(rows > 0, "prefill frame with zero rows");
+        let pos = frame_usize(j, "pos")?;
+        let x = frame_hidden(j, rows, model.cfg.d_model)?;
+        Ok((sid as u64, rows, pos, x))
+    });
+    let (sid, rows, pos, x) = match parsed {
+        Ok(p) => p,
+        Err(e) => return protocol_error(e.to_string(), "bad_frame"),
+    };
+    let Some(mut sess) = write_recover(sessions).remove(&sid) else {
+        return protocol_error(format!("unknown session {sid}"), "unknown_session");
+    };
+    let cur = sess.cache.as_ref().map(KvCache::len).unwrap_or(0);
+    if cur != pos {
+        let msg =
+            format!("session {sid}: relay position {pos} does not match the {cur} cached rows");
+        write_recover(sessions).insert(sid, sess);
+        return protocol_error(msg, "bad_frame");
+    }
+    let mut cache = match sess.cache.take() {
+        Some(c) => c,
+        None => model.new_cache_with(rows.max(model.cfg.max_seq)),
+    };
+    // A panicking forward costs exactly this session (its cache is in an
+    // unknown state, so it stays removed), never the relay connection.
+    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+        let th = model.forward_hidden_cached(&mut cache, x);
+        let logits = model.logits_from_hidden_row(th.row(th.rows() - 1));
+        let tok = sess.sampler.pick(&logits);
+        sess.cache = Some(cache);
+        (sess, tok)
+    }));
+    match run {
+        Ok((sess, tok)) => {
+            write_recover(sessions).insert(sid, sess);
+            let mut r = Json::obj();
+            r.set("token", (tok as usize).into());
+            r.to_string()
+        }
+        Err(_) => protocol_error(
+            format!("model panicked during pipeline prefill of session {sid}"),
+            "worker_panic",
+        ),
+    }
+}
+
+fn frame_round(
+    model: &Model,
+    sessions: &RwLock<HashMap<u64, TailSession>>,
+    j: &Json,
+) -> String {
+    let parsed = (|| -> anyhow::Result<(Vec<u64>, Vec<usize>, Mat)> {
+        let sarr = j
+            .get("sids")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("round frame without 'sids'"))?;
+        let sids: Vec<u64> =
+            sarr.iter().filter_map(|v| v.as_usize().map(|s| s as u64)).collect();
+        anyhow::ensure!(
+            !sids.is_empty() && sids.len() == sarr.len(),
+            "round frame with empty or non-integer 'sids'"
+        );
+        let unique: std::collections::BTreeSet<u64> = sids.iter().copied().collect();
+        anyhow::ensure!(unique.len() == sids.len(), "duplicate sid in round frame");
+        let parr = j
+            .get("pos")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("round frame without 'pos'"))?;
+        let positions: Vec<usize> = parr.iter().filter_map(Json::as_usize).collect();
+        anyhow::ensure!(
+            positions.len() == sids.len(),
+            "round frame carries {} positions for {} sessions",
+            positions.len(),
+            sids.len()
+        );
+        let x = frame_hidden(j, sids.len(), model.cfg.d_model)?;
+        Ok((sids, positions, x))
+    })();
+    let (sids, positions, x) = match parsed {
+        Ok(p) => p,
+        Err(e) => return protocol_error(e.to_string(), "bad_frame"),
+    };
+    // Pop every named session under one write guard so the batch sees a
+    // consistent table, then run the forward without holding the lock.
+    let mut popped: Vec<(u64, TailSession)> = Vec::with_capacity(sids.len());
+    {
+        let mut guard = write_recover(sessions);
+        if let Some(missing) = sids.iter().find(|s| !guard.contains_key(s)) {
+            return protocol_error(format!("unknown session {missing}"), "unknown_session");
+        }
+        for &sid in &sids {
+            if let Some(s) = guard.remove(&sid) {
+                popped.push((sid, s));
+            }
+        }
+    }
+    let reinsert = |popped: Vec<(u64, TailSession)>| {
+        let mut guard = write_recover(sessions);
+        for (k, v) in popped {
+            guard.insert(k, v);
+        }
+    };
+    let missing_cache = popped
+        .iter()
+        .find(|(_, s)| s.cache.is_none())
+        .map(|(sid, _)| *sid);
+    if let Some(sid) = missing_cache {
+        reinsert(popped);
+        return protocol_error(format!("session {sid} has no prefilled cache"), "bad_frame");
+    }
+    let drift = popped
+        .iter()
+        .zip(positions.iter())
+        .find(|((_, s), &p)| s.cache.as_ref().map(KvCache::len).unwrap_or(0) != p)
+        .map(|((sid, s), &p)| (*sid, s.cache.as_ref().map(KvCache::len).unwrap_or(0), p));
+    if let Some((sid, cur, p)) = drift {
+        reinsert(popped);
+        return protocol_error(
+            format!("session {sid}: relay position {p} does not match the {cur} cached rows"),
+            "bad_frame",
+        );
+    }
+    // One hidden round over the whole batch (per-row kernels at B == 1),
+    // then the per-row norm+head kernel and each session's own sampler.
+    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+        let mut popped = popped;
+        let th = {
+            let mut caches: Vec<&mut KvCache> =
+                popped.iter_mut().filter_map(|(_, s)| s.cache.as_mut()).collect();
+            model.decode_hidden_batch(&mut caches, x)
+        };
+        let mut toks: Vec<u16> = Vec::with_capacity(popped.len());
+        for (i, (_, s)) in popped.iter_mut().enumerate() {
+            toks.push(s.sampler.pick(&model.logits_from_hidden_row(th.row(i))));
+        }
+        (popped, toks)
+    }));
+    match run {
+        Ok((done, toks)) => {
+            reinsert(done);
+            let mut r = Json::obj();
+            r.set("tokens", Json::Arr(toks.iter().map(|&t| Json::Num(t as f64)).collect()));
+            r.to_string()
+        }
+        // The panicked round's caches are in an unknown state; the popped
+        // sessions stay dropped and the head fails those requests.
+        Err(_) => protocol_error(
+            "model panicked during a pipeline round — the affected sessions were dropped"
+                .to_string(),
+            "worker_panic",
+        ),
+    }
+}
+
+fn frame_truncate(sessions: &RwLock<HashMap<u64, TailSession>>, j: &Json) -> String {
+    let parsed = frame_usize(j, "sid").and_then(|sid| Ok((sid as u64, frame_usize(j, "len")?)));
+    let (sid, len) = match parsed {
+        Ok(p) => p,
+        Err(e) => return protocol_error(e.to_string(), "bad_frame"),
+    };
+    let mut guard = write_recover(sessions);
+    let Some(sess) = guard.get_mut(&sid) else {
+        return protocol_error(format!("unknown session {sid}"), "unknown_session");
+    };
+    let Some(cache) = sess.cache.as_mut() else {
+        return protocol_error(format!("session {sid} has no prefilled cache"), "bad_frame");
+    };
+    if len > cache.len() {
+        return protocol_error(
+            format!("session {sid}: cannot truncate {} cached rows to {len}", cache.len()),
+            "bad_frame",
+        );
+    }
+    cache.truncate(len);
+    ok_true()
+}
+
+// ---------------------------------------------------------------------------
+// Head: client-facing server over the first stage range + relay driver.
+// ---------------------------------------------------------------------------
+
+struct HeadJob {
+    prompt: Vec<u16>,
+    max_new: usize,
+    sampling: SamplerCfg,
+    enqueued: Timer,
+    reply: mpsc::Sender<GenResponse>,
+}
+
+/// Head-side state of one in-flight request: the stage-range KV cache plus
+/// the token list the single-host [`crate::model::DecodeSession`] would
+/// keep — the sampler itself lives with the logits, on the tail.
+struct HeadSession {
+    sid: u64,
+    cache: KvCache,
+    tokens: Vec<u16>,
+    prompt_len: usize,
+    max_new: usize,
+    max_total: usize,
+    done: bool,
+}
+
+impl HeadSession {
+    fn generated(&self) -> &[u16] {
+        self.tokens.get(self.prompt_len..).unwrap_or(&[])
+    }
+
+    /// Record the tail's sampled token and update the stop state — the
+    /// same rule `DecodeSession::consume_logits` applies.
+    fn push(&mut self, tok: u16) {
+        self.tokens.push(tok);
+        if self.tokens.len() - self.prompt_len >= self.max_new
+            || self.tokens.len() >= self.max_total
+        {
+            self.done = true;
+        }
+    }
+}
+
+struct HeadActive {
+    sess: HeadSession,
+    enqueued: Timer,
+    reply: mpsc::Sender<GenResponse>,
+}
+
+/// Open a session on the tail and run the head half of its prefill: embed
+/// the prompt, advance the head stages, relay the hidden rows, and record
+/// the first sampled token.
+fn admit_session(
+    model: &Model,
+    relay: &mut RelayClient,
+    sid: u64,
+    job: &HeadJob,
+) -> anyhow::Result<HeadSession> {
+    relay.open(sid, job.sampling)?;
+    let built = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let mut cache = model.new_cache_with(job.prompt.len().max(model.cfg.max_seq));
+        let h = model.forward_hidden_cached(&mut cache, model.embed_tokens(&job.prompt));
+        (cache, h)
+    }));
+    let (cache, h) = match built {
+        Ok(b) => b,
+        Err(_) => {
+            let _ = relay.close(sid);
+            anyhow::bail!("model panicked during pipeline prefill");
+        }
+    };
+    let tok = match relay.prefill(sid, 0, &h) {
+        Ok(t) => t,
+        Err(e) => {
+            let _ = relay.close(sid);
+            return Err(e);
+        }
+    };
+    let mut tokens = job.prompt.clone();
+    tokens.push(tok);
+    let max_total = model.cfg.max_seq;
+    let done = tokens.len() - job.prompt.len() >= job.max_new || tokens.len() >= max_total;
+    Ok(HeadSession {
+        sid,
+        cache,
+        tokens,
+        prompt_len: job.prompt.len(),
+        max_new: job.max_new,
+        max_total,
+        done,
+    })
+}
+
+/// Fail every in-flight session with one structured error — the relay
+/// connection is the pipeline's spine, so losing it loses the batch.
+fn fail_all(active: &mut Vec<HeadActive>, metrics: &Metrics, msg: &str, code: &str) {
+    for a in active.drain(..) {
+        metrics.fail(&a.enqueued, &a.reply, Tier::Full, msg.to_string(), code);
+    }
+}
+
+/// Run the pipeline head until a client `shutdown` command: the same
+/// client-facing JSON-lines protocol as [`super::server::serve_blocking`]
+/// (full tier only), continuous batching over head-stage sessions, one
+/// relayed hidden round per token. After draining, the head asks the tail
+/// to shut down too, so one client `shutdown` winds down the whole
+/// pipeline.
+pub fn serve_pipeline_head(
+    model: Arc<Model>,
+    addr: &str,
+    next: &str,
+    policy: BatchPolicy,
+    info: Json,
+    on_ready: impl FnOnce(std::net::SocketAddr),
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        model.embed.rows() > 0,
+        "pipeline head needs the embedding — load a stage range starting at 0"
+    );
+    let relay = RelayClient::connect(next)
+        .map_err(|e| anyhow::anyhow!("cannot reach the next pipeline hop at {next}: {e}"))?;
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    on_ready(listener.local_addr()?);
+
+    let mut info = info;
+    info.set("resident_weight_bytes", model.resident_weight_bytes().into());
+    info.set("mapped_weight_bytes", model.mapped_weight_bytes().into());
+    if info.get("weights_source").is_none() {
+        let src = if model.weights_mapped() {
+            "mmap"
+        } else if info.get("checkpoint").is_some() {
+            "checkpoint"
+        } else {
+            "in-memory"
+        };
+        info.set("weights_source", src.into());
+    }
+    info.set("pipeline_role", "head".into());
+    info.set("pipeline_next", next.into());
+    info.set("tier_default", "full".into());
+    let info = Arc::new(info);
+    let batcher: Arc<Batcher<HeadJob>> = Arc::new(Batcher::new(policy));
+    let metrics = Arc::new(Metrics::default());
+    let shutdown = Arc::new(AtomicBool::new(false));
+
+    // Worker: continuous batching over head-stage sessions, mirroring the
+    // single-host worker round for round — admit into free slots, one
+    // batched hidden forward + one relay round per token, retire finished
+    // sessions immediately.
+    let worker = {
+        let batcher = batcher.clone();
+        let metrics = metrics.clone();
+        let model = model.clone();
+        let mut relay = relay;
+        std::thread::spawn(move || {
+            let mut active: Vec<HeadActive> = Vec::new();
+            let mut next_sid: u64 = 0;
+            loop {
+                let slots = policy.max_batch.saturating_sub(active.len());
+                let incoming = if active.is_empty() {
+                    let batch = batcher.next_batch();
+                    if batch.is_empty() {
+                        break; // closed + drained, nothing in flight
+                    }
+                    batch
+                } else if slots > 0 {
+                    batcher.try_drain(slots)
+                } else {
+                    Vec::new()
+                };
+                if !incoming.is_empty() {
+                    metrics.batches.fetch_add(1, Ordering::Relaxed);
+                }
+                for job in incoming {
+                    if job.prompt.is_empty() || job.max_new == 0 {
+                        metrics.finish(
+                            &job.enqueued,
+                            &job.reply,
+                            Vec::new(),
+                            active.len() + 1,
+                            Tier::Full,
+                        );
+                        continue;
+                    }
+                    next_sid += 1;
+                    let sid = next_sid;
+                    match admit_session(&model, &mut relay, sid, &job) {
+                        Ok(sess) => {
+                            if sess.done {
+                                let _ = relay.close(sid);
+                                metrics.finish(
+                                    &job.enqueued,
+                                    &job.reply,
+                                    sess.generated().to_vec(),
+                                    active.len() + 1,
+                                    Tier::Full,
+                                );
+                            } else {
+                                active.push(HeadActive {
+                                    sess,
+                                    enqueued: job.enqueued,
+                                    reply: job.reply,
+                                });
+                            }
+                        }
+                        Err(e) => metrics.fail(
+                            &job.enqueued,
+                            &job.reply,
+                            Tier::Full,
+                            format!("pipeline prefill failed: {e}"),
+                            "relay_error",
+                        ),
+                    }
+                }
+                if active.is_empty() {
+                    continue;
+                }
+                // One pipeline round: embed every session's last token,
+                // advance the head stages in one batched hidden forward
+                // (the PR 7 round shape over this stage range), relay, and
+                // hand each session its sampled token.
+                let mut toks: Vec<u16> = Vec::with_capacity(active.len());
+                let mut sids: Vec<u64> = Vec::with_capacity(active.len());
+                let mut positions: Vec<usize> = Vec::with_capacity(active.len());
+                let mut caches: Vec<&mut KvCache> = Vec::with_capacity(active.len());
+                for a in active.iter_mut() {
+                    let Some(t) = a.sess.tokens.last().copied() else { continue };
+                    toks.push(t);
+                    sids.push(a.sess.sid);
+                    positions.push(a.sess.cache.len());
+                    caches.push(&mut a.sess.cache);
+                }
+                let forward = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let x = model.embed_tokens(&toks);
+                    model.decode_hidden_batch(&mut caches, x)
+                }));
+                drop(caches);
+                let h = match forward {
+                    Ok(h) => h,
+                    Err(_) => {
+                        fail_all(
+                            &mut active,
+                            &metrics,
+                            "model panicked during pipeline decode",
+                            "worker_panic",
+                        );
+                        continue;
+                    }
+                };
+                metrics.record_batch_forward(toks.len());
+                let next_toks = match relay.round(&sids, &positions, &h) {
+                    Ok(t) => t,
+                    Err(e) => {
+                        fail_all(
+                            &mut active,
+                            &metrics,
+                            &format!("pipeline relay failed mid-decode: {e}"),
+                            "relay_error",
+                        );
+                        continue;
+                    }
+                };
+                if next_toks.len() != active.len() {
+                    fail_all(
+                        &mut active,
+                        &metrics,
+                        "pipeline relay answered the wrong batch size",
+                        "relay_error",
+                    );
+                    continue;
+                }
+                for (a, t) in active.iter_mut().zip(next_toks) {
+                    a.sess.push(t);
+                }
+                let bsize = active.len();
+                active.retain_mut(|a| {
+                    if !a.sess.done {
+                        return true;
+                    }
+                    let _ = relay.close(a.sess.sid);
+                    metrics.finish(
+                        &a.enqueued,
+                        &a.reply,
+                        a.sess.generated().to_vec(),
+                        bsize,
+                        Tier::Full,
+                    );
+                    false
+                });
+            }
+            // Drained: wind the tail down along the relay before it drops.
+            let _ = relay.shutdown();
+        })
+    };
+
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !shutdown.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let batcher = batcher.clone();
+                let metrics = metrics.clone();
+                let shutdown = shutdown.clone();
+                let info = info.clone();
+                let vocab = model.cfg.vocab;
+                conns.push(std::thread::spawn(move || {
+                    let _ = handle_head_conn(stream, &batcher, &metrics, &info, &shutdown, vocab);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            Err(_) => break,
+        }
+    }
+    batcher.close();
+    let _ = worker.join();
+    for c in conns {
+        let _ = c.join();
+    }
+    Ok(())
+}
+
+/// Client-facing connection handler: the [`super::server`] request shape,
+/// full tier only (other tiers get the same structured errors a draftless
+/// single-host server gives).
+fn handle_head_conn(
+    stream: TcpStream,
+    batcher: &Batcher<HeadJob>,
+    metrics: &Metrics,
+    info: &Json,
+    shutdown: &AtomicBool,
+    vocab: usize,
+) -> anyhow::Result<()> {
+    stream.set_nonblocking(false)?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(&line).map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
+        if let Some(cmd) = j.get("cmd").and_then(Json::as_str) {
+            match cmd {
+                "stats" => {
+                    writeln!(writer, "{}", metrics.to_json().to_string())?;
+                }
+                "info" => {
+                    writeln!(writer, "{}", info.to_string())?;
+                }
+                "shutdown" => {
+                    shutdown.store(true, Ordering::Relaxed);
+                    writeln!(writer, "{{\"ok\":true}}")?;
+                    break;
+                }
+                _ => writeln!(writer, "{{\"error\":\"unknown cmd\"}}")?,
+            }
+            continue;
+        }
+        let raw: Vec<usize> = j
+            .get("prompt")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(Json::as_usize).collect())
+            .unwrap_or_default();
+        if raw.iter().any(|&t| t >= vocab) {
+            writeln!(writer, "{{\"error\":\"prompt token out of range (vocab {vocab})\"}}")?;
+            continue;
+        }
+        if let Some(s) = j.get("tier").and_then(Json::as_str) {
+            match Tier::parse(s) {
+                Some(Tier::Full) => {}
+                Some(t) => {
+                    writeln!(
+                        writer,
+                        "{}",
+                        protocol_error(
+                            format!("tier '{}' is not served by a pipeline head", t.name()),
+                            "tier_unavailable",
+                        )
+                    )?;
+                    continue;
+                }
+                None => {
+                    writeln!(
+                        writer,
+                        "{}",
+                        protocol_error(
+                            format!("unknown tier '{s}' (expected draft | spec | full)"),
+                            "unknown_tier",
+                        )
+                    )?;
+                    continue;
+                }
+            }
+        }
+        let prompt: Vec<u16> = raw.into_iter().map(|t| t as u16).collect();
+        let max_new = j.get("max_new").and_then(Json::as_usize).unwrap_or(16);
+        let sampling = sampler_cfg_from_json(&j);
+        let (tx, rx) = mpsc::channel();
+        let accepted = batcher.push(HeadJob {
+            prompt,
+            max_new,
+            sampling,
+            enqueued: Timer::start(),
+            reply: tx,
+        });
+        if !accepted {
+            writeln!(writer, "{{\"error\":\"server shutting down\"}}")?;
+            continue;
+        }
+        let resp = rx.recv()?;
+        if let Some((msg, code)) = resp.error {
+            writeln!(writer, "{}", protocol_error(msg, &code))?;
+            continue;
+        }
+        let mut out = Json::obj();
+        out.set("tokens", Json::Arr(resp.tokens.iter().map(|&t| Json::Num(t as f64)).collect()))
+            .set("latency_ms", resp.latency_ms.into())
+            .set("batch", resp.batch.into())
+            .set("tier", resp.tier.into());
+        writeln!(writer, "{}", out.to_string())?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::super::Client;
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::util::Rng;
+
+    fn tiny_model(seed: u64) -> Model {
+        Model::random(&ModelConfig::test_tiny(), &mut Rng::new(seed))
+    }
+
+    /// The 2-stage split a sharded checkpoint's `load_stage_range` builds.
+    fn split_at(model: &Model, k: usize) -> (Model, Model) {
+        let d = model.cfg.d_model;
+        let head = Model {
+            cfg: model.cfg.clone(),
+            embed: model.embed.clone(),
+            stages: model.stages[..k].to_vec(),
+            final_norm: Vec::new(),
+            lm_head: Mat::zeros(0, 0),
+        };
+        let tail = Model {
+            cfg: model.cfg.clone(),
+            embed: Mat::zeros(0, d),
+            stages: model.stages[k..].to_vec(),
+            final_norm: model.final_norm.clone(),
+            lm_head: model.lm_head.clone(),
+        };
+        (head, tail)
+    }
+
+    fn spawn_tail(tail: Model) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+        let (tx, rx) = mpsc::channel();
+        let t = std::thread::spawn(move || {
+            serve_pipeline_tail(Arc::new(tail), "127.0.0.1:0", |a| tx.send(a).unwrap()).unwrap();
+        });
+        (rx.recv().unwrap(), t)
+    }
+
+    fn spawn_pipeline(
+        model: &Model,
+        k: usize,
+        policy: BatchPolicy,
+    ) -> (std::net::SocketAddr, std::thread::JoinHandle<()>, std::thread::JoinHandle<()>) {
+        let (head, tail) = split_at(model, k);
+        let (tail_addr, tail_thread) = spawn_tail(tail);
+        let (tx, rx) = mpsc::channel();
+        let head_thread = std::thread::spawn(move || {
+            serve_pipeline_head(
+                Arc::new(head),
+                "127.0.0.1:0",
+                &tail_addr.to_string(),
+                policy,
+                Json::obj(),
+                |a| tx.send(a).unwrap(),
+            )
+            .unwrap();
+        });
+        (rx.recv().unwrap(), head_thread, tail_thread)
+    }
+
+    #[test]
+    fn stage_range_and_role_parsing() {
+        assert_eq!(parse_stage_range("0..3").unwrap(), 0..3);
+        assert_eq!(parse_stage_range(" 1 .. 2 ").unwrap(), 1..2);
+        assert!(parse_stage_range("3").is_err());
+        assert!(parse_stage_range("a..b").is_err());
+
+        assert_eq!(pipeline_role(&(0..1), 2, true).unwrap(), PipelineRole::Head);
+        assert_eq!(pipeline_role(&(1..2), 2, false).unwrap(), PipelineRole::Tail);
+        let err = pipeline_role(&(0..1), 2, false).unwrap_err().to_string();
+        assert!(err.contains("--next"), "{err}");
+        let err = pipeline_role(&(1..2), 2, true).unwrap_err().to_string();
+        assert!(err.contains("no --next"), "{err}");
+        let err = pipeline_role(&(0..2), 2, true).unwrap_err().to_string();
+        assert!(err.contains("whole model"), "{err}");
+        let err = pipeline_role(&(1..2), 3, false).unwrap_err().to_string();
+        assert!(err.contains("not supported"), "{err}");
+        let err = pipeline_role(&(1..1), 2, false).unwrap_err().to_string();
+        assert!(err.contains("empty"), "{err}");
+        let err = pipeline_role(&(1..5), 2, false).unwrap_err().to_string();
+        assert!(err.contains("outside"), "{err}");
+    }
+
+    #[test]
+    fn hidden_bits_roundtrip_the_wire_exactly() {
+        // f32 → u32 bits → JSON text → parse → f32 must be the identity,
+        // including the values decimal JSON would mangle.
+        let vals: Vec<f32> = vec![
+            0.0,
+            -0.0,
+            1.5,
+            -3.0714285e-5,
+            f32::MIN_POSITIVE,
+            f32::MIN_POSITIVE / 8.0, // subnormal
+            f32::MAX,
+            f32::NAN,
+            f32::NEG_INFINITY,
+            0.1,
+        ];
+        let m = Mat::from_vec(2, 5, vals.clone());
+        let mut frame = Json::obj();
+        frame.set("h", bits_of_rows(&m));
+        let wire = frame.to_string();
+        let back = Json::parse(&wire).unwrap();
+        let arr = back.get("h").and_then(Json::as_arr).unwrap();
+        let m2 = rows_from_bits(arr, 2, 5).unwrap();
+        for r in 0..2 {
+            for c in 0..5 {
+                assert_eq!(
+                    m[(r, c)].to_bits(),
+                    m2[(r, c)].to_bits(),
+                    "bit pattern changed at ({r},{c})"
+                );
+            }
+        }
+        // structural errors, not panics
+        assert!(rows_from_bits(arr, 3, 5).is_err());
+        let bad = vec![Json::Num(0.5)];
+        assert!(rows_from_bits(&bad, 1, 1).is_err());
+    }
+
+    #[test]
+    fn two_stage_pipeline_matches_single_host_tokens() {
+        let model = tiny_model(91);
+        let (addr, head_t, tail_t) = spawn_pipeline(&model, 1, BatchPolicy::default());
+        let mut c = Client::connect(addr).unwrap();
+
+        // greedy continuations must be exactly the single-host tokens
+        for p in [vec![3u16, 1, 4, 1, 5], vec![9, 8], vec![40, 41, 42, 43]] {
+            let want = model.greedy_decode(&p, 8);
+            let got = c.request(&p, 8).unwrap();
+            assert_eq!(got.tokens, want, "pipeline diverged for {p:?}");
+            assert_eq!(got.tier, "full");
+        }
+        // sampled requests are seed-deterministic through the relay and
+        // match the single-host sampler stream (tail-side Sampler)
+        let cfg = SamplerCfg { temperature: 0.9, top_k: 4, seed: 11 };
+        let a = c.request_with(&[1, 2, 3], 8, cfg).unwrap();
+        let b = c.request_with(&[1, 2, 3], 8, cfg).unwrap();
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.tokens, model.generate(&[1, 2, 3], 8, cfg));
+        // empty prompts answered, not panicked on
+        let e = c.request(&[], 4).unwrap();
+        assert!(e.tokens.is_empty());
+        // protocol hardening: non-full tiers and bad tokens are rejected
+        let mut req = Json::obj();
+        req.set("prompt", Json::Arr(vec![Json::Num(1.0)]))
+            .set("max_new", 2.into())
+            .set("tier", "spec".into());
+        let r = c.request_raw(&req).unwrap();
+        assert_eq!(r.get("code").and_then(Json::as_str), Some("tier_unavailable"));
+        assert!(c.request(&[9999], 2).is_err());
+        // info reports the pipeline role; stats count the rounds
+        let info = c.info().unwrap();
+        assert_eq!(info.get("pipeline_role").and_then(Json::as_str), Some("head"));
+        assert!(info.get("resident_weight_bytes").and_then(Json::as_usize).unwrap() > 0);
+        let stats = c.stats().unwrap();
+        assert!(stats.get("decode_steps").and_then(Json::as_usize).unwrap() > 0);
+
+        // one client shutdown winds down head AND tail
+        c.shutdown().unwrap();
+        head_t.join().unwrap();
+        tail_t.join().unwrap();
+    }
+
+    #[test]
+    fn pipeline_batched_rounds_match_solo_requests() {
+        use std::time::Duration;
+        let model = tiny_model(92);
+        let (addr, head_t, tail_t) = spawn_pipeline(
+            &model,
+            1,
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(3) },
+        );
+        let mut alone = Client::connect(addr).unwrap();
+        let solo = alone.request(&[7, 8, 9], 6).unwrap().tokens;
+        assert_eq!(solo, model.greedy_decode(&[7, 8, 9], 6));
+        drop(alone); // its conn thread must exit before shutdown joins
+        let mut handles = Vec::new();
+        for i in 0..5u16 {
+            handles.push(std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                let p: Vec<u16> = if i == 0 { vec![7, 8, 9] } else { vec![i, i * 2, i * 3] };
+                (i, p.clone(), c.request(&p, 6).unwrap().tokens)
+            }));
+        }
+        for h in handles {
+            let (i, p, tokens) = h.join().unwrap();
+            if i == 0 {
+                assert_eq!(tokens, solo, "batched pipeline continuation differs from solo");
+            }
+            assert_eq!(tokens, model.greedy_decode(&p, 6), "request {i}");
+        }
+        let mut c = Client::connect(addr).unwrap();
+        c.shutdown().unwrap();
+        head_t.join().unwrap();
+        tail_t.join().unwrap();
+    }
+
+    #[test]
+    fn relay_rejects_bad_frames_with_structured_errors() {
+        let model = tiny_model(93);
+        let (_, tail) = split_at(&model, 1);
+        let (addr, tail_t) = spawn_tail(tail);
+        let mut r = RelayClient::connect(&addr.to_string()).unwrap();
+
+        // round against a session that was never opened
+        let h = Mat::zeros(1, model.cfg.d_model);
+        let err = r.round(&[5], &[0], &h).unwrap_err().to_string();
+        assert!(err.contains("unknown session"), "{err}");
+        // double open
+        r.open(1, SamplerCfg::greedy()).unwrap();
+        let err = r.open(1, SamplerCfg::greedy()).unwrap_err().to_string();
+        assert!(err.contains("already open"), "{err}");
+        // round before any prefill
+        let err = r.round(&[1], &[0], &h).unwrap_err().to_string();
+        assert!(err.contains("no prefilled cache"), "{err}");
+        // prefill with the wrong hidden width
+        let bad = Mat::zeros(2, model.cfg.d_model + 1);
+        let err = r.prefill(1, 0, &bad).unwrap_err().to_string();
+        assert!(err.contains("hidden width"), "{err}");
+        // a real prefill works and later frames validate against it
+        let good = Mat::zeros(3, model.cfg.d_model);
+        let tok = r.prefill(1, 0, &good).unwrap();
+        assert!((tok as usize) < model.cfg.vocab);
+        // position drift is caught
+        let one = Mat::zeros(1, model.cfg.d_model);
+        let err = r.round(&[1], &[7], &one).unwrap_err().to_string();
+        assert!(err.contains("does not match"), "{err}");
+        // truncate beyond the cached rows is a structured error...
+        let err = r.truncate(1, 9).unwrap_err().to_string();
+        assert!(err.contains("cannot truncate"), "{err}");
+        // ...and a valid truncate plus re-advance works
+        r.truncate(1, 2).unwrap();
+        let stats = r.stats().unwrap();
+        assert_eq!(stats.get("sessions").and_then(Json::as_usize), Some(1));
+        r.close(1).unwrap();
+        r.close(1).unwrap(); // idempotent
+        let stats = r.stats().unwrap();
+        assert_eq!(stats.get("sessions").and_then(Json::as_usize), Some(0));
+        // malformed json gets an error response, not a dropped connection
+        let mut raw = Json::obj();
+        raw.set("nonsense", true.into());
+        let err = r.call(&raw).unwrap_err().to_string();
+        assert!(err.contains("without an op"), "{err}");
+        r.shutdown().unwrap();
+        tail_t.join().unwrap();
+    }
+}

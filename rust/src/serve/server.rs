@@ -278,7 +278,7 @@ impl Metrics {
     /// as a GEMM round (rows > 1) or a matvec-fallback round (rows == 1),
     /// plus the occupancy aggregates behind `avg_batch_rows` /
     /// `max_batch_rows`.
-    fn record_batch_forward(&self, rows: usize) {
+    pub(crate) fn record_batch_forward(&self, rows: usize) {
         self.steps.fetch_add(1, Ordering::Relaxed);
         self.batched_rows.fetch_add(rows as u64, Ordering::Relaxed);
         self.max_batch_rows.fetch_max(rows as u64, Ordering::Relaxed);
@@ -289,7 +289,7 @@ impl Metrics {
         }
     }
 
-    fn finish(
+    pub(crate) fn finish(
         &self,
         enqueued: &Timer,
         reply: &mpsc::Sender<GenResponse>,
@@ -314,7 +314,7 @@ impl Metrics {
     /// response instead of dropping its reply channel (which would surface
     /// as an opaque disconnect at the protocol edge). Failures still count
     /// as requests so latency aggregates stay honest.
-    fn fail(
+    pub(crate) fn fail(
         &self,
         enqueued: &Timer,
         reply: &mpsc::Sender<GenResponse>,
@@ -621,7 +621,7 @@ pub fn serve_blocking_tiers(
 
 /// Structured protocol error: a human-readable `error` plus a stable
 /// machine-readable `code` clients can branch on.
-fn protocol_error(msg: String, code: &str) -> String {
+pub(crate) fn protocol_error(msg: String, code: &str) -> String {
     let mut e = Json::obj();
     e.set("error", msg.into()).set("code", code.into());
     e.to_string()

@@ -508,6 +508,97 @@ fn speculative_decode_is_token_identical_across_all_variants() {
     }
 }
 
+#[test]
+#[cfg(not(miri))]
+fn sharded_pipeline_serves_token_identically_across_all_variants() {
+    // NOT artifact-gated. The sharded-serving acceptance matrix: for every
+    // LinearWeight variant (dense, low-rank, factorized, and their three
+    // packed-quantized forms), save a 2-shard CPT2 set, load the head
+    // (embed + first stage) and tail (second stage + LM head) as partial
+    // models — through the owned loader AND the zero-copy mmap loader —
+    // wire a head -> tail pipeline over loopback TCP, and assert the
+    // served continuation is token-identical to the in-memory model's
+    // greedy decode. Hidden rows cross the relay as f32 bit patterns, so
+    // identity here is exact, not approximate.
+    use compot::coordinator::plan::CompressionPlan;
+    use compot::data::SynthLang;
+    use compot::model::config::ModelConfig;
+    use compot::serve::{serve_pipeline_head, serve_pipeline_tail, BatchPolicy, Client};
+    use std::sync::{mpsc, Arc};
+
+    let base = Model::random(&ModelConfig::test_tiny(), &mut Rng::new(70));
+    let lang = SynthLang::wiki(base.cfg.vocab);
+    let calib = lang.gen_batch(6, 48, &mut Rng::new(71));
+    let defaults = StageConfig::new(0.25, false);
+    let dir = std::env::temp_dir().join("compot_pipeline_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let pipeline_tokens = |head: Model, tail: Model, prompt: &[u16], max_new: usize| {
+        let (tail_tx, tail_rx) = mpsc::channel();
+        let tail_t = std::thread::spawn(move || {
+            serve_pipeline_tail(Arc::new(tail), "127.0.0.1:0", |a| tail_tx.send(a).unwrap())
+        });
+        let next = tail_rx.recv().unwrap().to_string();
+        let (head_tx, head_rx) = mpsc::channel();
+        let head_t = std::thread::spawn(move || {
+            serve_pipeline_head(
+                Arc::new(head),
+                "127.0.0.1:0",
+                &next,
+                BatchPolicy::default(),
+                Json::obj(),
+                |a| head_tx.send(a).unwrap(),
+            )
+        });
+        let mut c = Client::connect(head_rx.recv().unwrap()).unwrap();
+        let tokens = c.request(prompt, max_new).unwrap().tokens;
+        c.shutdown().unwrap();
+        head_t.join().unwrap().unwrap();
+        tail_t.join().unwrap().unwrap();
+        tokens
+    };
+
+    let specs: [Option<&str>; 6] = [
+        None, // dense
+        Some("svd-llm@0.2"),
+        Some("compot@0.25"),
+        Some("rtn4"),
+        Some("svd-llm@0.2+rtn4"),
+        Some("compot@0.25+gptq4"),
+    ];
+    let prompt: Vec<u16> = vec![5, 3, 8, 1, 6, 2];
+    for (i, spec) in specs.iter().enumerate() {
+        let label = spec.unwrap_or("dense");
+        let compressed = match spec {
+            Some(s) => {
+                CompressionPlan::parse(s, &defaults).unwrap().run(&base, &calib).unwrap().0
+            }
+            None => base.clone(),
+        };
+        let n = compressed.stages.len();
+        let split = n / 2;
+        let want = compressed.greedy_decode(&prompt, 8);
+        let path = dir.join(format!("pipe{i}.cpt2"));
+        compressed.save_compressed_sharded(&path, spec.as_deref(), 2).unwrap();
+        for mmap in [false, true] {
+            let (head, _) = Model::load_stage_range(&path, 0..split, mmap).unwrap();
+            let (tail, tinfo) = Model::load_stage_range(&path, split..n, mmap).unwrap();
+            if mmap {
+                assert!(tinfo.source.starts_with("mmap"), "{label}: {}", tinfo.source);
+            }
+            assert_eq!(
+                pipeline_tokens(head, tail, &prompt, 8),
+                want,
+                "{label} (mmap={mmap}): pipeline decode diverged from single-host"
+            );
+        }
+        std::fs::remove_file(&path).ok();
+        for s in 0..2 {
+            std::fs::remove_file(dir.join(format!("pipe{i}.shard{s}.cpt2"))).ok();
+        }
+    }
+}
+
 /// The static-analysis gate, in-process: the repo itself must scan clean
 /// under `compot audit` (every unsafe site SAFETY-commented and confined to
 /// the linalg buffer modules, no unannotated panic surface on the serve

@@ -50,6 +50,7 @@ BENCHES = [
     "BENCH_quant.json",
     "BENCH_checkpoint.json",
     "BENCH_spec.json",
+    "BENCH_shard.json",
 ]
 
 
